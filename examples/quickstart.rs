@@ -1,0 +1,33 @@
+//! Quickstart: the smallest end-to-end HCFL run.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Builds the engine from the AOT artifacts, trains the HCFL autoencoders
+//! on the server's pre-model snapshots, then runs a few FedAvg rounds
+//! with compressed uplinks/downlinks and prints the learning curve.
+
+use hcfl::prelude::*;
+
+fn main() -> hcfl::error::Result<()> {
+    let engine = Engine::from_artifacts("artifacts", 2)?;
+    let cfg = ExperimentConfig::quickstart();
+    println!(
+        "quickstart: {} on {}, {} clients, {} rounds",
+        cfg.scheme.label(),
+        cfg.model,
+        cfg.n_clients,
+        cfg.rounds
+    );
+    let mut sim = Simulation::new(&engine, cfg)?;
+    sim.verbose = true;
+    let report = sim.run()?;
+    println!(
+        "done: final accuracy {:.4}, mean reconstruction error {:.3e}, uploaded {:.2} MB",
+        report.final_accuracy(),
+        report.mean_recon_mse(),
+        report.total_up_bytes() as f64 / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Theorem 1 sanity check against the live pipeline.
+//!
+//! Trains K client models, pushes each through the HCFL codec, and
+//! compares the measured aggregated-deviation probability with the
+//! `2/(Kα)²·L(w)` bound of eq. (10) — including the paper's worked
+//! example (K=10000, α=0.01, L=2.5 → 0.0005).
+//!
+//! ```bash
+//! cargo run --release --example theory_check
+//! ```
+
+use hcfl::compression::Scheme;
+use hcfl::coordinator::build_compressor;
+use hcfl::data::synthetic;
+use hcfl::fl::LocalTrainer;
+use hcfl::model::init_flat;
+use hcfl::prelude::*;
+use hcfl::theory::{empirical_deviation_prob, paper_example, theorem1_bound};
+use hcfl::util::cli::Args;
+use hcfl::util::rng::Rng;
+
+fn main() -> hcfl::error::Result<()> {
+    let args = Args::from_env();
+    let k_max = args.usize_or("clients", 12)?;
+    let alpha = args.f64_or("alpha", 0.002)?;
+    let engine = Engine::from_artifacts(args.str_or("artifacts", "artifacts"), 4)?;
+
+    let mut cfg = ExperimentConfig::mnist(Scheme::Hcfl { ratio: 16 }, 1);
+    cfg.n_clients = k_max;
+    cfg.data.n_clients = k_max;
+    let data = synthetic(&cfg.data, cfg.seed);
+    let trainer = LocalTrainer::new(&engine, &cfg.model)?;
+    let mut rng = Rng::new(cfg.seed);
+    let global = init_flat(&trainer.model.layers, &mut rng);
+    let compressor = build_compressor(&engine, &cfg, &data, &global)?;
+
+    let mut clean = Vec::new();
+    let mut noisy = Vec::new();
+    let mut l_w = 0.0;
+    for k in 0..k_max {
+        let out = trainer.train(&global, &data.shards[k], 1, 64, 0.05, &mut rng, k % 4)?;
+        // Mirror the run pipeline: delta-encode against the broadcast.
+        let delta: Vec<f32> = out.params.iter().zip(&global).map(|(w, g)| w - g).collect();
+        let upd = compressor.compress(&delta, k % 4)?;
+        let mut rec = compressor.decompress(&upd, trainer.model.d, k % 4)?;
+        for (v, g) in rec.iter_mut().zip(&global) {
+            *v += g;
+        }
+        l_w += out
+            .params
+            .iter()
+            .zip(&rec)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / trainer.model.d as f64;
+        clean.push(out.params);
+        noisy.push(rec);
+    }
+    l_w /= k_max as f64;
+
+    println!("measured L(w) = {l_w:.4e}, α = {alpha}");
+    for k in [2, k_max / 2, k_max] {
+        let bound = theorem1_bound(l_w, k, alpha);
+        let meas = empirical_deviation_prob(&clean[..k], &noisy[..k], alpha);
+        let ok = meas <= bound + 1e-9;
+        println!(
+            "K={k:>3}: bound {bound:.4e}  measured {meas:.4e}  {}",
+            if ok { "OK (within bound)" } else { "VIOLATION" }
+        );
+    }
+    println!("paper worked example bound: {:.4e} (expect 5.0e-4)", paper_example());
+    Ok(())
+}

@@ -1,0 +1,85 @@
+use hcfl::prelude::*;
+use hcfl::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let eng = Engine::from_artifacts("artifacts", 1).unwrap();
+    let mani = eng.manifest().clone();
+    let m = mani.model("lenet").unwrap().clone();
+    let mut rng = Rng::new(0);
+    let params: Vec<f32> = (0..m.d).map(|_| rng.normal() * 0.05).collect();
+
+    // train_step b64
+    let x: Vec<f32> = (0..64*784).map(|_| rng.uniform(0.0, 1.0)).collect();
+    let y: Vec<i32> = (0..64).map(|_| rng.below(10) as i32).collect();
+    let t0 = Instant::now();
+    let _ = eng.call("lenet_train_step_b64", vec![
+        TensorValue::vec_f32(params.clone()),
+        TensorValue::f32(x.clone(), vec![64, 784]).unwrap(),
+        TensorValue::i32(y.clone(), vec![64]).unwrap(),
+        TensorValue::scalar_f32(0.05),
+    ]).unwrap();
+    println!("train_step_b64 first (compile+run): {:?}", t0.elapsed());
+    let t0 = Instant::now();
+    for _ in 0..3 {
+        let _ = eng.call("lenet_train_step_b64", vec![
+            TensorValue::vec_f32(params.clone()),
+            TensorValue::f32(x.clone(), vec![64, 784]).unwrap(),
+            TensorValue::i32(y.clone(), vec![64]).unwrap(),
+            TensorValue::scalar_f32(0.05),
+        ]).unwrap();
+    }
+    println!("train_step_b64 warm x3: {:?}", t0.elapsed());
+
+    // ae train c1024 r8
+    let ae = mani.autoencoder(1024, 8).unwrap().clone();
+    let aep: Vec<f32> = (0..ae.d).map(|_| rng.normal() * 0.05).collect();
+    let batch: Vec<f32> = (0..64*1024).map(|_| rng.normal() * 0.1).collect();
+    let t0 = Instant::now();
+    let _ = eng.call(&ae.train, vec![
+        TensorValue::vec_f32(aep.clone()),
+        TensorValue::f32(batch.clone(), vec![64, 1024]).unwrap(),
+        TensorValue::scalar_f32(0.05),
+    ]).unwrap();
+    println!("ae_train first: {:?}", t0.elapsed());
+    let t0 = Instant::now();
+    for _ in 0..3 {
+        let _ = eng.call(&ae.train, vec![
+            TensorValue::vec_f32(aep.clone()),
+            TensorValue::f32(batch.clone(), vec![64, 1024]).unwrap(),
+            TensorValue::scalar_f32(0.05),
+        ]).unwrap();
+    }
+    println!("ae_train warm x3: {:?}", t0.elapsed());
+
+    // encode
+    let w: Vec<f32> = (0..1024).map(|_| rng.normal()).collect();
+    let t0 = Instant::now();
+    let _ = eng.call(&ae.encode, vec![TensorValue::vec_f32(aep.clone()), TensorValue::vec_f32(w.clone())]).unwrap();
+    println!("encode first: {:?}", t0.elapsed());
+    let t0 = Instant::now();
+    for _ in 0..10 {
+        let _ = eng.call(&ae.encode, vec![TensorValue::vec_f32(aep.clone()), TensorValue::vec_f32(w.clone())]).unwrap();
+    }
+    println!("encode warm x10: {:?}", t0.elapsed());
+
+    // epoch exec
+    let xs: Vec<f32> = (0..9*64*784).map(|_| rng.uniform(0.0, 1.0)).collect();
+    let ys: Vec<i32> = (0..9*64).map(|_| rng.below(10) as i32).collect();
+    let t0 = Instant::now();
+    let _ = eng.call("lenet_train_epoch_b64_n9", vec![
+        TensorValue::vec_f32(params.clone()),
+        TensorValue::f32(xs.clone(), vec![9, 64, 784]).unwrap(),
+        TensorValue::i32(ys.clone(), vec![9, 64]).unwrap(),
+        TensorValue::scalar_f32(0.05),
+    ]).unwrap();
+    println!("train_epoch first: {:?}", t0.elapsed());
+    let t0 = Instant::now();
+    let _ = eng.call("lenet_train_epoch_b64_n9", vec![
+        TensorValue::vec_f32(params),
+        TensorValue::f32(xs, vec![9, 64, 784]).unwrap(),
+        TensorValue::i32(ys, vec![9, 64]).unwrap(),
+        TensorValue::scalar_f32(0.05),
+    ]).unwrap();
+    println!("train_epoch warm x1: {:?}", t0.elapsed());
+}

@@ -1,0 +1,299 @@
+"""AOT compiler: lower every Layer-2 graph to HLO text + manifest.json.
+
+Interchange format is HLO *text*, NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage (from the ``python/`` directory)::
+
+    python -m compile.aot --out ../artifacts
+
+Artifacts:
+    artifacts/<name>.hlo.txt   one per executable (see ``build_artifact_specs``)
+    artifacts/manifest.json    input/output specs, layer tables, AE layouts
+"""
+
+import argparse
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import train
+from .models import autoencoder, five_cnn, lenet
+
+# Compression configuration: one chunk size per weight segment (DESIGN.md §6),
+# paper ratios 1:4 .. 1:32 (§VI-B).
+CHUNKS = {"conv": 256, "dense": 1024}
+RATIOS = [4, 8, 16, 32]
+AE_TRAIN_BATCH = 64
+EVAL_BATCH = 512
+
+# Per-model epoch geometry: shard_size / batch batches per local epoch.
+MODELS = {
+    "lenet": {
+        "module": lenet,
+        "train_batches": [10, 64, 600],  # 10/600 feed the Fig.12 B-sweep
+        "epoch_batch": 64,
+        "epoch_n_batches": 9,  # 600-sample MNIST shard
+    },
+    "fivecnn": {
+        "module": five_cnn,
+        "train_batches": [64],
+        "epoch_batch": 64,
+        "epoch_n_batches": 17,  # 1128-sample EMNIST shard
+    },
+}
+
+
+def _spec(dtype: str, shape: Sequence[int]) -> dict:
+    return {"dtype": dtype, "shape": list(shape)}
+
+
+def _sds(dtype, shape):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+@dataclass
+class Artifact:
+    name: str
+    fn: Callable
+    inputs: List[dict]  # [{"dtype": "f32", "shape": [...]}]
+    outputs: List[dict] = field(default_factory=list)  # filled by eval_shape
+
+    def arg_structs(self):
+        return [_sds(_DTYPES[i["dtype"]], i["shape"]) for i in self.inputs]
+
+
+def _tuplize(fn: Callable) -> Callable:
+    """Ensure the lowered function returns a flat tuple."""
+
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+
+    return wrapped
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_artifact_specs() -> List[Artifact]:
+    arts: List[Artifact] = []
+
+    # ---- predictor models -------------------------------------------------
+    for mname, cfg in MODELS.items():
+        mod = cfg["module"]
+        d = mod.layout().total
+        for b in cfg["train_batches"]:
+            arts.append(
+                Artifact(
+                    name=f"{mname}_train_step_b{b}",
+                    fn=_tuplize(train.make_train_step(mod)),
+                    inputs=[
+                        _spec("f32", [d]),
+                        _spec("f32", [b, mod.INPUT_DIM]),
+                        _spec("i32", [b]),
+                        _spec("f32", []),
+                    ],
+                )
+            )
+        eb, nb = cfg["epoch_batch"], cfg["epoch_n_batches"]
+        arts.append(
+            Artifact(
+                name=f"{mname}_train_epoch_b{eb}_n{nb}",
+                fn=_tuplize(train.make_train_epoch(mod, nb)),
+                inputs=[
+                    _spec("f32", [d]),
+                    _spec("f32", [nb, eb, mod.INPUT_DIM]),
+                    _spec("i32", [nb, eb]),
+                    _spec("f32", []),
+                ],
+            )
+        )
+        arts.append(
+            Artifact(
+                name=f"{mname}_eval_b{EVAL_BATCH}",
+                fn=_tuplize(train.make_eval(mod)),
+                inputs=[
+                    _spec("f32", [d]),
+                    _spec("f32", [EVAL_BATCH, mod.INPUT_DIM]),
+                    _spec("i32", [EVAL_BATCH]),
+                ],
+            )
+        )
+
+    # ---- HCFL autoencoders -------------------------------------------------
+    for chunk in sorted(set(CHUNKS.values())):
+        for ratio in RATIOS:
+            dae = autoencoder.layout(chunk, ratio).total
+            code = chunk // ratio
+            key = f"ae_c{chunk}_r{ratio}"
+            arts.append(
+                Artifact(
+                    name=f"{key}_encode",
+                    fn=_tuplize(train.make_ae_encode(chunk, ratio)),
+                    inputs=[_spec("f32", [dae]), _spec("f32", [chunk])],
+                )
+            )
+            arts.append(
+                Artifact(
+                    name=f"{key}_decode",
+                    fn=_tuplize(train.make_ae_decode(chunk, ratio)),
+                    inputs=[
+                        _spec("f32", [dae]),
+                        _spec("f32", [code]),
+                        _spec("f32", []),  # lo
+                        _spec("f32", []),  # hi
+                        _spec("f32", []),  # mu
+                        _spec("f32", []),  # sd
+                    ],
+                )
+            )
+            arts.append(
+                Artifact(
+                    name=f"{key}_train_b{AE_TRAIN_BATCH}",
+                    fn=_tuplize(train.make_ae_train(chunk, ratio)),
+                    inputs=[
+                        _spec("f32", [dae]),
+                        _spec("f32", [AE_TRAIN_BATCH, chunk]),
+                        _spec("f32", []),
+                    ],
+                )
+            )
+
+    # ---- T-FedAvg ternary quantizer ----------------------------------------
+    for chunk in sorted(set(CHUNKS.values())):
+        arts.append(
+            Artifact(
+                name=f"ternary_c{chunk}",
+                fn=_tuplize(train.make_ternary(chunk)),
+                inputs=[_spec("f32", [chunk])],
+            )
+        )
+
+    return arts
+
+
+_DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+
+
+def _fill_outputs(art: Artifact) -> None:
+    outs = jax.eval_shape(art.fn, *art.arg_structs())
+    art.outputs = [
+        _spec(_DTYPE_NAMES[o.dtype], o.shape) for o in outs
+    ]
+
+
+def build_manifest(arts: List[Artifact]) -> dict:
+    manifest = {
+        "version": 1,
+        "chunks": CHUNKS,
+        "ratios": RATIOS,
+        "executables": {
+            a.name: {
+                "file": f"{a.name}.hlo.txt",
+                "inputs": a.inputs,
+                "outputs": a.outputs,
+            }
+            for a in arts
+        },
+        "models": {},
+        "autoencoders": {},
+        "ternary": {
+            f"c{chunk}": f"ternary_c{chunk}" for chunk in sorted(set(CHUNKS.values()))
+        },
+    }
+    for mname, cfg in MODELS.items():
+        mod = cfg["module"]
+        layout = mod.layout()
+        eb, nb = cfg["epoch_batch"], cfg["epoch_n_batches"]
+        manifest["models"][mname] = {
+            "d": layout.total,
+            "classes": mod.CLASSES,
+            "input_dim": mod.INPUT_DIM,
+            "layers": layout.manifest(),
+            "train_step": {
+                str(b): f"{mname}_train_step_b{b}" for b in cfg["train_batches"]
+            },
+            "train_epoch": {
+                "batch": eb,
+                "n_batches": nb,
+                "name": f"{mname}_train_epoch_b{eb}_n{nb}",
+            },
+            "eval": {"batch": EVAL_BATCH, "name": f"{mname}_eval_b{EVAL_BATCH}"},
+        }
+    for chunk in sorted(set(CHUNKS.values())):
+        for ratio in RATIOS:
+            key = f"c{chunk}_r{ratio}"
+            lay = autoencoder.layout(chunk, ratio)
+            manifest["autoencoders"][key] = {
+                "chunk": chunk,
+                "ratio": ratio,
+                "code": chunk // ratio,
+                "d": lay.total,
+                "enc_dims": autoencoder.enc_dims(chunk, ratio),
+                "layers": lay.manifest(),
+                "encode": f"ae_{key}_encode",
+                "decode": f"ae_{key}_decode",
+                "train": {
+                    "batch": AE_TRAIN_BATCH,
+                    "name": f"ae_{key}_train_b{AE_TRAIN_BATCH}",
+                },
+            }
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument(
+        "--only", default=None, help="lower a single artifact by name (debug)"
+    )
+    parser.add_argument(
+        "--force", action="store_true", help="re-lower even if the .hlo.txt exists"
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    arts = build_artifact_specs()
+    if args.only:
+        arts = [a for a in arts if a.name == args.only]
+        if not arts:
+            raise SystemExit(f"unknown artifact {args.only!r}")
+
+    for art in arts:
+        _fill_outputs(art)
+        path = os.path.join(args.out, f"{art.name}.hlo.txt")
+        if os.path.exists(path) and not args.force:
+            print(f"[aot] keep   {art.name}")
+            continue
+        lowered = jax.jit(art.fn).lower(*art.arg_structs())
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] wrote  {art.name}  ({len(text) / 1024:.0f} KiB)")
+
+    manifest = build_manifest(arts if not args.only else build_artifact_specs())
+    if not args.only:
+        with open(os.path.join(args.out, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"[aot] wrote  manifest.json ({len(manifest['executables'])} executables)")
+
+
+if __name__ == "__main__":
+    main()

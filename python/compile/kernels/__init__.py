@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels for HCFL.
+
+Every kernel here runs with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode traces the kernel body to
+plain HLO ops so the Rust runtime executes it natively.  Block shapes are
+nevertheless chosen for the TPU memory model (multiples of the (8, 128)
+register tile, operands staged through VMEM via ``BlockSpec``) so the same
+kernels are MXU/VPU-shaped if compiled for a real TPU.
+
+Kernels:
+    matmul     -- tiled GEMM with a VMEM f32 accumulator (custom_vjp).
+    fc_block   -- fused ``tanh(x @ w + b)`` (the HCFL FC layer, custom_vjp).
+    ternary    -- TWN thresholding for the T-FedAvg baseline.
+    scale      -- per-chunk affine [-1, 1] scaling and its inverse.
+"""
+
+from .matmul import matmul  # noqa: F401
+from .fc_block import fc_block, tanh_bwd  # noqa: F401
+from .ternary import ternary_quantize  # noqa: F401
+from .scale import chunk_scale, chunk_unscale  # noqa: F401

@@ -1,0 +1,144 @@
+"""Fused HCFL FC block: ``tanh(x @ w + b)`` in one Pallas kernel.
+
+This is the building block of the HCFL compressor/extractor (paper Fig. 5:
+dense -> activation per layer).  Fusing bias-add and tanh into the GEMM
+epilogue saves two HBM round-trips per layer on a real TPU; on the CPU
+interpret path it lowers to the equivalent fused HLO.
+
+The paper additionally batch-normalizes the FC input.  At inference the
+compressor sees a *single* weight chunk, where batch statistics are
+degenerate, so the re-centering/re-scaling role of BN is played by the
+per-chunk affine [-1,1] scaling (``kernels.scale``) that feeds the
+autoencoder -- see DESIGN.md §4/§5.
+
+``fc_block`` has a custom VJP: the backward pass first applies the
+``tanh_bwd`` elementwise kernel (gz = g * (1 - y^2)), then two Pallas
+GEMMs for dx and dw; db is a row-sum reduction.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .matmul import (
+    CPU_BK,
+    CPU_BM,
+    CPU_BN,
+    _matmul_pallas,
+    _pick_block,
+    _pick_lane_block,
+    _round_up,
+    _SUBLANE,
+)
+
+
+def _fc_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        # Fused epilogue: bias add + tanh, written once to the output tile.
+        o_ref[...] = jnp.tanh(acc_ref[...] + b_ref[...].astype(jnp.float32)).astype(
+            o_ref.dtype
+        )
+
+
+def _fc_pallas(x, w, b, *, bm: int = CPU_BM, bn: int = CPU_BN, bk: int = CPU_BK):
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape != (n,):
+        raise ValueError(f"fc_block shape mismatch: {x.shape} @ {w.shape} + {b.shape}")
+
+    bm = _pick_block(m, _SUBLANE, bm)
+    bn = _pick_lane_block(n, bn)
+    bk = _pick_lane_block(k, bk)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else w
+    bp = jnp.pad(b, (0, np_ - n)) if np_ != n else b
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_fc_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, wp, bp)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+def _tanh_bwd_kernel(g_ref, y_ref, o_ref):
+    g = g_ref[...].astype(jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    o_ref[...] = (g * (1.0 - y * y)).astype(o_ref.dtype)
+
+
+def tanh_bwd(g, y, *, bm: int = CPU_BM, bn: int = CPU_BN):
+    """Elementwise VPU kernel: ``g * (1 - y**2)`` (tanh input-gradient)."""
+    if g.shape != y.shape or g.ndim != 2:
+        raise ValueError(f"tanh_bwd expects equal 2-D shapes, got {g.shape}, {y.shape}")
+    m, n = g.shape
+    bm = _pick_block(m, _SUBLANE, bm)
+    bn = _pick_lane_block(n, bn)
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    gp = jnp.pad(g, ((0, mp - m), (0, np_ - n))) if (mp, np_) != (m, n) else g
+    yp = jnp.pad(y, ((0, mp - m), (0, np_ - n))) if (mp, np_) != (m, n) else y
+
+    out = pl.pallas_call(
+        _tanh_bwd_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), g.dtype),
+        interpret=True,
+    )(gp, yp)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+@jax.custom_vjp
+def fc_block(x, w, b):
+    """Differentiable fused FC layer: ``tanh(x @ w + b)``."""
+    return _fc_pallas(x, w, b)
+
+
+def _fc_fwd(x, w, b):
+    y = _fc_pallas(x, w, b)
+    return y, (x, w, y)
+
+
+def _fc_bwd(res, g):
+    x, w, y = res
+    gz = tanh_bwd(g, y)
+    dx = _matmul_pallas(gz, w.T)
+    dw = _matmul_pallas(x.T, gz)
+    db = jnp.sum(gz, axis=0)
+    return dx, dw, db
+
+
+fc_block.defvjp(_fc_fwd, _fc_bwd)

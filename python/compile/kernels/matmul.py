@@ -1,0 +1,134 @@
+"""Tiled Pallas GEMM -- the single FLOP sink of the whole stack.
+
+Conv layers are im2col'd in Layer 2 so that every dense/conv FLOP lands
+here.  The kernel follows the canonical MXU pattern: a 3-D grid over
+(M-tiles, N-tiles, K-tiles), operands staged block-by-block through VMEM,
+and a VMEM f32 accumulator that is zeroed on the first K step and flushed
+to the output block on the last.
+
+``matmul`` carries a custom VJP whose backward pass is two more Pallas
+GEMMs (dx = g @ w^T, dw = x^T @ g) so that ``jax.grad`` through any model
+built on this kernel stays inside Pallas.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# TPU register tile is (8, 128) for f32; blocks are multiples of it.
+_LANE = 128
+_SUBLANE = 8
+
+# Default block caps.
+#
+# TPU profile: (128, 256, 512) keeps every operand tile + the f32
+# accumulator well inside a core's ~16 MiB VMEM:
+#   x[128,512] + w[512,256] + acc/out[128,256] = 0.6 MiB with room for
+#   double-buffering — the shapes the EXPERIMENTS.md §Perf estimate uses.
+TPU_BM, TPU_BN, TPU_BK = 128, 256, 512
+# CPU-interpret profile (what the shipped artifacts are lowered with):
+# interpret mode serializes the grid into an XLA while-loop, so the cap is
+# raised until loop overhead is amortized (measured sweep in
+# EXPERIMENTS.md §Perf; 128-cap blocks ran the LeNet step 9x slower).
+CPU_BM, CPU_BN, CPU_BK = 4096, 1024, 4096
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block(dim: int, unit: int, cap: int) -> int:
+    """Largest multiple of ``unit`` that divides the padded dim, <= cap."""
+    padded = _round_up(dim, unit)
+    return min(padded, cap)
+
+
+def _pick_lane_block(dim: int, cap: int) -> int:
+    """Lane-dimension block size.
+
+    Dims >= 128 use full 128-lane tiles (the MXU shape).  Smaller dims pad
+    only to the 8-sublane granularity: on the CPU-interpret correctness
+    path a forced 128-lane pad would waste up to ~100x FLOPs on tiny conv
+    layers (e.g. LeNet conv1: K=25, N=6); a real-TPU build would instead
+    re-layout those layers (see DESIGN.md §5).
+    """
+    unit = _LANE if dim >= _LANE else _SUBLANE
+    return min(_round_up(dim, unit), cap)
+
+
+def _mm_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _matmul_pallas(x, y, *, bm: int = CPU_BM, bn: int = CPU_BN, bk: int = CPU_BK):
+    """Raw (non-differentiable) tiled GEMM: ``x [M,K] @ y [K,N] -> [M,N]``.
+
+    Inputs of any shape are zero-padded up to block multiples; the result
+    is sliced back.  Zero padding is exact for matmul.
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {y.shape}")
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+
+    bm = _pick_block(m, _SUBLANE, bm)
+    bn = _pick_lane_block(n, bn)
+    bk = _pick_lane_block(k, bk)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else x
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else y
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,  # CPU-PJRT target; see module docstring
+    )(xp, yp)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+@jax.custom_vjp
+def matmul(x, y):
+    """Differentiable tiled Pallas GEMM."""
+    return _matmul_pallas(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _matmul_pallas(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    dx = _matmul_pallas(g, y.T)
+    dy = _matmul_pallas(x.T, g)
+    return dx, dy
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

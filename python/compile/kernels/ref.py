@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel -- the correctness ground truth.
+
+pytest (python/tests/test_kernels.py) sweeps shapes/dtypes with hypothesis
+and asserts allclose between each kernel and its oracle here, for values
+and (where the kernel is differentiable) gradients.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    return jnp.matmul(
+        x.astype(jnp.float32), y.astype(jnp.float32)
+    ).astype(x.dtype)
+
+
+def fc_block(x, w, b):
+    z = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(
+        jnp.float32
+    )
+    return jnp.tanh(z).astype(x.dtype)
+
+
+def tanh_bwd(g, y):
+    gf = g.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    return (gf * (1.0 - yf * yf)).astype(g.dtype)
+
+
+def ternary_quantize(w):
+    aw = jnp.abs(w).astype(jnp.float32)
+    delta = 0.7 * jnp.mean(aw)
+    mask = aw > delta
+    cnt = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+    alpha = jnp.sum(aw * mask.astype(jnp.float32)) / cnt
+    q = (jnp.sign(w.astype(jnp.float32)) * mask.astype(jnp.float32)).astype(w.dtype)
+    return q, alpha
+
+
+_EPS = 1e-8
+
+
+def chunk_scale(w):
+    lo = jnp.min(w).astype(jnp.float32)
+    hi = jnp.max(w).astype(jnp.float32)
+    span = jnp.maximum(hi - lo, _EPS)
+    s = (2.0 * (w.astype(jnp.float32) - lo) / span - 1.0).astype(w.dtype)
+    return s, lo, hi
+
+
+def chunk_unscale(s, lo, hi):
+    span = jnp.maximum(hi - lo, _EPS)
+    return ((s.astype(jnp.float32) + 1.0) * 0.5 * span + lo).astype(s.dtype)

@@ -1,0 +1,74 @@
+"""Per-chunk affine [-1, 1] scaling kernels (HCFL pre-processing).
+
+The HCFL FC layers end in tanh, so the autoencoder operates on values in
+[-1, 1] (paper §III-C2).  Raw weight chunks are mapped into that range by
+a per-chunk min/max affine transform; (lo, hi) travel with the code as two
+f32 of side information and the inverse transform is applied after the
+decoder.  This per-chunk re-centering/re-scaling also stands in for the
+paper's FC-input batch-norm at inference time (DESIGN.md §5).
+
+Both directions are 1-D elementwise Pallas kernels; the min/max reduction
+is jnp.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _round_up
+
+_BLOCK = 1024
+_EPS = 1e-8
+
+
+def _scale_kernel(w_ref, lo_ref, hi_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+    span = jnp.maximum(hi - lo, _EPS)
+    o_ref[...] = (2.0 * (w - lo) / span - 1.0).astype(o_ref.dtype)
+
+
+def _unscale_kernel(s_ref, lo_ref, hi_ref, o_ref):
+    s = s_ref[...].astype(jnp.float32)
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+    span = jnp.maximum(hi - lo, _EPS)
+    o_ref[...] = ((s + 1.0) * 0.5 * span + lo).astype(o_ref.dtype)
+
+
+def _apply(kernel, x, lo, hi):
+    n = x.shape[0]
+    np_ = _round_up(n, _BLOCK)
+    xp = jnp.pad(x, (0, np_ - n)) if np_ != n else x
+    out = pl.pallas_call(
+        kernel,
+        grid=(np_ // _BLOCK,),
+        in_specs=[
+            pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), x.dtype),
+        interpret=True,
+    )(xp, lo.reshape(1), hi.reshape(1))
+    return out[:n] if np_ != n else out
+
+
+def chunk_scale(w):
+    """Map a 1-D chunk into [-1, 1]; returns (scaled, lo, hi)."""
+    if w.ndim != 1:
+        raise ValueError(f"chunk_scale expects a 1-D chunk, got {w.shape}")
+    lo = jnp.min(w).astype(jnp.float32)
+    hi = jnp.max(w).astype(jnp.float32)
+    return _apply(_scale_kernel, w, lo, hi), lo, hi
+
+
+def chunk_unscale(s, lo, hi):
+    """Inverse of :func:`chunk_scale` given the (lo, hi) side info."""
+    if s.ndim != 1:
+        raise ValueError(f"chunk_unscale expects a 1-D chunk, got {s.shape}")
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    return _apply(_unscale_kernel, s, lo, hi)

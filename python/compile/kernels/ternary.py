@@ -1,0 +1,61 @@
+"""Ternary weight quantization kernel -- the T-FedAvg baseline (paper [22]).
+
+TWN-style quantization of a flat weight chunk ``w``:
+
+    delta = 0.7 * mean(|w|)
+    q_i   = sign(w_i) * 1[|w_i| > delta]          (values in {-1, 0, +1})
+    alpha = mean(|w_i| : |w_i| > delta)           (per-chunk scale)
+
+The reductions (delta, alpha) are cheap global reductions done in jnp; the
+elementwise thresholding -- the bandwidth-bound part -- is a VPU-shaped
+Pallas kernel gridded in 1-D lane blocks.
+
+Wire format accounting (2 bits/weight + one f32 scale per chunk) lives in
+the Rust ``compression::ternary`` module.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _round_up
+
+_BLOCK = 1024
+
+
+def _tq_kernel(w_ref, d_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)
+    d = d_ref[0]
+    o_ref[...] = (jnp.sign(w) * (jnp.abs(w) > d).astype(jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+def ternary_quantize(w):
+    """Quantize a 1-D chunk to (q in {-1,0,1}, alpha scale scalar)."""
+    if w.ndim != 1:
+        raise ValueError(f"ternary_quantize expects a 1-D chunk, got {w.shape}")
+    n = w.shape[0]
+    aw = jnp.abs(w).astype(jnp.float32)
+    delta = 0.7 * jnp.mean(aw)
+    mask = aw > delta
+    # alpha = mean of |w| above threshold; guard the all-below-threshold case.
+    cnt = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+    alpha = jnp.sum(aw * mask.astype(jnp.float32)) / cnt
+
+    np_ = _round_up(n, _BLOCK)
+    wp = jnp.pad(w, (0, np_ - n)) if np_ != n else w
+    q = pl.pallas_call(
+        _tq_kernel,
+        grid=(np_ // _BLOCK,),
+        in_specs=[
+            pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), w.dtype),
+        interpret=True,
+    )(wp, delta.reshape(1))
+    if np_ != n:
+        q = q[:n]
+    return q, alpha

@@ -1,0 +1,86 @@
+"""Flat-parameter calling convention shared by all Layer-2 graphs.
+
+Every model executable takes / returns its parameter set as a single
+``f32[D]`` vector (DESIGN.md §6): the Rust coordinator stays shape-agnostic
+and only needs the layer table from the manifest for initialization and
+segmentation.  This module owns that layer table.
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One named parameter tensor inside the flat vector."""
+
+    name: str
+    shape: Tuple[int, ...]
+    segment: str  # "conv" | "dense" -- HCFL trains one compressor per segment
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+class Layout:
+    """Ordered layer table with offsets into the flat f32 vector."""
+
+    def __init__(self, specs: Sequence[LayerSpec]):
+        self.specs: List[LayerSpec] = list(specs)
+        self.offsets: List[int] = []
+        off = 0
+        for s in self.specs:
+            self.offsets.append(off)
+            off += s.size
+        self.total = off
+
+    def unflatten(self, flat) -> Dict[str, jnp.ndarray]:
+        """Slice the flat vector into named, shaped tensors (inside jit)."""
+        out = {}
+        for spec, off in zip(self.specs, self.offsets):
+            out[spec.name] = flat[off : off + spec.size].reshape(spec.shape)
+        return out
+
+    def flatten(self, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        return jnp.concatenate(
+            [params[s.name].reshape(-1) for s in self.specs], axis=0
+        )
+
+    def manifest(self) -> List[dict]:
+        """Layer table as JSON-able dicts for artifacts/manifest.json."""
+        return [
+            {
+                "name": s.name,
+                "shape": list(s.shape),
+                "offset": off,
+                "size": s.size,
+                "segment": s.segment,
+            }
+            for s, off in zip(self.specs, self.offsets)
+        ]
+
+    def init_flat(self, key) -> jnp.ndarray:
+        """Fan-in uniform init (matches rust/src/model/init.rs)."""
+        import jax
+
+        chunks = []
+        for s in self.specs:
+            key, sub = jax.random.split(key)
+            if len(s.shape) > 1:
+                fan_in = int(np.prod(s.shape[:-1]))
+                limit = float(np.sqrt(6.0 / fan_in))
+                chunks.append(
+                    jax.random.uniform(
+                        sub, (s.size,), jnp.float32, -limit, limit
+                    )
+                )
+            else:
+                chunks.append(jnp.zeros((s.size,), jnp.float32))
+        return jnp.concatenate(chunks, axis=0)
+
+
+import jax  # noqa: E402  (used in init_flat; kept after class for clarity)

@@ -1,0 +1,42 @@
+"""Loss functions for the predictor models and the HCFL joint objective.
+
+The HCFL objective implements paper eq. (8): ``L = λ·H − (1−λ)·I`` where H
+is the reconstruction term (the paper's eq. (7) shows the cross-entropy of
+a Gaussian output is Θ(MSE), so we use MSE directly) and I is a
+mutual-information surrogate.  The paper never specifies an MI estimator;
+we use the code-variance surrogate ``mean(log(1 + var(code)))`` --
+maximizing the per-dimension variance of a bounded (tanh) code maximizes
+the Gaussian-channel capacity of the bottleneck, the same information-
+bottleneck argument as the paper's refs [30, 31].  See DESIGN.md §4.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_cross_entropy(logits, labels, n_classes: int):
+    """Mean CE over the batch; labels are int32 class indices."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, n_classes, dtype=logits.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def accuracy_count(logits, labels):
+    """Number of correct predictions in the batch (as f32)."""
+    pred = jnp.argmax(logits, axis=-1).astype(labels.dtype)
+    return jnp.sum((pred == labels).astype(jnp.float32))
+
+
+def mse(a, b):
+    return jnp.mean((a - b) ** 2)
+
+
+def mi_surrogate(code):
+    """Variance surrogate for I(W, C); code is [B, M]."""
+    var = jnp.var(code, axis=0)
+    return jnp.mean(jnp.log1p(var))
+
+
+def hcfl_loss(x, x_hat, code, lam: float = 0.9):
+    """Paper eq. (8): λ·MSE − (1−λ)·I_sur (minimized)."""
+    return lam * mse(x_hat, x) - (1.0 - lam) * mi_surrogate(code)

@@ -1,0 +1,18 @@
+"""Layer-2 entry point (kept at the canonical path).
+
+The actual graphs live in :mod:`compile.models` (lenet / five_cnn /
+autoencoder) and :mod:`compile.train` (train/eval/encode/decode builders);
+this module re-exports them so the documented layout
+(``python/compile/model.py``) resolves.
+"""
+
+from .models import autoencoder, five_cnn, lenet  # noqa: F401
+from .train import (  # noqa: F401
+    make_ae_decode,
+    make_ae_encode,
+    make_ae_train,
+    make_eval,
+    make_ternary,
+    make_train_epoch,
+    make_train_step,
+)

@@ -1,0 +1,8 @@
+"""Layer-2 model graphs: the two FL predictors and the HCFL autoencoder.
+
+All dense/conv FLOPs route through the Layer-1 Pallas kernels
+(``kernels.matmul`` / ``kernels.fc_block``); convolutions are im2col'd
+here so the GEMM kernel is the single FLOP sink.
+"""
+
+from . import lenet, five_cnn, autoencoder  # noqa: F401

@@ -1,0 +1,63 @@
+"""HCFL compressor/extractor: per-(chunk, ratio) under-complete autoencoder.
+
+Architecture per the paper (§III-C2): stacks of FC blocks (dense + tanh,
+the fused Layer-1 ``fc_block`` kernel), *deeper for higher compression
+ratios* -- each stage halves the width until the bottleneck ``chunk/ratio``
+is reached, and the extractor mirrors the compressor.
+
+The autoencoder operates on weight chunks pre-scaled into [-1, 1]
+(``kernels.scale``); the tanh output range therefore covers the full data
+range.  Encoder output (the code) is also tanh-bounded, which keeps the
+wire representation quantization-friendly.
+"""
+
+from typing import List
+
+from ..layout import LayerSpec, Layout
+from ..kernels import fc_block
+
+
+def enc_dims(chunk: int, ratio: int) -> List[int]:
+    """Widths of the compressor, input first: halve until chunk/ratio."""
+    code = chunk // ratio
+    dims = [chunk]
+    while dims[-1] > code:
+        dims.append(max(dims[-1] // 2, code))
+    return dims
+
+
+def dec_dims(chunk: int, ratio: int) -> List[int]:
+    return list(reversed(enc_dims(chunk, ratio)))
+
+
+def _fc_specs(prefix: str, dims: List[int]) -> List[LayerSpec]:
+    specs = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        specs.append(LayerSpec(f"{prefix}{i}_w", (a, b), "dense"))
+        specs.append(LayerSpec(f"{prefix}{i}_b", (b,), "dense"))
+    return specs
+
+
+def layout(chunk: int, ratio: int) -> Layout:
+    """Joint layer table: encoder layers first, then decoder layers."""
+    return Layout(
+        _fc_specs("enc", enc_dims(chunk, ratio))
+        + _fc_specs("dec", dec_dims(chunk, ratio))
+    )
+
+
+def _stack(p, prefix: str, n_layers: int, x):
+    h = x
+    for i in range(n_layers):
+        h = fc_block(h, p[f"{prefix}{i}_w"], p[f"{prefix}{i}_b"])
+    return h
+
+
+def encode(p, chunk: int, ratio: int, x):
+    """x [B, chunk] in [-1,1] -> code [B, chunk/ratio]."""
+    return _stack(p, "enc", len(enc_dims(chunk, ratio)) - 1, x)
+
+
+def decode(p, chunk: int, ratio: int, code):
+    """code [B, chunk/ratio] -> x_hat [B, chunk] in [-1,1]."""
+    return _stack(p, "dec", len(dec_dims(chunk, ratio)) - 1, code)

@@ -1,0 +1,63 @@
+"""Shared conv/pool building blocks for the FL predictor models.
+
+Convolutions are expressed as im2col + Pallas GEMM so that every FLOP of
+every model lands in the Layer-1 ``matmul`` kernel (MXU-shaped); pooling
+and activations are cheap elementwise/reduce ops XLA fuses on its own.
+"""
+
+import jax.numpy as jnp
+
+from ..kernels import matmul
+
+
+def im2col(x, kh: int, kw: int):
+    """Extract VALID kh x kw patches.
+
+    x: [B, H, W, C] -> [B, H-kh+1, W-kw+1, kh*kw*C], with the feature axis
+    ordered (di, dj, c) to match ``conv_weight_matrix``.
+    """
+    b, h, w, c = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    cols = jnp.stack(
+        [x[:, i : i + oh, j : j + ow, :] for i in range(kh) for j in range(kw)],
+        axis=3,
+    )  # [B, OH, OW, kh*kw, C]
+    return cols.reshape(b, oh, ow, kh * kw * c)
+
+
+def conv2d(x, w):
+    """VALID conv via im2col + Pallas GEMM.
+
+    x: [B, H, W, C], w: [kh, kw, C, OC] -> [B, OH, OW, OC].
+    """
+    kh, kw, c, oc = w.shape
+    b = x.shape[0]
+    cols = im2col(x, kh, kw)
+    oh, ow = cols.shape[1], cols.shape[2]
+    flat = cols.reshape(b * oh * ow, kh * kw * c)
+    out = matmul(flat, w.reshape(kh * kw * c, oc))
+    return out.reshape(b, oh, ow, oc)
+
+
+def conv2d_same(x, w):
+    """SAME-padded conv (odd kernels) via pad + :func:`conv2d`."""
+    kh, kw = w.shape[0], w.shape[1]
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    return conv2d(xp, w)
+
+
+def maxpool2(x):
+    """2x2 max pooling, stride 2 (even spatial dims required)."""
+    b, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, f"maxpool2 needs even dims, got {x.shape}"
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def dense(x, w, b):
+    """Plain dense layer through the Pallas GEMM (activation added by caller)."""
+    return matmul(x, w) + b

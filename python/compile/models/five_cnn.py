@@ -1,0 +1,55 @@
+"""The paper's "5-CNN" predictor for the (synthetic) EMNIST-47 workload.
+
+Five 3x3 conv layers (16, 32, 32, 64, 64 channels; max-pools after #2 and
+#4, SAME padding on #5 to keep the 4x4 spatial grid) followed by two FC
+layers (1024 -> 256 -> 47).  ReLU after every pool / conv per the paper's
+description; the paper's dropout is omitted because the AOT executables
+must be deterministic -- the regularizing role is played by the small
+per-client shards (DESIGN.md §4).
+
+~330k parameters: the "complex model" whose dense segment the paper splits
+8-ways before compression (§VI-A Dataset segmentation).
+"""
+
+from ..layout import LayerSpec, Layout
+from .common import conv2d, conv2d_same, dense, maxpool2, relu
+
+INPUT_DIM = 784
+CLASSES = 47
+
+_SPECS = [
+    LayerSpec("conv1_w", (3, 3, 1, 16), "conv"),
+    LayerSpec("conv1_b", (16,), "conv"),
+    LayerSpec("conv2_w", (3, 3, 16, 32), "conv"),
+    LayerSpec("conv2_b", (32,), "conv"),
+    LayerSpec("conv3_w", (3, 3, 32, 32), "conv"),
+    LayerSpec("conv3_b", (32,), "conv"),
+    LayerSpec("conv4_w", (3, 3, 32, 64), "conv"),
+    LayerSpec("conv4_b", (64,), "conv"),
+    LayerSpec("conv5_w", (3, 3, 64, 64), "conv"),
+    LayerSpec("conv5_b", (64,), "conv"),
+    LayerSpec("fc1_w", (1024, 256), "dense"),
+    LayerSpec("fc1_b", (256,), "dense"),
+    LayerSpec("fc2_w", (256, 47), "dense"),
+    LayerSpec("fc2_b", (47,), "dense"),
+]
+
+
+def layout() -> Layout:
+    return Layout(_SPECS)
+
+
+def apply(p, x):
+    """Forward pass: x [B, 784] -> logits [B, 47]."""
+    b = x.shape[0]
+    h = x.reshape(b, 28, 28, 1)
+    h = relu(conv2d(h, p["conv1_w"]) + p["conv1_b"])  # 26
+    h = relu(conv2d(h, p["conv2_w"]) + p["conv2_b"])  # 24
+    h = maxpool2(h)  # 12
+    h = relu(conv2d(h, p["conv3_w"]) + p["conv3_b"])  # 10
+    h = relu(conv2d(h, p["conv4_w"]) + p["conv4_b"])  # 8
+    h = maxpool2(h)  # 4
+    h = relu(conv2d_same(h, p["conv5_w"]) + p["conv5_b"])  # 4 (SAME)
+    h = h.reshape(b, 1024)
+    h = relu(dense(h, p["fc1_w"], p["fc1_b"]))
+    return dense(h, p["fc2_w"], p["fc2_b"])

@@ -1,0 +1,46 @@
+"""LeNet-5 predictor for the (synthetic) MNIST workload (paper §VI-A).
+
+conv 5x5x6 -> pool -> conv 5x5x16 -> pool -> fc 120 -> fc 84 -> fc 10,
+ReLU activations, softmax classification head.  On 28x28 inputs the
+flatten size is 4*4*16 = 256 (the classic 32x32 LeNet has 400); the layer
+table in the manifest is the source of truth for the Rust side.
+
+44,426 parameters total.
+"""
+
+from ..layout import LayerSpec, Layout
+from .common import conv2d, dense, maxpool2, relu
+
+INPUT_DIM = 784
+CLASSES = 10
+
+_SPECS = [
+    LayerSpec("conv1_w", (5, 5, 1, 6), "conv"),
+    LayerSpec("conv1_b", (6,), "conv"),
+    LayerSpec("conv2_w", (5, 5, 6, 16), "conv"),
+    LayerSpec("conv2_b", (16,), "conv"),
+    LayerSpec("fc1_w", (256, 120), "dense"),
+    LayerSpec("fc1_b", (120,), "dense"),
+    LayerSpec("fc2_w", (120, 84), "dense"),
+    LayerSpec("fc2_b", (84,), "dense"),
+    LayerSpec("fc3_w", (84, 10), "dense"),
+    LayerSpec("fc3_b", (10,), "dense"),
+]
+
+
+def layout() -> Layout:
+    return Layout(_SPECS)
+
+
+def apply(p, x):
+    """Forward pass: x [B, 784] -> logits [B, 10]."""
+    b = x.shape[0]
+    h = x.reshape(b, 28, 28, 1)
+    h = relu(conv2d(h, p["conv1_w"]) + p["conv1_b"])  # [B, 24, 24, 6]
+    h = maxpool2(h)  # [B, 12, 12, 6]
+    h = relu(conv2d(h, p["conv2_w"]) + p["conv2_b"])  # [B, 8, 8, 16]
+    h = maxpool2(h)  # [B, 4, 4, 16]
+    h = h.reshape(b, 256)
+    h = relu(dense(h, p["fc1_w"], p["fc1_b"]))
+    h = relu(dense(h, p["fc2_w"], p["fc2_b"]))
+    return dense(h, p["fc3_w"], p["fc3_b"])

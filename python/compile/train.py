@@ -1,0 +1,168 @@
+"""Graph builders for every AOT-lowered executable.
+
+All builders return pure functions over the flat-parameter convention
+(DESIGN.md §6): parameters in and out as one ``f32[D]`` vector, so the
+Rust runtime needs no pytree knowledge.  ``aot.py`` jit-lowers each of
+these at fixed shapes and dumps HLO text.
+"""
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import losses
+from .kernels import chunk_scale, chunk_unscale, ternary_quantize
+from .models import autoencoder
+
+
+# --------------------------------------------------------------------------
+# Predictor models (LeNet-5 / 5-CNN)
+# --------------------------------------------------------------------------
+
+
+def make_train_step(model) -> Callable:
+    """SGD step: (flat[D], x[B,784], y[B] i32, lr[]) -> (flat', loss)."""
+    layout = model.layout()
+
+    def loss_fn(flat, x, y):
+        params = layout.unflatten(flat)
+        logits = model.apply(params, x)
+        return losses.softmax_cross_entropy(logits, y, model.CLASSES)
+
+    def step(flat, x, y, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(flat, x, y)
+        return (flat - lr * grads, loss)
+
+    return step
+
+
+def make_train_epoch(model, n_batches: int) -> Callable:
+    """One local epoch scanned inside the graph: 1 dispatch instead of Nb.
+
+    (flat[D], xs[Nb,B,784], ys[Nb,B] i32, lr[]) -> (flat', mean_loss).
+    """
+    step = make_train_step(model)
+
+    def epoch(flat, xs, ys, lr):
+        def body(carry, batch):
+            x, y = batch
+            new_flat, loss = step(carry, x, y, lr)
+            return new_flat, loss
+
+        flat, batch_losses = jax.lax.scan(body, flat, (xs, ys))
+        return (flat, jnp.mean(batch_losses))
+
+    del n_batches  # baked into the traced xs/ys shapes
+    return epoch
+
+
+def make_eval(model) -> Callable:
+    """(flat[D], x[B,784], y[B] i32) -> (correct_count, mean_loss)."""
+    layout = model.layout()
+
+    def evaluate(flat, x, y):
+        params = layout.unflatten(flat)
+        logits = model.apply(params, x)
+        loss = losses.softmax_cross_entropy(logits, y, model.CLASSES)
+        return (losses.accuracy_count(logits, y), loss)
+
+    return evaluate
+
+
+# --------------------------------------------------------------------------
+# HCFL autoencoder
+# --------------------------------------------------------------------------
+
+
+def _rows_to_unit(w):
+    """Row-wise affine map of [B, chunk] into [-1,1] (training-path scaling;
+    the inference path does the same per-chunk via the Pallas scale kernel)."""
+    lo = jnp.min(w, axis=1, keepdims=True)
+    hi = jnp.max(w, axis=1, keepdims=True)
+    span = jnp.maximum(hi - lo, 1e-8)
+    return 2.0 * (w - lo) / span - 1.0
+
+
+def make_ae_train(chunk: int, ratio: int, lam: float = 0.9) -> Callable:
+    """HCFL training step on a batch of raw weight chunks.
+
+    (flat_ae[Dae], w[B,chunk], lr[]) -> (flat_ae', loss) with the joint
+    objective of paper eq. (8).
+    """
+    layout = autoencoder.layout(chunk, ratio)
+
+    def loss_fn(flat, w):
+        p = layout.unflatten(flat)
+        x = _rows_to_unit(w)
+        code = autoencoder.encode(p, chunk, ratio, x)
+        x_hat = autoencoder.decode(p, chunk, ratio, code)
+        return losses.hcfl_loss(x, x_hat, code, lam)
+
+    def step(flat, w, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(flat, w)
+        return (flat - lr * grads, loss)
+
+    return step
+
+
+def make_ae_encode(chunk: int, ratio: int) -> Callable:
+    """Client-side compressor.
+
+    (flat_ae[Dae], w[chunk]) -> (code, lo, hi, mu, sd): the code plus four
+    f32 of side info — the affine scaling pair (lo, hi) and the scaled
+    chunk's first two moments (mu, sd).  The moments let the extractor
+    renormalize its output to the true chunk statistics: an
+    under-complete AE systematically shrinks its output toward the chunk
+    mean, and without the correction the reconstructed *energy* vanishes
+    (the aligned component would be scaled by rho < 1 every round).  All
+    side info is counted in the wire size by the Rust compression module.
+    """
+    layout = autoencoder.layout(chunk, ratio)
+
+    def encode(flat, w):
+        p = layout.unflatten(flat)
+        scaled, lo, hi = chunk_scale(w)
+        mu = jnp.mean(scaled)
+        sd = jnp.std(scaled)
+        code = autoencoder.encode(p, chunk, ratio, scaled.reshape(1, chunk))
+        return (code.reshape(chunk // ratio), lo, hi, mu, sd)
+
+    return encode
+
+
+def make_ae_decode(chunk: int, ratio: int) -> Callable:
+    """Server-side extractor: (flat_ae, code, lo, hi, mu, sd) -> w_hat.
+
+    The raw decoder output is renormalized to the transmitted (mu, sd)
+    before the inverse affine scaling — see :func:`make_ae_encode`.
+    """
+    layout = autoencoder.layout(chunk, ratio)
+
+    def decode(flat, code, lo, hi, mu, sd):
+        p = layout.unflatten(flat)
+        x_hat = autoencoder.decode(
+            p, chunk, ratio, code.reshape(1, chunk // ratio)
+        ).reshape(chunk)
+        # Moment-match the reconstruction to the original chunk.
+        x_mu = jnp.mean(x_hat)
+        x_sd = jnp.maximum(jnp.std(x_hat), 1e-8)
+        x_hat = (x_hat - x_mu) / x_sd * sd + mu
+        return chunk_unscale(x_hat, lo, hi)
+
+    return decode
+
+
+# --------------------------------------------------------------------------
+# T-FedAvg baseline
+# --------------------------------------------------------------------------
+
+
+def make_ternary(chunk: int) -> Callable:
+    """(w[chunk]) -> (q[chunk] in {-1,0,1}, alpha[]) -- TWN quantization."""
+
+    def quantize(w):
+        return ternary_quantize(w)
+
+    del chunk
+    return quantize

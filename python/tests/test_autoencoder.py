@@ -1,0 +1,113 @@
+"""HCFL autoencoder graph tests: architecture, training signal, round-trip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import train
+from compile.models import autoencoder
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestArchitecture:
+    @pytest.mark.parametrize("chunk", [256, 1024])
+    @pytest.mark.parametrize("ratio", [4, 8, 16, 32])
+    def test_enc_dims(self, chunk, ratio):
+        dims = autoencoder.enc_dims(chunk, ratio)
+        assert dims[0] == chunk
+        assert dims[-1] == chunk // ratio
+        # strictly narrowing (under-complete)
+        assert all(a > b for a, b in zip(dims[:-1], dims[1:]))
+        # paper §III-C2: higher compression ratio => deeper network
+        if ratio > 4:
+            assert len(dims) > len(autoencoder.enc_dims(chunk, 4))
+
+    def test_decoder_mirrors_encoder(self):
+        assert autoencoder.dec_dims(1024, 8) == list(
+            reversed(autoencoder.enc_dims(1024, 8))
+        )
+
+    def test_layout_total_matches_dims(self):
+        chunk, ratio = 256, 4
+        enc = autoencoder.enc_dims(chunk, ratio)
+        dec = autoencoder.dec_dims(chunk, ratio)
+        want = sum(a * b + b for a, b in zip(enc[:-1], enc[1:])) + sum(
+            a * b + b for a, b in zip(dec[:-1], dec[1:])
+        )
+        assert autoencoder.layout(chunk, ratio).total == want
+
+
+def _chunk_data(key, n, chunk):
+    """Synthetic 'weight chunks': smooth low-rank structure + noise, like
+    real model weights (correlated, centered)."""
+    k1, k2 = jax.random.split(key)
+    basis = jax.random.normal(k1, (8, chunk)) * 0.1
+    coef = jax.random.normal(k2, (n, 8))
+    return coef @ basis + jax.random.normal(key, (n, chunk)) * 0.01
+
+
+class TestTraining:
+    @pytest.mark.parametrize("chunk,ratio", [(256, 4), (256, 32)])
+    def test_loss_decreases(self, chunk, ratio):
+        step = train.make_ae_train(chunk, ratio)
+        lay = autoencoder.layout(chunk, ratio)
+        flat = lay.init_flat(jax.random.PRNGKey(0))
+        w = _chunk_data(jax.random.PRNGKey(1), 64, chunk)
+        losses = []
+        for _ in range(15):
+            flat, loss = step(flat, w, jnp.float32(0.05))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
+
+    def test_encode_decode_shapes(self):
+        chunk, ratio = 256, 8
+        lay = autoencoder.layout(chunk, ratio)
+        flat = lay.init_flat(jax.random.PRNGKey(0))
+        enc = train.make_ae_encode(chunk, ratio)
+        dec = train.make_ae_decode(chunk, ratio)
+        w = jax.random.normal(jax.random.PRNGKey(1), (chunk,)) * 0.1
+        code, lo, hi, mu, sd = enc(flat, w)
+        assert code.shape == (chunk // ratio,)
+        assert float(sd) > 0.0
+        w_hat = dec(flat, code, lo, hi, mu, sd)
+        assert w_hat.shape == (chunk,)
+        assert bool(jnp.all(jnp.isfinite(w_hat)))
+
+    def test_decode_preserves_chunk_moments(self):
+        # The variance-preserving extractor must reproduce the scaled
+        # chunk's first two moments regardless of AE quality.
+        chunk, ratio = 256, 8
+        lay = autoencoder.layout(chunk, ratio)
+        flat = lay.init_flat(jax.random.PRNGKey(0))
+        enc = train.make_ae_encode(chunk, ratio)
+        dec = train.make_ae_decode(chunk, ratio)
+        w = jax.random.normal(jax.random.PRNGKey(2), (chunk,)) * 0.05
+        code, lo, hi, mu, sd = enc(flat, w)
+        w_hat = dec(flat, code, lo, hi, mu, sd)
+        # map back into scaled space and compare moments
+        span = float(hi - lo)
+        s_hat = 2.0 * (w_hat - lo) / span - 1.0
+        np.testing.assert_allclose(float(jnp.mean(s_hat)), float(mu), atol=1e-4)
+        np.testing.assert_allclose(float(jnp.std(s_hat)), float(sd), rtol=1e-3)
+
+    def test_trained_ae_reconstructs_better_than_init(self):
+        chunk, ratio = 256, 4
+        lay = autoencoder.layout(chunk, ratio)
+        step = train.make_ae_train(chunk, ratio)
+        enc = train.make_ae_encode(chunk, ratio)
+        dec = train.make_ae_decode(chunk, ratio)
+
+        flat0 = lay.init_flat(jax.random.PRNGKey(0))
+        data = _chunk_data(jax.random.PRNGKey(1), 64, chunk)
+        flat = flat0
+        for _ in range(60):
+            flat, _ = step(flat, data, jnp.float32(0.05))
+
+        def recon_mse(f, w):
+            code, lo, hi, mu, sd = enc(f, w)
+            return float(jnp.mean((dec(f, code, lo, hi, mu, sd) - w) ** 2))
+
+        w_test = data[0]
+        assert recon_mse(flat, w_test) < recon_mse(flat0, w_test)

@@ -1,0 +1,177 @@
+"""Kernel vs pure-jnp oracle: the core Layer-1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes; every differentiable kernel is checked
+for values AND gradients against ``compile.kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from compile.kernels import (
+    chunk_scale,
+    chunk_unscale,
+    fc_block,
+    matmul,
+    tanh_bwd,
+    ternary_quantize,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = st.integers(min_value=1, max_value=200)
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-5, atol=1e-5
+    )
+
+
+class TestMatmul:
+    @settings(max_examples=8, deadline=None, suppress_health_check=list(HealthCheck))
+    @given(m=DIMS, k=DIMS, n=DIMS, dtype=DTYPES, seed=st.integers(0, 2**31 - 1))
+    def test_values(self, m, k, n, dtype, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = _rand(k1, (m, k), dtype)
+        y = _rand(k2, (k, n), dtype)
+        np.testing.assert_allclose(
+            np.asarray(matmul(x, y), np.float32),
+            np.asarray(ref.matmul(x, y), np.float32),
+            **_tol(dtype),
+        )
+
+    @settings(max_examples=4, deadline=None, suppress_health_check=list(HealthCheck))
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_grads(self, m, k, n, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = _rand(k1, (m, k), jnp.float32, 0.3)
+        y = _rand(k2, (k, n), jnp.float32, 0.3)
+        f_ker = lambda a, b: jnp.sum(matmul(a, b) ** 2)
+        f_ref = lambda a, b: jnp.sum(ref.matmul(a, b) ** 2)
+        for g_ker, g_ref in zip(
+            jax.grad(f_ker, (0, 1))(x, y), jax.grad(f_ref, (0, 1))(x, y)
+        ):
+            np.testing.assert_allclose(g_ker, g_ref, rtol=1e-4, atol=1e-4)
+
+    def test_shape_mismatch_raises(self):
+        x = jnp.zeros((4, 5))
+        y = jnp.zeros((6, 7))
+        with pytest.raises(ValueError):
+            matmul(x, y)
+
+    def test_exact_block_multiple(self):
+        # No-padding fast path: dims already multiples of (8, 128).
+        x = _rand(jax.random.PRNGKey(0), (16, 256), jnp.float32)
+        y = _rand(jax.random.PRNGKey(1), (256, 128), jnp.float32)
+        np.testing.assert_allclose(
+            matmul(x, y), ref.matmul(x, y), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestFcBlock:
+    @settings(max_examples=6, deadline=None, suppress_health_check=list(HealthCheck))
+    @given(m=DIMS, k=DIMS, n=DIMS, dtype=DTYPES, seed=st.integers(0, 2**31 - 1))
+    def test_values(self, m, k, n, dtype, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = _rand(k1, (m, k), dtype, 0.5)
+        w = _rand(k2, (k, n), dtype, 0.2)
+        b = _rand(k3, (n,), dtype, 0.2)
+        np.testing.assert_allclose(
+            np.asarray(fc_block(x, w, b), np.float32),
+            np.asarray(ref.fc_block(x, w, b), np.float32),
+            **_tol(dtype),
+        )
+
+    @settings(max_examples=4, deadline=None, suppress_health_check=list(HealthCheck))
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_grads(self, m, k, n, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = _rand(k1, (m, k), jnp.float32, 0.5)
+        w = _rand(k2, (k, n), jnp.float32, 0.2)
+        b = _rand(k3, (n,), jnp.float32, 0.2)
+        f_ker = lambda *a: jnp.sum(jnp.sin(fc_block(*a)))
+        f_ref = lambda *a: jnp.sum(jnp.sin(ref.fc_block(*a)))
+        for g_ker, g_ref in zip(
+            jax.grad(f_ker, (0, 1, 2))(x, w, b),
+            jax.grad(f_ref, (0, 1, 2))(x, w, b),
+        ):
+            np.testing.assert_allclose(g_ker, g_ref, rtol=1e-4, atol=1e-4)
+
+    def test_output_bounded(self):
+        x = _rand(jax.random.PRNGKey(0), (8, 64), jnp.float32, 10.0)
+        w = _rand(jax.random.PRNGKey(1), (64, 32), jnp.float32, 10.0)
+        b = jnp.zeros((32,))
+        y = fc_block(x, w, b)
+        assert float(jnp.max(jnp.abs(y))) <= 1.0 + 1e-6
+
+
+class TestTanhBwd:
+    @settings(max_examples=5, deadline=None, suppress_health_check=list(HealthCheck))
+    @given(m=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_values(self, m, n, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        g = _rand(k1, (m, n), jnp.float32)
+        y = jnp.tanh(_rand(k2, (m, n), jnp.float32))
+        np.testing.assert_allclose(
+            tanh_bwd(g, y), ref.tanh_bwd(g, y), rtol=1e-6, atol=1e-6
+        )
+
+
+class TestTernary:
+    @settings(max_examples=8, deadline=None, suppress_health_check=list(HealthCheck))
+    @given(n=st.integers(1, 5000), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, n, seed):
+        w = _rand(jax.random.PRNGKey(seed), (n,), jnp.float32)
+        q, alpha = ternary_quantize(w)
+        qr, ar = ref.ternary_quantize(w)
+        np.testing.assert_allclose(q, qr)
+        np.testing.assert_allclose(alpha, ar, rtol=1e-6)
+
+    @settings(max_examples=5, deadline=None, suppress_health_check=list(HealthCheck))
+    @given(n=st.integers(1, 2000), seed=st.integers(0, 2**31 - 1))
+    def test_codebook(self, n, seed):
+        w = _rand(jax.random.PRNGKey(seed), (n,), jnp.float32)
+        q, alpha = ternary_quantize(w)
+        vals = set(np.unique(np.asarray(q)).tolist())
+        assert vals.issubset({-1.0, 0.0, 1.0})
+        assert float(alpha) >= 0.0
+
+    def test_zero_chunk(self):
+        q, alpha = ternary_quantize(jnp.zeros((128,)))
+        assert float(jnp.sum(jnp.abs(q))) == 0.0
+
+
+class TestScale:
+    @settings(max_examples=8, deadline=None, suppress_health_check=list(HealthCheck))
+    @given(n=st.integers(2, 5000), seed=st.integers(0, 2**31 - 1))
+    def test_roundtrip(self, n, seed):
+        w = _rand(jax.random.PRNGKey(seed), (n,), jnp.float32, 3.0)
+        s, lo, hi = chunk_scale(w)
+        assert float(jnp.max(s)) <= 1.0 + 1e-5
+        assert float(jnp.min(s)) >= -1.0 - 1e-5
+        np.testing.assert_allclose(chunk_unscale(s, lo, hi), w, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=4, deadline=None, suppress_health_check=list(HealthCheck))
+    @given(n=st.integers(2, 1000), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, n, seed):
+        w = _rand(jax.random.PRNGKey(seed), (n,), jnp.float32)
+        s, lo, hi = chunk_scale(w)
+        sr, lor, hir = ref.chunk_scale(w)
+        np.testing.assert_allclose(s, sr, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(lo, lor)
+        np.testing.assert_allclose(hi, hir)
+
+    def test_constant_chunk(self):
+        w = jnp.full((64,), 0.7)
+        s, lo, hi = chunk_scale(w)
+        out = chunk_unscale(s, lo, hi)
+        np.testing.assert_allclose(out, w, atol=1e-5)

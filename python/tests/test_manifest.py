@@ -1,0 +1,77 @@
+"""Manifest consistency: what aot.py promises the Rust runtime."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot
+from compile.models import autoencoder
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ARTIFACTS, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_every_executable_file_exists(manifest):
+    for name, spec in manifest["executables"].items():
+        path = os.path.join(ARTIFACTS, spec["file"])
+        assert os.path.exists(path), f"missing artifact for {name}"
+        assert os.path.getsize(path) > 0
+
+
+def test_spec_shapes_match_eval_shape(manifest):
+    """Input/output specs recorded in the manifest must match what the
+    graphs actually produce (the Rust runtime trusts these blindly)."""
+    arts = {a.name: a for a in aot.build_artifact_specs()}
+    for name, spec in manifest["executables"].items():
+        art = arts[name]
+        assert spec["inputs"] == art.inputs
+        outs = jax.eval_shape(art.fn, *art.arg_structs())
+        assert len(spec["outputs"]) == len(outs)
+        for rec, o in zip(spec["outputs"], outs):
+            assert tuple(rec["shape"]) == o.shape
+
+
+def test_model_layer_tables(manifest):
+    for mname, mcfg in manifest["models"].items():
+        mod = aot.MODELS[mname]["module"]
+        lay = mod.layout()
+        assert mcfg["d"] == lay.total
+        assert mcfg["classes"] == mod.CLASSES
+        # layer table covers the flat vector exactly, in order, no gaps
+        end = 0
+        for rec in mcfg["layers"]:
+            assert rec["offset"] == end
+            end += rec["size"]
+            assert rec["segment"] in ("conv", "dense")
+        assert end == lay.total
+
+
+def test_autoencoder_entries(manifest):
+    for key, acfg in manifest["autoencoders"].items():
+        chunk, ratio = acfg["chunk"], acfg["ratio"]
+        assert key == f"c{chunk}_r{ratio}"
+        assert acfg["code"] == chunk // ratio
+        assert acfg["d"] == autoencoder.layout(chunk, ratio).total
+        assert acfg["enc_dims"] == autoencoder.enc_dims(chunk, ratio)
+        for ref in (acfg["encode"], acfg["decode"], acfg["train"]["name"]):
+            assert ref in manifest["executables"]
+
+
+def test_model_executable_refs_resolve(manifest):
+    for mcfg in manifest["models"].values():
+        for name in mcfg["train_step"].values():
+            assert name in manifest["executables"]
+        assert mcfg["train_epoch"]["name"] in manifest["executables"]
+        assert mcfg["eval"]["name"] in manifest["executables"]

@@ -1,0 +1,121 @@
+"""Layer-2 model graph tests: shapes, layouts, and learning signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import losses, train
+from compile.layout import Layout, LayerSpec
+from compile.models import five_cnn, lenet
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestLayout:
+    def test_offsets_are_contiguous(self):
+        lay = lenet.layout()
+        off = 0
+        for spec, o in zip(lay.specs, lay.offsets):
+            assert o == off
+            off += spec.size
+        assert lay.total == off
+
+    def test_flatten_unflatten_roundtrip(self):
+        lay = Layout(
+            [LayerSpec("a", (3, 4), "conv"), LayerSpec("b", (5,), "dense")]
+        )
+        flat = jnp.arange(17, dtype=jnp.float32)
+        params = lay.unflatten(flat)
+        assert params["a"].shape == (3, 4)
+        assert params["b"].shape == (5,)
+        np.testing.assert_array_equal(lay.flatten(params), flat)
+
+    def test_init_flat_statistics(self):
+        lay = lenet.layout()
+        flat = lay.init_flat(jax.random.PRNGKey(0))
+        assert flat.shape == (lay.total,)
+        # biases are zero
+        params = lay.unflatten(flat)
+        np.testing.assert_array_equal(params["conv1_b"], 0.0)
+        # weight slices are bounded by the fan-in limit
+        w = params["fc1_w"]
+        limit = np.sqrt(6.0 / 256)
+        assert float(jnp.max(jnp.abs(w))) <= limit + 1e-6
+
+    def test_paper_parameter_counts(self):
+        assert lenet.layout().total == 44426
+        assert five_cnn.layout().total == 343951
+
+
+@pytest.mark.parametrize("mod,b", [(lenet, 4), (five_cnn, 2)])
+class TestForward:
+    def test_logit_shape(self, mod, b):
+        lay = mod.layout()
+        flat = lay.init_flat(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (b, mod.INPUT_DIM))
+        logits = mod.apply(lay.unflatten(flat), x)
+        assert logits.shape == (b, mod.CLASSES)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+class TestTrainStep:
+    def test_loss_decreases_on_fixed_batch(self):
+        mod = lenet
+        lay = mod.layout()
+        step = train.make_train_step(mod)
+        flat = lay.init_flat(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (16, mod.INPUT_DIM)) * 0.5
+        y = jnp.arange(16, dtype=jnp.int32) % mod.CLASSES
+        first = None
+        for _ in range(8):
+            flat, loss = step(flat, x, y, jnp.float32(0.1))
+            first = float(loss) if first is None else first
+        assert float(loss) < first
+
+    def test_epoch_equals_stepped_loop(self):
+        mod = lenet
+        lay = mod.layout()
+        nb, b = 3, 8
+        step = train.make_train_step(mod)
+        epoch = train.make_train_epoch(mod, nb)
+        flat0 = lay.init_flat(jax.random.PRNGKey(0))
+        xs = jax.random.normal(jax.random.PRNGKey(1), (nb, b, mod.INPUT_DIM))
+        ys = (jnp.arange(nb * b, dtype=jnp.int32) % mod.CLASSES).reshape(nb, b)
+        flat_e, _ = epoch(flat0, xs, ys, jnp.float32(0.05))
+        flat_s = flat0
+        for i in range(nb):
+            flat_s, _ = step(flat_s, xs[i], ys[i], jnp.float32(0.05))
+        np.testing.assert_allclose(flat_e, flat_s, rtol=1e-5, atol=1e-6)
+
+    def test_eval_counts(self):
+        mod = lenet
+        lay = mod.layout()
+        ev = train.make_eval(mod)
+        flat = lay.init_flat(jax.random.PRNGKey(0))
+        x = jax.random.normal(jax.random.PRNGKey(1), (32, mod.INPUT_DIM))
+        y = jnp.zeros((32,), jnp.int32)
+        correct, loss = ev(flat, x, y)
+        assert 0.0 <= float(correct) <= 32.0
+        assert np.isfinite(float(loss))
+
+
+class TestLosses:
+    def test_ce_matches_manual(self):
+        logits = jnp.array([[2.0, 0.0, -1.0], [0.0, 3.0, 0.0]])
+        labels = jnp.array([0, 1], jnp.int32)
+        got = losses.softmax_cross_entropy(logits, labels, 3)
+        logp = jax.nn.log_softmax(logits)
+        want = -(logp[0, 0] + logp[1, 1]) / 2
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_accuracy_count(self):
+        logits = jnp.array([[1.0, 0.0], [0.0, 1.0], [1.0, 0.0]])
+        labels = jnp.array([0, 1, 1], jnp.int32)
+        assert float(losses.accuracy_count(logits, labels)) == 2.0
+
+    def test_mi_surrogate_monotone_in_variance(self):
+        k = jax.random.PRNGKey(0)
+        small = jax.random.normal(k, (64, 8)) * 0.1
+        large = jax.random.normal(k, (64, 8)) * 2.0
+        assert float(losses.mi_surrogate(large)) > float(losses.mi_surrogate(small))

@@ -1,0 +1,156 @@
+//! Kernel-level benchmarks: the per-operation costs behind the paper's
+//! Table III (client encode / server decode delay) and the training-step
+//! costs behind every accuracy figure.
+//!
+//! Run with `cargo bench --bench kernels` (optionally `-- --ratios 4,32`).
+
+use hcfl::prelude::*;
+use hcfl::util::bench::bench;
+use hcfl::util::cli::Args;
+use hcfl::util::rng::Rng;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let ratios = args.usize_list_or("ratios", &[4, 8, 16, 32]).unwrap();
+    let budget = args.f64_or("budget", 2.0).unwrap();
+    let engine = Engine::from_artifacts(
+        args.str_or("artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")),
+        1,
+    )
+    .expect("run `make artifacts` first");
+    let mani = engine.manifest().clone();
+    let mut rng = Rng::new(1);
+
+    println!("== L1/L2 executable micro-benchmarks (CPU PJRT, interpret-lowered Pallas) ==");
+
+    // ---- HCFL encode/decode per chunk (Table III client/server delay) ----
+    for &ratio in &ratios {
+        let ae = mani.autoencoder(1024, ratio).unwrap().clone();
+        let params: Vec<f32> = (0..ae.d).map(|_| rng.normal() * 0.05).collect();
+        let w: Vec<f32> = (0..1024).map(|_| rng.normal() * 0.1).collect();
+        let enc_out = engine
+            .call(
+                &ae.encode,
+                vec![
+                    TensorValue::vec_f32(params.clone()),
+                    TensorValue::vec_f32(w.clone()),
+                ],
+            )
+            .unwrap();
+        bench(&format!("hcfl_encode c1024 r{ratio}"), budget, 200, || {
+            engine
+                .call(
+                    &ae.encode,
+                    vec![
+                        TensorValue::vec_f32(params.clone()),
+                        TensorValue::vec_f32(w.clone()),
+                    ],
+                )
+                .unwrap();
+        });
+        let code = enc_out[0].clone();
+        let (lo, hi, mu, sd) = (
+            enc_out[1].scalar().unwrap(),
+            enc_out[2].scalar().unwrap(),
+            enc_out[3].scalar().unwrap(),
+            enc_out[4].scalar().unwrap(),
+        );
+        bench(&format!("hcfl_decode c1024 r{ratio}"), budget, 200, || {
+            engine
+                .call(
+                    &ae.decode,
+                    vec![
+                        TensorValue::vec_f32(params.clone()),
+                        code.clone(),
+                        TensorValue::scalar_f32(lo),
+                        TensorValue::scalar_f32(hi),
+                        TensorValue::scalar_f32(mu),
+                        TensorValue::scalar_f32(sd),
+                    ],
+                )
+                .unwrap();
+        });
+    }
+
+    // ---- T-FedAvg ternary quantization --------------------------------
+    let w1024: Vec<f32> = (0..1024).map(|_| rng.normal() * 0.1).collect();
+    bench("ternary_quantize c1024", budget, 500, || {
+        engine
+            .call("ternary_c1024", vec![TensorValue::vec_f32(w1024.clone())])
+            .unwrap();
+    });
+
+    // ---- predictor training steps (behind Figs 8-12) -------------------
+    for model in ["lenet", "fivecnn"] {
+        let m = mani.model(model).unwrap().clone();
+        let params: Vec<f32> = (0..m.d).map(|_| rng.normal() * 0.05).collect();
+        let b = m.train_epoch.batch;
+        let x: Vec<f32> = (0..b * m.input_dim).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let y: Vec<i32> = (0..b).map(|_| rng.below(m.classes) as i32).collect();
+        let step_exec = m.train_step[&b].clone();
+        bench(&format!("{model} train_step b{b}"), budget, 100, || {
+            engine
+                .call(
+                    &step_exec,
+                    vec![
+                        TensorValue::vec_f32(params.clone()),
+                        TensorValue::f32(x.clone(), vec![b, m.input_dim]).unwrap(),
+                        TensorValue::i32(y.clone(), vec![b]).unwrap(),
+                        TensorValue::scalar_f32(0.05),
+                    ],
+                )
+                .unwrap();
+        });
+        let nb = m.train_epoch.n_batches;
+        let xs: Vec<f32> = (0..nb * b * m.input_dim)
+            .map(|_| rng.uniform(0.0, 1.0))
+            .collect();
+        let ys: Vec<i32> = (0..nb * b).map(|_| rng.below(m.classes) as i32).collect();
+        bench(
+            &format!("{model} train_epoch b{b} n{nb} (scan)"),
+            budget,
+            50,
+            || {
+                engine
+                    .call(
+                        &m.train_epoch.name,
+                        vec![
+                            TensorValue::vec_f32(params.clone()),
+                            TensorValue::f32(xs.clone(), vec![nb, b, m.input_dim]).unwrap(),
+                            TensorValue::i32(ys.clone(), vec![nb, b]).unwrap(),
+                            TensorValue::scalar_f32(0.05),
+                        ],
+                    )
+                    .unwrap();
+            },
+        );
+        let eb = m.eval.batch;
+        let ex: Vec<f32> = (0..eb * m.input_dim).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let ey: Vec<i32> = (0..eb).map(|_| rng.below(m.classes) as i32).collect();
+        bench(&format!("{model} eval b{eb}"), budget, 100, || {
+            engine
+                .call(
+                    &m.eval.name,
+                    vec![
+                        TensorValue::vec_f32(params.clone()),
+                        TensorValue::f32(ex.clone(), vec![eb, m.input_dim]).unwrap(),
+                        TensorValue::i32(ey.clone(), vec![eb]).unwrap(),
+                    ],
+                )
+                .unwrap();
+        });
+    }
+
+    // ---- server-side aggregation (pure rust hot loop) ------------------
+    let d = mani.model("lenet").unwrap().d;
+    let updates: Vec<Vec<f32>> = (0..10)
+        .map(|_| (0..d).map(|_| rng.normal() * 0.1).collect())
+        .collect();
+    bench("aggregate running-average 10x lenet", budget, 2000, || {
+        let mut agg = hcfl::fl::RunningAverage::new(d);
+        for u in &updates {
+            agg.push(u).unwrap();
+        }
+        std::hint::black_box(agg.finish().unwrap());
+    });
+}

@@ -1,0 +1,85 @@
+//! End-to-end round benchmarks: one full FedAvg communication round per
+//! compression scheme (the system-level numbers behind the paper's
+//! Tables I-III), plus the eq.-13 modelled air-time comparison.
+//!
+//! Run with `cargo bench --bench round`.
+
+use hcfl::compression::Scheme;
+use hcfl::config::ExperimentConfig;
+use hcfl::coordinator::Simulation;
+use hcfl::data::DataSpec;
+use hcfl::network::LinkModel;
+use hcfl::prelude::*;
+use hcfl::util::bench::bench;
+use hcfl::util::cli::Args;
+
+fn bench_cfg(scheme: Scheme, workers: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.scheme = scheme;
+    cfg.n_clients = 8;
+    cfg.participation = 0.5;
+    cfg.rounds = 1;
+    cfg.local_epochs = 1;
+    cfg.engine_workers = workers;
+    cfg.data = DataSpec {
+        classes: 10,
+        n_clients: 8,
+        per_client: 600,
+        test_n: 512,
+        server_n: 600,
+    };
+    cfg.ae.steps = 60; // bench measures the round loop, not AE training
+    cfg.ae.premodel_epochs = 2;
+    cfg.use_ae_cache = true;
+    cfg
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let workers = args.usize_or("workers", 4).unwrap();
+    let budget = args.f64_or("budget", 5.0).unwrap();
+    let engine = Engine::from_artifacts(
+        args.str_or("artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")),
+        workers,
+    )
+    .expect("run `make artifacts` first");
+
+    println!("== end-to-end round benchmarks (4 clients/round, LeNet-5, {workers} engine workers) ==");
+    let schemes = [
+        Scheme::Fedavg,
+        Scheme::Ternary,
+        Scheme::TopK { keep: 0.15 },
+        Scheme::Hcfl { ratio: 4 },
+        Scheme::Hcfl { ratio: 32 },
+    ];
+    let mut wire_rows: Vec<(String, usize)> = Vec::new();
+    for scheme in schemes {
+        let mut sim = Simulation::new(&engine, bench_cfg(scheme, workers))
+            .expect("simulation setup");
+        let mut t = 0usize;
+        let mut wire = 0usize;
+        bench(&format!("round e2e [{}]", scheme.label()), budget, 20, || {
+            t += 1;
+            let rec = sim.run_round(t).expect("round");
+            wire = rec.up_bytes as usize / 4; // per-client
+        });
+        wire_rows.push((scheme.label(), wire));
+    }
+
+    // ---- eq. 13 modelled air time per scheme ---------------------------
+    println!("\n== modelled per-round air time, 10 clients sharing the default cell (eq. 13) ==");
+    let link = LinkModel::default();
+    let base = wire_rows
+        .iter()
+        .find(|(n, _)| n == "FedAvg")
+        .map(|(_, w)| *w)
+        .unwrap_or(1);
+    for (name, wire) in &wire_rows {
+        println!(
+            "{name:<12} {:>10} B/client  uplink {:>8.3} s  reduction x{:.2}",
+            wire,
+            link.uplink_time(*wire, 10),
+            base as f64 / (*wire).max(1) as f64
+        );
+    }
+}

@@ -1,0 +1,159 @@
+//! T-FedAvg baseline (paper [22]): ternary weight quantization.
+//!
+//! Full chunks run through the `ternary_c1024` Pallas kernel executable;
+//! the final partial chunk is quantized in Rust with identical TWN math
+//! (padding the kernel input with zeros would bias delta = 0.7·mean|w|).
+//!
+//! Wire format: 2 bits per weight (values in {-1, 0, +1}) packed four per
+//! byte, plus one f32 scale per chunk — the 16x-ish compression the paper
+//! reports for T-FedAvg.
+
+use crate::compression::{CompressedUpdate, Compressor, Payload, Scheme, TernaryChunk};
+use crate::error::{HcflError, Result};
+use crate::runtime::Engine;
+use crate::tensor::TensorValue;
+
+/// Ternary codec over fixed 1024-value chunks.
+pub struct TernaryCompressor {
+    engine: Engine,
+    exec: String,
+    chunk: usize,
+}
+
+impl TernaryCompressor {
+    pub fn new(engine: Engine, chunk: usize) -> Result<Self> {
+        let exec = engine.manifest().ternary_exec(chunk)?.to_string();
+        Ok(TernaryCompressor {
+            engine,
+            exec,
+            chunk,
+        })
+    }
+
+    /// Exact TWN quantization in Rust (used for the tail chunk and as the
+    /// reference in tests).
+    pub fn quantize_ref(w: &[f32]) -> TernaryChunk {
+        let mean_abs = w.iter().map(|x| x.abs()).sum::<f32>() / w.len().max(1) as f32;
+        let delta = 0.7 * mean_abs;
+        let mut sum = 0.0f32;
+        let mut cnt = 0usize;
+        let q: Vec<i8> = w
+            .iter()
+            .map(|&x| {
+                if x.abs() > delta {
+                    sum += x.abs();
+                    cnt += 1;
+                    if x > 0.0 {
+                        1
+                    } else {
+                        -1
+                    }
+                } else {
+                    0
+                }
+            })
+            .collect();
+        let alpha = if cnt > 0 { sum / cnt as f32 } else { 0.0 };
+        TernaryChunk { q, alpha }
+    }
+
+    /// Wire bytes for a vector of length `d` at this chunk size.
+    pub fn wire_bytes_for(d: usize, chunk: usize) -> usize {
+        let n_chunks = d.div_ceil(chunk);
+        d.div_ceil(4) + 4 * n_chunks
+    }
+}
+
+impl Compressor for TernaryCompressor {
+    fn scheme(&self) -> Scheme {
+        Scheme::Ternary
+    }
+
+    fn compress(&self, flat: &[f32], worker: usize) -> Result<CompressedUpdate> {
+        let mut chunks = Vec::with_capacity(flat.len().div_ceil(self.chunk));
+        let mut off = 0;
+        while off < flat.len() {
+            let end = (off + self.chunk).min(flat.len());
+            let slice = &flat[off..end];
+            if slice.len() == self.chunk {
+                let outs = self.engine.call_on(
+                    worker,
+                    &self.exec,
+                    vec![TensorValue::vec_f32(slice.to_vec())],
+                )?;
+                let qf = outs[0].as_f32()?;
+                let alpha = outs[1].scalar()?;
+                chunks.push(TernaryChunk {
+                    q: qf.iter().map(|&v| v as i8).collect(),
+                    alpha,
+                });
+            } else {
+                chunks.push(Self::quantize_ref(slice));
+            }
+            off = end;
+        }
+        Ok(CompressedUpdate {
+            wire_bytes: Self::wire_bytes_for(flat.len(), self.chunk),
+            payload: Payload::TernaryChunks(chunks),
+        })
+    }
+
+    fn decompress(
+        &self,
+        upd: &CompressedUpdate,
+        d: usize,
+        _worker: usize,
+    ) -> Result<Vec<f32>> {
+        let chunks = match &upd.payload {
+            Payload::TernaryChunks(c) => c,
+            _ => {
+                return Err(HcflError::Config(
+                    "ternary decompress got wrong payload".into(),
+                ))
+            }
+        };
+        let mut flat = Vec::with_capacity(d);
+        for c in chunks {
+            flat.extend(c.q.iter().map(|&q| q as f32 * c.alpha));
+        }
+        if flat.len() != d {
+            return Err(HcflError::Config(format!(
+                "ternary payload covers {} of {d} weights",
+                flat.len()
+            )));
+        }
+        Ok(flat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_ref_basic() {
+        let w = vec![1.0, -1.0, 0.01, -0.02, 0.9];
+        let t = TernaryCompressor::quantize_ref(&w);
+        // mean|w| = 0.586, delta = 0.41: +1, -1, 0, 0, +1
+        assert_eq!(t.q, vec![1, -1, 0, 0, 1]);
+        let alpha_ref = (1.0 + 1.0 + 0.9) / 3.0;
+        assert!((t.alpha - alpha_ref).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantize_ref_zeros() {
+        let t = TernaryCompressor::quantize_ref(&[0.0; 16]);
+        assert!(t.q.iter().all(|&q| q == 0));
+        assert_eq!(t.alpha, 0.0);
+    }
+
+    #[test]
+    fn wire_bytes() {
+        // 44426 weights at c1024: 11107 data bytes + 44 chunk scales
+        let w = TernaryCompressor::wire_bytes_for(44426, 1024);
+        assert_eq!(w, 44426usize.div_ceil(4) + 4 * 44);
+        // ~16x smaller than 4 bytes/weight
+        let ratio = (4 * 44426) as f64 / w as f64;
+        assert!(ratio > 15.0 && ratio < 16.1, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,305 @@
+//! The round coordinator: wires data, compressor, clients and server into
+//! the synchronous FedAvg loop of Algorithm 1.
+//!
+//! Per round:
+//! 1. the server compresses the global model for the downlink (the
+//!    paper's tables count both directions encoded);
+//! 2. the m selected clients train locally **in parallel** (one OS thread
+//!    per client, pinned round-robin to PJRT engine workers for
+//!    executable-cache affinity) and upload compressed updates;
+//! 3. the server decodes updates in FIFO arrival order (paper §III-B)
+//!    and folds them into the running average;
+//! 4. the aggregated model is installed and evaluated.
+//!
+//! All timing in [`RoundRecord`] is measured, except the air time which
+//! comes from the link model (eq. 13).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::compression::{Compressor, HcflCompressor, Identity, Scheme, TernaryCompressor, TopKCompressor};
+use crate::config::ExperimentConfig;
+use crate::data::{synthetic, FlData};
+use crate::error::{HcflError, Result};
+use crate::fl::{select_clients, LocalTrainer, RunningAverage, Server};
+use crate::hcfl::prepare_autoencoders;
+use crate::metrics::{RoundRecord, RunReport};
+use crate::model::{merge_segment_ranges, split_dense};
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+struct ClientMsg {
+    update: crate::compression::CompressedUpdate,
+    /// Exact post-training parameters (simulation-only side channel used
+    /// to measure reconstruction error at the server).
+    exact: Vec<f32>,
+    client_time_s: f64,
+}
+
+/// A fully-wired FL simulation.
+pub struct Simulation {
+    engine: Engine,
+    pub cfg: ExperimentConfig,
+    pub data: FlData,
+    compressor: Arc<dyn Compressor>,
+    trainer: LocalTrainer,
+    server: Server,
+    rng: Rng,
+    /// Print one line per round to stderr.
+    pub verbose: bool,
+}
+
+impl Simulation {
+    /// Build the simulation: generate data, spin up the compressor
+    /// (training autoencoders for HCFL schemes), initialize the server.
+    pub fn new(engine: &Engine, cfg: ExperimentConfig) -> Result<Simulation> {
+        cfg.validate(engine.manifest())?;
+        let mut data_spec = cfg.data.clone();
+        data_spec.n_clients = cfg.n_clients;
+        let data = synthetic(&data_spec, cfg.seed);
+        let trainer = LocalTrainer::new(engine, &cfg.model)?;
+        let mut rng = Rng::new(cfg.seed);
+        let server = Server::new(&trainer.model, &mut rng);
+        // The HCFL pre-model must start from this run's actual init so
+        // the compressor is trained on the trajectory it will compress.
+        let compressor = build_compressor(engine, &cfg, &data, &server.global.flat)?;
+        Ok(Simulation {
+            engine: engine.clone(),
+            cfg,
+            data,
+            compressor,
+            trainer,
+            server,
+            rng,
+            verbose: false,
+        })
+    }
+
+    /// Current global model.
+    pub fn global(&self) -> &[f32] {
+        &self.server.global.flat
+    }
+
+    pub fn compressor(&self) -> &Arc<dyn Compressor> {
+        &self.compressor
+    }
+
+    /// Run all configured rounds.
+    pub fn run(&mut self) -> Result<RunReport> {
+        let mut rounds = Vec::with_capacity(self.cfg.rounds);
+        for t in 1..=self.cfg.rounds {
+            let rec = self.run_round(t)?;
+            if self.verbose {
+                eprintln!(
+                    "[{}] round {t:>3}: acc {:.4} loss {:.4} recon {:.2e} up {:.1} KB",
+                    self.compressor.name(),
+                    rec.accuracy,
+                    rec.loss,
+                    rec.recon_mse,
+                    rec.up_bytes as f64 / 1e3,
+                );
+            }
+            rounds.push(rec);
+        }
+        Ok(RunReport {
+            scheme: self.compressor.name(),
+            model: self.cfg.model.clone(),
+            rounds,
+        })
+    }
+
+    /// One synchronous communication round.
+    pub fn run_round(&mut self, t: usize) -> Result<RoundRecord> {
+        let wall0 = Instant::now();
+        let d = self.trainer.model.d;
+        let selected = select_clients(self.cfg.n_clients, self.cfg.participation, &mut self.rng);
+        let m = selected.len();
+
+        // ---- downlink ----------------------------------------------------
+        // Paper Fig. 3 puts the only decoder at the server, so the
+        // broadcast itself is always exact; `compress_downlink=true`
+        // additionally *accounts* the broadcast at the encoded wire size,
+        // mirroring the paper's symmetric Tables I/II.
+        let global_recv = Arc::new(self.server.global.flat.clone());
+        let down_bytes = if self.cfg.compress_downlink {
+            self.compressor
+                .compress(&self.server.global.flat, 0)?
+                .wire_bytes
+        } else {
+            4 * d
+        };
+
+        // ---- parallel client updates -----------------------------------
+        let (tx, rx) = mpsc::channel::<Result<ClientMsg>>();
+        let trainer = &self.trainer;
+        let compressor = &self.compressor;
+        let data = &self.data;
+        let cfg = &self.cfg;
+        let n_workers = self.engine.n_workers();
+        let round_seed = cfg.seed ^ (t as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
+        let failures = AtomicUsize::new(0);
+
+        let mut server_time_s = 0.0f64;
+        let mut up_bytes = 0u64;
+        let mut recon_sum = 0.0f64;
+        let mut client_times = Vec::with_capacity(m);
+        let mut agg = RunningAverage::new(d);
+
+        std::thread::scope(|s| -> Result<()> {
+            for (slot, &k) in selected.iter().enumerate() {
+                let tx = tx.clone();
+                let global_recv = Arc::clone(&global_recv);
+                let failures = &failures;
+                s.spawn(move || {
+                    let worker = slot % n_workers;
+                    let mut crng = Rng::new(round_seed ^ (k as u64) << 1);
+                    let started = Instant::now();
+                    let result = (|| -> Result<ClientMsg> {
+                        let out = trainer.train(
+                            &global_recv,
+                            &data.shards[k],
+                            cfg.local_epochs,
+                            cfg.batch,
+                            cfg.lr,
+                            &mut crng,
+                            worker,
+                        )?;
+                        // Delta coding (see ExperimentConfig::encode_deltas):
+                        // the wire carries Δ = w_local − w_broadcast.
+                        let payload: Vec<f32> = if cfg.encode_deltas {
+                            out.params
+                                .iter()
+                                .zip(global_recv.iter())
+                                .map(|(w, g)| w - g)
+                                .collect()
+                        } else {
+                            out.params.clone()
+                        };
+                        let update = compressor.compress(&payload, worker)?;
+                        Ok(ClientMsg {
+                            update,
+                            exact: out.params,
+                            client_time_s: started.elapsed().as_secs_f64(),
+                        })
+                    })();
+                    if result.is_err() {
+                        failures.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let _ = tx.send(result);
+                });
+            }
+            drop(tx);
+
+            // ---- server: FIFO decode + running-average aggregation ------
+            for msg in rx {
+                let msg = msg?;
+                let t0 = Instant::now();
+                let mut decoded = self.compressor.decompress(&msg.update, d, 0)?;
+                if self.cfg.encode_deltas {
+                    for (v, g) in decoded.iter_mut().zip(global_recv.iter()) {
+                        *v += g;
+                    }
+                }
+                server_time_s += t0.elapsed().as_secs_f64();
+                recon_sum += mse(&decoded, &msg.exact);
+                up_bytes += msg.update.wire_bytes as u64;
+                client_times.push(msg.client_time_s);
+                let t1 = Instant::now();
+                agg.push(&decoded)?;
+                server_time_s += t1.elapsed().as_secs_f64();
+            }
+            Ok(())
+        })?;
+
+        if failures.load(Ordering::Relaxed) > 0 {
+            return Err(HcflError::Engine(format!(
+                "{} client(s) failed in round {t}",
+                failures.load(Ordering::Relaxed)
+            )));
+        }
+
+        self.server.install(agg.finish()?)?;
+
+        // ---- evaluation -------------------------------------------------
+        let (accuracy, loss) =
+            self.trainer
+                .evaluate(&self.server.global.flat, &self.data.test, 0)?;
+
+        let per_client_up = if m > 0 { up_bytes as usize / m } else { 0 };
+        let comm_time_s = self.cfg.link.uplink_time(per_client_up, m)
+            + self.cfg.link.downlink_time(down_bytes, m);
+
+        Ok(RoundRecord {
+            round: t,
+            accuracy,
+            loss,
+            recon_mse: recon_sum / m.max(1) as f64,
+            up_bytes,
+            down_bytes: (down_bytes * m) as u64,
+            client_time_s: crate::util::stats::mean(&client_times),
+            server_time_s,
+            comm_time_s,
+            wall_time_s: wall0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+fn mse(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Construct the configured compression scheme (training HCFL
+/// autoencoders on the server dataset when needed).
+pub fn build_compressor(
+    engine: &Engine,
+    cfg: &ExperimentConfig,
+    data: &FlData,
+    init_params: &[f32],
+) -> Result<Arc<dyn Compressor>> {
+    match cfg.scheme {
+        Scheme::Fedavg => Ok(Arc::new(Identity)),
+        Scheme::Ternary => Ok(Arc::new(TernaryCompressor::new(engine.clone(), 1024)?)),
+        Scheme::TopK { keep } => Ok(Arc::new(TopKCompressor::new(keep)?)),
+        Scheme::Hcfl { ratio } => {
+            let model = engine.manifest().model(&cfg.model)?;
+            let ranges = split_dense(&merge_segment_ranges(&model.layers), cfg.dense_parts);
+            let chunk_of_segment = engine.manifest().chunks.clone();
+            let cache_dir = engine.manifest().dir.join("cache");
+            let mut ae_cfg = cfg.ae.clone();
+            // Match the pre-model's per-client epochs to the run's E so
+            // snapshot delta magnitudes match what will be compressed.
+            ae_cfg.premodel_local_epochs = cfg.local_epochs;
+            let aes = prepare_autoencoders(
+                engine,
+                &cfg.model,
+                &data.server,
+                &ranges,
+                &chunk_of_segment,
+                ratio,
+                &ae_cfg,
+                cfg.use_ae_cache.then_some(cache_dir.as_path()),
+                init_params,
+                cfg.encode_deltas,
+            )?;
+            Ok(Arc::new(HcflCompressor::new(
+                engine.clone(),
+                ratio,
+                ranges,
+                aes,
+                chunk_of_segment,
+            )?))
+        }
+    }
+}

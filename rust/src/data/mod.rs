@@ -1,0 +1,252 @@
+//! Synthetic datasets standing in for MNIST / EMNIST (DESIGN.md §4).
+//!
+//! No network access is available, so we generate deterministic 28x28
+//! grayscale class-conditional images: each class owns a procedural
+//! template of oriented strokes (drawn from a class-seeded PRNG) and each
+//! sample perturbs the template with translation, per-stroke jitter and
+//! pixel noise.  The result is an IID, easily-learnable-but-not-trivial
+//! classification task with exactly the tensor shapes of the paper's
+//! datasets — which is all the paper's evaluation uses them for.
+
+mod synth;
+
+pub use synth::{render_sample, ClassTemplate};
+
+use crate::error::{HcflError, Result};
+use crate::util::rng::Rng;
+
+pub const IMG_SIDE: usize = 28;
+pub const IMG_DIM: usize = IMG_SIDE * IMG_SIDE;
+
+/// A labelled dataset (row-major images, one label per row).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn empty(dim: usize, classes: usize) -> Dataset {
+        Dataset {
+            x: Vec::new(),
+            y: Vec::new(),
+            n: 0,
+            dim,
+            classes,
+        }
+    }
+
+    /// Gather rows `idx` into a dense (x, y) batch.
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut x = Vec::with_capacity(idx.len() * self.dim);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(&self.x[i * self.dim..(i + 1) * self.dim]);
+            y.push(self.y[i]);
+        }
+        (x, y)
+    }
+
+    /// Split into `n_batches` contiguous batches of exactly `batch` rows
+    /// after a seeded shuffle (rows beyond `n_batches * batch` are unused
+    /// that epoch, matching FedAvg's per-round subsampling).
+    pub fn epoch_batches(
+        &self,
+        batch: usize,
+        n_batches: usize,
+        rng: &mut Rng,
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        let need = batch * n_batches;
+        if need > self.n {
+            return Err(HcflError::Data(format!(
+                "epoch needs {need} rows, shard has {}",
+                self.n
+            )));
+        }
+        let mut idx: Vec<usize> = (0..self.n).collect();
+        rng.shuffle(&mut idx);
+        idx.truncate(need);
+        Ok(self.gather(&idx))
+    }
+}
+
+/// Specification of a synthetic federated dataset.
+#[derive(Debug, Clone)]
+pub struct DataSpec {
+    pub classes: usize,
+    pub n_clients: usize,
+    /// Samples per client shard (600 for "MNIST", 1128 for "EMNIST").
+    pub per_client: usize,
+    /// Held-out test set size (multiple of the eval batch).
+    pub test_n: usize,
+    /// Small server-side dataset for HCFL pre-model training (§III-D).
+    pub server_n: usize,
+}
+
+impl DataSpec {
+    /// Synthetic MNIST geometry (paper §VI-A).
+    pub fn mnist(n_clients: usize) -> DataSpec {
+        DataSpec {
+            classes: 10,
+            n_clients,
+            per_client: 600,
+            test_n: 1024,
+            server_n: 600,
+        }
+    }
+
+    /// Synthetic EMNIST-47 geometry (paper §VI-A).
+    pub fn emnist(n_clients: usize) -> DataSpec {
+        DataSpec {
+            classes: 47,
+            n_clients,
+            per_client: 1128,
+            test_n: 1024,
+            server_n: 1128,
+        }
+    }
+}
+
+/// The full federated data layout: IID client shards + test + server set.
+#[derive(Debug, Clone)]
+pub struct FlData {
+    pub shards: Vec<Dataset>,
+    pub test: Dataset,
+    pub server: Dataset,
+    pub spec: DataSpec,
+}
+
+/// Generate the synthetic federated dataset.  Every shard is IID: samples
+/// are drawn from the same class-template distribution with a per-shard
+/// RNG stream (paper §II-A assumes IID clients).
+pub fn synthetic(spec: &DataSpec, seed: u64) -> FlData {
+    let mut root = Rng::new(seed ^ 0x5EED_DA7A);
+    let templates: Vec<ClassTemplate> = (0..spec.classes)
+        .map(|c| ClassTemplate::new(seed, c))
+        .collect();
+
+    let make_set = |n: usize, rng: &mut Rng| -> Dataset {
+        let mut x = Vec::with_capacity(n * IMG_DIM);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let c = rng.below(spec.classes);
+            let img = render_sample(&templates[c], rng);
+            x.extend_from_slice(&img);
+            y.push(c as i32);
+        }
+        Dataset {
+            x,
+            y,
+            n,
+            dim: IMG_DIM,
+            classes: spec.classes,
+        }
+    };
+
+    let shards = (0..spec.n_clients)
+        .map(|k| {
+            let mut rng = root.fork(k as u64 + 1);
+            make_set(spec.per_client, &mut rng)
+        })
+        .collect();
+    let mut test_rng = root.fork(0xABCD);
+    let test = make_set(spec.test_n, &mut test_rng);
+    let mut server_rng = root.fork(0xFEED);
+    let server = make_set(spec.server_n, &mut server_rng);
+
+    FlData {
+        shards,
+        test,
+        server,
+        spec: spec.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let spec = DataSpec {
+            classes: 10,
+            n_clients: 3,
+            per_client: 32,
+            test_n: 16,
+            server_n: 8,
+        };
+        let a = synthetic(&spec, 42);
+        let b = synthetic(&spec, 42);
+        let c = synthetic(&spec, 43);
+        assert_eq!(a.shards.len(), 3);
+        assert_eq!(a.shards[0].n, 32);
+        assert_eq!(a.shards[0].x.len(), 32 * IMG_DIM);
+        assert_eq!(a.test.n, 16);
+        assert_eq!(a.shards[1].x, b.shards[1].x);
+        assert_ne!(a.shards[1].x, c.shards[1].x);
+        // shards differ from each other
+        assert_ne!(a.shards[0].x, a.shards[1].x);
+    }
+
+    #[test]
+    fn pixel_range_and_label_range() {
+        let spec = DataSpec {
+            classes: 47,
+            n_clients: 1,
+            per_client: 64,
+            test_n: 8,
+            server_n: 8,
+        };
+        let d = synthetic(&spec, 7);
+        let shard = &d.shards[0];
+        assert!(shard.x.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        assert!(shard.y.iter().all(|&c| (0..47).contains(&c)));
+        // more than one class present
+        let mut seen = shard.y.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert!(seen.len() > 5);
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // Mean intra-class pixel distance must be well below inter-class
+        // distance, otherwise the task is unlearnable.
+        let t0 = ClassTemplate::new(1, 0);
+        let t1 = ClassTemplate::new(1, 1);
+        let mut rng = Rng::new(9);
+        let a0 = render_sample(&t0, &mut rng);
+        let b0 = render_sample(&t0, &mut rng);
+        let a1 = render_sample(&t1, &mut rng);
+        let dist = |u: &[f32], v: &[f32]| -> f32 {
+            u.iter().zip(v).map(|(x, y)| (x - y) * (x - y)).sum::<f32>()
+        };
+        assert!(dist(&a0, &b0) < dist(&a0, &a1), "intra >= inter class distance");
+    }
+
+    #[test]
+    fn gather_and_epoch_batches() {
+        let spec = DataSpec {
+            classes: 10,
+            n_clients: 1,
+            per_client: 40,
+            test_n: 8,
+            server_n: 8,
+        };
+        let d = synthetic(&spec, 3);
+        let shard = &d.shards[0];
+        let (x, y) = shard.gather(&[0, 5, 7]);
+        assert_eq!(x.len(), 3 * IMG_DIM);
+        assert_eq!(y.len(), 3);
+
+        let mut rng = Rng::new(1);
+        let (ex, ey) = shard.epoch_batches(8, 4, &mut rng).unwrap();
+        assert_eq!(ex.len(), 32 * IMG_DIM);
+        assert_eq!(ey.len(), 32);
+        // too-large epoch is rejected
+        assert!(shard.epoch_batches(8, 6, &mut rng).is_err());
+    }
+}

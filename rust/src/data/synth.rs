@@ -1,0 +1,164 @@
+//! Procedural 28x28 glyph renderer.
+//!
+//! Each class owns a template of 3-5 strokes (line segments with a width
+//! and an intensity) placed by a class-seeded PRNG.  A sample renders the
+//! template with a global translation, small per-endpoint jitter, and
+//! additive pixel noise, then clamps to [0, 1].  Distances from pixel to
+//! segment use the exact point-segment distance, giving smooth
+//! anti-aliased strokes.
+
+use crate::util::rng::Rng;
+
+use super::{IMG_DIM, IMG_SIDE};
+
+/// One stroke of a glyph: a thick line segment.
+#[derive(Debug, Clone, Copy)]
+pub struct Stroke {
+    pub x0: f32,
+    pub y0: f32,
+    pub x1: f32,
+    pub y1: f32,
+    /// Gaussian half-width in pixels.
+    pub width: f32,
+    /// Peak intensity in [0.55, 1.0].
+    pub intensity: f32,
+}
+
+/// Per-class procedural template.
+#[derive(Debug, Clone)]
+pub struct ClassTemplate {
+    pub class: usize,
+    pub strokes: Vec<Stroke>,
+}
+
+impl ClassTemplate {
+    /// Deterministic template for (dataset seed, class id).
+    pub fn new(seed: u64, class: usize) -> ClassTemplate {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9) ^ (class as u64) << 17);
+        let n_strokes = 3 + rng.below(3); // 3..=5
+        let margin = 5.0;
+        let span = IMG_SIDE as f32 - 2.0 * margin;
+        let strokes = (0..n_strokes)
+            .map(|_| {
+                let x0 = margin + rng.uniform(0.0, span);
+                let y0 = margin + rng.uniform(0.0, span);
+                // Bias towards long strokes so classes differ macroscopically.
+                let angle = rng.uniform(0.0, std::f32::consts::TAU);
+                let len = rng.uniform(8.0, 16.0);
+                let x1 = (x0 + len * angle.cos()).clamp(2.0, IMG_SIDE as f32 - 3.0);
+                let y1 = (y0 + len * angle.sin()).clamp(2.0, IMG_SIDE as f32 - 3.0);
+                Stroke {
+                    x0,
+                    y0,
+                    x1,
+                    y1,
+                    width: rng.uniform(0.9, 1.6),
+                    intensity: rng.uniform(0.55, 1.0),
+                }
+            })
+            .collect();
+        ClassTemplate { class, strokes }
+    }
+}
+
+fn point_segment_dist2(px: f32, py: f32, s: &Stroke) -> f32 {
+    let dx = s.x1 - s.x0;
+    let dy = s.y1 - s.y0;
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 > 0.0 {
+        (((px - s.x0) * dx + (py - s.y0) * dy) / len2).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    let cx = s.x0 + t * dx;
+    let cy = s.y0 + t * dy;
+    (px - cx) * (px - cx) + (py - cy) * (py - cy)
+}
+
+/// Render one sample of a class: template + translation + jitter + noise.
+pub fn render_sample(template: &ClassTemplate, rng: &mut Rng) -> Vec<f32> {
+    let tx = rng.uniform(-2.0, 2.0);
+    let ty = rng.uniform(-2.0, 2.0);
+    // Per-sample jittered copy of the strokes.
+    let strokes: Vec<Stroke> = template
+        .strokes
+        .iter()
+        .map(|s| Stroke {
+            x0: s.x0 + tx + rng.uniform(-0.7, 0.7),
+            y0: s.y0 + ty + rng.uniform(-0.7, 0.7),
+            x1: s.x1 + tx + rng.uniform(-0.7, 0.7),
+            y1: s.y1 + ty + rng.uniform(-0.7, 0.7),
+            width: s.width,
+            intensity: s.intensity * rng.uniform(0.85, 1.05),
+        })
+        .collect();
+
+    let mut img = vec![0.0f32; IMG_DIM];
+    for (idx, px) in img.iter_mut().enumerate() {
+        let x = (idx % IMG_SIDE) as f32;
+        let y = (idx / IMG_SIDE) as f32;
+        let mut v = 0.0f32;
+        for s in &strokes {
+            let d2 = point_segment_dist2(x, y, s);
+            let sigma2 = s.width * s.width;
+            if d2 < 9.0 * sigma2 {
+                v += s.intensity * (-0.5 * d2 / sigma2).exp();
+            }
+        }
+        // pixel noise
+        v += rng.normal() * 0.05;
+        *px = v.clamp(0.0, 1.0);
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn template_deterministic() {
+        let a = ClassTemplate::new(1, 3);
+        let b = ClassTemplate::new(1, 3);
+        assert_eq!(a.strokes.len(), b.strokes.len());
+        assert_eq!(a.strokes[0].x0, b.strokes[0].x0);
+        let c = ClassTemplate::new(1, 4);
+        assert!(
+            a.strokes.len() != c.strokes.len() || a.strokes[0].x0 != c.strokes[0].x0
+        );
+    }
+
+    #[test]
+    fn render_has_signal() {
+        let t = ClassTemplate::new(2, 0);
+        let mut rng = Rng::new(1);
+        let img = render_sample(&t, &mut rng);
+        assert_eq!(img.len(), IMG_DIM);
+        // stroke pixels should push the mean clearly above the noise floor
+        let bright = img.iter().filter(|&&p| p > 0.5).count();
+        assert!(bright > 10, "only {bright} bright pixels");
+        assert!(img.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn segment_distance() {
+        let s = Stroke {
+            x0: 0.0,
+            y0: 0.0,
+            x1: 10.0,
+            y1: 0.0,
+            width: 1.0,
+            intensity: 1.0,
+        };
+        assert_eq!(point_segment_dist2(5.0, 0.0, &s), 0.0);
+        assert_eq!(point_segment_dist2(5.0, 3.0, &s), 9.0);
+        assert_eq!(point_segment_dist2(-4.0, 3.0, &s), 25.0); // clamps to endpoint
+        // degenerate zero-length stroke
+        let p = Stroke {
+            x1: 0.0,
+            y1: 0.0,
+            ..s
+        };
+        assert_eq!(point_segment_dist2(3.0, 4.0, &p), 25.0);
+    }
+}

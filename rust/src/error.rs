@@ -1,0 +1,52 @@
+//! Library error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the HCFL library.
+#[derive(Debug, Error)]
+pub enum HcflError {
+    /// Artifact directory / manifest problems.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// JSON syntax or schema errors while reading the manifest.
+    #[error("json error: {0}")]
+    Json(String),
+
+    /// A named executable is missing from the manifest.
+    #[error("unknown executable '{0}' (run `make artifacts`?)")]
+    UnknownExecutable(String),
+
+    /// Input tensors did not match the executable's recorded spec.
+    #[error("spec mismatch for '{exec}': {detail}")]
+    SpecMismatch { exec: String, detail: String },
+
+    /// The PJRT engine failed (compile or execute).
+    #[error("engine error: {0}")]
+    Engine(String),
+
+    /// The engine worker thread is gone.
+    #[error("engine worker disconnected")]
+    WorkerGone,
+
+    /// Configuration problems (bad experiment parameters, etc.).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Dataset / shard construction problems.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// I/O wrapper.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for HcflError {
+    fn from(e: xla::Error) -> Self {
+        HcflError::Engine(e.to_string())
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, HcflError>;

@@ -1,0 +1,89 @@
+//! Shared plumbing for the experiment drivers.
+
+use std::path::Path;
+
+use crate::compression::Scheme;
+use crate::config::ExperimentConfig;
+use crate::coordinator::Simulation;
+use crate::error::Result;
+use crate::metrics::RunReport;
+use crate::runtime::Engine;
+use crate::util::cli::Args;
+
+/// Scale knobs shared by all experiments: small defaults for a laptop
+/// run; `--paper-scale` restores the paper's 100-round geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    pub rounds: usize,
+    pub epochs: usize,
+    pub paper: bool,
+}
+
+impl Scale {
+    pub fn from_args(args: &Args, default_rounds: usize, default_epochs: usize) -> Result<Scale> {
+        let paper = args.flag("paper-scale");
+        Ok(Scale {
+            rounds: args.usize_or("rounds", if paper { 100 } else { default_rounds })?,
+            epochs: args.usize_or("epochs", if paper { 5 } else { default_epochs })?,
+            paper,
+        })
+    }
+}
+
+/// Run one configuration, stream per-round lines to stderr, and persist
+/// the per-round CSV under `out_dir`.
+pub fn run_and_save(
+    engine: &Engine,
+    mut cfg: ExperimentConfig,
+    out_dir: &Path,
+    tag: &str,
+) -> Result<RunReport> {
+    cfg.engine_workers = engine.n_workers();
+    let mut sim = Simulation::new(engine, cfg)?;
+    sim.verbose = true;
+    let report = sim.run()?;
+    std::fs::create_dir_all(out_dir)?;
+    let file = out_dir.join(format!("{tag}.csv"));
+    report.write_csv(&file)?;
+    eprintln!("[saved] {}", file.display());
+    Ok(report)
+}
+
+/// Slug for filenames: "HCFL 1:32" -> "hcfl_1_32".
+pub fn slug(s: &str) -> String {
+    s.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() {
+                c.to_ascii_lowercase()
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+/// The compression schemes of the paper's Tables I/II.
+pub fn table_schemes(ratios: &[usize]) -> Vec<Scheme> {
+    let mut out = vec![Scheme::Fedavg, Scheme::Ternary];
+    out.extend(ratios.iter().map(|&r| Scheme::Hcfl { ratio: r }));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slugging() {
+        assert_eq!(slug("HCFL 1:32"), "hcfl_1_32");
+        assert_eq!(slug("FedAvg"), "fedavg");
+    }
+
+    #[test]
+    fn schemes_include_baselines() {
+        let s = table_schemes(&[4, 32]);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s[0], Scheme::Fedavg);
+        assert_eq!(s[1], Scheme::Ternary);
+    }
+}

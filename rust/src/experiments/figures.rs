@@ -1,0 +1,194 @@
+//! Figures 8-12 of the paper: accuracy/loss-vs-round series.
+//!
+//! Each driver prints a per-round series table (the figure's data) and
+//! writes one CSV per curve under the results directory.
+
+use crate::compression::Scheme;
+use crate::config::ExperimentConfig;
+use crate::error::Result;
+use crate::experiments::common::{run_and_save, slug, Scale};
+use crate::experiments::registry::ExperimentCtx;
+use crate::metrics::{RunReport, Table};
+
+fn print_series(title: &str, reports: &[(String, RunReport)], show_loss: bool) {
+    println!("{title}");
+    let rounds = reports
+        .iter()
+        .map(|(_, r)| r.rounds.len())
+        .max()
+        .unwrap_or(0);
+    let mut headers: Vec<String> = vec!["round".into()];
+    for (label, _) in reports {
+        headers.push(label.clone());
+        if show_loss {
+            headers.push(format!("{label} loss"));
+        }
+    }
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&hdr_refs);
+    for t in 0..rounds {
+        let mut row = vec![format!("{}", t + 1)];
+        for (_, rep) in reports {
+            match rep.rounds.get(t) {
+                Some(rec) => {
+                    row.push(format!("{:.4}", rec.accuracy));
+                    if show_loss {
+                        row.push(format!("{:.4}", rec.loss));
+                    }
+                }
+                None => {
+                    row.push("-".into());
+                    if show_loss {
+                        row.push("-".into());
+                    }
+                }
+            }
+        }
+        table.row(row);
+    }
+    println!("{}", table.render());
+}
+
+/// Fig. 8: MNIST accuracy per round at each compression ratio.
+pub fn fig8(ctx: &ExperimentCtx) -> Result<()> {
+    let scale = Scale::from_args(&ctx.args, 12, 2)?;
+    let ratios = ctx.args.usize_list_or("ratios", &[4, 8, 16, 32])?;
+    let mut reports = Vec::new();
+    let mut schemes = vec![Scheme::Fedavg];
+    schemes.extend(ratios.iter().map(|&r| Scheme::Hcfl { ratio: r }));
+    for scheme in schemes {
+        let mut cfg = ExperimentConfig::mnist(scheme, scale.rounds);
+        cfg.local_epochs = scale.epochs;
+        let rep = run_and_save(
+            &ctx.engine,
+            cfg,
+            &ctx.out_dir,
+            &format!("fig8_{}", slug(&scheme.label())),
+        )?;
+        reports.push((scheme.label(), rep));
+    }
+    print_series(
+        "Fig. 8 — aggregation accuracy on MNIST per compression ratio",
+        &reports,
+        false,
+    );
+    Ok(())
+}
+
+/// Fig. 9: EMNIST accuracy per round at each compression ratio.
+pub fn fig9(ctx: &ExperimentCtx) -> Result<()> {
+    let scale = Scale::from_args(&ctx.args, 8, 2)?;
+    let ratios = ctx.args.usize_list_or("ratios", &[4, 8, 16, 32])?;
+    let mut reports = Vec::new();
+    let mut schemes = vec![Scheme::Fedavg];
+    schemes.extend(ratios.iter().map(|&r| Scheme::Hcfl { ratio: r }));
+    for scheme in schemes {
+        let mut cfg = ExperimentConfig::emnist(scheme, scale.rounds);
+        cfg.local_epochs = scale.epochs;
+        let rep = run_and_save(
+            &ctx.engine,
+            cfg,
+            &ctx.out_dir,
+            &format!("fig9_{}", slug(&scheme.label())),
+        )?;
+        reports.push((scheme.label(), rep));
+    }
+    print_series(
+        "Fig. 9 — aggregation accuracy on EMNIST per compression ratio",
+        &reports,
+        false,
+    );
+    Ok(())
+}
+
+fn fig10(ctx: &ExperimentCtx, model: &str, title: &str) -> Result<()> {
+    let scale = Scale::from_args(&ctx.args, 8, 2)?;
+    let ks = ctx.args.usize_list_or("clients", &[10, 30, 100])?;
+    let ratio = ctx.args.usize_or("ratio", 16)?;
+    let mut reports = Vec::new();
+    for &k in &ks {
+        let mut cfg = if model == "lenet" {
+            ExperimentConfig::mnist(Scheme::Hcfl { ratio }, scale.rounds)
+        } else {
+            ExperimentConfig::emnist(Scheme::Hcfl { ratio }, scale.rounds)
+        };
+        cfg.local_epochs = scale.epochs;
+        cfg.n_clients = k;
+        cfg.participation = 1.0; // all K participate: isolates the K effect
+        cfg.data.n_clients = k;
+        let rep = run_and_save(
+            &ctx.engine,
+            cfg,
+            &ctx.out_dir,
+            &format!("fig10_{model}_k{k}"),
+        )?;
+        // Theorem-1 framing: larger K => lower tail variance.
+        eprintln!(
+            "K={k}: final acc {:.4}, tail stddev {:.4}",
+            rep.final_accuracy(),
+            rep.accuracy_stddev_tail(5)
+        );
+        reports.push((format!("K={k}"), rep));
+    }
+    print_series(title, &reports, false);
+    Ok(())
+}
+
+/// Fig. 10a: client-count sweep on MNIST.
+pub fn fig10a(ctx: &ExperimentCtx) -> Result<()> {
+    fig10(
+        ctx,
+        "lenet",
+        "Fig. 10a — effect of client count K on MNIST accuracy (HCFL)",
+    )
+}
+
+/// Fig. 10b: client-count sweep on EMNIST.
+pub fn fig10b(ctx: &ExperimentCtx) -> Result<()> {
+    fig10(
+        ctx,
+        "fivecnn",
+        "Fig. 10b — effect of client count K on EMNIST accuracy (HCFL)",
+    )
+}
+
+/// Fig. 11: local-epoch sweep (accuracy + loss).
+pub fn fig11(ctx: &ExperimentCtx) -> Result<()> {
+    let scale = Scale::from_args(&ctx.args, 10, 1)?;
+    let epochs = ctx.args.usize_list_or("epoch-sweep", &[1, 5, 10, 20])?;
+    let ratio = ctx.args.usize_or("ratio", 16)?;
+    let mut reports = Vec::new();
+    for &e in &epochs {
+        let mut cfg = ExperimentConfig::mnist(Scheme::Hcfl { ratio }, scale.rounds);
+        cfg.local_epochs = e;
+        let rep = run_and_save(&ctx.engine, cfg, &ctx.out_dir, &format!("fig11_e{e}"))?;
+        reports.push((format!("E={e}"), rep));
+    }
+    print_series(
+        "Fig. 11 — effect of local epochs E on MNIST (HCFL), accuracy and loss",
+        &reports,
+        true,
+    );
+    Ok(())
+}
+
+/// Fig. 12: batch-size sweep (accuracy + loss).
+pub fn fig12(ctx: &ExperimentCtx) -> Result<()> {
+    let scale = Scale::from_args(&ctx.args, 10, 5)?;
+    let batches = ctx.args.usize_list_or("batch-sweep", &[10, 64, 600])?;
+    let ratio = ctx.args.usize_or("ratio", 16)?;
+    let mut reports = Vec::new();
+    for &b in &batches {
+        let mut cfg = ExperimentConfig::mnist(Scheme::Hcfl { ratio }, scale.rounds);
+        cfg.local_epochs = scale.epochs;
+        cfg.batch = b;
+        let rep = run_and_save(&ctx.engine, cfg, &ctx.out_dir, &format!("fig12_b{b}"))?;
+        reports.push((format!("B={b}"), rep));
+    }
+    print_series(
+        "Fig. 12 — effect of batch size B on MNIST (HCFL), accuracy and loss",
+        &reports,
+        true,
+    );
+    Ok(())
+}

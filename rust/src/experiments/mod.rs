@@ -1,0 +1,9 @@
+//! Experiment harness: one module per table/figure of the paper's §VI.
+
+pub mod common;
+pub mod figures;
+pub mod registry;
+pub mod tables;
+pub mod theorems;
+
+pub use registry::{list, run_by_id, ExperimentCtx};

@@ -1,0 +1,120 @@
+//! Experiment registry: dispatch table from ids to drivers.
+
+use crate::error::{HcflError, Result};
+use crate::runtime::Engine;
+use crate::util::cli::Args;
+
+/// Shared context for experiment drivers.
+pub struct ExperimentCtx {
+    pub engine: Engine,
+    pub args: Args,
+    pub out_dir: std::path::PathBuf,
+}
+
+type Driver = fn(&ExperimentCtx) -> Result<()>;
+
+fn drivers() -> Vec<(&'static str, &'static str, Driver)> {
+    use crate::experiments::{figures, tables, theorems};
+    vec![
+        (
+            "table1",
+            "Table I: LeNet-5/MNIST communication cost per scheme",
+            tables::table1,
+        ),
+        (
+            "table2",
+            "Table II: 5-CNN/EMNIST communication cost per scheme",
+            tables::table2,
+        ),
+        (
+            "table3",
+            "Table III: client/server computational delay per ratio",
+            tables::table3,
+        ),
+        (
+            "fig8",
+            "Fig 8: MNIST accuracy vs round per compression ratio",
+            figures::fig8,
+        ),
+        (
+            "fig9",
+            "Fig 9: EMNIST accuracy vs round per compression ratio",
+            figures::fig9,
+        ),
+        (
+            "fig10a",
+            "Fig 10a: client-count sweep, MNIST",
+            figures::fig10a,
+        ),
+        (
+            "fig10b",
+            "Fig 10b: client-count sweep, EMNIST",
+            figures::fig10b,
+        ),
+        (
+            "fig11",
+            "Fig 11: local-epoch sweep, MNIST (acc + loss)",
+            figures::fig11,
+        ),
+        (
+            "fig12",
+            "Fig 12: batch-size sweep, MNIST (acc + loss)",
+            figures::fig12,
+        ),
+        (
+            "thm1",
+            "Theorem 1: measured deviation probability vs bound",
+            theorems::thm1,
+        ),
+        (
+            "thm2",
+            "Theorem 2: entropy-gap estimate vs measured MSE",
+            theorems::thm2,
+        ),
+    ]
+}
+
+/// Known experiment ids with descriptions.
+pub fn list() -> Vec<(&'static str, &'static str)> {
+    drivers().into_iter().map(|(id, d, _)| (id, d)).collect()
+}
+
+/// Dispatch an experiment by id ("all" runs everything).
+pub fn run_by_id(ctx: &ExperimentCtx, id: &str) -> Result<()> {
+    if id == "all" {
+        for (name, _, f) in drivers() {
+            eprintln!("=== {name} ===");
+            f(ctx)?;
+        }
+        return Ok(());
+    }
+    for (name, _, f) in drivers() {
+        if name == id {
+            return f(ctx);
+        }
+    }
+    Err(HcflError::Config(format!(
+        "unknown experiment '{id}' (try: {})",
+        list()
+            .iter()
+            .map(|(n, _)| *n)
+            .collect::<Vec<_>>()
+            .join(", ")
+    )))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_table_and_figure() {
+        let ids: Vec<&str> = list().iter().map(|(n, _)| *n).collect();
+        for want in [
+            "table1", "table2", "table3", "fig8", "fig9", "fig10a", "fig10b", "fig11",
+            "fig12", "thm1", "thm2",
+        ] {
+            assert!(ids.contains(&want), "missing experiment {want}");
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Tables I, II and III of the paper.
+//!
+//! * Table I — LeNet-5 / MNIST communication cost per scheme.
+//! * Table II — 5-CNN / EMNIST (8-way dense segmentation) ditto.
+//! * Table III — client/server computational delay per compression ratio.
+//!
+//! The harness reports measured numbers at the configured scale and
+//! extrapolates traffic to the paper's 100-round / m-clients-per-round
+//! accounting so rows are directly comparable with the paper.
+
+use crate::compression::Scheme;
+use crate::config::ExperimentConfig;
+use crate::error::Result;
+use crate::experiments::common::{run_and_save, slug, table_schemes, Scale};
+use crate::experiments::registry::ExperimentCtx;
+use crate::metrics::Table;
+use crate::network::true_ratio;
+
+fn comm_table(ctx: &ExperimentCtx, model: &str, title: &str) -> Result<()> {
+    let args = &ctx.args;
+    let scale = Scale::from_args(args, 3, 2)?;
+    let ratios = args.usize_list_or("ratios", &[4, 8, 16, 32])?;
+    println!("{title}");
+    println!(
+        "(measured over {} rounds, E={}, traffic extrapolated to 100 rounds)",
+        scale.rounds, scale.epochs
+    );
+
+    let mut table = Table::new(&[
+        "Compress Method",
+        "Reconstruction error",
+        "Encoded Size Up/Down (MB, 100 rounds)",
+        "True Compress Ratio",
+    ]);
+
+    let mut baseline_up: Option<u64> = None;
+    for scheme in table_schemes(&ratios) {
+        let mut cfg = if model == "lenet" {
+            ExperimentConfig::mnist(scheme, scale.rounds)
+        } else {
+            ExperimentConfig::emnist(scheme, scale.rounds)
+        };
+        cfg.local_epochs = scale.epochs;
+        // Paper Tables I/II count both directions encoded (§VI-B).
+        cfg.compress_downlink = true;
+        let report = run_and_save(
+            &ctx.engine,
+            cfg,
+            &ctx.out_dir,
+            &format!("{}_{}", model, slug(&scheme.label())),
+        )?;
+
+        let rounds = report.rounds.len().max(1) as u64;
+        let up_100 = report.total_up_bytes() * 100 / rounds;
+        let down_100 = report.total_down_bytes() * 100 / rounds;
+        let base = *baseline_up.get_or_insert(up_100);
+        table.row(vec![
+            report.scheme.clone(),
+            if matches!(scheme, Scheme::Fedavg) {
+                "0.0".to_string()
+            } else {
+                format!("{:.4}", report.mean_recon_mse())
+            },
+            format!("{:.0}/{:.0}", up_100 as f64 / 1e6, down_100 as f64 / 1e6),
+            format!("{:.3}", true_ratio(base, up_100)),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+/// Table I: LeNet-5 on (synthetic) MNIST.
+pub fn table1(ctx: &ExperimentCtx) -> Result<()> {
+    comm_table(
+        ctx,
+        "lenet",
+        "Table I — HCFL vs compression baselines, LeNet-5 / MNIST (C=0.1, K=100)",
+    )
+}
+
+/// Table II: 5-CNN on (synthetic) EMNIST with 8-way dense segmentation.
+pub fn table2(ctx: &ExperimentCtx) -> Result<()> {
+    comm_table(
+        ctx,
+        "fivecnn",
+        "Table II — HCFL vs compression baselines, 5-CNN / EMNIST (C=0.1, K=100, dense 8-way)",
+    )
+}
+
+/// Table III: average client/server computational delay per ratio.
+pub fn table3(ctx: &ExperimentCtx) -> Result<()> {
+    let args = &ctx.args;
+    let scale = Scale::from_args(args, 2, 1)?;
+    let ratios = args.usize_list_or("ratios", &[4, 8, 16, 32])?;
+    let models: Vec<&str> = if args.flag("full") {
+        vec!["lenet", "fivecnn"]
+    } else {
+        vec![args.str_or("model", "lenet")]
+    };
+
+    for model in models {
+        println!(
+            "Table III — computational delay, {model} (averaged over {} rounds)",
+            scale.rounds
+        );
+        let mut table = Table::new(&[
+            "Compression Ratio",
+            "client (s)",
+            "server (s)",
+        ]);
+        let mut schemes = vec![Scheme::Fedavg];
+        schemes.extend(ratios.iter().map(|&r| Scheme::Hcfl { ratio: r }));
+        for scheme in schemes {
+            let mut cfg = if model == "lenet" {
+                ExperimentConfig::mnist(scheme, scale.rounds)
+            } else {
+                ExperimentConfig::emnist(scheme, scale.rounds)
+            };
+            cfg.local_epochs = scale.epochs;
+            let report = run_and_save(
+                &ctx.engine,
+                cfg,
+                &ctx.out_dir,
+                &format!("table3_{}_{}", model, slug(&scheme.label())),
+            )?;
+            let label = match scheme {
+                Scheme::Fedavg => "Baseline".to_string(),
+                Scheme::Hcfl { ratio } => format!("1:{ratio}"),
+                other => other.label(),
+            };
+            table.row(vec![
+                label,
+                format!("{:.3}", report.mean_client_time()),
+                format!("{:.4}", report.mean_server_time()),
+            ]);
+        }
+        println!("{}", table.render());
+    }
+    Ok(())
+}

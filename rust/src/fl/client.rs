@@ -1,0 +1,163 @@
+//! Client-side local training and evaluation through AOT executables.
+//!
+//! `ClientUpdates` of Algorithm 1: E epochs of mini-batch SGD on the
+//! client's shard.  When the configured batch size matches the baked
+//! `train_epoch` executable, a whole epoch runs in ONE dispatch
+//! (`lax.scan` inside the graph); otherwise the per-batch `train_step_bN`
+//! variant is looped.
+
+use crate::data::Dataset;
+use crate::error::{HcflError, Result};
+use crate::runtime::{Engine, ModelMeta};
+use crate::tensor::TensorValue;
+use crate::util::rng::Rng;
+
+/// Result of one local-training call.
+#[derive(Debug, Clone)]
+pub struct LocalOutcome {
+    pub params: Vec<f32>,
+    /// Mean training loss over the epochs.
+    pub mean_loss: f64,
+}
+
+/// Runs a model's train/eval executables for one simulated client.
+#[derive(Clone)]
+pub struct LocalTrainer {
+    engine: Engine,
+    pub model: ModelMeta,
+}
+
+impl LocalTrainer {
+    pub fn new(engine: &Engine, model_name: &str) -> Result<LocalTrainer> {
+        let model = engine.manifest().model(model_name)?.clone();
+        Ok(LocalTrainer {
+            engine: engine.clone(),
+            model,
+        })
+    }
+
+    /// E epochs of local SGD (Algorithm 1 `ClientUpdates`).
+    pub fn train(
+        &self,
+        params: &[f32],
+        shard: &Dataset,
+        epochs: usize,
+        batch: usize,
+        lr: f32,
+        rng: &mut Rng,
+        worker: usize,
+    ) -> Result<LocalOutcome> {
+        if params.len() != self.model.d {
+            return Err(HcflError::Config(format!(
+                "params len {} != model d {}",
+                params.len(),
+                self.model.d
+            )));
+        }
+        let ep = &self.model.train_epoch;
+        let use_epoch_exec = batch == ep.batch && shard.n >= ep.batch * ep.n_batches;
+
+        let mut flat = params.to_vec();
+        let mut losses = Vec::with_capacity(epochs);
+        for _ in 0..epochs {
+            if use_epoch_exec {
+                let (xs, ys) = shard.epoch_batches(ep.batch, ep.n_batches, rng)?;
+                let outs = self.engine.call_on(
+                    worker,
+                    &ep.name,
+                    vec![
+                        TensorValue::vec_f32(flat),
+                        TensorValue::f32(xs, vec![ep.n_batches, ep.batch, shard.dim])?,
+                        TensorValue::i32(ys, vec![ep.n_batches, ep.batch])?,
+                        TensorValue::scalar_f32(lr),
+                    ],
+                )?;
+                let mut it = outs.into_iter();
+                flat = it
+                    .next()
+                    .ok_or_else(|| HcflError::Engine("epoch exec returned nothing".into()))?
+                    .into_f32()?;
+                losses.push(it.next().map(|l| l.scalar()).transpose()?.unwrap_or(0.0) as f64);
+            } else {
+                let exec = self.model.train_step.get(&batch).ok_or_else(|| {
+                    HcflError::Config(format!(
+                        "no train_step executable for batch {batch} (baked: {:?})",
+                        self.model.train_step.keys().collect::<Vec<_>>()
+                    ))
+                })?;
+                let n_batches = shard.n / batch;
+                if n_batches == 0 {
+                    return Err(HcflError::Data(format!(
+                        "shard of {} rows cannot form a batch of {batch}",
+                        shard.n
+                    )));
+                }
+                let mut idx: Vec<usize> = (0..shard.n).collect();
+                rng.shuffle(&mut idx);
+                let mut epoch_loss = 0.0f64;
+                for b in 0..n_batches {
+                    let rows = &idx[b * batch..(b + 1) * batch];
+                    let (x, y) = shard.gather(rows);
+                    let outs = self.engine.call_on(
+                        worker,
+                        exec,
+                        vec![
+                            TensorValue::vec_f32(flat),
+                            TensorValue::f32(x, vec![batch, shard.dim])?,
+                            TensorValue::i32(y, vec![batch])?,
+                            TensorValue::scalar_f32(lr),
+                        ],
+                    )?;
+                    let mut it = outs.into_iter();
+                    flat = it
+                        .next()
+                        .ok_or_else(|| {
+                            HcflError::Engine("train_step returned nothing".into())
+                        })?
+                        .into_f32()?;
+                    epoch_loss +=
+                        it.next().map(|l| l.scalar()).transpose()?.unwrap_or(0.0) as f64;
+                }
+                losses.push(epoch_loss / n_batches as f64);
+            }
+        }
+        Ok(LocalOutcome {
+            params: flat,
+            mean_loss: crate::util::stats::mean(&losses),
+        })
+    }
+
+    /// Accuracy + mean loss on a test set (batched through the eval
+    /// executable; the set size must be a multiple of the eval batch).
+    pub fn evaluate(&self, params: &[f32], test: &Dataset, worker: usize) -> Result<(f64, f64)> {
+        let ev = &self.model.eval;
+        if test.n % ev.batch != 0 || test.n == 0 {
+            return Err(HcflError::Config(format!(
+                "test set size {} must be a positive multiple of eval batch {}",
+                test.n, ev.batch
+            )));
+        }
+        let n_batches = test.n / ev.batch;
+        let mut correct = 0.0f64;
+        let mut loss_sum = 0.0f64;
+        for b in 0..n_batches {
+            let rows: Vec<usize> = (b * ev.batch..(b + 1) * ev.batch).collect();
+            let (x, y) = test.gather(&rows);
+            let outs = self.engine.call_on(
+                worker,
+                &ev.name,
+                vec![
+                    TensorValue::vec_f32(params.to_vec()),
+                    TensorValue::f32(x, vec![ev.batch, test.dim])?,
+                    TensorValue::i32(y, vec![ev.batch])?,
+                ],
+            )?;
+            correct += outs[0].scalar()? as f64;
+            loss_sum += outs[1].scalar()? as f64;
+        }
+        Ok((
+            correct / test.n as f64,
+            loss_sum / n_batches as f64,
+        ))
+    }
+}

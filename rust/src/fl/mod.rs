@@ -1,0 +1,8 @@
+//! The FedAvg substrate (paper §II-B, Algorithm 1): local training on
+//! client shards, client selection, and running-average aggregation.
+
+mod client;
+mod server;
+
+pub use client::{LocalOutcome, LocalTrainer};
+pub use server::{select_clients, RunningAverage, Server};

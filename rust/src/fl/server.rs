@@ -1,0 +1,149 @@
+//! Server-side FedAvg: client selection and running-average aggregation.
+
+use crate::error::{HcflError, Result};
+use crate::model::ParamSet;
+use crate::runtime::ModelMeta;
+use crate::util::rng::Rng;
+
+/// Select `m = max(1, K*C)` distinct clients for a round (Algorithm 1).
+pub fn select_clients(k: usize, c: f64, rng: &mut Rng) -> Vec<usize> {
+    let m = ((k as f64 * c).round() as usize).clamp(1, k);
+    rng.choose(k, m)
+}
+
+/// Streaming mean over decoded client updates, in FIFO arrival order —
+/// Algorithm 1's `w ← (k−1)/k · w + 1/k · w_k`.
+#[derive(Debug, Clone)]
+pub struct RunningAverage {
+    acc: Vec<f32>,
+    count: usize,
+}
+
+impl RunningAverage {
+    pub fn new(d: usize) -> RunningAverage {
+        RunningAverage {
+            acc: vec![0.0; d],
+            count: 0,
+        }
+    }
+
+    /// Fold one decoded client model into the average.
+    pub fn push(&mut self, w: &[f32]) -> Result<()> {
+        if w.len() != self.acc.len() {
+            return Err(HcflError::Config(format!(
+                "aggregation dim mismatch: {} vs {}",
+                w.len(),
+                self.acc.len()
+            )));
+        }
+        self.count += 1;
+        let inv = 1.0 / self.count as f32;
+        for (a, &x) in self.acc.iter_mut().zip(w) {
+            *a += (x - *a) * inv;
+        }
+        Ok(())
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// The aggregated model (error if nothing was pushed).
+    pub fn finish(self) -> Result<Vec<f32>> {
+        if self.count == 0 {
+            return Err(HcflError::Config("aggregating zero updates".into()));
+        }
+        Ok(self.acc)
+    }
+}
+
+/// The FL server: owns the global model.
+pub struct Server {
+    pub global: ParamSet,
+    pub model: ModelMeta,
+}
+
+impl Server {
+    /// Fresh server with fan-in-initialized global parameters.
+    pub fn new(model: &ModelMeta, rng: &mut Rng) -> Server {
+        Server {
+            global: ParamSet::init(model, rng),
+            model: model.clone(),
+        }
+    }
+
+    /// Replace the global model with an aggregated one.
+    pub fn install(&mut self, aggregated: Vec<f32>) -> Result<()> {
+        if aggregated.len() != self.model.d {
+            return Err(HcflError::Config(format!(
+                "aggregated dim {} != model d {}",
+                aggregated.len(),
+                self.model.d
+            )));
+        }
+        self.global = ParamSet { flat: aggregated };
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selection_size_and_uniqueness() {
+        let mut rng = Rng::new(1);
+        let sel = select_clients(100, 0.1, &mut rng);
+        assert_eq!(sel.len(), 10);
+        let mut s = sel.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+        // C so small that m would be 0 -> clamped to 1
+        assert_eq!(select_clients(5, 0.0, &mut rng).len(), 1);
+        // full participation
+        assert_eq!(select_clients(7, 1.0, &mut rng).len(), 7);
+    }
+
+    #[test]
+    fn running_average_equals_mean() {
+        let mut ra = RunningAverage::new(3);
+        ra.push(&[1.0, 2.0, 3.0]).unwrap();
+        ra.push(&[3.0, 2.0, 1.0]).unwrap();
+        ra.push(&[2.0, 2.0, 2.0]).unwrap();
+        let m = ra.finish().unwrap();
+        for v in m {
+            assert!((v - 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn running_average_order_independent_mean() {
+        // FIFO arrival order must not change the final mean.
+        let updates = [
+            vec![0.5f32, -1.0],
+            vec![1.5, 2.0],
+            vec![-0.5, 0.0],
+            vec![2.5, 3.0],
+        ];
+        let mut a = RunningAverage::new(2);
+        for u in &updates {
+            a.push(u).unwrap();
+        }
+        let mut b = RunningAverage::new(2);
+        for u in updates.iter().rev() {
+            b.push(u).unwrap();
+        }
+        let (fa, fb) = (a.finish().unwrap(), b.finish().unwrap());
+        for (x, y) in fa.iter().zip(&fb) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn errors() {
+        let mut ra = RunningAverage::new(2);
+        assert!(ra.push(&[1.0]).is_err());
+        assert!(RunningAverage::new(2).finish().is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! On-disk cache of trained autoencoder parameters.
+//!
+//! Binary format: magic `HCFLAE1\n`, u64 little-endian length, f32 LE
+//! payload.  Keyed by (model, AE key, seed, steps, premodel epochs) in
+//! the filename so stale configurations never collide.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{HcflError, Result};
+
+use super::AeTrainConfig;
+
+const MAGIC: &[u8; 8] = b"HCFLAE1\n";
+
+fn cache_path(
+    dir: &Path,
+    model: &str,
+    ae_key: &str,
+    cfg: &AeTrainConfig,
+    fingerprint: u64,
+) -> PathBuf {
+    dir.join(format!(
+        "ae_{model}_{ae_key}_s{}_t{}_p{}_e{}_i{fingerprint:016x}.bin",
+        cfg.seed, cfg.steps, cfg.premodel_epochs, cfg.premodel_local_epochs
+    ))
+}
+
+/// Persist trained AE parameters.
+pub fn store_ae_params(
+    dir: &Path,
+    model: &str,
+    ae_key: &str,
+    cfg: &AeTrainConfig,
+    fingerprint: u64,
+    params: &[f32],
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let path = cache_path(dir, model, ae_key, cfg, fingerprint);
+    let mut f = std::fs::File::create(&path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u64).to_le_bytes())?;
+    let mut buf = Vec::with_capacity(params.len() * 4);
+    for v in params {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Load cached AE parameters if present (None on miss; error only on a
+/// corrupt file).
+pub fn load_ae_params(
+    dir: &Path,
+    model: &str,
+    ae_key: &str,
+    cfg: &AeTrainConfig,
+    fingerprint: u64,
+) -> Result<Option<Vec<f32>>> {
+    let path = cache_path(dir, model, ae_key, cfg, fingerprint);
+    let mut f = match std::fs::File::open(&path) {
+        Ok(f) => f,
+        Err(_) => return Ok(None),
+    };
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(HcflError::Manifest(format!(
+            "corrupt AE cache file {}",
+            path.display()
+        )));
+    }
+    let mut len_bytes = [0u8; 8];
+    f.read_exact(&mut len_bytes)?;
+    let len = u64::from_le_bytes(len_bytes) as usize;
+    let mut buf = vec![0u8; len * 4];
+    f.read_exact(&mut buf)?;
+    let params = buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Some(params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_miss() {
+        let dir = std::env::temp_dir().join("hcfl_ae_cache_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = AeTrainConfig::default();
+        assert!(load_ae_params(&dir, "lenet", "c256_r4", &cfg, 7)
+            .unwrap()
+            .is_none());
+        let params: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        store_ae_params(&dir, "lenet", "c256_r4", &cfg, 7, &params).unwrap();
+        let loaded = load_ae_params(&dir, "lenet", "c256_r4", &cfg, 7)
+            .unwrap()
+            .unwrap();
+        assert_eq!(loaded, params);
+        // different config key misses
+        let mut cfg2 = cfg.clone();
+        cfg2.seed += 1;
+        assert!(load_ae_params(&dir, "lenet", "c256_r4", &cfg2, 7)
+            .unwrap()
+            .is_none());
+        // different init fingerprint misses
+        assert!(load_ae_params(&dir, "lenet", "c256_r4", &cfg, 8)
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let dir = std::env::temp_dir().join("hcfl_ae_cache_corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = AeTrainConfig::default();
+        let path = cache_path(&dir, "m", "k", &cfg, 1);
+        std::fs::write(&path, b"garbagegarbagegarbage").unwrap();
+        assert!(load_ae_params(&dir, "m", "k", &cfg, 1).is_err());
+    }
+}

@@ -1,0 +1,52 @@
+//! # HCFL — High-Compression Federated Learning
+//!
+//! Reproduction of *"HCFL: A High Compression Approach for
+//! Communication-Efficient Federated Learning in Very Large Scale IoT
+//! Networks"* (Nguyen et al., 2022) as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * **Layer 3 (this crate)** — the federated-learning coordinator:
+//!   FedAvg server, simulated client fleet, the HCFL compressor lifecycle
+//!   (pre-model training, autoencoder training, per-round encode/decode),
+//!   baselines (T-FedAvg ternary quantization, Top-K sparsification), the
+//!   link-cost model, theory calculators, metrics, and the experiment
+//!   harness that regenerates every table and figure of the paper.
+//! * **Layer 2 (python/compile, build time only)** — JAX graphs (LeNet-5,
+//!   5-CNN, the HCFL autoencoders) AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels)** — Pallas kernels (tiled GEMM,
+//!   fused FC block, ternary/scale elementwise) that the Layer-2 graphs
+//!   call; they reach this crate inside the lowered HLO.
+//!
+//! Python never runs at request time: [`runtime::Engine`] loads the HLO
+//! artifacts through the PJRT C API (`xla` crate) and executes them from
+//! the round loop.
+
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod fl;
+pub mod hcfl;
+pub mod metrics;
+pub mod model;
+pub mod network;
+pub mod runtime;
+pub mod tensor;
+pub mod theory;
+pub mod util;
+
+/// Convenient re-exports for examples and binaries.
+pub mod prelude {
+    pub use crate::compression::{Compressor, Scheme};
+    pub use crate::config::ExperimentConfig;
+    pub use crate::coordinator::Simulation;
+    pub use crate::data::Dataset;
+    pub use crate::error::HcflError;
+    pub use crate::fl::Server;
+    pub use crate::metrics::RoundRecord;
+    pub use crate::model::ParamSet;
+    pub use crate::runtime::{Engine, Manifest};
+    pub use crate::tensor::TensorValue;
+}

@@ -1,0 +1,121 @@
+//! `repro` — the HCFL leader binary.
+//!
+//! Subcommands:
+//! * `run` — run one FL configuration (scheme/model/rounds/... via flags).
+//! * `experiment --id <id>` — regenerate a paper table/figure.
+//! * `list` — list available experiments.
+
+use hcfl::compression::Scheme;
+use hcfl::error::{HcflError, Result};
+use hcfl::prelude::*;
+use hcfl::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: repro <command> [options]\n\
+         commands:\n\
+           run         run one FL configuration\n\
+           experiment  regenerate a paper table/figure (--id table1|table2|table3|fig8|fig9|fig10a|fig10b|fig11|fig12|thm1|thm2)\n\
+           list        list available experiments\n\
+         run options:\n\
+           --model lenet|fivecnn   (default lenet)\n\
+           --scheme fedavg|ternary|topk|hcfl   (default hcfl)\n\
+           --ratio N               HCFL compression ratio (default 8)\n\
+           --keep F                TopK keep fraction (default 0.15)\n\
+           --rounds N --clients K --participation C --epochs E --batch B --lr F\n\
+           --seed N --workers N --dense-parts N --ae-steps N --no-cache --quiet\n\
+           --csv PATH              write the per-round series\n\
+         common options:\n\
+           --artifacts DIR   artifact directory (default: artifacts)\n\
+           --workers N       PJRT engine workers (default: 4)"
+    );
+    std::process::exit(2);
+}
+
+fn parse_scheme(args: &Args) -> Result<Scheme> {
+    match args.str_or("scheme", "hcfl") {
+        "fedavg" => Ok(Scheme::Fedavg),
+        "ternary" => Ok(Scheme::Ternary),
+        "topk" => Ok(Scheme::TopK {
+            keep: args.f64_or("keep", 0.15)?,
+        }),
+        "hcfl" => Ok(Scheme::Hcfl {
+            ratio: args.usize_or("ratio", 8)?,
+        }),
+        other => Err(HcflError::Config(format!("unknown scheme '{other}'"))),
+    }
+}
+
+fn cmd_run(args: &Args, artifacts: &str) -> Result<()> {
+    let workers = args.usize_or("workers", 4)?;
+    let engine = Engine::from_artifacts(artifacts, workers)?;
+
+    let scheme = parse_scheme(args)?;
+    let model = args.str_or("model", "lenet").to_string();
+    let rounds = args.usize_or("rounds", 10)?;
+    let mut cfg = if model == "fivecnn" {
+        ExperimentConfig::emnist(scheme, rounds)
+    } else {
+        ExperimentConfig::mnist(scheme, rounds)
+    };
+    cfg.model = model;
+    cfg.n_clients = args.usize_or("clients", cfg.n_clients)?;
+    cfg.participation = args.f64_or("participation", cfg.participation)?;
+    cfg.local_epochs = args.usize_or("epochs", cfg.local_epochs)?;
+    cfg.batch = args.usize_or("batch", cfg.batch)?;
+    cfg.lr = args.f64_or("lr", cfg.lr as f64)? as f32;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.dense_parts = args.usize_or("dense-parts", cfg.dense_parts)?;
+    cfg.ae.steps = args.usize_or("ae-steps", cfg.ae.steps)?;
+    cfg.use_ae_cache = !args.flag("no-cache");
+    cfg.engine_workers = workers;
+    cfg.data.n_clients = cfg.n_clients;
+
+    let mut sim = Simulation::new(&engine, cfg)?;
+    sim.verbose = !args.flag("quiet");
+    let report = sim.run()?;
+    println!(
+        "{} on {}: final accuracy {:.4}, final loss {:.4}, mean recon {:.3e}, upload {:.2} MB",
+        report.scheme,
+        report.model,
+        report.final_accuracy(),
+        report.final_loss(),
+        report.mean_recon_mse(),
+        report.total_up_bytes() as f64 / 1e6
+    );
+    if let Some(path) = args.str_opt("csv") {
+        report.write_csv(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional(0).map(|s| s.to_string());
+    let artifacts = args.str_or("artifacts", "artifacts").to_string();
+    match cmd.as_deref() {
+        Some("run") => cmd_run(&args, &artifacts),
+        Some("list") => {
+            for (id, desc) in hcfl::experiments::list() {
+                println!("{id:>8}  {desc}");
+            }
+            Ok(())
+        }
+        Some("experiment") => {
+            let id = args
+                .str_opt("id")
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| usage());
+            let workers = args.usize_or("workers", 4)?;
+            let engine = Engine::from_artifacts(&artifacts, workers)?;
+            let ctx = hcfl::experiments::ExperimentCtx {
+                engine,
+                args: args.clone(),
+                out_dir: std::path::PathBuf::from(args.str_or("out", "results")),
+            };
+            hcfl::experiments::run_by_id(&ctx, &id)
+        }
+        _ => usage(),
+    }
+}

@@ -1,0 +1,246 @@
+//! Run metrics: per-round records, aggregate reports, CSV export and
+//! console tables.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::util::stats;
+
+/// Everything measured in one communication round.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Test accuracy of the aggregated global model after this round.
+    pub accuracy: f64,
+    /// Test loss of the global model.
+    pub loss: f64,
+    /// Mean reconstruction MSE of the decompressed client updates
+    /// (0 for lossless schemes) — the paper's "Reconstruction error".
+    pub recon_mse: f64,
+    /// Bytes uploaded by all participating clients this round.
+    pub up_bytes: u64,
+    /// Bytes downloaded by all participating clients this round.
+    pub down_bytes: u64,
+    /// Mean per-client compute time (local training + encode), seconds.
+    pub client_time_s: f64,
+    /// Server compute time (decode + aggregate), seconds.
+    pub server_time_s: f64,
+    /// Modelled air time of the round (paper eq. 13).
+    pub comm_time_s: f64,
+    /// Wall-clock of the whole round in the simulator.
+    pub wall_time_s: f64,
+}
+
+/// A completed run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Scheme label, e.g. "HCFL 1:32".
+    pub scheme: String,
+    pub model: String,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl RunReport {
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds.last().map(|r| r.accuracy).unwrap_or(0.0)
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.rounds.last().map(|r| r.loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_up_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.up_bytes).sum()
+    }
+
+    pub fn total_down_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.down_bytes).sum()
+    }
+
+    pub fn mean_recon_mse(&self) -> f64 {
+        stats::mean(&self.rounds.iter().map(|r| r.recon_mse).collect::<Vec<_>>())
+    }
+
+    pub fn mean_client_time(&self) -> f64 {
+        stats::mean(
+            &self
+                .rounds
+                .iter()
+                .map(|r| r.client_time_s)
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    pub fn mean_server_time(&self) -> f64 {
+        stats::mean(
+            &self
+                .rounds
+                .iter()
+                .map(|r| r.server_time_s)
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// First round whose accuracy reaches `target` (convergence round).
+    pub fn rounds_to_accuracy(&self, target: f64) -> Option<usize> {
+        self.rounds
+            .iter()
+            .find(|r| r.accuracy >= target)
+            .map(|r| r.round)
+    }
+
+    /// Std-dev of the accuracy over the last `window` rounds (the paper's
+    /// Fig. 10 stability metric).
+    pub fn accuracy_stddev_tail(&self, window: usize) -> f64 {
+        let tail: Vec<f64> = self
+            .rounds
+            .iter()
+            .rev()
+            .take(window)
+            .map(|r| r.accuracy)
+            .collect();
+        stats::stddev(&tail)
+    }
+
+    /// Write the per-round series as CSV.
+    pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(
+            f,
+            "round,accuracy,loss,recon_mse,up_bytes,down_bytes,client_time_s,server_time_s,comm_time_s,wall_time_s"
+        )?;
+        for r in &self.rounds {
+            writeln!(
+                f,
+                "{},{:.6},{:.6},{:.8},{},{},{:.6},{:.6},{:.6},{:.6}",
+                r.round,
+                r.accuracy,
+                r.loss,
+                r.recon_mse,
+                r.up_bytes,
+                r.down_bytes,
+                r.client_time_s,
+                r.server_time_s,
+                r.comm_time_s,
+                r.wall_time_s
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Fixed-width console table writer used by the experiment harness.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&line(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(round: usize, acc: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            accuracy: acc,
+            loss: 1.0 - acc,
+            recon_mse: 0.001,
+            up_bytes: 100,
+            down_bytes: 100,
+            client_time_s: 0.1,
+            server_time_s: 0.01,
+            comm_time_s: 0.2,
+            wall_time_s: 0.3,
+        }
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let rep = RunReport {
+            scheme: "FedAvg".into(),
+            model: "lenet".into(),
+            rounds: vec![record(1, 0.5), record(2, 0.8), record(3, 0.9)],
+        };
+        assert_eq!(rep.final_accuracy(), 0.9);
+        assert_eq!(rep.total_up_bytes(), 300);
+        assert_eq!(rep.rounds_to_accuracy(0.75), Some(2));
+        assert_eq!(rep.rounds_to_accuracy(0.95), None);
+        assert!(rep.accuracy_stddev_tail(2) > 0.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let rep = RunReport {
+            scheme: "x".into(),
+            model: "lenet".into(),
+            rounds: vec![record(1, 0.5)],
+        };
+        let dir = std::env::temp_dir().join("hcfl_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.csv");
+        rep.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("round,accuracy"));
+        assert_eq!(text.lines().count(), 2);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "method"]);
+        t.row(vec!["1".into(), "FedAvg".into()]);
+        t.row(vec!["22".into(), "HCFL 1:32".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[3].contains("HCFL 1:32"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,71 @@
+//! Fixed-size chunking of segment slices for the per-chunk compressors.
+//!
+//! The AE / ternary executables operate on fixed-length chunks (256 for
+//! conv segments, 1024 for dense); the final chunk of a segment is
+//! zero-padded on the wire and truncated on reassembly.
+
+/// Number of chunks covering `len` values.
+pub fn chunk_count(len: usize, chunk: usize) -> usize {
+    assert!(chunk > 0);
+    len.div_ceil(chunk)
+}
+
+/// Extract chunk `i` from a segment slice, zero-padded to `chunk` values.
+pub fn extract_chunk(values: &[f32], i: usize, chunk: usize) -> Vec<f32> {
+    let start = i * chunk;
+    assert!(start < values.len(), "chunk index out of range");
+    let end = (start + chunk).min(values.len());
+    let mut out = values[start..end].to_vec();
+    out.resize(chunk, 0.0);
+    out
+}
+
+/// Write a reconstructed chunk back into a segment slice (padding tail is
+/// dropped automatically).
+pub fn write_chunk(dst: &mut [f32], i: usize, chunk_data: &[f32]) {
+    let chunk = chunk_data.len();
+    let start = i * chunk;
+    assert!(start < dst.len(), "chunk index out of range");
+    let end = (start + chunk).min(dst.len());
+    dst[start..end].copy_from_slice(&chunk_data[..end - start]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts() {
+        assert_eq!(chunk_count(1024, 1024), 1);
+        assert_eq!(chunk_count(1025, 1024), 2);
+        assert_eq!(chunk_count(1, 1024), 1);
+        assert_eq!(chunk_count(2048, 1024), 2);
+    }
+
+    #[test]
+    fn roundtrip_with_padding() {
+        let values: Vec<f32> = (0..300).map(|i| i as f32).collect();
+        let chunk = 256;
+        let n = chunk_count(values.len(), chunk);
+        assert_eq!(n, 2);
+
+        let c0 = extract_chunk(&values, 0, chunk);
+        let c1 = extract_chunk(&values, 1, chunk);
+        assert_eq!(c0.len(), 256);
+        assert_eq!(c1.len(), 256);
+        // tail zero-padded
+        assert!(c1[44..].iter().all(|&v| v == 0.0));
+
+        let mut rebuilt = vec![0.0f32; values.len()];
+        write_chunk(&mut rebuilt, 0, &c0);
+        write_chunk(&mut rebuilt, 1, &c1);
+        assert_eq!(rebuilt, values);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_panics() {
+        let values = [0.0f32; 10];
+        extract_chunk(&values, 2, 10);
+    }
+}

@@ -1,0 +1,64 @@
+//! Parameter initialization from the manifest layer table.
+
+use crate::runtime::LayerMeta;
+use crate::util::rng::Rng;
+
+/// Fan-in uniform init: rank>=2 tensors get U(-sqrt(6/fan_in),
+/// +sqrt(6/fan_in)) (He-style bound), rank-1 biases get zero.  Matches
+/// `python/compile/layout.py::Layout.init_flat` so pytest-trained and
+/// rust-trained models start from the same distribution family.
+pub fn init_flat(layers: &[LayerMeta], rng: &mut Rng) -> Vec<f32> {
+    let total: usize = layers.iter().map(|l| l.size).sum();
+    let mut flat = Vec::with_capacity(total);
+    for layer in layers {
+        if layer.shape.len() > 1 {
+            let fan_in: usize = layer.shape[..layer.shape.len() - 1].iter().product();
+            let limit = (6.0 / fan_in.max(1) as f32).sqrt();
+            for _ in 0..layer.size {
+                flat.push(rng.uniform(-limit, limit));
+            }
+        } else {
+            flat.extend(std::iter::repeat(0.0).take(layer.size));
+        }
+    }
+    flat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let layers = vec![LayerMeta {
+            name: "w".into(),
+            shape: vec![10, 10],
+            offset: 0,
+            size: 100,
+            segment: "dense".into(),
+        }];
+        let a = init_flat(&layers, &mut Rng::new(5));
+        let b = init_flat(&layers, &mut Rng::new(5));
+        let c = init_flat(&layers, &mut Rng::new(6));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn conv_fan_in_uses_all_but_last_dim() {
+        // conv [5,5,1,6]: fan_in = 25, limit = sqrt(6/25) ≈ 0.49
+        let layers = vec![LayerMeta {
+            name: "conv".into(),
+            shape: vec![5, 5, 1, 6],
+            offset: 0,
+            size: 150,
+            segment: "conv".into(),
+        }];
+        let flat = init_flat(&layers, &mut Rng::new(1));
+        let limit = (6.0f32 / 25.0).sqrt();
+        assert!(flat.iter().all(|v| v.abs() <= limit));
+        // spread should roughly fill the range
+        let max = flat.iter().cloned().fold(0.0f32, |a, b| a.max(b.abs()));
+        assert!(max > 0.5 * limit);
+    }
+}

@@ -1,0 +1,109 @@
+//! Model parameters on the coordinator side: initialization, segmentation
+//! and chunking of the flat parameter vector.
+//!
+//! Executables exchange parameters as one flat `f32[D]` vector (DESIGN.md
+//! §6); the manifest's layer table drives everything here.
+
+mod chunking;
+mod init;
+mod segment;
+
+pub use chunking::{chunk_count, extract_chunk, write_chunk};
+pub use init::init_flat;
+pub use segment::{merge_segment_ranges, split_dense, SegmentRange};
+
+use crate::runtime::ModelMeta;
+use crate::util::rng::Rng;
+
+/// A model's flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    pub flat: Vec<f32>,
+}
+
+impl ParamSet {
+    /// Fan-in-uniform initialization from the manifest layer table
+    /// (mirrors `python/compile/layout.py::Layout.init_flat`).
+    pub fn init(meta: &ModelMeta, rng: &mut Rng) -> ParamSet {
+        ParamSet {
+            flat: init_flat(&meta.layers, rng),
+        }
+    }
+
+    pub fn zeros(d: usize) -> ParamSet {
+        ParamSet {
+            flat: vec![0.0; d],
+        }
+    }
+
+    pub fn d(&self) -> usize {
+        self.flat.len()
+    }
+
+    /// Mean squared error against another parameter vector (the
+    /// reconstruction-error metric of the paper's Tables I/II).
+    pub fn mse(&self, other: &[f32]) -> f64 {
+        assert_eq!(self.flat.len(), other.len());
+        if self.flat.is_empty() {
+            return 0.0;
+        }
+        self.flat
+            .iter()
+            .zip(other)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / self.flat.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::LayerMeta;
+
+    fn toy_layers() -> Vec<LayerMeta> {
+        vec![
+            LayerMeta {
+                name: "w".into(),
+                shape: vec![4, 3],
+                offset: 0,
+                size: 12,
+                segment: "conv".into(),
+            },
+            LayerMeta {
+                name: "b".into(),
+                shape: vec![3],
+                offset: 12,
+                size: 3,
+                segment: "conv".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn mse_of_identical_is_zero() {
+        let p = ParamSet {
+            flat: vec![1.0, 2.0, 3.0],
+        };
+        assert_eq!(p.mse(&[1.0, 2.0, 3.0]), 0.0);
+        assert!((p.mse(&[2.0, 2.0, 3.0]) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn init_respects_layer_table() {
+        let layers = toy_layers();
+        let mut rng = Rng::new(0);
+        let flat = init_flat(&layers, &mut rng);
+        assert_eq!(flat.len(), 15);
+        // bias slice is zero
+        assert!(flat[12..].iter().all(|&v| v == 0.0));
+        // weight slice is bounded by the fan-in limit sqrt(6/4)
+        let limit = (6.0f32 / 4.0).sqrt();
+        assert!(flat[..12].iter().all(|&v| v.abs() <= limit));
+        // and is not all zeros
+        assert!(flat[..12].iter().any(|&v| v != 0.0));
+    }
+}

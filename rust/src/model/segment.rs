@@ -1,0 +1,146 @@
+//! Weight segmentation (paper §III-C3 "Data segmentation").
+//!
+//! HCFL trains one compressor per weight segment whose values share a
+//! distribution: convolution kernels vs dense weights (both models), and
+//! for the 5-CNN the dense segment is additionally split 8 ways to reduce
+//! per-part entropy (paper §VI-A).  Layers with the same segment tag are
+//! contiguous in the flat vector, so a segment is a simple range.
+
+use crate::runtime::LayerMeta;
+
+/// A contiguous slice of the flat parameter vector compressed as a unit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SegmentRange {
+    /// Segment type: "conv" | "dense" (selects the chunk size / AE family).
+    pub segment: String,
+    /// Display label, e.g. "dense[3/8]".
+    pub label: String,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Merge the layer table into contiguous per-segment-type ranges.
+pub fn merge_segment_ranges(layers: &[LayerMeta]) -> Vec<SegmentRange> {
+    let mut out: Vec<SegmentRange> = Vec::new();
+    for layer in layers {
+        match out.last_mut() {
+            Some(last)
+                if last.segment == layer.segment
+                    && last.offset + last.len == layer.offset =>
+            {
+                last.len += layer.size;
+            }
+            _ => out.push(SegmentRange {
+                segment: layer.segment.clone(),
+                label: layer.segment.clone(),
+                offset: layer.offset,
+                len: layer.size,
+            }),
+        }
+    }
+    out
+}
+
+/// Split every "dense" range into `parts` near-equal sub-ranges (the
+/// paper's 8-way EMNIST segmentation).  `parts == 1` is the identity.
+pub fn split_dense(ranges: &[SegmentRange], parts: usize) -> Vec<SegmentRange> {
+    assert!(parts >= 1, "split_dense needs parts >= 1");
+    let mut out = Vec::new();
+    for r in ranges {
+        if r.segment != "dense" || parts == 1 || r.len < parts {
+            out.push(r.clone());
+            continue;
+        }
+        let base = r.len / parts;
+        let extra = r.len % parts;
+        let mut off = r.offset;
+        for p in 0..parts {
+            let len = base + usize::from(p < extra);
+            out.push(SegmentRange {
+                segment: r.segment.clone(),
+                label: format!("{}[{}/{}]", r.segment, p + 1, parts),
+                offset: off,
+                len,
+            });
+            off += len;
+        }
+        debug_assert_eq!(off, r.offset + r.len);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(name: &str, segment: &str, offset: usize, size: usize) -> LayerMeta {
+        LayerMeta {
+            name: name.into(),
+            shape: vec![size],
+            offset,
+            size,
+            segment: segment.into(),
+        }
+    }
+
+    #[test]
+    fn merges_contiguous_same_segment() {
+        let layers = vec![
+            layer("c1", "conv", 0, 10),
+            layer("c2", "conv", 10, 20),
+            layer("f1", "dense", 30, 40),
+            layer("f2", "dense", 70, 5),
+        ];
+        let ranges = merge_segment_ranges(&layers);
+        assert_eq!(ranges.len(), 2);
+        assert_eq!(ranges[0].offset, 0);
+        assert_eq!(ranges[0].len, 30);
+        assert_eq!(ranges[1].offset, 30);
+        assert_eq!(ranges[1].len, 45);
+    }
+
+    #[test]
+    fn split_preserves_coverage() {
+        let ranges = vec![
+            SegmentRange {
+                segment: "conv".into(),
+                label: "conv".into(),
+                offset: 0,
+                len: 30,
+            },
+            SegmentRange {
+                segment: "dense".into(),
+                label: "dense".into(),
+                offset: 30,
+                len: 103,
+            },
+        ];
+        let split = split_dense(&ranges, 8);
+        // conv untouched
+        assert_eq!(split[0], ranges[0]);
+        // dense split into 8 contiguous parts covering [30, 133)
+        let dense: Vec<_> = split.iter().filter(|r| r.segment == "dense").collect();
+        assert_eq!(dense.len(), 8);
+        let mut off = 30;
+        let mut total = 0;
+        for r in &dense {
+            assert_eq!(r.offset, off);
+            off += r.len;
+            total += r.len;
+            // near-equal: lens differ by at most 1
+            assert!(r.len == 103 / 8 || r.len == 103 / 8 + 1);
+        }
+        assert_eq!(total, 103);
+    }
+
+    #[test]
+    fn split_one_is_identity() {
+        let ranges = vec![SegmentRange {
+            segment: "dense".into(),
+            label: "dense".into(),
+            offset: 0,
+            len: 10,
+        }];
+        assert_eq!(split_dense(&ranges, 1), ranges);
+    }
+}

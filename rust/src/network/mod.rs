@@ -1,0 +1,114 @@
+//! Link / communication-cost model (paper §VI-A, eq. 13).
+//!
+//! The paper places HCFL at the presentation layer: HARQ corrects packet
+//! errors below us, so the link is modelled as lossless and the only
+//! communication metric is data volume and the transmission time
+//! `T = s / R` with the cell bandwidth shared equally by the clients
+//! active in a round.
+
+/// Shared-bandwidth link model.
+#[derive(Debug, Clone)]
+pub struct LinkModel {
+    /// Total uplink cell capacity in bits/s shared by active clients.
+    pub uplink_bps: f64,
+    /// Total downlink capacity in bits/s.
+    pub downlink_bps: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        // A modest NB-IoT-ish cell: 10 Mbit/s up, 20 Mbit/s down.
+        LinkModel {
+            uplink_bps: 10e6,
+            downlink_bps: 20e6,
+        }
+    }
+}
+
+impl LinkModel {
+    /// Per-client uplink transmission time (seconds) when `active`
+    /// clients share the cell (paper eq. 13 with R_k = R / active).
+    pub fn uplink_time(&self, bytes: usize, active: usize) -> f64 {
+        let rate = self.uplink_bps / active.max(1) as f64;
+        bytes as f64 * 8.0 / rate
+    }
+
+    /// Per-client downlink transmission time (seconds).
+    pub fn downlink_time(&self, bytes: usize, active: usize) -> f64 {
+        let rate = self.downlink_bps / active.max(1) as f64;
+        bytes as f64 * 8.0 / rate
+    }
+}
+
+/// Accumulated traffic of a run (the paper's "Encoded Size Up/Download").
+#[derive(Debug, Clone, Default)]
+pub struct CostLedger {
+    pub up_bytes: u64,
+    pub down_bytes: u64,
+    /// Modelled time spent on the air (seconds, sum over rounds of the
+    /// slowest active client).
+    pub comm_time_s: f64,
+}
+
+impl CostLedger {
+    /// Record one round: `m` clients each upload `up` bytes and download
+    /// `down` bytes over the shared link.
+    pub fn record_round(&mut self, link: &LinkModel, m: usize, up: usize, down: usize) {
+        self.up_bytes += (up * m) as u64;
+        self.down_bytes += (down * m) as u64;
+        // Synchronous round: the round's air time is one client's
+        // transmission at the shared rate (all m transmit concurrently).
+        self.comm_time_s += link.uplink_time(up, m) + link.downlink_time(down, m);
+    }
+
+    pub fn up_mb(&self) -> f64 {
+        self.up_bytes as f64 / 1e6
+    }
+
+    pub fn down_mb(&self) -> f64 {
+        self.down_bytes as f64 / 1e6
+    }
+}
+
+/// The "true compression ratio" of the paper's tables: baseline bytes
+/// over compressed bytes.
+pub fn true_ratio(baseline_bytes: u64, compressed_bytes: u64) -> f64 {
+    if compressed_bytes == 0 {
+        return f64::INFINITY;
+    }
+    baseline_bytes as f64 / compressed_bytes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq13_transmission_time() {
+        let link = LinkModel {
+            uplink_bps: 8e6,
+            downlink_bps: 8e6,
+        };
+        // 1 MB at 8 Mbit/s alone: 1 second
+        assert!((link.uplink_time(1_000_000, 1) - 1.0).abs() < 1e-9);
+        // shared by 10 clients: 10 seconds
+        assert!((link.uplink_time(1_000_000, 10) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ledger_accumulates() {
+        let link = LinkModel::default();
+        let mut ledger = CostLedger::default();
+        ledger.record_round(&link, 10, 1000, 2000);
+        ledger.record_round(&link, 10, 1000, 2000);
+        assert_eq!(ledger.up_bytes, 20_000);
+        assert_eq!(ledger.down_bytes, 40_000);
+        assert!(ledger.comm_time_s > 0.0);
+    }
+
+    #[test]
+    fn ratio() {
+        assert_eq!(true_ratio(100, 25), 4.0);
+        assert_eq!(true_ratio(100, 0), f64::INFINITY);
+    }
+}

@@ -1,0 +1,254 @@
+//! PJRT execution engine: an actor pool around the `xla` crate.
+//!
+//! The `xla` crate's `PjRtClient` / `PjRtLoadedExecutable` are `Rc`-based
+//! and therefore `!Send`, so the engine spawns N worker threads that each
+//! own a client plus a lazily-compiled executable cache, and callers talk
+//! to them over channels with [`TensorValue`] payloads.  A cloneable
+//! [`Engine`] handle round-robins calls across workers; `call_on` pins a
+//! call to a specific worker (used to give each simulated client cache
+//! affinity).
+//!
+//! Compilation is per-worker and lazy: the first call of executable X on
+//! worker W compiles X's HLO text on W's client; subsequent calls reuse
+//! the compiled binary.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::error::{HcflError, Result};
+use crate::runtime::manifest::{Manifest, TensorSpec};
+use crate::tensor::TensorValue;
+
+struct Job {
+    exec: String,
+    inputs: Vec<TensorValue>,
+    reply: mpsc::Sender<Result<Vec<TensorValue>>>,
+}
+
+struct WorkerHandle {
+    tx: mpsc::Sender<Job>,
+    join: Option<JoinHandle<()>>,
+}
+
+struct EngineInner {
+    workers: Vec<Mutex<WorkerHandle>>,
+    next: AtomicUsize,
+    manifest: Manifest,
+}
+
+/// Cloneable handle to the engine actor pool.
+#[derive(Clone)]
+pub struct Engine {
+    inner: Arc<EngineInner>,
+}
+
+impl Engine {
+    /// Load the manifest from `dir` and spawn `n_workers` PJRT worker
+    /// threads (>= 1).
+    pub fn from_artifacts<P: AsRef<std::path::Path>>(
+        dir: P,
+        n_workers: usize,
+    ) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        Engine::with_manifest(manifest, n_workers)
+    }
+
+    /// Spawn the pool over an already-loaded manifest.
+    pub fn with_manifest(manifest: Manifest, n_workers: usize) -> Result<Engine> {
+        let n_workers = n_workers.max(1);
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let mani = manifest.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("pjrt-worker-{w}"))
+                .spawn(move || worker_loop(rx, mani))
+                .map_err(|e| HcflError::Engine(format!("spawn failed: {e}")))?;
+            workers.push(Mutex::new(WorkerHandle {
+                tx,
+                join: Some(join),
+            }));
+        }
+        Ok(Engine {
+            inner: Arc::new(EngineInner {
+                workers,
+                next: AtomicUsize::new(0),
+                manifest,
+            }),
+        })
+    }
+
+    /// The manifest this engine serves.
+    pub fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    /// Number of worker threads.
+    pub fn n_workers(&self) -> usize {
+        self.inner.workers.len()
+    }
+
+    /// Execute `exec` with `inputs`, round-robin across workers.
+    pub fn call(&self, exec: &str, inputs: Vec<TensorValue>) -> Result<Vec<TensorValue>> {
+        let w = self.inner.next.fetch_add(1, Ordering::Relaxed) % self.n_workers();
+        self.call_on(w, exec, inputs)
+    }
+
+    /// Execute `exec` on a specific worker (cache affinity).
+    pub fn call_on(
+        &self,
+        worker: usize,
+        exec: &str,
+        inputs: Vec<TensorValue>,
+    ) -> Result<Vec<TensorValue>> {
+        let spec = self.inner.manifest.exec_spec(exec)?;
+        validate_inputs(exec, &spec.inputs, &inputs)?;
+
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let handle = self.inner.workers[worker % self.n_workers()]
+                .lock()
+                .map_err(|_| HcflError::Engine("worker mutex poisoned".into()))?;
+            handle
+                .tx
+                .send(Job {
+                    exec: exec.to_string(),
+                    inputs,
+                    reply: reply_tx,
+                })
+                .map_err(|_| HcflError::WorkerGone)?;
+        }
+        reply_rx.recv().map_err(|_| HcflError::WorkerGone)?
+    }
+}
+
+impl Drop for EngineInner {
+    fn drop(&mut self) {
+        // Closing the senders ends the worker loops; join to avoid leaks.
+        for w in &self.workers {
+            if let Ok(mut h) = w.lock() {
+                let (dead_tx, _) = mpsc::channel();
+                h.tx = dead_tx; // drop the real sender
+                if let Some(join) = h.join.take() {
+                    let _ = join.join();
+                }
+            }
+        }
+    }
+}
+
+fn validate_inputs(exec: &str, specs: &[TensorSpec], inputs: &[TensorValue]) -> Result<()> {
+    if specs.len() != inputs.len() {
+        return Err(HcflError::SpecMismatch {
+            exec: exec.to_string(),
+            detail: format!("expected {} inputs, got {}", specs.len(), inputs.len()),
+        });
+    }
+    for (i, (spec, input)) in specs.iter().zip(inputs).enumerate() {
+        if spec.dtype != input.dtype() || spec.shape != input.shape() {
+            return Err(HcflError::SpecMismatch {
+                exec: exec.to_string(),
+                detail: format!(
+                    "input {i}: expected {:?}{:?}, got {:?}{:?}",
+                    spec.dtype,
+                    spec.shape,
+                    input.dtype(),
+                    input.shape()
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Worker thread: owns every !Send xla object.
+// ---------------------------------------------------------------------------
+
+fn worker_loop(rx: mpsc::Receiver<Job>, manifest: Manifest) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every job with the construction error.
+            let msg = format!("PjRtClient::cpu failed: {e}");
+            for job in rx {
+                let _ = job.reply.send(Err(HcflError::Engine(msg.clone())));
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    for job in rx {
+        let result = run_job(&client, &mut cache, &manifest, &job);
+        let _ = job.reply.send(result);
+    }
+}
+
+fn run_job(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: &Manifest,
+    job: &Job,
+) -> Result<Vec<TensorValue>> {
+    if !cache.contains_key(&job.exec) {
+        let path = manifest.hlo_path(&job.exec)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        cache.insert(job.exec.clone(), exe);
+    }
+    let exe = cache.get(&job.exec).expect("just inserted");
+
+    let literals: Vec<xla::Literal> = job
+        .inputs
+        .iter()
+        .map(to_literal)
+        .collect::<Result<Vec<_>>>()?;
+    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True: the single output is a tuple.
+    let parts = result.to_tuple()?;
+    parts.into_iter().map(from_literal).collect()
+}
+
+fn to_literal(t: &TensorValue) -> Result<xla::Literal> {
+    let lit = match t {
+        TensorValue::F32 { data, shape } => {
+            if shape.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        }
+        TensorValue::I32 { data, shape } => {
+            if shape.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        }
+    };
+    Ok(lit)
+}
+
+fn from_literal(lit: xla::Literal) -> Result<TensorValue> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(TensorValue::F32 {
+            data: lit.to_vec::<f32>()?,
+            shape: dims,
+        }),
+        xla::ElementType::S32 => Ok(TensorValue::I32 {
+            data: lit.to_vec::<i32>()?,
+            shape: dims,
+        }),
+        other => Err(HcflError::Engine(format!(
+            "unsupported output element type {other:?}"
+        ))),
+    }
+}

@@ -1,0 +1,336 @@
+//! `artifacts/manifest.json` loader: the contract between `aot.py` and
+//! the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{HcflError, Result};
+use crate::tensor::Dtype;
+use crate::util::json::Value;
+
+/// Shape + dtype of one executable input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled executable.
+#[derive(Debug, Clone)]
+pub struct ExecSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One named parameter tensor inside a model's flat vector.
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub segment: String, // "conv" | "dense"
+}
+
+/// Epoch-executable geometry.
+#[derive(Debug, Clone)]
+pub struct EpochMeta {
+    pub batch: usize,
+    pub n_batches: usize,
+    pub name: String,
+}
+
+/// Eval-executable geometry.
+#[derive(Debug, Clone)]
+pub struct EvalMeta {
+    pub batch: usize,
+    pub name: String,
+}
+
+/// A predictor model (LeNet-5 / 5-CNN).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub d: usize,
+    pub classes: usize,
+    pub input_dim: usize,
+    pub layers: Vec<LayerMeta>,
+    /// batch size -> executable name
+    pub train_step: BTreeMap<usize, String>,
+    pub train_epoch: EpochMeta,
+    pub eval: EvalMeta,
+}
+
+/// An HCFL autoencoder variant (one per chunk size x ratio).
+#[derive(Debug, Clone)]
+pub struct AeMeta {
+    pub key: String,
+    pub chunk: usize,
+    pub ratio: usize,
+    pub code: usize,
+    pub d: usize,
+    pub enc_dims: Vec<usize>,
+    pub layers: Vec<LayerMeta>,
+    pub encode: String,
+    pub decode: String,
+    pub train_batch: usize,
+    pub train: String,
+}
+
+/// Parsed manifest + artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub executables: BTreeMap<String, ExecSpec>,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub autoencoders: BTreeMap<String, AeMeta>,
+    /// chunk-size key ("c256") -> ternary executable name
+    pub ternary: BTreeMap<String, String>,
+    /// segment name -> chunk size ("conv" -> 256, "dense" -> 1024)
+    pub chunks: BTreeMap<String, usize>,
+}
+
+fn parse_tensor_spec(v: &Value) -> Result<TensorSpec> {
+    let dtype = Dtype::parse(v.get("dtype")?.as_str()?)?;
+    let shape = v
+        .get("shape")?
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_usize())
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TensorSpec { dtype, shape })
+}
+
+fn parse_layers(v: &Value) -> Result<Vec<LayerMeta>> {
+    v.as_arr()?
+        .iter()
+        .map(|l| {
+            Ok(LayerMeta {
+                name: l.get("name")?.as_str()?.to_string(),
+                shape: l
+                    .get("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<Vec<_>>>()?,
+                offset: l.get("offset")?.as_usize()?,
+                size: l.get("size")?.as_usize()?,
+                segment: l.get("segment")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            HcflError::Manifest(format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            ))
+        })?;
+        let root = Value::parse(&text)?;
+
+        let mut executables = BTreeMap::new();
+        for (name, spec) in root.get("executables")?.as_obj()? {
+            executables.insert(
+                name.clone(),
+                ExecSpec {
+                    file: spec.get("file")?.as_str()?.to_string(),
+                    inputs: spec
+                        .get("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(parse_tensor_spec)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: spec
+                        .get("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(parse_tensor_spec)
+                        .collect::<Result<Vec<_>>>()?,
+                },
+            );
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root.get("models")?.as_obj()? {
+            let mut train_step = BTreeMap::new();
+            for (b, exec) in m.get("train_step")?.as_obj()? {
+                let batch = b.parse::<usize>().map_err(|_| {
+                    HcflError::Manifest(format!("bad train_step batch key '{b}'"))
+                })?;
+                train_step.insert(batch, exec.as_str()?.to_string());
+            }
+            let ep = m.get("train_epoch")?;
+            let ev = m.get("eval")?;
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    d: m.get("d")?.as_usize()?,
+                    classes: m.get("classes")?.as_usize()?,
+                    input_dim: m.get("input_dim")?.as_usize()?,
+                    layers: parse_layers(m.get("layers")?)?,
+                    train_step,
+                    train_epoch: EpochMeta {
+                        batch: ep.get("batch")?.as_usize()?,
+                        n_batches: ep.get("n_batches")?.as_usize()?,
+                        name: ep.get("name")?.as_str()?.to_string(),
+                    },
+                    eval: EvalMeta {
+                        batch: ev.get("batch")?.as_usize()?,
+                        name: ev.get("name")?.as_str()?.to_string(),
+                    },
+                },
+            );
+        }
+
+        let mut autoencoders = BTreeMap::new();
+        for (key, a) in root.get("autoencoders")?.as_obj()? {
+            let tr = a.get("train")?;
+            autoencoders.insert(
+                key.clone(),
+                AeMeta {
+                    key: key.clone(),
+                    chunk: a.get("chunk")?.as_usize()?,
+                    ratio: a.get("ratio")?.as_usize()?,
+                    code: a.get("code")?.as_usize()?,
+                    d: a.get("d")?.as_usize()?,
+                    enc_dims: a
+                        .get("enc_dims")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<Vec<_>>>()?,
+                    layers: parse_layers(a.get("layers")?)?,
+                    encode: a.get("encode")?.as_str()?.to_string(),
+                    decode: a.get("decode")?.as_str()?.to_string(),
+                    train_batch: tr.get("batch")?.as_usize()?,
+                    train: tr.get("name")?.as_str()?.to_string(),
+                },
+            );
+        }
+
+        let mut ternary = BTreeMap::new();
+        for (key, name) in root.get("ternary")?.as_obj()? {
+            ternary.insert(key.clone(), name.as_str()?.to_string());
+        }
+
+        let mut chunks = BTreeMap::new();
+        for (seg, size) in root.get("chunks")?.as_obj()? {
+            chunks.insert(seg.clone(), size.as_usize()?);
+        }
+
+        let manifest = Manifest {
+            dir,
+            executables,
+            models,
+            autoencoders,
+            ternary,
+            chunks,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    /// Cross-checks: every referenced executable exists, layer tables are
+    /// gapless, AE keys match chunk/ratio.
+    pub fn validate(&self) -> Result<()> {
+        let check = |name: &str| -> Result<()> {
+            if self.executables.contains_key(name) {
+                Ok(())
+            } else {
+                Err(HcflError::UnknownExecutable(name.to_string()))
+            }
+        };
+        for m in self.models.values() {
+            for exec in m.train_step.values() {
+                check(exec)?;
+            }
+            check(&m.train_epoch.name)?;
+            check(&m.eval.name)?;
+            let mut end = 0usize;
+            for l in &m.layers {
+                if l.offset != end {
+                    return Err(HcflError::Manifest(format!(
+                        "model {}: layer table gap at '{}'",
+                        m.name, l.name
+                    )));
+                }
+                end += l.size;
+            }
+            if end != m.d {
+                return Err(HcflError::Manifest(format!(
+                    "model {}: layer table covers {end} of {} params",
+                    m.name, m.d
+                )));
+            }
+        }
+        for a in self.autoencoders.values() {
+            check(&a.encode)?;
+            check(&a.decode)?;
+            check(&a.train)?;
+            if a.key != format!("c{}_r{}", a.chunk, a.ratio) {
+                return Err(HcflError::Manifest(format!("bad AE key '{}'", a.key)));
+            }
+            if a.code != a.chunk / a.ratio {
+                return Err(HcflError::Manifest(format!(
+                    "AE {}: code {} != chunk/ratio",
+                    a.key, a.code
+                )));
+            }
+        }
+        for name in self.ternary.values() {
+            check(name)?;
+        }
+        Ok(())
+    }
+
+    /// Absolute path of an executable's HLO text file.
+    pub fn hlo_path(&self, exec: &str) -> Result<PathBuf> {
+        let spec = self
+            .executables
+            .get(exec)
+            .ok_or_else(|| HcflError::UnknownExecutable(exec.to_string()))?;
+        Ok(self.dir.join(&spec.file))
+    }
+
+    pub fn exec_spec(&self, exec: &str) -> Result<&ExecSpec> {
+        self.executables
+            .get(exec)
+            .ok_or_else(|| HcflError::UnknownExecutable(exec.to_string()))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| HcflError::Manifest(format!("unknown model '{name}'")))
+    }
+
+    /// The AE for a given segment's chunk size and a ratio.
+    pub fn autoencoder(&self, chunk: usize, ratio: usize) -> Result<&AeMeta> {
+        let key = format!("c{chunk}_r{ratio}");
+        self.autoencoders
+            .get(&key)
+            .ok_or_else(|| HcflError::Manifest(format!("no autoencoder '{key}'")))
+    }
+
+    /// Ternary executable for a chunk size.
+    pub fn ternary_exec(&self, chunk: usize) -> Result<&str> {
+        self.ternary
+            .get(&format!("c{chunk}"))
+            .map(|s| s.as_str())
+            .ok_or_else(|| HcflError::Manifest(format!("no ternary kernel for c{chunk}")))
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime layer: manifest loading + the PJRT execution engine.
+//!
+//! This is the only module that touches the `xla` crate.  Everything
+//! above it (FL server, compression, experiments) exchanges plain
+//! [`crate::tensor::TensorValue`]s with [`Engine`].
+
+mod engine;
+mod manifest;
+
+pub use engine::Engine;
+pub use manifest::{
+    AeMeta, EpochMeta, EvalMeta, ExecSpec, LayerMeta, Manifest, ModelMeta, TensorSpec,
+};

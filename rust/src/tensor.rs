@@ -1,0 +1,150 @@
+//! Host-side tensor values exchanged with the PJRT engine.
+//!
+//! The engine worker threads own all `xla` types (they are `Rc`-based and
+//! not `Send`); callers talk in [`TensorValue`]s, which are plain
+//! `Vec`-backed and cross thread boundaries freely.
+
+use crate::error::{HcflError, Result};
+
+/// Element type of a tensor (matches the manifest's `dtype` strings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(HcflError::Manifest(format!("unknown dtype '{other}'"))),
+        }
+    }
+}
+
+/// A shaped host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorValue {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl TensorValue {
+    /// Rank-0 f32 scalar.
+    pub fn scalar_f32(v: f32) -> TensorValue {
+        TensorValue::F32 {
+            data: vec![v],
+            shape: vec![],
+        }
+    }
+
+    /// 1-D f32 vector.
+    pub fn vec_f32(data: Vec<f32>) -> TensorValue {
+        let shape = vec![data.len()];
+        TensorValue::F32 { data, shape }
+    }
+
+    /// f32 tensor with explicit shape (element count must match).
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Result<TensorValue> {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            return Err(HcflError::Engine(format!(
+                "shape {shape:?} wants {want} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(TensorValue::F32 { data, shape })
+    }
+
+    /// i32 tensor with explicit shape.
+    pub fn i32(data: Vec<i32>, shape: Vec<usize>) -> Result<TensorValue> {
+        let want: usize = shape.iter().product();
+        if data.len() != want {
+            return Err(HcflError::Engine(format!(
+                "shape {shape:?} wants {want} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(TensorValue::I32 { data, shape })
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            TensorValue::F32 { .. } => Dtype::F32,
+            TensorValue::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            TensorValue::F32 { shape, .. } | TensorValue::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorValue::F32 { data, .. } => data.len(),
+            TensorValue::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as f32 slice (error if i32).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorValue::F32 { data, .. } => Ok(data),
+            _ => Err(HcflError::Engine("expected f32 tensor".into())),
+        }
+    }
+
+    /// Consume into the f32 payload.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            TensorValue::F32 { data, .. } => Ok(data),
+            _ => Err(HcflError::Engine("expected f32 tensor".into())),
+        }
+    }
+
+    /// Extract a rank-0 (or single-element) f32 value.
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            return Err(HcflError::Engine(format!(
+                "expected scalar, got {} elements",
+                d.len()
+            )));
+        }
+        Ok(d[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checking() {
+        assert!(TensorValue::f32(vec![0.0; 6], vec![2, 3]).is_ok());
+        assert!(TensorValue::f32(vec![0.0; 5], vec![2, 3]).is_err());
+        assert!(TensorValue::i32(vec![1, 2], vec![2]).is_ok());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = TensorValue::scalar_f32(3.5);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.scalar().unwrap(), 3.5);
+        assert!(TensorValue::vec_f32(vec![1.0, 2.0]).scalar().is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("i32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Calculators for the paper's two theorems.
+//!
+//! * Theorem 1 (eq. 10): `P(|w̃_t − w_t| ≥ α) ≤ 2/(Kα)² · L(w)` — the
+//!   aggregation error induced by lossy compression vanishes
+//!   quadratically in the number of clients K.
+//! * Theorem 2 (eq. 11): `L(w) ≈ (H(W) − H(C)) / (N·log(2πe))` — the
+//!   reconstruction loss tracks the entropy gap between the weight
+//!   distribution and the code distribution.
+//!
+//! Both have an analytic side (the bound/estimate) and an empirical side
+//! (measured from simulation data); the `thm1` / `thm2` experiments print
+//! them side by side.
+
+use crate::util::stats;
+
+/// Theorem 1 upper bound on the deviation probability.
+///
+/// `l_w` is the compressor's reconstruction MSE, `k` the number of
+/// aggregated clients, `alpha` the deviation threshold.  Probabilities
+/// are clamped to [0, 1].
+pub fn theorem1_bound(l_w: f64, k: usize, alpha: f64) -> f64 {
+    if k == 0 || alpha <= 0.0 {
+        return 1.0;
+    }
+    (2.0 * l_w / ((k as f64 * alpha) * (k as f64 * alpha))).min(1.0)
+}
+
+/// Empirical counterpart: fraction of coordinates where the average of
+/// `noisy` (per-client reconstructed) deviates from the average of
+/// `clean` (per-client exact) by at least `alpha`.
+///
+/// `clean`/`noisy` are K slices of equal length D.
+pub fn empirical_deviation_prob(clean: &[Vec<f32>], noisy: &[Vec<f32>], alpha: f64) -> f64 {
+    assert_eq!(clean.len(), noisy.len());
+    let k = clean.len();
+    if k == 0 {
+        return 0.0;
+    }
+    let d = clean[0].len();
+    let mut exceed = 0usize;
+    for j in 0..d {
+        let mut mc = 0.0f64;
+        let mut mn = 0.0f64;
+        for i in 0..k {
+            mc += clean[i][j] as f64;
+            mn += noisy[i][j] as f64;
+        }
+        if ((mn - mc) / k as f64).abs() >= alpha {
+            exceed += 1;
+        }
+    }
+    exceed as f64 / d as f64
+}
+
+/// Theorem 2 estimate of the reconstruction loss from entropies.
+///
+/// `weights` are samples of W (original parameters), `codes` samples of C
+/// (compressed representation); `bins` is the histogram resolution.  The
+/// `n` in eq. (11) is the chunk length N.
+pub fn theorem2_estimate(weights: &[f32], codes: &[f32], n: usize, bins: usize) -> f64 {
+    let h_w = stats::histogram_entropy(weights, bins);
+    let h_c = stats::histogram_entropy(codes, bins);
+    // eq. (11): L(w) ≈ (H(W) − H(C)) / (N log(2πe)); entropies in bits.
+    let denom = n as f64 * (2.0 * std::f64::consts::PI * std::f64::consts::E).log2();
+    ((h_w - h_c) / denom).max(0.0)
+}
+
+/// The worked example from the paper (§IV-A): L(w)=2.5, α=0.01, K=10000
+/// gives a bound of 0.0005 (99.95 % certainty).
+pub fn paper_example() -> f64 {
+    theorem1_bound(2.5, 10_000, 0.01)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_worked_example() {
+        let p = paper_example();
+        assert!((p - 0.0005).abs() < 1e-12, "bound {p}");
+    }
+
+    #[test]
+    fn bound_shrinks_quadratically_in_k() {
+        // alpha chosen so the K=10 bound is not clamped at 1.
+        let p10 = theorem1_bound(1.0, 10, 1.0);
+        let p100 = theorem1_bound(1.0, 100, 1.0);
+        assert!((p10 / p100 - 100.0).abs() < 1e-9, "{p10} / {p100}");
+    }
+
+    #[test]
+    fn bound_clamped() {
+        assert_eq!(theorem1_bound(100.0, 1, 0.001), 1.0);
+        assert_eq!(theorem1_bound(1.0, 0, 0.1), 1.0);
+        assert_eq!(theorem1_bound(1.0, 10, 0.0), 1.0);
+    }
+
+    #[test]
+    fn empirical_deviation() {
+        // Two clients, noise +e and -e cancels in the mean -> prob 0.
+        let clean = vec![vec![1.0, 2.0], vec![1.0, 2.0]];
+        let noisy = vec![vec![1.1, 2.0], vec![0.9, 2.0]];
+        assert_eq!(empirical_deviation_prob(&clean, &noisy, 0.01), 0.0);
+        // Systematic +0.1 shift on coordinate 0 only -> prob 0.5.
+        let noisy2 = vec![vec![1.1, 2.0], vec![1.1, 2.0]];
+        assert_eq!(empirical_deviation_prob(&clean, &noisy2, 0.05), 0.5);
+    }
+
+    #[test]
+    fn thm2_entropy_gap_positive_when_code_narrow() {
+        // Wide weight distribution vs a collapsed code.
+        let weights: Vec<f32> = (0..4096).map(|i| (i % 64) as f32 / 64.0).collect();
+        let codes = vec![0.5f32; 4096];
+        let est = theorem2_estimate(&weights, &codes, 1024, 64);
+        assert!(est > 0.0);
+        // Identical distributions -> ~0 estimated loss.
+        let est0 = theorem2_estimate(&weights, &weights, 1024, 64);
+        assert!(est0.abs() < 1e-9);
+    }
+}

@@ -1,0 +1,90 @@
+//! Minimal benchmark harness (criterion is not available offline).
+//!
+//! `cargo bench` runs the `rust/benches/*.rs` binaries (declared with
+//! `harness = false`); they use this module for warmup, adaptive
+//! iteration and robust summary statistics.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>7} iters  mean {:>11}  p50 {:>11}  p95 {:>11}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+        )
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Run `f` with 2 warmup calls, then until `budget_s` seconds or
+/// `max_iters`, whichever first (at least 3 timed iterations).
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, max_iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..2 {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < 3)
+        || (start.elapsed().as_secs_f64() < budget_s && samples.len() < max_iters)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let res = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: stats::mean(&samples),
+        p50_s: stats::percentile(&samples, 0.5),
+        p95_s: stats::percentile(&samples, 0.95),
+    };
+    println!("{}", res.line());
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_minimum_iterations() {
+        let mut count = 0;
+        let res = bench("noop", 0.0, 10, || count += 1);
+        assert!(res.iters >= 3);
+        assert!(count >= res.iters);
+        assert!(res.p95_s >= res.p50_s);
+    }
+
+    #[test]
+    fn formats() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(0.002).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+    }
+}

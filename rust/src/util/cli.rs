@@ -1,0 +1,160 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional
+//! arguments; typed getters with defaults.  Used by the `repro` binary
+//! and the example/bench drivers.
+
+use std::collections::BTreeMap;
+
+use crate::error::{HcflError, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self
+                .options
+                .get(name)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.str_opt(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                HcflError::Config(format!("--{name} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                HcflError::Config(format!("--{name} expects a number, got '{v}'"))
+            }),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                HcflError::Config(format!("--{name} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+
+    /// Comma-separated usize list (`--ratios 4,8,16,32`).
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.options.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim().parse::<usize>().map_err(|_| {
+                        HcflError::Config(format!("--{name}: bad entry '{p}'"))
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["experiment", "--id", "table1", "--rounds=30", "--verbose"]);
+        assert_eq!(a.positional(0), Some("experiment"));
+        assert_eq!(a.str_opt("id"), Some("table1"));
+        assert_eq!(a.usize_or("rounds", 0).unwrap(), 30);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse(&["--rounds", "abc"]);
+        assert!(a.usize_or("rounds", 0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("k", 17).unwrap(), 17);
+        assert_eq!(a.str_or("model", "lenet"), "lenet");
+        assert_eq!(a.f64_or("lr", 0.01).unwrap(), 0.01);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["--ratios", "4,8,16"]);
+        assert_eq!(a.usize_list_or("ratios", &[]).unwrap(), vec![4, 8, 16]);
+        let b = parse(&[]);
+        assert_eq!(b.usize_list_or("ratios", &[32]).unwrap(), vec![32]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--cache", "--paper-scale"]);
+        assert!(a.flag("cache"));
+        assert!(a.flag("paper-scale"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained substrates the offline environment forces us to
+//! own: deterministic PRNG, a minimal JSON parser (manifest.json), a CLI
+//! argument parser, and summary statistics.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

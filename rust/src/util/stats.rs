@@ -1,0 +1,114 @@
+//! Summary statistics shared by the metrics recorder, the theory
+//! calculators, and the bench harness.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Linear-interpolated percentile; `q` in [0, 1].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Shannon entropy (bits) of a histogram over `bins` equal-width buckets.
+///
+/// Used by the Theorem-2 calculator to estimate H(W) and H(C) from
+/// empirical weight/code samples (paper eq. 11).
+pub fn histogram_entropy(xs: &[f32], bins: usize) -> f64 {
+    if xs.is_empty() || bins == 0 {
+        return 0.0;
+    }
+    let lo = xs.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+    let hi = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    if !(hi > lo) {
+        return 0.0; // constant data carries no entropy
+    }
+    let width = (hi - lo) / bins as f64;
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let idx = (((x as f64 - lo) / width) as usize).min(bins - 1);
+        counts[idx] += 1;
+    }
+    let n = xs.len() as f64;
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_var() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert!((stddev(&xs) - 1.25f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[]), 0.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(histogram_entropy(&[], 10), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 0.25), 2.0);
+    }
+
+    #[test]
+    fn entropy_uniform_vs_constant() {
+        // constant => 0 bits
+        assert_eq!(histogram_entropy(&[1.0; 100], 16), 0.0);
+        // uniform over 16 bins => ~4 bits
+        let xs: Vec<f32> = (0..1600).map(|i| i as f32 / 100.0).collect();
+        let h = histogram_entropy(&xs, 16);
+        assert!((h - 4.0).abs() < 0.05, "h={h}");
+        // concentrated distribution has lower entropy than uniform
+        let mut peaked = vec![0.0f32; 1500];
+        peaked.extend((0..100).map(|i| i as f32 / 100.0));
+        assert!(histogram_entropy(&peaked, 16) < h);
+    }
+}

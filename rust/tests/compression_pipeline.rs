@@ -1,0 +1,172 @@
+//! Integration + property tests over the compression schemes against the
+//! real engine and artifacts.
+//!
+//! proptest is not available offline; the property tests here use the
+//! same seeded-random-case sweep pattern (many generated cases per
+//! property, deterministic seeds).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use hcfl::compression::hcfl::{hcfl_wire_bytes, AeHandle};
+use hcfl::compression::{
+    Compressor, HcflCompressor, Identity, TernaryCompressor, TopKCompressor,
+};
+use hcfl::model::{merge_segment_ranges, split_dense};
+use hcfl::prelude::*;
+use hcfl::util::rng::Rng;
+
+fn engine() -> Engine {
+    Engine::from_artifacts(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"), 1)
+        .expect("run `make artifacts` first")
+}
+
+fn random_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+#[test]
+fn identity_property_lossless_any_length() {
+    let c = Identity;
+    let mut rng = Rng::new(11);
+    for case in 0..50 {
+        let n = 1 + rng.below(5000);
+        let v = random_vec(&mut rng, n, 0.5);
+        let upd = c.compress(&v, 0).unwrap();
+        assert_eq!(upd.wire_bytes, 4 * n, "case {case}");
+        assert_eq!(c.decompress(&upd, n, 0).unwrap(), v);
+    }
+}
+
+#[test]
+fn ternary_property_roundtrip_is_scaled_sign() {
+    let eng = engine();
+    let c = TernaryCompressor::new(eng, 1024).unwrap();
+    let mut rng = Rng::new(22);
+    for case in 0..6 {
+        // lengths around the chunk boundary exercise the rust tail path
+        let n = [512, 1024, 1025, 2048, 3000, 4096][case % 6];
+        let v = random_vec(&mut rng, n, 0.2);
+        let upd = c.compress(&v, 0).unwrap();
+        let back = c.decompress(&upd, n, 0).unwrap();
+        assert_eq!(back.len(), n);
+        // every reconstructed value is 0 or +-alpha of its chunk, with the
+        // sign of the original
+        for (orig, rec) in v.iter().zip(&back) {
+            if *rec != 0.0 {
+                assert_eq!(rec.signum(), orig.signum(), "case {case}");
+            }
+        }
+        // wire size: ~2 bits per weight
+        assert!(upd.wire_bytes < n, "case {case}: {} bytes", upd.wire_bytes);
+    }
+}
+
+#[test]
+fn ternary_engine_matches_rust_reference() {
+    let eng = engine();
+    let c = TernaryCompressor::new(eng, 1024).unwrap();
+    let mut rng = Rng::new(33);
+    let v = random_vec(&mut rng, 1024, 0.3);
+    let upd = c.compress(&v, 0).unwrap();
+    let back = c.decompress(&upd, 1024, 0).unwrap();
+    let r = TernaryCompressor::quantize_ref(&v);
+    let expect: Vec<f32> = r.q.iter().map(|&q| q as f32 * r.alpha).collect();
+    for (a, b) in back.iter().zip(&expect) {
+        assert!((a - b).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn topk_property_preserves_top_magnitudes() {
+    let mut rng = Rng::new(44);
+    for _ in 0..30 {
+        let n = 10 + rng.below(3000);
+        let keep = 0.05 + rng.next_f64() * 0.9;
+        let c = TopKCompressor::new(keep).unwrap();
+        let v = random_vec(&mut rng, n, 1.0);
+        let upd = c.compress(&v, 0).unwrap();
+        let back = c.decompress(&upd, n, 0).unwrap();
+        let k = c.k_for(n);
+        // kept entries equal original; dropped are zero
+        let kept = back.iter().filter(|x| **x != 0.0).count();
+        assert!(kept <= k);
+        let mut mags: Vec<f32> = v.iter().map(|x| x.abs()).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let threshold = mags[k - 1];
+        for (orig, rec) in v.iter().zip(&back) {
+            if orig.abs() > threshold {
+                assert_eq!(orig, rec);
+            }
+        }
+    }
+}
+
+fn make_hcfl(eng: &Engine, ratio: usize) -> HcflCompressor {
+    // Untrained (random) AE params are fine for pipeline-shape tests.
+    let mut rng = Rng::new(7);
+    let chunk_of_segment: BTreeMap<String, usize> = eng.manifest().chunks.clone();
+    let model = eng.manifest().model("lenet").unwrap();
+    let ranges = split_dense(&merge_segment_ranges(&model.layers), 1);
+    let chunks: std::collections::BTreeSet<usize> =
+        chunk_of_segment.values().copied().collect();
+    let aes: Vec<AeHandle> = chunks
+        .into_iter()
+        .map(|chunk| {
+            let meta = eng.manifest().autoencoder(chunk, ratio).unwrap().clone();
+            let params = (0..meta.d).map(|_| rng.normal() * 0.05).collect();
+            AeHandle {
+                meta,
+                params: Arc::new(params),
+            }
+        })
+        .collect();
+    HcflCompressor::new(eng.clone(), ratio, ranges, aes, chunk_of_segment).unwrap()
+}
+
+#[test]
+fn hcfl_pipeline_shape_and_wire_size() {
+    let eng = engine();
+    let model_d = eng.manifest().model("lenet").unwrap().d;
+    for ratio in [4usize, 32] {
+        let c = make_hcfl(&eng, ratio);
+        let mut rng = Rng::new(55);
+        let v = random_vec(&mut rng, model_d, 0.1);
+        let upd = c.compress(&v, 0).unwrap();
+        // wire matches the closed-form accounting
+        let expect = hcfl_wire_bytes(c.ranges(), &eng.manifest().chunks, ratio);
+        assert_eq!(upd.wire_bytes, expect);
+        // decompression reproduces the right shape and is finite
+        let back = c.decompress(&upd, model_d, 0).unwrap();
+        assert_eq!(back.len(), model_d);
+        assert!(back.iter().all(|x| x.is_finite()));
+        // true ratio is in the right ballpark (below nominal due to side
+        // info + padding, same effect as the paper's Tables I/II)
+        let true_ratio = (4 * model_d) as f64 / upd.wire_bytes as f64;
+        assert!(
+            true_ratio > ratio as f64 * 0.5 && true_ratio < ratio as f64 * 1.05,
+            "ratio {ratio}: true {true_ratio}"
+        );
+    }
+}
+
+#[test]
+fn hcfl_variance_preserving_decode() {
+    // Even with an untrained AE the reconstructed chunks must carry the
+    // original per-chunk energy (the moment side-info guarantees it).
+    let eng = engine();
+    let c = make_hcfl(&eng, 8);
+    let model_d = eng.manifest().model("lenet").unwrap().d;
+    let mut rng = Rng::new(66);
+    let v = random_vec(&mut rng, model_d, 0.05);
+    let upd = c.compress(&v, 0).unwrap();
+    let back = c.decompress(&upd, model_d, 0).unwrap();
+    let var_orig: f64 = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>() / v.len() as f64;
+    let var_back: f64 =
+        back.iter().map(|x| (*x as f64).powi(2)).sum::<f64>() / back.len() as f64;
+    assert!(
+        (var_back / var_orig) > 0.5 && (var_back / var_orig) < 2.0,
+        "energy ratio {}",
+        var_back / var_orig
+    );
+}

@@ -1,0 +1,120 @@
+//! End-to-end FL integration: full rounds through the real engine.
+
+use hcfl::compression::Scheme;
+use hcfl::config::ExperimentConfig;
+use hcfl::coordinator::Simulation;
+use hcfl::data::DataSpec;
+use hcfl::prelude::*;
+
+fn engine(workers: usize) -> Engine {
+    Engine::from_artifacts(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"), workers)
+        .expect("run `make artifacts` first")
+}
+
+fn tiny_cfg(scheme: Scheme) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::quickstart();
+    cfg.scheme = scheme;
+    cfg.n_clients = 4;
+    cfg.participation = 0.5;
+    cfg.rounds = 2;
+    cfg.local_epochs = 1;
+    cfg.data = DataSpec {
+        classes: 10,
+        n_clients: 4,
+        per_client: 128,
+        test_n: 512,
+        server_n: 128,
+    };
+    // keep the AE phase cheap in CI
+    cfg.ae.steps = 30;
+    cfg.ae.premodel_epochs = 2;
+    cfg.use_ae_cache = false;
+    cfg
+}
+
+#[test]
+fn fedavg_learns_on_tiny_run() {
+    let eng = engine(2);
+    let mut cfg = tiny_cfg(Scheme::Fedavg);
+    cfg.rounds = 3;
+    let mut sim = Simulation::new(&eng, cfg).unwrap();
+    let report = sim.run().unwrap();
+    assert_eq!(report.rounds.len(), 3);
+    // lossless scheme: reconstruction error at f32 round-off only (delta
+    // coding subtracts and re-adds the broadcast in f32)
+    assert!(report.mean_recon_mse() < 1e-12);
+    // the synthetic task is easy: accuracy must clearly beat chance
+    assert!(
+        report.final_accuracy() > 0.3,
+        "accuracy {}",
+        report.final_accuracy()
+    );
+    // losses decrease
+    assert!(report.rounds.last().unwrap().loss < report.rounds[0].loss * 1.5);
+}
+
+#[test]
+fn hcfl_round_runs_and_accounts_traffic() {
+    let eng = engine(2);
+    let cfg = tiny_cfg(Scheme::Hcfl { ratio: 8 });
+    let m = cfg.m();
+    let mut sim = Simulation::new(&eng, cfg).unwrap();
+    let report = sim.run().unwrap();
+    let rec = &report.rounds[0];
+    // reconstruction error is nonzero but finite for a lossy scheme
+    assert!(rec.recon_mse > 0.0 && rec.recon_mse.is_finite());
+    // uplink is compressed vs the 4*d baseline
+    let d = eng.manifest().model("lenet").unwrap().d;
+    assert!(rec.up_bytes < (4 * d * m) as u64);
+    // downlink is uncompressed by default (paper Fig. 3 deployment)
+    assert_eq!(rec.down_bytes, (4 * d * m) as u64);
+    assert!(rec.client_time_s > 0.0);
+    assert!(rec.server_time_s > 0.0);
+    assert!(rec.comm_time_s > 0.0);
+}
+
+#[test]
+fn ternary_and_topk_rounds_run() {
+    let eng = engine(2);
+    for scheme in [Scheme::Ternary, Scheme::TopK { keep: 0.15 }] {
+        let cfg = tiny_cfg(scheme);
+        let mut sim = Simulation::new(&eng, cfg).unwrap();
+        let report = sim.run().unwrap();
+        assert_eq!(report.rounds.len(), 2);
+        assert!(report.rounds[0].up_bytes > 0);
+        assert!(report.final_accuracy() > 0.05);
+    }
+}
+
+#[test]
+fn runs_are_reproducible() {
+    let eng = engine(2);
+    let r1 = Simulation::new(&eng, tiny_cfg(Scheme::Fedavg))
+        .unwrap()
+        .run()
+        .unwrap();
+    let r2 = Simulation::new(&eng, tiny_cfg(Scheme::Fedavg))
+        .unwrap()
+        .run()
+        .unwrap();
+    for (a, b) in r1.rounds.iter().zip(&r2.rounds) {
+        assert_eq!(a.accuracy, b.accuracy);
+        assert_eq!(a.up_bytes, b.up_bytes);
+    }
+}
+
+#[test]
+fn invalid_configs_rejected() {
+    let eng = engine(1);
+    let mut cfg = tiny_cfg(Scheme::Fedavg);
+    cfg.batch = 77; // not baked
+    assert!(Simulation::new(&eng, cfg).is_err());
+
+    let mut cfg = tiny_cfg(Scheme::Fedavg);
+    cfg.rounds = 0;
+    assert!(Simulation::new(&eng, cfg).is_err());
+
+    let mut cfg = tiny_cfg(Scheme::Fedavg);
+    cfg.model = "nope".into();
+    assert!(Simulation::new(&eng, cfg).is_err());
+}

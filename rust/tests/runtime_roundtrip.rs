@@ -1,0 +1,153 @@
+//! Integration: HLO artifacts load, compile and execute through the PJRT
+//! engine, and the numbers agree with rust-side reference math.
+
+use hcfl::prelude::*;
+use hcfl::util::rng::Rng;
+
+fn engine() -> Engine {
+    Engine::from_artifacts(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"), 1)
+        .expect("run `make artifacts` first")
+}
+
+#[test]
+fn ternary_matches_reference() {
+    let eng = engine();
+    let mut rng = Rng::new(1);
+    let w: Vec<f32> = (0..256).map(|_| rng.normal() * 0.1).collect();
+
+    let out = eng
+        .call("ternary_c256", vec![TensorValue::vec_f32(w.clone())])
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    let q = out[0].as_f32().unwrap();
+    let alpha = out[1].scalar().unwrap();
+
+    // Reference TWN math.
+    let mean_abs: f32 = w.iter().map(|x| x.abs()).sum::<f32>() / w.len() as f32;
+    let delta = 0.7 * mean_abs;
+    let above: Vec<f32> = w.iter().filter(|x| x.abs() > delta).map(|x| x.abs()).collect();
+    let alpha_ref = above.iter().sum::<f32>() / above.len().max(1) as f32;
+
+    assert!((alpha - alpha_ref).abs() < 1e-5, "alpha {alpha} vs {alpha_ref}");
+    for (qi, wi) in q.iter().zip(&w) {
+        let expect = if wi.abs() > delta { wi.signum() } else { 0.0 };
+        assert_eq!(*qi, expect, "w={wi}");
+    }
+}
+
+#[test]
+fn ae_encode_decode_shapes_and_bounds() {
+    let eng = engine();
+    let ae = eng.manifest().autoencoder(256, 8).unwrap().clone();
+    let mut rng = Rng::new(2);
+    // Untrained AE params: random small weights.
+    let params: Vec<f32> = (0..ae.d).map(|_| rng.normal() * 0.05).collect();
+    let w: Vec<f32> = (0..256).map(|_| rng.normal() * 0.1).collect();
+
+    let out = eng
+        .call(
+            &ae.encode,
+            vec![
+                TensorValue::vec_f32(params.clone()),
+                TensorValue::vec_f32(w.clone()),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 5); // code, lo, hi, mu, sd
+    assert_eq!(out[0].shape(), &[32]); // 256 / 8
+    let lo = out[1].scalar().unwrap();
+    let hi = out[2].scalar().unwrap();
+    let mu = out[3].scalar().unwrap();
+    let sd = out[4].scalar().unwrap();
+    let w_min = w.iter().cloned().fold(f32::INFINITY, f32::min);
+    let w_max = w.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    assert!((lo - w_min).abs() < 1e-6);
+    assert!((hi - w_max).abs() < 1e-6);
+    assert!(sd > 0.0 && mu.abs() <= 1.0);
+    // code is tanh-bounded
+    for c in out[0].as_f32().unwrap() {
+        assert!(c.abs() <= 1.0 + 1e-6);
+    }
+
+    let code = out[0].clone();
+    let dec = eng
+        .call(
+            &ae.decode,
+            vec![
+                TensorValue::vec_f32(params),
+                code,
+                TensorValue::scalar_f32(lo),
+                TensorValue::scalar_f32(hi),
+                TensorValue::scalar_f32(mu),
+                TensorValue::scalar_f32(sd),
+            ],
+        )
+        .unwrap();
+    assert_eq!(dec.len(), 1);
+    assert_eq!(dec[0].shape(), &[256]);
+    // Variance-preserving decode: reconstruction moments match the
+    // transmitted side info in scaled space, i.e. the output is finite
+    // and roughly centered inside the chunk's range.
+    let vals = dec[0].as_f32().unwrap();
+    assert!(vals.iter().all(|v| v.is_finite()));
+    let mean: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+    assert!(mean >= lo - (hi - lo) && mean <= hi + (hi - lo));
+}
+
+#[test]
+fn spec_mismatch_is_rejected() {
+    let eng = engine();
+    // wrong shape
+    let err = eng
+        .call("ternary_c256", vec![TensorValue::vec_f32(vec![0.0; 5])])
+        .unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("spec mismatch"), "{msg}");
+    // wrong arity
+    assert!(eng.call("ternary_c256", vec![]).is_err());
+    // unknown executable
+    assert!(eng.call("nope", vec![]).is_err());
+}
+
+#[test]
+fn multi_worker_round_robin() {
+    let eng = Engine::from_artifacts(
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+        2,
+    )
+    .unwrap();
+    let w: Vec<f32> = (0..256).map(|i| (i as f32 - 128.0) / 128.0).collect();
+    let a = eng
+        .call("ternary_c256", vec![TensorValue::vec_f32(w.clone())])
+        .unwrap();
+    let b = eng
+        .call("ternary_c256", vec![TensorValue::vec_f32(w)])
+        .unwrap();
+    assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+    assert_eq!(a[1].scalar().unwrap(), b[1].scalar().unwrap());
+}
+
+#[test]
+fn parallel_callers_share_engine() {
+    let eng = Engine::from_artifacts(
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+        2,
+    )
+    .unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let eng = eng.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                let w: Vec<f32> = (0..256).map(|_| rng.normal()).collect();
+                let out = eng
+                    .call("ternary_c256", vec![TensorValue::vec_f32(w)])
+                    .unwrap();
+                out[1].scalar().unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        assert!(h.join().unwrap() >= 0.0);
+    }
+}
