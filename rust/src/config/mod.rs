@@ -3,11 +3,109 @@
 //! details": 100 clients, C = 0.1, E = 5, B = 64, lr = 0.01).
 
 use crate::compression::Scheme;
+use crate::coordinator::clock::RoundPolicy;
 use crate::data::DataSpec;
 use crate::error::{HcflError, Result};
+use crate::fl::AggregatorKind;
 use crate::hcfl::AeTrainConfig;
-use crate::network::LinkModel;
+use crate::network::{DevicePreset, LinkModel};
 use crate::runtime::Manifest;
+
+/// The round-execution scenario: which devices participate, when the
+/// server closes the round, and how surviving updates are folded.
+///
+/// The default reproduces the paper's Algorithm 1 exactly: homogeneous
+/// reference devices, fully synchronous rounds, uniform-mean aggregation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioConfig {
+    pub policy: RoundPolicy,
+    pub aggregator: AggregatorKind,
+    pub devices: DevicePreset,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            policy: RoundPolicy::Synchronous,
+            aggregator: AggregatorKind::UniformMean,
+            devices: DevicePreset::Homogeneous,
+        }
+    }
+}
+
+impl ScenarioConfig {
+    /// Straggler study preset: `frac` of devices `slowdown`x slower,
+    /// rounds cut at `deadline_s` seconds, uniform aggregation.
+    pub fn stragglers(frac: f64, slowdown: f64, deadline_s: f64) -> ScenarioConfig {
+        ScenarioConfig {
+            policy: RoundPolicy::Deadline { t_max_s: deadline_s },
+            aggregator: AggregatorKind::UniformMean,
+            devices: DevicePreset::Stragglers { frac, slowdown },
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{} / {} / {:?}",
+            self.policy.label(),
+            self.aggregator.label(),
+            self.devices
+        )
+    }
+
+    fn validate(&self) -> Result<()> {
+        match &self.policy {
+            RoundPolicy::Synchronous => {}
+            RoundPolicy::Deadline { t_max_s } => {
+                if !t_max_s.is_finite() || *t_max_s <= 0.0 {
+                    return Err(HcflError::Config(format!(
+                        "deadline t_max_s must be positive, got {t_max_s}"
+                    )));
+                }
+            }
+            RoundPolicy::FastestM { m } => {
+                if *m == 0 {
+                    return Err(HcflError::Config("fastest-m needs m >= 1".into()));
+                }
+            }
+        }
+        match &self.devices {
+            DevicePreset::Homogeneous => {}
+            DevicePreset::Stragglers { frac, slowdown } => {
+                if !(0.0..=1.0).contains(frac) {
+                    return Err(HcflError::Config(format!(
+                        "straggler frac must be in [0, 1], got {frac}"
+                    )));
+                }
+                if !slowdown.is_finite() || *slowdown < 1.0 {
+                    return Err(HcflError::Config(format!(
+                        "straggler slowdown must be >= 1, got {slowdown}"
+                    )));
+                }
+            }
+            DevicePreset::Iot { sigma, dropout_p } => {
+                if !sigma.is_finite() || *sigma < 0.0 {
+                    return Err(HcflError::Config(format!(
+                        "iot sigma must be >= 0, got {sigma}"
+                    )));
+                }
+                if !(0.0..1.0).contains(dropout_p) {
+                    return Err(HcflError::Config(format!(
+                        "dropout_p must be in [0, 1), got {dropout_p}"
+                    )));
+                }
+            }
+        }
+        if let AggregatorKind::StalenessDiscounted { lambda } = self.aggregator {
+            if !lambda.is_finite() || lambda < 0.0 {
+                return Err(HcflError::Config(format!(
+                    "staleness lambda must be >= 0, got {lambda}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
 
 /// Full configuration of one FL run.
 #[derive(Debug, Clone)]
@@ -55,6 +153,8 @@ pub struct ExperimentConfig {
     /// literally (ablation).  See DESIGN.md §4.
     pub encode_deltas: bool,
     pub link: LinkModel,
+    /// Round-execution scenario (devices, round policy, aggregation).
+    pub scenario: ScenarioConfig,
 }
 
 impl ExperimentConfig {
@@ -78,6 +178,7 @@ impl ExperimentConfig {
             compress_downlink: false,
             encode_deltas: true,
             link: LinkModel::default(),
+            scenario: ScenarioConfig::default(),
         }
     }
 
@@ -101,6 +202,7 @@ impl ExperimentConfig {
             compress_downlink: false,
             encode_deltas: true,
             link: LinkModel::default(),
+            scenario: ScenarioConfig::default(),
         }
     }
 
@@ -124,6 +226,7 @@ impl ExperimentConfig {
             compress_downlink: false,
             encode_deltas: true,
             link: LinkModel::default(),
+            scenario: ScenarioConfig::default(),
         }
     }
 
@@ -174,6 +277,7 @@ impl ExperimentConfig {
         if self.dense_parts == 0 {
             return Err(HcflError::Config("dense_parts must be >= 1".into()));
         }
+        self.scenario.validate()?;
         Ok(())
     }
 }
@@ -192,6 +296,52 @@ mod tests {
         assert_eq!(cfg.m(), 1);
         cfg.participation = 1.0;
         assert_eq!(cfg.m(), 100);
+    }
+
+    #[test]
+    fn default_scenario_is_algorithm_1() {
+        let s = ScenarioConfig::default();
+        assert_eq!(s.policy, RoundPolicy::Synchronous);
+        assert_eq!(s.aggregator, AggregatorKind::UniformMean);
+        assert_eq!(s.devices, DevicePreset::Homogeneous);
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn scenario_validation_rejects_bad_knobs() {
+        let bad = [
+            ScenarioConfig {
+                policy: RoundPolicy::Deadline { t_max_s: 0.0 },
+                ..ScenarioConfig::default()
+            },
+            ScenarioConfig {
+                policy: RoundPolicy::FastestM { m: 0 },
+                ..ScenarioConfig::default()
+            },
+            ScenarioConfig::stragglers(1.5, 8.0, 1.0),
+            ScenarioConfig {
+                devices: DevicePreset::Stragglers {
+                    frac: 0.3,
+                    slowdown: 0.5,
+                },
+                ..ScenarioConfig::default()
+            },
+            ScenarioConfig {
+                devices: DevicePreset::Iot {
+                    sigma: 0.5,
+                    dropout_p: 1.0,
+                },
+                ..ScenarioConfig::default()
+            },
+            ScenarioConfig {
+                aggregator: AggregatorKind::StalenessDiscounted { lambda: -1.0 },
+                ..ScenarioConfig::default()
+            },
+        ];
+        for s in bad {
+            assert!(s.validate().is_err(), "accepted invalid scenario {s:?}");
+        }
+        assert!(ScenarioConfig::stragglers(0.3, 8.0, 1.0).validate().is_ok());
     }
 
     #[test]

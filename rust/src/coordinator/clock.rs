@@ -1,0 +1,362 @@
+//! The round clock: given each selected client's modelled compute + air
+//! time, a [`RoundPolicy`] decides which uploads the server folds in and
+//! how long the round lasts.
+//!
+//! All round-level cost accounting flows through this layer (it replaces
+//! the old `network::CostLedger`): modelled per-client times are built
+//! from *exact* per-client byte counts and [`DeviceProfile`] multipliers,
+//! and the round makespan is the slowest *surviving* client's arrival —
+//! not the mean, which is what hides stragglers at IoT scale.
+//!
+//! Determinism: the modelled compute time is the round's reference
+//! compute time (mean measured train+encode wall time) scaled by each
+//! device's `compute_mult`, so *relative* comparisons — arrival order,
+//! `FastestM` survivor sets, aggregation order — depend only on the
+//! seeded device fleet, never on OS scheduling noise.  Absolute
+//! `Deadline` cutoffs still interact with the host's measured speed,
+//! which is why drivers calibrate `t_max_s` from a probe round
+//! ([`calibrated_deadline`]) instead of hard-coding seconds.
+
+use crate::metrics::RoundRecord;
+use crate::network::{DeviceProfile, LinkModel};
+
+/// When the server closes a round.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RoundPolicy {
+    /// Wait for every (non-dropped) upload — Algorithm 1 of the paper.
+    Synchronous,
+    /// Semi-synchronous: cut clients whose modelled arrival exceeds
+    /// `t_max_s` seconds after broadcast.
+    Deadline { t_max_s: f64 },
+    /// Fold only the first `m` modelled arrivals.
+    FastestM { m: usize },
+}
+
+impl RoundPolicy {
+    pub fn label(&self) -> String {
+        match self {
+            RoundPolicy::Synchronous => "sync".to_string(),
+            RoundPolicy::Deadline { t_max_s } => format!("deadline {t_max_s:.3}s"),
+            RoundPolicy::FastestM { m } => format!("fastest-{m}"),
+        }
+    }
+}
+
+/// One selected client's modelled round timeline.
+#[derive(Debug, Clone)]
+pub struct ClientTiming {
+    /// Global client id.
+    pub client: usize,
+    /// Selection slot (tie-break so equal arrivals order deterministically).
+    pub order: usize,
+    /// Modelled broadcast receive time (seconds).
+    pub downlink_s: f64,
+    /// Modelled local train + encode time (seconds).
+    pub compute_s: f64,
+    /// Modelled upload air time (seconds).
+    pub uplink_s: f64,
+    /// The device vanished this round: nothing arrives at the server.
+    pub dropped: bool,
+}
+
+impl ClientTiming {
+    /// When the client's upload finishes arriving at the server.
+    pub fn arrival_s(&self) -> f64 {
+        self.downlink_s + self.compute_s + self.uplink_s
+    }
+}
+
+/// Build one client's timing from its exact upload size and profile.
+///
+/// The cell is shared: each transmitting client gets `1/transmitting` of
+/// the uplink and each selected client `1/selected` of the downlink,
+/// scaled by the device's rate multipliers (paper eq. 13 generalized).
+#[allow(clippy::too_many_arguments)]
+pub fn client_timing(
+    link: &LinkModel,
+    profile: &DeviceProfile,
+    client: usize,
+    order: usize,
+    up_bytes: usize,
+    down_bytes: usize,
+    reference_compute_s: f64,
+    selected: usize,
+    transmitting: usize,
+    dropped: bool,
+) -> ClientTiming {
+    ClientTiming {
+        client,
+        order,
+        downlink_s: link.downlink_time(down_bytes, selected) / profile.downlink_mult.max(1e-9),
+        compute_s: reference_compute_s * profile.compute_mult,
+        uplink_s: link.uplink_time(up_bytes, transmitting) / profile.uplink_mult.max(1e-9),
+        dropped,
+    }
+}
+
+/// What the policy decided for one round.
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    /// Indices into the `timings` slice, in modelled arrival order; only
+    /// these uploads reach the aggregator.
+    pub survivors: Vec<usize>,
+    /// Selected clients that vanished (device dropout).
+    pub dropped: usize,
+    /// Alive clients cut by the policy (deadline miss / not in fastest m).
+    pub stragglers: usize,
+    /// Modelled round duration: the slowest surviving arrival, or the
+    /// full deadline whenever any selected upload never made it (the
+    /// server cannot know it should stop waiting earlier).
+    pub makespan_s: f64,
+}
+
+/// Deadline calibrated from a synchronous probe round's record: the
+/// shared broadcast time plus `factor`x the reference device's compute +
+/// uplink, so it keeps every reference device and cuts exactly the
+/// devices slowed by more than `factor`.  Reconstructed from recorded
+/// byte counts (wire sizes are content-independent, so every client's
+/// equal) and the recorded reference compute time — unlike the probe's
+/// makespan this does not depend on whether a straggler happened to be
+/// selected.
+pub fn calibrated_deadline(link: &LinkModel, probe: &RoundRecord, factor: f64) -> f64 {
+    let m = probe.selected.max(1);
+    // up_bytes only covers the clients that actually transmitted, and
+    // the uplink cell is shared by exactly those clients.
+    let tx = probe.selected.saturating_sub(probe.dropped).max(1);
+    let per_up = (probe.up_bytes as f64 / tx as f64).round() as usize;
+    let per_down = (probe.down_bytes as f64 / m as f64).round() as usize;
+    let up_s = link.uplink_time(per_up, tx);
+    let down_s = link.downlink_time(per_down, m);
+    down_s + factor * (probe.client_time_s + up_s)
+}
+
+/// Apply `policy` to the selected clients' modelled timelines.
+///
+/// Dropout modelling: `Synchronous` and `FastestM` assume the link
+/// layer detects a vanished device (connection teardown / NACK), so the
+/// round ends once every *alive* upload is in.  `Deadline` additionally
+/// bounds slowness, which is NOT detectable — a slow upload and a dead
+/// one look the same until `t_max_s` passes, so any missing upload
+/// makes that policy wait out the full deadline.
+pub fn resolve(policy: &RoundPolicy, timings: &[ClientTiming]) -> RoundOutcome {
+    let dropped = timings.iter().filter(|t| t.dropped).count();
+    // Alive uploads in modelled arrival order, selection order on ties.
+    let mut alive: Vec<usize> = (0..timings.len()).filter(|&i| !timings[i].dropped).collect();
+    alive.sort_by(|&a, &b| {
+        timings[a]
+            .arrival_s()
+            .partial_cmp(&timings[b].arrival_s())
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(timings[a].order.cmp(&timings[b].order))
+    });
+
+    let (survivors, stragglers, makespan_s) = match policy {
+        RoundPolicy::Synchronous => {
+            let makespan = alive
+                .last()
+                .map(|&i| timings[i].arrival_s())
+                .unwrap_or(0.0);
+            (alive, 0, makespan)
+        }
+        RoundPolicy::Deadline { t_max_s } => {
+            let survivors: Vec<usize> = alive
+                .iter()
+                .copied()
+                .filter(|&i| timings[i].arrival_s() <= *t_max_s)
+                .collect();
+            let cut = alive.len() - survivors.len();
+            // See resolve()'s doc: slowness is undetectable, so any
+            // missing upload — cut or dropped — means waiting out t_max.
+            let makespan = if cut > 0 || dropped > 0 {
+                *t_max_s
+            } else {
+                survivors
+                    .last()
+                    .map(|&i| timings[i].arrival_s())
+                    .unwrap_or(0.0)
+            };
+            (survivors, cut, makespan)
+        }
+        RoundPolicy::FastestM { m } => {
+            let keep = (*m).min(alive.len());
+            let cut = alive.len() - keep;
+            let survivors: Vec<usize> = alive[..keep].to_vec();
+            let makespan = survivors
+                .last()
+                .map(|&i| timings[i].arrival_s())
+                .unwrap_or(0.0);
+            (survivors, cut, makespan)
+        }
+    };
+
+    RoundOutcome {
+        survivors,
+        dropped,
+        stragglers,
+        makespan_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timing(order: usize, compute_s: f64, dropped: bool) -> ClientTiming {
+        ClientTiming {
+            client: 100 + order,
+            order,
+            downlink_s: 0.1,
+            compute_s,
+            uplink_s: 0.2,
+            dropped,
+        }
+    }
+
+    #[test]
+    fn synchronous_waits_for_slowest_alive() {
+        let ts = vec![timing(0, 1.0, false), timing(1, 5.0, false), timing(2, 2.0, true)];
+        let out = resolve(&RoundPolicy::Synchronous, &ts);
+        assert_eq!(out.survivors, vec![0, 1]); // arrival order
+        assert_eq!(out.dropped, 1);
+        assert_eq!(out.stragglers, 0);
+        assert!((out.makespan_s - 5.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_cuts_stragglers_and_holds_until_t_max() {
+        let ts = vec![timing(0, 1.0, false), timing(1, 5.0, false), timing(2, 2.0, false)];
+        let out = resolve(&RoundPolicy::Deadline { t_max_s: 3.0 }, &ts);
+        assert_eq!(out.survivors, vec![0, 2]);
+        assert_eq!(out.stragglers, 1);
+        assert_eq!(out.dropped, 0);
+        // someone was cut: the server waited out the whole deadline
+        assert_eq!(out.makespan_s, 3.0);
+
+        // generous deadline: nobody cut, round ends at slowest arrival
+        let out = resolve(&RoundPolicy::Deadline { t_max_s: 100.0 }, &ts);
+        assert_eq!(out.survivors, vec![0, 2, 1]);
+        assert_eq!(out.stragglers, 0);
+        assert!((out.makespan_s - 5.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deadline_waits_out_dropouts_too() {
+        // A dropped device is indistinguishable from a straggler until
+        // the deadline passes: even with every alive upload in early,
+        // the round lasts the full t_max.
+        let ts = vec![timing(0, 1.0, false), timing(1, 1.0, true)];
+        let out = resolve(&RoundPolicy::Deadline { t_max_s: 50.0 }, &ts);
+        assert_eq!(out.survivors, vec![0]);
+        assert_eq!(out.dropped, 1);
+        assert_eq!(out.stragglers, 0);
+        assert_eq!(out.makespan_s, 50.0);
+    }
+
+    #[test]
+    fn deadline_can_leave_no_survivors() {
+        let ts = vec![timing(0, 10.0, false), timing(1, 20.0, false)];
+        let out = resolve(&RoundPolicy::Deadline { t_max_s: 0.5 }, &ts);
+        assert!(out.survivors.is_empty());
+        assert_eq!(out.stragglers, 2);
+        assert_eq!(out.makespan_s, 0.5);
+    }
+
+    #[test]
+    fn fastest_m_takes_first_arrivals() {
+        let ts = vec![
+            timing(0, 4.0, false),
+            timing(1, 1.0, false),
+            timing(2, 3.0, false),
+            timing(3, 2.0, true),
+        ];
+        let out = resolve(&RoundPolicy::FastestM { m: 2 }, &ts);
+        assert_eq!(out.survivors, vec![1, 2]);
+        assert_eq!(out.stragglers, 1); // client 0 was alive but too slow
+        assert_eq!(out.dropped, 1);
+        assert!((out.makespan_s - 3.3).abs() < 1e-12);
+
+        // m larger than the alive set degrades to synchronous
+        let out = resolve(&RoundPolicy::FastestM { m: 10 }, &ts);
+        assert_eq!(out.survivors.len(), 3);
+        assert_eq!(out.stragglers, 0);
+    }
+
+    #[test]
+    fn equal_arrivals_order_by_selection_slot() {
+        let ts = vec![timing(0, 1.0, false), timing(1, 1.0, false), timing(2, 1.0, false)];
+        let out = resolve(&RoundPolicy::Synchronous, &ts);
+        assert_eq!(out.survivors, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn timing_uses_exact_bytes_and_profile() {
+        let link = LinkModel {
+            uplink_bps: 8e6,
+            downlink_bps: 8e6,
+        };
+        let slow = DeviceProfile {
+            uplink_mult: 0.5,
+            downlink_mult: 1.0,
+            compute_mult: 4.0,
+            dropout_p: 0.0,
+        };
+        // 1 MB over 1/10th of the cell at half rate: 20 s on the air.
+        let t = client_timing(&link, &slow, 3, 0, 1_000_000, 0, 1.5, 10, 10, false);
+        assert!((t.uplink_s - 20.0).abs() < 1e-9);
+        assert!((t.compute_s - 6.0).abs() < 1e-12);
+        assert_eq!(t.downlink_s, 0.0);
+        assert!((t.arrival_s() - 26.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibrated_deadline_matches_reference_path() {
+        let link = LinkModel {
+            uplink_bps: 8e6,
+            downlink_bps: 8e6,
+        };
+        // 4 clients, 1 MB up and 2 MB down each, 0.5 s reference compute.
+        let probe = RoundRecord {
+            round: 1,
+            accuracy: 0.5,
+            loss: 1.0,
+            recon_mse: 0.0,
+            up_bytes: 4_000_000,
+            down_bytes: 8_000_000,
+            selected: 4,
+            completed: 4,
+            dropped: 0,
+            stragglers: 0,
+            makespan_s: 99.0, // deliberately unused by the calibration
+            client_time_s: 0.5,
+            server_time_s: 0.0,
+            comm_time_s: 0.0,
+            wall_time_s: 0.0,
+        };
+        // per-client: up 1 MB at 2 Mbit/s = 4 s; down 2 MB at 2 Mbit/s = 8 s
+        let t_max = calibrated_deadline(&link, &probe, 3.0);
+        assert!((t_max - (8.0 + 3.0 * (0.5 + 4.0))).abs() < 1e-9, "{t_max}");
+        // the reference device itself always makes this deadline
+        let fleet =
+            crate::network::DeviceFleet::sample(4, &crate::network::DevicePreset::Homogeneous, 1);
+        let t = client_timing(
+            &link,
+            fleet.profile(0),
+            0,
+            0,
+            1_000_000,
+            2_000_000,
+            0.5,
+            4,
+            4,
+            false,
+        );
+        assert!(t.arrival_s() < t_max);
+    }
+
+    #[test]
+    fn policy_labels() {
+        assert_eq!(RoundPolicy::Synchronous.label(), "sync");
+        assert_eq!(RoundPolicy::FastestM { m: 5 }.label(), "fastest-5");
+        assert!(RoundPolicy::Deadline { t_max_s: 1.25 }.label().contains("1.250"));
+    }
+}

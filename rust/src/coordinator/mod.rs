@@ -1,40 +1,61 @@
 //! The round coordinator: wires data, compressor, clients and server into
-//! the synchronous FedAvg loop of Algorithm 1.
+//! a layered round-execution pipeline.
 //!
-//! Per round:
-//! 1. the server compresses the global model for the downlink (the
-//!    paper's tables count both directions encoded);
-//! 2. the m selected clients train locally **in parallel** (one OS thread
-//!    per client, pinned round-robin to PJRT engine workers for
-//!    executable-cache affinity) and upload compressed updates;
-//! 3. the server decodes updates in FIFO arrival order (paper §III-B)
-//!    and folds them into the running average;
-//! 4. the aggregated model is installed and evaluated.
+//! Per round, the stages run in order:
 //!
-//! All timing in [`RoundRecord`] is measured, except the air time which
-//! comes from the link model (eq. 13).
+//! 1. **broadcast** — the server ships the global model; the paper's
+//!    tables count both directions encoded, see [`broadcast`];
+//! 2. **device layer** — each selected client's [`DeviceProfile`] decides
+//!    whether it drops out this round (seeded, per-round stream);
+//! 3. **client stage** — surviving clients train locally **in parallel**
+//!    (one OS thread per client, pinned round-robin to PJRT engine
+//!    workers for executable-cache affinity) and encode their updates;
+//! 4. **round clock** ([`clock`]) — exact per-client byte counts and
+//!    device profiles become modelled compute + air times, and the
+//!    configured [`clock::RoundPolicy`] picks the surviving uploads and
+//!    the round makespan;
+//! 5. **aggregation** — survivors are decoded in modelled arrival order
+//!    and folded through the configured [`crate::fl::Aggregator`];
+//! 6. **evaluation** — the installed global model is scored.
+//!
+//! Compute times in [`RoundRecord`] are measured; air times come from the
+//! link model (eq. 13) scaled by per-device rate multipliers.
+//!
+//! [`DeviceProfile`]: crate::network::DeviceProfile
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+pub mod clock;
+
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use crate::compression::{Compressor, HcflCompressor, Identity, Scheme, TernaryCompressor, TopKCompressor};
+use crate::compression::{
+    CompressedUpdate, Compressor, HcflCompressor, Identity, Scheme, TernaryCompressor,
+    TopKCompressor,
+};
 use crate::config::ExperimentConfig;
+use crate::coordinator::clock::{client_timing, resolve, ClientTiming};
 use crate::data::{synthetic, FlData};
-use crate::error::{HcflError, Result};
-use crate::fl::{select_clients, LocalTrainer, RunningAverage, Server};
+use crate::error::Result;
+use crate::fl::{select_clients, LocalTrainer, Server, UpdateMeta};
 use crate::hcfl::prepare_autoencoders;
 use crate::metrics::{RoundRecord, RunReport};
 use crate::model::{merge_segment_ranges, split_dense};
+use crate::network::DeviceFleet;
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
+use crate::util::stats;
 
 struct ClientMsg {
-    update: crate::compression::CompressedUpdate,
+    /// Selection slot of the sender (index into the round's selection).
+    slot: usize,
+    update: CompressedUpdate,
     /// Exact post-training parameters (simulation-only side channel used
     /// to measure reconstruction error at the server).
     exact: Vec<f32>,
-    client_time_s: f64,
+    /// Samples on the client's shard (FedAvg n_k).
+    n_samples: usize,
+    /// Measured local train + encode wall time, seconds.
+    train_s: f64,
 }
 
 /// A fully-wired FL simulation.
@@ -45,14 +66,16 @@ pub struct Simulation {
     compressor: Arc<dyn Compressor>,
     trainer: LocalTrainer,
     server: Server,
+    fleet: DeviceFleet,
     rng: Rng,
     /// Print one line per round to stderr.
     pub verbose: bool,
 }
 
 impl Simulation {
-    /// Build the simulation: generate data, spin up the compressor
-    /// (training autoencoders for HCFL schemes), initialize the server.
+    /// Build the simulation: generate data, sample the device fleet, spin
+    /// up the compressor (training autoencoders for HCFL schemes),
+    /// initialize the server.
     pub fn new(engine: &Engine, cfg: ExperimentConfig) -> Result<Simulation> {
         cfg.validate(engine.manifest())?;
         let mut data_spec = cfg.data.clone();
@@ -61,6 +84,7 @@ impl Simulation {
         let trainer = LocalTrainer::new(engine, &cfg.model)?;
         let mut rng = Rng::new(cfg.seed);
         let server = Server::new(&trainer.model, &mut rng);
+        let fleet = DeviceFleet::sample(cfg.n_clients, &cfg.scenario.devices, cfg.seed);
         // The HCFL pre-model must start from this run's actual init so
         // the compressor is trained on the trajectory it will compress.
         let compressor = build_compressor(engine, &cfg, &data, &server.global.flat)?;
@@ -71,6 +95,7 @@ impl Simulation {
             compressor,
             trainer,
             server,
+            fleet,
             rng,
             verbose: false,
         })
@@ -85,14 +110,27 @@ impl Simulation {
         &self.compressor
     }
 
+    /// The sampled device population.
+    pub fn fleet(&self) -> &DeviceFleet {
+        &self.fleet
+    }
+
     /// Run all configured rounds.
     pub fn run(&mut self) -> Result<RunReport> {
         let mut rounds = Vec::with_capacity(self.cfg.rounds);
         for t in 1..=self.cfg.rounds {
             let rec = self.run_round(t)?;
             if self.verbose {
+                let part = if rec.completed < rec.selected {
+                    format!(
+                        " [{}/{} agg, {} dropped, {} cut]",
+                        rec.completed, rec.selected, rec.dropped, rec.stragglers
+                    )
+                } else {
+                    String::new()
+                };
                 eprintln!(
-                    "[{}] round {t:>3}: acc {:.4} loss {:.4} recon {:.2e} up {:.1} KB",
+                    "[{}] round {t:>3}: acc {:.4} loss {:.4} recon {:.2e} up {:.1} KB{part}",
                     self.compressor.name(),
                     rec.accuracy,
                     rec.loss,
@@ -109,51 +147,50 @@ impl Simulation {
         })
     }
 
-    /// One synchronous communication round.
+    /// One communication round through the staged pipeline.
     pub fn run_round(&mut self, t: usize) -> Result<RoundRecord> {
         let wall0 = Instant::now();
         let d = self.trainer.model.d;
         let selected = select_clients(self.cfg.n_clients, self.cfg.participation, &mut self.rng);
         let m = selected.len();
 
-        // ---- downlink ----------------------------------------------------
-        // Paper Fig. 3 puts the only decoder at the server, so the
-        // broadcast itself is always exact; `compress_downlink=true`
-        // additionally *accounts* the broadcast at the encoded wire size,
-        // mirroring the paper's symmetric Tables I/II.
-        let global_recv = Arc::new(self.server.global.flat.clone());
-        let down_bytes = if self.cfg.compress_downlink {
-            self.compressor
-                .compress(&self.server.global.flat, 0)?
-                .wire_bytes
-        } else {
-            4 * d
-        };
+        // ---- stage 1: broadcast ----------------------------------------
+        let (global_recv, down_bytes) = broadcast(
+            self.compressor.as_ref(),
+            &self.server.global.flat,
+            self.cfg.compress_downlink,
+        )?;
 
-        // ---- parallel client updates -----------------------------------
+        // ---- stage 2: device layer (dropouts) --------------------------
+        // A per-round stream independent of selection and training RNGs,
+        // so heterogeneity presets never perturb the learning trajectory.
+        let round_seed = self.cfg.seed ^ (t as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
+        let mut drop_rng = Rng::new(round_seed ^ 0x0D10_D0A7_5EED_0001);
+        let dropped: Vec<bool> = selected
+            .iter()
+            .map(|&k| drop_rng.next_f64() < self.fleet.profile(k).dropout_p)
+            .collect();
+
+        // ---- stage 3: parallel client updates --------------------------
         let (tx, rx) = mpsc::channel::<Result<ClientMsg>>();
         let trainer = &self.trainer;
         let compressor = &self.compressor;
         let data = &self.data;
         let cfg = &self.cfg;
         let n_workers = self.engine.n_workers();
-        let round_seed = cfg.seed ^ (t as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
-        let failures = AtomicUsize::new(0);
 
-        let mut server_time_s = 0.0f64;
-        let mut up_bytes = 0u64;
-        let mut recon_sum = 0.0f64;
-        let mut client_times = Vec::with_capacity(m);
-        let mut agg = RunningAverage::new(d);
-
+        let mut msgs: Vec<Option<ClientMsg>> = Vec::with_capacity(m);
+        msgs.resize_with(m, || None);
         std::thread::scope(|s| -> Result<()> {
             for (slot, &k) in selected.iter().enumerate() {
+                if dropped[slot] {
+                    continue;
+                }
                 let tx = tx.clone();
                 let global_recv = Arc::clone(&global_recv);
-                let failures = &failures;
                 s.spawn(move || {
                     let worker = slot % n_workers;
-                    let mut crng = Rng::new(round_seed ^ (k as u64) << 1);
+                    let mut crng = Rng::new(round_seed ^ ((k as u64) << 1));
                     let started = Instant::now();
                     let result = (|| -> Result<ClientMsg> {
                         let out = trainer.train(
@@ -165,83 +202,167 @@ impl Simulation {
                             &mut crng,
                             worker,
                         )?;
-                        // Delta coding (see ExperimentConfig::encode_deltas):
-                        // the wire carries Δ = w_local − w_broadcast.
-                        let payload: Vec<f32> = if cfg.encode_deltas {
-                            out.params
-                                .iter()
-                                .zip(global_recv.iter())
-                                .map(|(w, g)| w - g)
-                                .collect()
-                        } else {
-                            out.params.clone()
-                        };
+                        let payload =
+                            encode_payload(&out.params, &global_recv, cfg.encode_deltas);
                         let update = compressor.compress(&payload, worker)?;
                         Ok(ClientMsg {
+                            slot,
                             update,
                             exact: out.params,
-                            client_time_s: started.elapsed().as_secs_f64(),
+                            n_samples: data.shards[k].n,
+                            train_s: started.elapsed().as_secs_f64(),
                         })
                     })();
-                    if result.is_err() {
-                        failures.fetch_add(1, Ordering::Relaxed);
-                    }
                     let _ = tx.send(result);
                 });
             }
             drop(tx);
-
-            // ---- server: FIFO decode + running-average aggregation ------
             for msg in rx {
+                // Propagate the first client failure as-is (the error
+                // already carries its own kind and message).
                 let msg = msg?;
-                let t0 = Instant::now();
-                let mut decoded = self.compressor.decompress(&msg.update, d, 0)?;
-                if self.cfg.encode_deltas {
-                    for (v, g) in decoded.iter_mut().zip(global_recv.iter()) {
-                        *v += g;
-                    }
-                }
-                server_time_s += t0.elapsed().as_secs_f64();
-                recon_sum += mse(&decoded, &msg.exact);
-                up_bytes += msg.update.wire_bytes as u64;
-                client_times.push(msg.client_time_s);
-                let t1 = Instant::now();
-                agg.push(&decoded)?;
-                server_time_s += t1.elapsed().as_secs_f64();
+                let slot = msg.slot;
+                msgs[slot] = Some(msg);
             }
             Ok(())
         })?;
 
-        if failures.load(Ordering::Relaxed) > 0 {
-            return Err(HcflError::Engine(format!(
-                "{} client(s) failed in round {t}",
-                failures.load(Ordering::Relaxed)
-            )));
+        // ---- stage 4: round clock --------------------------------------
+        // Modelled compute time = the round's reference compute time (mean
+        // measured train+encode) scaled per device, so survivor sets and
+        // aggregation order are deterministic under OS scheduling noise.
+        let measured: Vec<f64> = msgs.iter().flatten().map(|msg| msg.train_s).collect();
+        let reference_compute_s = stats::mean(&measured);
+        let transmitting = measured.len();
+        let timings: Vec<ClientTiming> = selected
+            .iter()
+            .enumerate()
+            .map(|(slot, &k)| {
+                let up = msgs[slot].as_ref().map(|msg| msg.update.wire_bytes).unwrap_or(0);
+                client_timing(
+                    &self.cfg.link,
+                    self.fleet.profile(k),
+                    k,
+                    slot,
+                    up,
+                    down_bytes,
+                    reference_compute_s,
+                    m,
+                    transmitting,
+                    dropped[slot],
+                )
+            })
+            .collect();
+        let outcome = resolve(&self.cfg.scenario.policy, &timings);
+
+        // ---- stage 5: decode + aggregate in modelled arrival order -----
+        let mut agg = self.cfg.scenario.aggregator.build(d);
+        let mut server_time_s = 0.0f64;
+        let mut recon_sum = 0.0f64;
+        for &i in &outcome.survivors {
+            let msg = msgs[i].as_ref().expect("survivor sent an update");
+            let t0 = Instant::now();
+            let mut decoded = self.compressor.decompress(&msg.update, d, 0)?;
+            decode_payload(&mut decoded, &global_recv, self.cfg.encode_deltas);
+            server_time_s += t0.elapsed().as_secs_f64();
+            recon_sum += mse(&decoded, &msg.exact);
+            let meta = UpdateMeta {
+                client: timings[i].client,
+                n_samples: msg.n_samples,
+                arrival_s: timings[i].arrival_s(),
+            };
+            let t1 = Instant::now();
+            agg.push(&decoded, &meta)?;
+            server_time_s += t1.elapsed().as_secs_f64();
         }
+        let completed = agg.count();
+        if completed > 0 {
+            self.server.install(agg.finish()?)?;
+        }
+        // else: every upload was lost to dropout/policy; the round is
+        // wasted air time and the global model carries over unchanged.
 
-        self.server.install(agg.finish()?)?;
-
-        // ---- evaluation -------------------------------------------------
+        // ---- stage 6: evaluation ---------------------------------------
         let (accuracy, loss) =
             self.trainer
                 .evaluate(&self.server.global.flat, &self.data.test, 0)?;
 
-        let per_client_up = if m > 0 { up_bytes as usize / m } else { 0 };
-        let comm_time_s = self.cfg.link.uplink_time(per_client_up, m)
-            + self.cfg.link.downlink_time(down_bytes, m);
+        // Cost accounting (clock layer outputs, exact per-client bytes):
+        // every transmitting client's upload hits the air even when the
+        // policy later ignores it, so air time covers all alive clients —
+        // capped at the makespan, past which cut transmissions stop.
+        // The broadcast reaches all m selected.
+        let up_bytes: u64 = msgs
+            .iter()
+            .flatten()
+            .map(|msg| msg.update.wire_bytes as u64)
+            .sum();
+        let comm_time_s = timings
+            .iter()
+            .filter(|tm| !tm.dropped)
+            .map(|tm| tm.downlink_s + tm.uplink_s)
+            .fold(0.0, f64::max)
+            .min(outcome.makespan_s);
 
         Ok(RoundRecord {
             round: t,
             accuracy,
             loss,
-            recon_mse: recon_sum / m.max(1) as f64,
+            recon_mse: recon_sum / completed.max(1) as f64,
             up_bytes,
             down_bytes: (down_bytes * m) as u64,
-            client_time_s: crate::util::stats::mean(&client_times),
+            selected: m,
+            completed,
+            dropped: outcome.dropped,
+            stragglers: outcome.stragglers,
+            makespan_s: outcome.makespan_s,
+            client_time_s: reference_compute_s,
             server_time_s,
             comm_time_s,
             wall_time_s: wall0.elapsed().as_secs_f64(),
         })
+    }
+}
+
+/// Stage-1 broadcast: the payload every client receives plus the
+/// accounted wire size.
+///
+/// Paper Fig. 3 puts the only decoder at the server, so the broadcast
+/// itself is always exact; `compress_downlink=true` additionally
+/// *accounts* the broadcast at the encoded wire size, mirroring the
+/// paper's symmetric Tables I/II.  The returned payload is therefore the
+/// exact global model in both cases.
+pub fn broadcast(
+    compressor: &dyn Compressor,
+    global: &[f32],
+    compress_downlink: bool,
+) -> Result<(Arc<Vec<f32>>, usize)> {
+    let down_bytes = if compress_downlink {
+        compressor.compress(global, 0)?.wire_bytes
+    } else {
+        4 * global.len()
+    };
+    Ok((Arc::new(global.to_vec()), down_bytes))
+}
+
+/// What the client puts on the wire (see `ExperimentConfig::encode_deltas`):
+/// the update `Δ = w_local − w_broadcast`, or the raw weights of the
+/// paper's Algorithm 1.
+pub fn encode_payload(params: &[f32], global: &[f32], encode_deltas: bool) -> Vec<f32> {
+    if encode_deltas {
+        params.iter().zip(global).map(|(w, g)| w - g).collect()
+    } else {
+        params.to_vec()
+    }
+}
+
+/// Server-side inverse of [`encode_payload`]: reconstruct `ŵ = g + Δ̂`
+/// in place when delta coding is on.
+pub fn decode_payload(decoded: &mut [f32], global: &[f32], encode_deltas: bool) {
+    if encode_deltas {
+        for (v, g) in decoded.iter_mut().zip(global) {
+            *v += g;
+        }
     }
 }
 

@@ -1,47 +1,77 @@
 //! Library error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the crate must
+//! build offline with zero default dependencies.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the HCFL library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum HcflError {
     /// Artifact directory / manifest problems.
-    #[error("manifest error: {0}")]
     Manifest(String),
 
     /// JSON syntax or schema errors while reading the manifest.
-    #[error("json error: {0}")]
     Json(String),
 
     /// A named executable is missing from the manifest.
-    #[error("unknown executable '{0}' (run `make artifacts`?)")]
     UnknownExecutable(String),
 
     /// Input tensors did not match the executable's recorded spec.
-    #[error("spec mismatch for '{exec}': {detail}")]
     SpecMismatch { exec: String, detail: String },
 
     /// The PJRT engine failed (compile or execute).
-    #[error("engine error: {0}")]
     Engine(String),
 
     /// The engine worker thread is gone.
-    #[error("engine worker disconnected")]
     WorkerGone,
 
     /// Configuration problems (bad experiment parameters, etc.).
-    #[error("config error: {0}")]
     Config(String),
 
     /// Dataset / shard construction problems.
-    #[error("data error: {0}")]
     Data(String),
 
     /// I/O wrapper.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for HcflError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HcflError::Manifest(s) => write!(f, "manifest error: {s}"),
+            HcflError::Json(s) => write!(f, "json error: {s}"),
+            HcflError::UnknownExecutable(s) => {
+                write!(f, "unknown executable '{s}' (run `make artifacts`?)")
+            }
+            HcflError::SpecMismatch { exec, detail } => {
+                write!(f, "spec mismatch for '{exec}': {detail}")
+            }
+            HcflError::Engine(s) => write!(f, "engine error: {s}"),
+            HcflError::WorkerGone => write!(f, "engine worker disconnected"),
+            HcflError::Config(s) => write!(f, "config error: {s}"),
+            HcflError::Data(s) => write!(f, "data error: {s}"),
+            HcflError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HcflError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            HcflError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for HcflError {
+    fn from(e: std::io::Error) -> Self {
+        HcflError::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for HcflError {
     fn from(e: xla::Error) -> Self {
         HcflError::Engine(e.to_string())
@@ -50,3 +80,36 @@ impl From<xla::Error> for HcflError {
 
 /// Library-wide result alias.
 pub type Result<T> = std::result::Result<T, HcflError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_old_thiserror_format() {
+        assert_eq!(
+            HcflError::Manifest("x".into()).to_string(),
+            "manifest error: x"
+        );
+        assert_eq!(
+            HcflError::UnknownExecutable("foo".into()).to_string(),
+            "unknown executable 'foo' (run `make artifacts`?)"
+        );
+        assert_eq!(
+            HcflError::SpecMismatch {
+                exec: "e".into(),
+                detail: "d".into()
+            }
+            .to_string(),
+            "spec mismatch for 'e': d"
+        );
+        assert_eq!(HcflError::WorkerGone.to_string(), "engine worker disconnected");
+    }
+
+    #[test]
+    fn io_conversion_and_source() {
+        let err: HcflError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(err.to_string().starts_with("io error:"));
+        assert!(std::error::Error::source(&err).is_some());
+    }
+}

@@ -3,6 +3,7 @@
 pub mod common;
 pub mod figures;
 pub mod registry;
+pub mod scenarios;
 pub mod tables;
 pub mod theorems;
 

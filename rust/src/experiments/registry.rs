@@ -14,7 +14,7 @@ pub struct ExperimentCtx {
 type Driver = fn(&ExperimentCtx) -> Result<()>;
 
 fn drivers() -> Vec<(&'static str, &'static str, Driver)> {
-    use crate::experiments::{figures, tables, theorems};
+    use crate::experiments::{figures, scenarios, tables, theorems};
     vec![
         (
             "table1",
@@ -60,6 +60,11 @@ fn drivers() -> Vec<(&'static str, &'static str, Driver)> {
             "fig12",
             "Fig 12: batch-size sweep, MNIST (acc + loss)",
             figures::fig12,
+        ),
+        (
+            "scenarios",
+            "Scenario sweep: straggler fleets under sync/deadline/fastest-m policies",
+            scenarios::scenarios,
         ),
         (
             "thm1",
@@ -112,7 +117,7 @@ mod tests {
         let ids: Vec<&str> = list().iter().map(|(n, _)| *n).collect();
         for want in [
             "table1", "table2", "table3", "fig8", "fig9", "fig10a", "fig10b", "fig11",
-            "fig12", "thm1", "thm2",
+            "fig12", "scenarios", "thm1", "thm2",
         ] {
             assert!(ids.contains(&want), "missing experiment {want}");
         }

@@ -1,0 +1,284 @@
+//! The aggregation layer: how decoded client updates fold into the next
+//! global model.
+//!
+//! Algorithm 1 of the paper is the uniform streaming mean over arrivals
+//! ([`UniformMean`], bit-identical to [`super::RunningAverage`]).  The
+//! semi-synchronous policies of the clock layer motivate two more:
+//! [`SampleWeighted`] (classic FedAvg `n_k / n` weighting, which matters
+//! once deadline cuts make the surviving set biased) and
+//! [`StalenessDiscounted`] (exponentially down-weights late arrivals
+//! relative to the fastest, as in adaptive/asynchronous FL for IoT).
+
+use crate::error::{HcflError, Result};
+use crate::fl::RunningAverage;
+
+/// Per-update context the clock layer hands the aggregator.
+#[derive(Debug, Clone)]
+pub struct UpdateMeta {
+    /// Global client id.
+    pub client: usize,
+    /// Samples on the client's shard (FedAvg `n_k`).
+    pub n_samples: usize,
+    /// Modelled arrival time of the upload (seconds after broadcast).
+    pub arrival_s: f64,
+}
+
+/// Which aggregation rule a run uses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AggregatorKind {
+    /// Algorithm 1's uniform running average over arrivals.
+    UniformMean,
+    /// Weight each update by its shard size `n_k`.
+    SampleWeighted,
+    /// Weight by `exp(-lambda * (arrival - fastest_arrival))`.
+    StalenessDiscounted { lambda: f64 },
+}
+
+impl AggregatorKind {
+    pub fn label(&self) -> String {
+        match self {
+            AggregatorKind::UniformMean => "uniform-mean".to_string(),
+            AggregatorKind::SampleWeighted => "sample-weighted".to_string(),
+            AggregatorKind::StalenessDiscounted { lambda } => {
+                format!("staleness l={lambda:.2}")
+            }
+        }
+    }
+
+    /// Construct the aggregator for a `d`-dimensional model.
+    pub fn build(&self, d: usize) -> Box<dyn Aggregator> {
+        match self {
+            AggregatorKind::UniformMean => Box::new(UniformMean::new(d)),
+            AggregatorKind::SampleWeighted => Box::new(WeightedMean::sample_weighted(d)),
+            AggregatorKind::StalenessDiscounted { lambda } => {
+                Box::new(WeightedMean::staleness(d, *lambda))
+            }
+        }
+    }
+}
+
+/// Streaming fold of decoded updates (pushed in modelled arrival order).
+pub trait Aggregator: Send {
+    /// Fold one decoded client model into the aggregate.
+    fn push(&mut self, w: &[f32], meta: &UpdateMeta) -> Result<()>;
+
+    /// Updates folded so far.
+    fn count(&self) -> usize;
+
+    /// The aggregated model (error if nothing was pushed).
+    fn finish(self: Box<Self>) -> Result<Vec<f32>>;
+}
+
+/// Algorithm 1's uniform mean; delegates to [`RunningAverage`] so the
+/// arithmetic is bit-identical to the pre-refactor coordinator.
+pub struct UniformMean {
+    inner: RunningAverage,
+}
+
+impl UniformMean {
+    pub fn new(d: usize) -> UniformMean {
+        UniformMean {
+            inner: RunningAverage::new(d),
+        }
+    }
+}
+
+impl Aggregator for UniformMean {
+    fn push(&mut self, w: &[f32], _meta: &UpdateMeta) -> Result<()> {
+        self.inner.push(w)
+    }
+
+    fn count(&self) -> usize {
+        self.inner.count()
+    }
+
+    fn finish(self: Box<Self>) -> Result<Vec<f32>> {
+        self.inner.finish()
+    }
+}
+
+enum Weighting {
+    Samples,
+    Staleness { lambda: f64, t0: Option<f64> },
+}
+
+/// Streaming weighted mean: after each push the accumulator equals the
+/// weighted mean of everything pushed (`acc += (w - acc) * wt/W_total`).
+pub struct WeightedMean {
+    acc: Vec<f32>,
+    total_w: f64,
+    count: usize,
+    weighting: Weighting,
+}
+
+impl WeightedMean {
+    pub fn sample_weighted(d: usize) -> WeightedMean {
+        WeightedMean {
+            acc: vec![0.0; d],
+            total_w: 0.0,
+            count: 0,
+            weighting: Weighting::Samples,
+        }
+    }
+
+    pub fn staleness(d: usize, lambda: f64) -> WeightedMean {
+        WeightedMean {
+            acc: vec![0.0; d],
+            total_w: 0.0,
+            count: 0,
+            weighting: Weighting::Staleness { lambda, t0: None },
+        }
+    }
+
+    fn weight_of(&mut self, meta: &UpdateMeta) -> Result<f64> {
+        match &mut self.weighting {
+            Weighting::Samples => {
+                if meta.n_samples == 0 {
+                    return Err(HcflError::Config(format!(
+                        "client {} has an empty shard; sample weighting undefined",
+                        meta.client
+                    )));
+                }
+                Ok(meta.n_samples as f64)
+            }
+            Weighting::Staleness { lambda, t0 } => {
+                // Updates arrive in modelled arrival order, so the first
+                // push fixes the freshness reference.
+                let t0 = *t0.get_or_insert(meta.arrival_s);
+                Ok((-*lambda * (meta.arrival_s - t0).max(0.0)).exp())
+            }
+        }
+    }
+}
+
+impl Aggregator for WeightedMean {
+    fn push(&mut self, w: &[f32], meta: &UpdateMeta) -> Result<()> {
+        if w.len() != self.acc.len() {
+            return Err(HcflError::Config(format!(
+                "aggregation dim mismatch: {} vs {}",
+                w.len(),
+                self.acc.len()
+            )));
+        }
+        let wt = self.weight_of(meta)?;
+        self.total_w += wt;
+        self.count += 1;
+        let f = (wt / self.total_w) as f32;
+        for (a, &x) in self.acc.iter_mut().zip(w) {
+            *a += (x - *a) * f;
+        }
+        Ok(())
+    }
+
+    fn count(&self) -> usize {
+        self.count
+    }
+
+    fn finish(self: Box<Self>) -> Result<Vec<f32>> {
+        if self.count == 0 {
+            return Err(HcflError::Config("aggregating zero updates".into()));
+        }
+        Ok(self.acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(client: usize, n_samples: usize, arrival_s: f64) -> UpdateMeta {
+        UpdateMeta {
+            client,
+            n_samples,
+            arrival_s,
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_bit_identical_to_running_average() {
+        let mut rng = crate::util::rng::Rng::new(17);
+        let updates: Vec<Vec<f32>> = (0..7)
+            .map(|_| (0..33).map(|_| rng.normal() * 0.3).collect())
+            .collect();
+        let mut reference = RunningAverage::new(33);
+        let mut agg: Box<dyn Aggregator> = AggregatorKind::UniformMean.build(33);
+        for (i, u) in updates.iter().enumerate() {
+            reference.push(u).unwrap();
+            agg.push(u, &meta(i, 100, i as f64)).unwrap();
+        }
+        let a = reference.finish().unwrap();
+        let b = agg.finish().unwrap();
+        // exact f32 equality, not approximate: same fold, same bits
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sample_weighted_equals_uniform_for_equal_shards() {
+        let updates = [vec![1.0f32, -2.0], vec![3.0, 0.5], vec![-1.0, 4.0]];
+        let mut uni: Box<dyn Aggregator> = AggregatorKind::UniformMean.build(2);
+        let mut wtd: Box<dyn Aggregator> = AggregatorKind::SampleWeighted.build(2);
+        for (i, u) in updates.iter().enumerate() {
+            uni.push(u, &meta(i, 600, 0.0)).unwrap();
+            wtd.push(u, &meta(i, 600, 0.0)).unwrap();
+        }
+        assert_eq!(uni.finish().unwrap(), wtd.finish().unwrap());
+    }
+
+    #[test]
+    fn sample_weighted_tracks_shard_sizes() {
+        let mut agg: Box<dyn Aggregator> = AggregatorKind::SampleWeighted.build(1);
+        agg.push(&[0.0], &meta(0, 300, 0.0)).unwrap();
+        agg.push(&[1.0], &meta(1, 100, 0.0)).unwrap();
+        let out = agg.finish().unwrap();
+        assert!((out[0] - 0.25).abs() < 1e-6, "got {}", out[0]);
+    }
+
+    #[test]
+    fn sample_weighted_rejects_empty_shard() {
+        let mut agg: Box<dyn Aggregator> = AggregatorKind::SampleWeighted.build(1);
+        assert!(agg.push(&[1.0], &meta(0, 0, 0.0)).is_err());
+    }
+
+    #[test]
+    fn staleness_downweights_late_arrivals() {
+        let lambda = 1.0;
+        let mut agg: Box<dyn Aggregator> =
+            AggregatorKind::StalenessDiscounted { lambda }.build(1);
+        // fastest at t=2 (reference), late at t=2+ln(3) with weight 1/3
+        agg.push(&[0.0], &meta(0, 1, 2.0)).unwrap();
+        agg.push(&[1.0], &meta(1, 1, 2.0 + 3.0f64.ln())).unwrap();
+        let out = agg.finish().unwrap();
+        assert!((out[0] - 0.25).abs() < 1e-6, "got {}", out[0]);
+    }
+
+    #[test]
+    fn staleness_with_zero_lambda_is_uniform() {
+        let updates = [vec![2.0f32], vec![4.0], vec![9.0]];
+        let mut uni: Box<dyn Aggregator> = AggregatorKind::UniformMean.build(1);
+        let mut stale: Box<dyn Aggregator> =
+            AggregatorKind::StalenessDiscounted { lambda: 0.0 }.build(1);
+        for (i, u) in updates.iter().enumerate() {
+            uni.push(u, &meta(i, 1, i as f64)).unwrap();
+            stale.push(u, &meta(i, 1, i as f64)).unwrap();
+        }
+        let (a, b) = (uni.finish().unwrap(), stale.finish().unwrap());
+        assert!((a[0] - b[0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dim_mismatch_and_empty_finish_error() {
+        let mut agg: Box<dyn Aggregator> = AggregatorKind::SampleWeighted.build(2);
+        assert!(agg.push(&[1.0], &meta(0, 1, 0.0)).is_err());
+        assert!(AggregatorKind::SampleWeighted.build(2).finish().is_err());
+        assert!(AggregatorKind::UniformMean.build(2).finish().is_err());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(AggregatorKind::UniformMean.label(), "uniform-mean");
+        assert_eq!(AggregatorKind::SampleWeighted.label(), "sample-weighted");
+        assert!(AggregatorKind::StalenessDiscounted { lambda: 0.5 }
+            .label()
+            .contains("0.50"));
+    }
+}

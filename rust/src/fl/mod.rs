@@ -1,8 +1,10 @@
 //! The FedAvg substrate (paper §II-B, Algorithm 1): local training on
-//! client shards, client selection, and running-average aggregation.
+//! client shards, client selection, and the pluggable aggregation layer.
 
+pub mod aggregate;
 mod client;
 mod server;
 
+pub use aggregate::{Aggregator, AggregatorKind, UpdateMeta};
 pub use client::{LocalOutcome, LocalTrainer};
 pub use server::{select_clients, RunningAverage, Server};

@@ -40,13 +40,15 @@ pub mod util;
 /// Convenient re-exports for examples and binaries.
 pub mod prelude {
     pub use crate::compression::{Compressor, Scheme};
-    pub use crate::config::ExperimentConfig;
+    pub use crate::config::{ExperimentConfig, ScenarioConfig};
+    pub use crate::coordinator::clock::RoundPolicy;
     pub use crate::coordinator::Simulation;
     pub use crate::data::Dataset;
     pub use crate::error::HcflError;
-    pub use crate::fl::Server;
+    pub use crate::fl::{AggregatorKind, Server};
     pub use crate::metrics::RoundRecord;
     pub use crate::model::ParamSet;
+    pub use crate::network::{DeviceFleet, DevicePreset, DeviceProfile};
     pub use crate::runtime::{Engine, Manifest};
     pub use crate::tensor::TensorValue;
 }

@@ -15,7 +15,7 @@ fn usage() -> ! {
         "usage: repro <command> [options]\n\
          commands:\n\
            run         run one FL configuration\n\
-           experiment  regenerate a paper table/figure (--id table1|table2|table3|fig8|fig9|fig10a|fig10b|fig11|fig12|thm1|thm2)\n\
+           experiment  regenerate a paper table/figure (--id table1|table2|table3|fig8|fig9|fig10a|fig10b|fig11|fig12|scenarios|thm1|thm2)\n\
            list        list available experiments\n\
          run options:\n\
            --model lenet|fivecnn   (default lenet)\n\

@@ -18,15 +18,31 @@ pub struct RoundRecord {
     /// Mean reconstruction MSE of the decompressed client updates
     /// (0 for lossless schemes) — the paper's "Reconstruction error".
     pub recon_mse: f64,
-    /// Bytes uploaded by all participating clients this round.
+    /// Bytes uploaded by all transmitting clients this round.
     pub up_bytes: u64,
     /// Bytes downloaded by all participating clients this round.
     pub down_bytes: u64,
+    /// Clients selected for the round (m).
+    pub selected: usize,
+    /// Uploads the aggregator actually folded in.
+    pub completed: usize,
+    /// Selected devices that vanished before uploading (device dropout).
+    pub dropped: usize,
+    /// Alive clients cut by the round policy (deadline miss / not in the
+    /// fastest m).
+    pub stragglers: usize,
+    /// Modelled round makespan: the slowest *surviving* client's arrival
+    /// (or the full deadline when any selected upload went missing —
+    /// see `coordinator::clock::resolve`), seconds.
+    pub makespan_s: f64,
     /// Mean per-client compute time (local training + encode), seconds.
     pub client_time_s: f64,
     /// Server compute time (decode + aggregate), seconds.
     pub server_time_s: f64,
-    /// Modelled air time of the round (paper eq. 13).
+    /// Modelled air time of the round (paper eq. 13): the slowest
+    /// transmission among all non-dropped clients — cut stragglers
+    /// occupy the cell too — capped at the makespan, past which cut
+    /// transmissions stop.
     pub comm_time_s: f64,
     /// Wall-clock of the whole round in the simulator.
     pub wall_time_s: f64,
@@ -82,6 +98,31 @@ impl RunReport {
         )
     }
 
+    /// Selected-but-unaggregated clients over the whole run.
+    pub fn total_dropped(&self) -> u64 {
+        self.rounds.iter().map(|r| r.dropped as u64).sum()
+    }
+
+    pub fn total_stragglers(&self) -> u64 {
+        self.rounds.iter().map(|r| r.stragglers as u64).sum()
+    }
+
+    /// Mean fraction of selected clients whose update was aggregated.
+    pub fn mean_participation(&self) -> f64 {
+        stats::mean(
+            &self
+                .rounds
+                .iter()
+                .map(|r| r.completed as f64 / r.selected.max(1) as f64)
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Sum of modelled round makespans (the run's modelled duration).
+    pub fn total_makespan(&self) -> f64 {
+        self.rounds.iter().map(|r| r.makespan_s).sum()
+    }
+
     /// First round whose accuracy reaches `target` (convergence round).
     pub fn rounds_to_accuracy(&self, target: f64) -> Option<usize> {
         self.rounds
@@ -108,18 +149,23 @@ impl RunReport {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,accuracy,loss,recon_mse,up_bytes,down_bytes,client_time_s,server_time_s,comm_time_s,wall_time_s"
+            "round,accuracy,loss,recon_mse,up_bytes,down_bytes,selected,completed,dropped,stragglers,makespan_s,client_time_s,server_time_s,comm_time_s,wall_time_s"
         )?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{:.8},{},{},{:.6},{:.6},{:.6},{:.6}",
+                "{},{:.6},{:.6},{:.8},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6}",
                 r.round,
                 r.accuracy,
                 r.loss,
                 r.recon_mse,
                 r.up_bytes,
                 r.down_bytes,
+                r.selected,
+                r.completed,
+                r.dropped,
+                r.stragglers,
+                r.makespan_s,
                 r.client_time_s,
                 r.server_time_s,
                 r.comm_time_s,
@@ -189,6 +235,11 @@ mod tests {
             recon_mse: 0.001,
             up_bytes: 100,
             down_bytes: 100,
+            selected: 4,
+            completed: 3,
+            dropped: 1,
+            stragglers: 0,
+            makespan_s: 0.5,
             client_time_s: 0.1,
             server_time_s: 0.01,
             comm_time_s: 0.2,
@@ -208,6 +259,10 @@ mod tests {
         assert_eq!(rep.rounds_to_accuracy(0.75), Some(2));
         assert_eq!(rep.rounds_to_accuracy(0.95), None);
         assert!(rep.accuracy_stddev_tail(2) > 0.0);
+        assert_eq!(rep.total_dropped(), 3);
+        assert_eq!(rep.total_stragglers(), 0);
+        assert!((rep.mean_participation() - 0.75).abs() < 1e-12);
+        assert!((rep.total_makespan() - 1.5).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Per-client device heterogeneity (the "very large scale IoT" part of
+//! the paper's title that a homogeneous simulator cannot exercise).
+//!
+//! A [`DeviceProfile`] describes one client relative to the reference
+//! hardware the link model and the measured compute times assume:
+//! multipliers on its share of the cell in each direction, a compute
+//! slowdown, and a per-round dropout probability.  A [`DeviceFleet`] is
+//! the whole population, sampled once per run from a [`DevicePreset`]
+//! with its own seeded RNG stream so device assignment never perturbs
+//! client selection or training randomness.
+
+use crate::util::rng::Rng;
+
+/// One client's hardware/connectivity profile, relative to the reference
+/// device (all fields 1.0 / 0.0 for the homogeneous baseline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    /// Multiplier on the client's share of the cell uplink rate.
+    pub uplink_mult: f64,
+    /// Multiplier on the client's share of the cell downlink rate.
+    pub downlink_mult: f64,
+    /// Local-compute slowdown: modelled train+encode time is the round's
+    /// reference compute time times this (>= 1.0 means slower).
+    pub compute_mult: f64,
+    /// Probability the device vanishes for a round after being selected
+    /// (battery, duty cycle, radio loss).
+    pub dropout_p: f64,
+}
+
+impl DeviceProfile {
+    /// The reference device: full cell share, reference speed, always up.
+    pub fn reference() -> DeviceProfile {
+        DeviceProfile {
+            uplink_mult: 1.0,
+            downlink_mult: 1.0,
+            compute_mult: 1.0,
+            dropout_p: 0.0,
+        }
+    }
+}
+
+/// How the fleet's profiles are distributed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DevicePreset {
+    /// Every client is the reference device (the pre-refactor simulator).
+    Homogeneous,
+    /// A fixed fraction of clients is `slowdown`x slower in both compute
+    /// and uplink — the classic straggler regime.
+    Stragglers { frac: f64, slowdown: f64 },
+    /// Log-normal rate/compute spread plus an IID per-round dropout
+    /// probability — an unevenly-connected IoT population.
+    Iot { sigma: f64, dropout_p: f64 },
+}
+
+/// The sampled population: one profile per client id.
+#[derive(Debug, Clone)]
+pub struct DeviceFleet {
+    profiles: Vec<DeviceProfile>,
+}
+
+impl DeviceFleet {
+    /// Sample `n` profiles from `preset`.  Deterministic in `seed`; the
+    /// homogeneous preset draws nothing so it is seed-independent.
+    pub fn sample(n: usize, preset: &DevicePreset, seed: u64) -> DeviceFleet {
+        let mut rng = Rng::new(seed ^ 0xDE71_CE5A_11E7_F1E7);
+        let profiles = (0..n)
+            .map(|_| match preset {
+                DevicePreset::Homogeneous => DeviceProfile::reference(),
+                DevicePreset::Stragglers { frac, slowdown } => {
+                    if rng.next_f64() < *frac {
+                        DeviceProfile {
+                            uplink_mult: 1.0 / slowdown.max(1.0),
+                            downlink_mult: 1.0,
+                            compute_mult: slowdown.max(1.0),
+                            dropout_p: 0.0,
+                        }
+                    } else {
+                        DeviceProfile::reference()
+                    }
+                }
+                DevicePreset::Iot { sigma, dropout_p } => {
+                    // Log-normal with median 1: exp(sigma * N(0,1)).
+                    let spread = (sigma * rng.normal() as f64).exp();
+                    DeviceProfile {
+                        uplink_mult: 1.0 / spread,
+                        downlink_mult: 1.0 / spread,
+                        compute_mult: spread,
+                        dropout_p: *dropout_p,
+                    }
+                }
+            })
+            .collect();
+        DeviceFleet { profiles }
+    }
+
+    pub fn len(&self) -> usize {
+        self.profiles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.profiles.is_empty()
+    }
+
+    /// Profile of client `k`.
+    pub fn profile(&self, k: usize) -> &DeviceProfile {
+        &self.profiles[k]
+    }
+
+    /// Number of clients slower than the reference (compute_mult > 1).
+    pub fn n_slow(&self) -> usize {
+        self.profiles.iter().filter(|p| p.compute_mult > 1.0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_is_reference_everywhere() {
+        let fleet = DeviceFleet::sample(16, &DevicePreset::Homogeneous, 1);
+        assert_eq!(fleet.len(), 16);
+        for k in 0..16 {
+            assert_eq!(*fleet.profile(k), DeviceProfile::reference());
+        }
+        // seed-independent
+        let other = DeviceFleet::sample(16, &DevicePreset::Homogeneous, 99);
+        for k in 0..16 {
+            assert_eq!(fleet.profile(k), other.profile(k));
+        }
+    }
+
+    #[test]
+    fn straggler_fraction_is_respected() {
+        let preset = DevicePreset::Stragglers {
+            frac: 0.3,
+            slowdown: 8.0,
+        };
+        let fleet = DeviceFleet::sample(2000, &preset, 7);
+        let slow = fleet.n_slow();
+        let frac = slow as f64 / 2000.0;
+        assert!((frac - 0.3).abs() < 0.05, "straggler frac {frac}");
+        // stragglers are slower on compute AND uplink
+        for k in 0..2000 {
+            let p = fleet.profile(k);
+            if p.compute_mult > 1.0 {
+                assert_eq!(p.compute_mult, 8.0);
+                assert!((p.uplink_mult - 0.125).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_in_seed() {
+        let preset = DevicePreset::Iot {
+            sigma: 0.5,
+            dropout_p: 0.2,
+        };
+        let a = DeviceFleet::sample(64, &preset, 42);
+        let b = DeviceFleet::sample(64, &preset, 42);
+        let c = DeviceFleet::sample(64, &preset, 43);
+        for k in 0..64 {
+            assert_eq!(a.profile(k), b.profile(k));
+        }
+        assert!((0..64).any(|k| a.profile(k) != c.profile(k)));
+    }
+
+    #[test]
+    fn iot_preset_sets_dropout_and_spread() {
+        let preset = DevicePreset::Iot {
+            sigma: 0.5,
+            dropout_p: 0.1,
+        };
+        let fleet = DeviceFleet::sample(500, &preset, 3);
+        assert!(fleet.profiles.iter().all(|p| p.dropout_p == 0.1));
+        // spread actually spreads: some devices slower, some faster
+        assert!(fleet.n_slow() > 100);
+        assert!(fleet.profiles.iter().any(|p| p.compute_mult < 1.0));
+    }
+}

@@ -1,10 +1,18 @@
-//! Link / communication-cost model (paper §VI-A, eq. 13).
+//! Link / communication-cost model (paper §VI-A, eq. 13) and per-client
+//! device heterogeneity.
 //!
 //! The paper places HCFL at the presentation layer: HARQ corrects packet
 //! errors below us, so the link is modelled as lossless and the only
 //! communication metric is data volume and the transmission time
 //! `T = s / R` with the cell bandwidth shared equally by the clients
-//! active in a round.
+//! active in a round.  [`device::DeviceProfile`] scales each client's
+//! share of that cell; all round-level cost accounting lives in the
+//! clock layer ([`crate::coordinator::clock`]), which folds exact
+//! per-client byte counts and device profiles into modelled times.
+
+mod device;
+
+pub use device::{DeviceFleet, DevicePreset, DeviceProfile};
 
 /// Shared-bandwidth link model.
 #[derive(Debug, Clone)]
@@ -40,36 +48,6 @@ impl LinkModel {
     }
 }
 
-/// Accumulated traffic of a run (the paper's "Encoded Size Up/Download").
-#[derive(Debug, Clone, Default)]
-pub struct CostLedger {
-    pub up_bytes: u64,
-    pub down_bytes: u64,
-    /// Modelled time spent on the air (seconds, sum over rounds of the
-    /// slowest active client).
-    pub comm_time_s: f64,
-}
-
-impl CostLedger {
-    /// Record one round: `m` clients each upload `up` bytes and download
-    /// `down` bytes over the shared link.
-    pub fn record_round(&mut self, link: &LinkModel, m: usize, up: usize, down: usize) {
-        self.up_bytes += (up * m) as u64;
-        self.down_bytes += (down * m) as u64;
-        // Synchronous round: the round's air time is one client's
-        // transmission at the shared rate (all m transmit concurrently).
-        self.comm_time_s += link.uplink_time(up, m) + link.downlink_time(down, m);
-    }
-
-    pub fn up_mb(&self) -> f64 {
-        self.up_bytes as f64 / 1e6
-    }
-
-    pub fn down_mb(&self) -> f64 {
-        self.down_bytes as f64 / 1e6
-    }
-}
-
 /// The "true compression ratio" of the paper's tables: baseline bytes
 /// over compressed bytes.
 pub fn true_ratio(baseline_bytes: u64, compressed_bytes: u64) -> f64 {
@@ -93,17 +71,6 @@ mod tests {
         assert!((link.uplink_time(1_000_000, 1) - 1.0).abs() < 1e-9);
         // shared by 10 clients: 10 seconds
         assert!((link.uplink_time(1_000_000, 10) - 10.0).abs() < 1e-9);
-    }
-
-    #[test]
-    fn ledger_accumulates() {
-        let link = LinkModel::default();
-        let mut ledger = CostLedger::default();
-        ledger.record_round(&link, 10, 1000, 2000);
-        ledger.record_round(&link, 10, 1000, 2000);
-        assert_eq!(ledger.up_bytes, 20_000);
-        assert_eq!(ledger.down_bytes, 40_000);
-        assert!(ledger.comm_time_s > 0.0);
     }
 
     #[test]

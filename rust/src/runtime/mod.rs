@@ -7,7 +7,7 @@
 mod engine;
 mod manifest;
 
-pub use engine::Engine;
+pub use engine::{pjrt_enabled, Engine};
 pub use manifest::{
     AeMeta, EpochMeta, EvalMeta, ExecSpec, LayerMeta, Manifest, ModelMeta, TensorSpec,
 };

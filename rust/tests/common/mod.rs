@@ -1,0 +1,21 @@
+//! Shared plumbing for engine-backed integration tests.
+
+use hcfl::prelude::*;
+
+/// Build the PJRT engine when this build can actually run it: requires
+/// both the `pjrt` feature and generated artifacts.  Returns `None`
+/// (with a note on stderr) otherwise, so engine tests skip rather than
+/// fail in offline builds while still running fully where the real
+/// backend is available.
+pub fn engine(workers: usize) -> Option<Engine> {
+    if !hcfl::runtime::pjrt_enabled() {
+        eprintln!("skipping engine test: built without the `pjrt` feature");
+        return None;
+    }
+    let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    if !dir.join("manifest.json").is_file() {
+        eprintln!("skipping engine test: no artifacts (run `make artifacts` first)");
+        return None;
+    }
+    Some(Engine::from_artifacts(dir, workers).expect("artifacts load"))
+}

@@ -5,6 +5,8 @@
 //! same seeded-random-case sweep pattern (many generated cases per
 //! property, deterministic seeds).
 
+mod common;
+
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
@@ -15,11 +17,6 @@ use hcfl::compression::{
 use hcfl::model::{merge_segment_ranges, split_dense};
 use hcfl::prelude::*;
 use hcfl::util::rng::Rng;
-
-fn engine() -> Engine {
-    Engine::from_artifacts(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"), 1)
-        .expect("run `make artifacts` first")
-}
 
 fn random_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.normal() * scale).collect()
@@ -40,7 +37,7 @@ fn identity_property_lossless_any_length() {
 
 #[test]
 fn ternary_property_roundtrip_is_scaled_sign() {
-    let eng = engine();
+    let Some(eng) = common::engine(1) else { return };
     let c = TernaryCompressor::new(eng, 1024).unwrap();
     let mut rng = Rng::new(22);
     for case in 0..6 {
@@ -64,7 +61,7 @@ fn ternary_property_roundtrip_is_scaled_sign() {
 
 #[test]
 fn ternary_engine_matches_rust_reference() {
-    let eng = engine();
+    let Some(eng) = common::engine(1) else { return };
     let c = TernaryCompressor::new(eng, 1024).unwrap();
     let mut rng = Rng::new(33);
     let v = random_vec(&mut rng, 1024, 0.3);
@@ -126,7 +123,7 @@ fn make_hcfl(eng: &Engine, ratio: usize) -> HcflCompressor {
 
 #[test]
 fn hcfl_pipeline_shape_and_wire_size() {
-    let eng = engine();
+    let Some(eng) = common::engine(1) else { return };
     let model_d = eng.manifest().model("lenet").unwrap().d;
     for ratio in [4usize, 32] {
         let c = make_hcfl(&eng, ratio);
@@ -154,7 +151,7 @@ fn hcfl_pipeline_shape_and_wire_size() {
 fn hcfl_variance_preserving_decode() {
     // Even with an untrained AE the reconstructed chunks must carry the
     // original per-chunk energy (the moment side-info guarantees it).
-    let eng = engine();
+    let Some(eng) = common::engine(1) else { return };
     let c = make_hcfl(&eng, 8);
     let model_d = eng.manifest().model("lenet").unwrap().d;
     let mut rng = Rng::new(66);

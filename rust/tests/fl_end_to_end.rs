@@ -1,15 +1,12 @@
 //! End-to-end FL integration: full rounds through the real engine.
 
+mod common;
+
 use hcfl::compression::Scheme;
 use hcfl::config::ExperimentConfig;
 use hcfl::coordinator::Simulation;
 use hcfl::data::DataSpec;
 use hcfl::prelude::*;
-
-fn engine(workers: usize) -> Engine {
-    Engine::from_artifacts(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"), workers)
-        .expect("run `make artifacts` first")
-}
 
 fn tiny_cfg(scheme: Scheme) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::quickstart();
@@ -34,7 +31,7 @@ fn tiny_cfg(scheme: Scheme) -> ExperimentConfig {
 
 #[test]
 fn fedavg_learns_on_tiny_run() {
-    let eng = engine(2);
+    let Some(eng) = common::engine(2) else { return };
     let mut cfg = tiny_cfg(Scheme::Fedavg);
     cfg.rounds = 3;
     let mut sim = Simulation::new(&eng, cfg).unwrap();
@@ -55,7 +52,7 @@ fn fedavg_learns_on_tiny_run() {
 
 #[test]
 fn hcfl_round_runs_and_accounts_traffic() {
-    let eng = engine(2);
+    let Some(eng) = common::engine(2) else { return };
     let cfg = tiny_cfg(Scheme::Hcfl { ratio: 8 });
     let m = cfg.m();
     let mut sim = Simulation::new(&eng, cfg).unwrap();
@@ -71,11 +68,18 @@ fn hcfl_round_runs_and_accounts_traffic() {
     assert!(rec.client_time_s > 0.0);
     assert!(rec.server_time_s > 0.0);
     assert!(rec.comm_time_s > 0.0);
+    // default scenario: everyone selected is aggregated, nobody is cut
+    assert_eq!(rec.selected, m);
+    assert_eq!(rec.completed, m);
+    assert_eq!(rec.dropped, 0);
+    assert_eq!(rec.stragglers, 0);
+    // makespan covers the full path: broadcast + compute + upload
+    assert!(rec.makespan_s >= rec.comm_time_s);
 }
 
 #[test]
 fn ternary_and_topk_rounds_run() {
-    let eng = engine(2);
+    let Some(eng) = common::engine(2) else { return };
     for scheme in [Scheme::Ternary, Scheme::TopK { keep: 0.15 }] {
         let cfg = tiny_cfg(scheme);
         let mut sim = Simulation::new(&eng, cfg).unwrap();
@@ -88,7 +92,7 @@ fn ternary_and_topk_rounds_run() {
 
 #[test]
 fn runs_are_reproducible() {
-    let eng = engine(2);
+    let Some(eng) = common::engine(2) else { return };
     let r1 = Simulation::new(&eng, tiny_cfg(Scheme::Fedavg))
         .unwrap()
         .run()
@@ -100,12 +104,55 @@ fn runs_are_reproducible() {
     for (a, b) in r1.rounds.iter().zip(&r2.rounds) {
         assert_eq!(a.accuracy, b.accuracy);
         assert_eq!(a.up_bytes, b.up_bytes);
+        assert_eq!(a.completed, b.completed);
     }
 }
 
 #[test]
+fn deadline_policy_cuts_stragglers_end_to_end() {
+    let Some(eng) = common::engine(2) else { return };
+    // Two reference devices + two 1000x stragglers under a tight
+    // deadline: the stragglers must be cut every round, and the run must
+    // still learn from the surviving updates.
+    let mut cfg = tiny_cfg(Scheme::Fedavg);
+    cfg.rounds = 2;
+    cfg.participation = 1.0; // select the whole fleet so stragglers appear
+    cfg.scenario = ScenarioConfig {
+        policy: RoundPolicy::Deadline { t_max_s: 1e6 },
+        aggregator: AggregatorKind::UniformMean,
+        devices: DevicePreset::Stragglers {
+            frac: 0.5,
+            slowdown: 1000.0,
+        },
+    };
+    // The fleet is sampled from the run seed; pick one whose 4-device
+    // fleet is mixed (some but not all stragglers) so the cut is visible.
+    let mut sim = (0..20)
+        .find_map(|seed| {
+            let mut c = cfg.clone();
+            c.seed = seed;
+            let s = Simulation::new(&eng, c).unwrap();
+            (1..=3).contains(&s.fleet().n_slow()).then_some(s)
+        })
+        .expect("some seed yields a mixed fleet");
+    let n_slow = sim.fleet().n_slow();
+    // Calibrate the deadline from round 1's makespan under a generous
+    // cutoff, then tighten it: anything 1000x slower than the reference
+    // client cannot make a deadline sized for the reference arrival.
+    let probe = sim.run_round(1).unwrap();
+    assert_eq!(probe.stragglers, 0);
+    let t_max = probe.makespan_s / 10.0; // far below slowest, above fastest
+    sim.cfg.scenario.policy = RoundPolicy::Deadline { t_max_s: t_max };
+    let rec = sim.run_round(2).unwrap();
+    assert_eq!(rec.selected, 4);
+    assert_eq!(rec.stragglers, n_slow, "stragglers must miss the deadline");
+    assert_eq!(rec.completed, 4 - n_slow);
+    assert_eq!(rec.makespan_s, t_max);
+}
+
+#[test]
 fn invalid_configs_rejected() {
-    let eng = engine(1);
+    let Some(eng) = common::engine(1) else { return };
     let mut cfg = tiny_cfg(Scheme::Fedavg);
     cfg.batch = 77; // not baked
     assert!(Simulation::new(&eng, cfg).is_err());
@@ -116,5 +163,9 @@ fn invalid_configs_rejected() {
 
     let mut cfg = tiny_cfg(Scheme::Fedavg);
     cfg.model = "nope".into();
+    assert!(Simulation::new(&eng, cfg).is_err());
+
+    let mut cfg = tiny_cfg(Scheme::Fedavg);
+    cfg.scenario.policy = RoundPolicy::Deadline { t_max_s: -1.0 };
     assert!(Simulation::new(&eng, cfg).is_err());
 }

@@ -1,0 +1,251 @@
+//! Cross-layer tests of the round-execution pipeline that need no PJRT
+//! engine: payload coding, downlink accounting, the device → clock →
+//! aggregation path, and the pre-refactor regression guarantee.
+
+use hcfl::compression::{Compressor, Identity, TopKCompressor};
+use hcfl::coordinator::clock::{client_timing, resolve, RoundPolicy};
+use hcfl::coordinator::{broadcast, decode_payload, encode_payload};
+use hcfl::fl::{AggregatorKind, RunningAverage, UpdateMeta};
+use hcfl::network::{DeviceFleet, DevicePreset, LinkModel};
+use hcfl::util::rng::Rng;
+
+fn random_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+// ---- satellite: delta-encoding round-trip ------------------------------
+
+#[test]
+fn delta_roundtrip_is_exact_for_identity() {
+    let mut rng = Rng::new(101);
+    let d = 777;
+    let g = random_vec(&mut rng, d, 0.5);
+    let w = random_vec(&mut rng, d, 0.5);
+
+    // encode_deltas=true: the wire carries Δ = w − g ...
+    let delta = encode_payload(&w, &g, true);
+    let upd = Identity.compress(&delta, 0).unwrap();
+    let mut decoded = Identity.decompress(&upd, d, 0).unwrap();
+    // ... losslessly: Δ̂ == Δ bit for bit ...
+    assert_eq!(decoded, delta);
+    // ... and the server reconstructs w = g + Δ̂ exactly up to one f32
+    // rounding step per weight (the subtract/re-add pair).
+    decode_payload(&mut decoded, &g, true);
+    let mse: f64 = decoded
+        .iter()
+        .zip(&w)
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / d as f64;
+    assert!(mse < 1e-12, "delta roundtrip mse {mse}");
+    // One rounding step each for w−g and g+Δ̂: bounded by ε·(|w|+|g|).
+    for ((a, b), gi) in decoded.iter().zip(&w).zip(&g) {
+        assert!((a - b).abs() <= f32::EPSILON * (b.abs() + gi.abs()).max(1.0));
+    }
+}
+
+#[test]
+fn raw_payload_roundtrip_is_bitwise_identity() {
+    let mut rng = Rng::new(102);
+    let d = 256;
+    let g = random_vec(&mut rng, d, 0.5);
+    let w = random_vec(&mut rng, d, 0.5);
+
+    // encode_deltas=false (Algorithm 1 literally): raw weights travel.
+    let payload = encode_payload(&w, &g, false);
+    assert_eq!(payload, w);
+    let upd = Identity.compress(&payload, 0).unwrap();
+    let mut decoded = Identity.decompress(&upd, d, 0).unwrap();
+    decode_payload(&mut decoded, &g, false);
+    assert_eq!(decoded, w);
+}
+
+// ---- satellite: downlink accounting ------------------------------------
+
+#[test]
+fn compress_downlink_toggles_wire_size_but_never_the_broadcast() {
+    let mut rng = Rng::new(103);
+    let d = 1000;
+    let g = random_vec(&mut rng, d, 0.2);
+    let topk = TopKCompressor::new(0.1).unwrap();
+
+    let (payload_plain, bytes_plain) = broadcast(&topk, &g, false).unwrap();
+    let (payload_coded, bytes_coded) = broadcast(&topk, &g, true).unwrap();
+
+    // accounting follows the toggle ...
+    assert_eq!(bytes_plain, 4 * d);
+    assert!(
+        bytes_coded < 4 * d,
+        "encoded broadcast {bytes_coded} not smaller than {}",
+        4 * d
+    );
+    // ... but the payload clients receive is the exact global either way
+    // (paper Fig. 3: the only decoder lives at the server).
+    assert_eq!(*payload_plain, g);
+    assert_eq!(*payload_coded, g);
+}
+
+// ---- acceptance: pre-refactor regression -------------------------------
+
+#[test]
+fn synchronous_uniform_homogeneous_matches_prerefactor_fold() {
+    // The pre-refactor coordinator folded decoded updates through
+    // RunningAverage while a homogeneous synchronous round delivered all
+    // of them.  The pipeline must reproduce that bit for bit: identical
+    // survivor set (everyone, in selection order — homogeneous arrivals
+    // tie) and identical f32 aggregation arithmetic.
+    let mut rng = Rng::new(104);
+    let d = 512;
+    let m = 10;
+    let updates: Vec<Vec<f32>> = (0..m).map(|_| random_vec(&mut rng, d, 0.3)).collect();
+
+    // device layer: homogeneous fleet
+    let fleet = DeviceFleet::sample(m, &DevicePreset::Homogeneous, 42);
+    let link = LinkModel::default();
+    let timings: Vec<_> = (0..m)
+        .map(|slot| {
+            client_timing(
+                &link,
+                fleet.profile(slot),
+                slot,
+                slot,
+                4 * d,
+                4 * d,
+                0.25,
+                m,
+                m,
+                false,
+            )
+        })
+        .collect();
+
+    // clock layer: synchronous round keeps everyone, selection order
+    let outcome = resolve(&RoundPolicy::Synchronous, &timings);
+    assert_eq!(outcome.survivors, (0..m).collect::<Vec<_>>());
+    assert_eq!(outcome.dropped, 0);
+    assert_eq!(outcome.stragglers, 0);
+    // homogeneous: makespan is every client's (equal) arrival
+    assert!((outcome.makespan_s - timings[0].arrival_s()).abs() < 1e-15);
+
+    // aggregation layer vs the pre-refactor server fold
+    let mut pre = RunningAverage::new(d);
+    let mut agg = AggregatorKind::UniformMean.build(d);
+    for &i in &outcome.survivors {
+        pre.push(&updates[i]).unwrap();
+        agg.push(
+            &updates[i],
+            &UpdateMeta {
+                client: i,
+                n_samples: 128,
+                arrival_s: timings[i].arrival_s(),
+            },
+        )
+        .unwrap();
+    }
+    assert_eq!(pre.finish().unwrap(), agg.finish().unwrap());
+}
+
+// ---- device -> clock -> policy integration -----------------------------
+
+#[test]
+fn straggler_fleet_is_cut_by_deadline_and_fastest_m() {
+    let mut rng = Rng::new(105);
+    let n = 40;
+    let preset = DevicePreset::Stragglers {
+        frac: 0.25,
+        slowdown: 16.0,
+    };
+    let fleet = DeviceFleet::sample(n, &preset, 7);
+    let n_slow = fleet.n_slow();
+    assert!(n_slow > 0 && n_slow < n, "seed must give a mixed fleet");
+
+    let link = LinkModel::default();
+    let d = 4096;
+    let timings: Vec<_> = (0..n)
+        .map(|slot| {
+            // exact per-client bytes: vary them to prove no mean-flooring
+            let up = 4 * d + (rng.below(64) as usize);
+            client_timing(&link, fleet.profile(slot), slot, slot, up, 4 * d, 0.5, n, n, false)
+        })
+        .collect();
+
+    // a 16x straggler can never arrive within 2x the reference arrival
+    let reference_arrival = timings
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| fleet.profile(*i).compute_mult == 1.0)
+        .map(|(_, t)| t.arrival_s())
+        .fold(0.0, f64::max);
+    let deadline = RoundPolicy::Deadline {
+        t_max_s: reference_arrival * 2.0,
+    };
+    let out = resolve(&deadline, &timings);
+    assert_eq!(out.stragglers, n_slow);
+    assert_eq!(out.survivors.len(), n - n_slow);
+    assert_eq!(out.makespan_s, reference_arrival * 2.0);
+    // every survivor is a reference device
+    for &i in &out.survivors {
+        assert_eq!(fleet.profile(timings[i].client).compute_mult, 1.0);
+    }
+
+    // fastest-m with m = fast population: same survivor set
+    let fastest = resolve(&RoundPolicy::FastestM { m: n - n_slow }, &timings);
+    let mut a = out.survivors.clone();
+    let mut b = fastest.survivors.clone();
+    a.sort_unstable();
+    b.sort_unstable();
+    assert_eq!(a, b);
+    // fastest-m ends when its last survivor arrives, before the deadline
+    assert!(fastest.makespan_s <= out.makespan_s);
+}
+
+#[test]
+fn uplink_time_scales_with_exact_bytes() {
+    // The pre-refactor coordinator floored the *mean* upload size before
+    // computing air time; the clock layer must use each client's exact
+    // byte count instead.
+    let link = LinkModel {
+        uplink_bps: 8e6,
+        downlink_bps: 8e6,
+    };
+    let fleet = DeviceFleet::sample(2, &DevicePreset::Homogeneous, 1);
+    let a = client_timing(&link, fleet.profile(0), 0, 0, 1_000_000, 0, 0.0, 2, 2, false);
+    let b = client_timing(&link, fleet.profile(1), 1, 1, 1_000_001, 0, 0.0, 2, 2, false);
+    // 1 byte more at 4 Mbit/s per-client share = 2 microseconds more
+    assert!(b.uplink_s > a.uplink_s);
+    assert!((b.uplink_s - a.uplink_s - 2e-6).abs() < 1e-12);
+}
+
+#[test]
+fn dropouts_shrink_the_survivor_set_not_the_round() {
+    let fleet = DeviceFleet::sample(
+        8,
+        &DevicePreset::Iot {
+            sigma: 0.0,
+            dropout_p: 0.5,
+        },
+        3,
+    );
+    let link = LinkModel::default();
+    let timings: Vec<_> = (0..8)
+        .map(|slot| {
+            client_timing(
+                &link,
+                fleet.profile(slot),
+                slot,
+                slot,
+                1024,
+                1024,
+                0.1,
+                8,
+                5,
+                slot >= 5, // three devices vanished this round
+            )
+        })
+        .collect();
+    let out = resolve(&RoundPolicy::Synchronous, &timings);
+    assert_eq!(out.dropped, 3);
+    assert_eq!(out.stragglers, 0);
+    assert_eq!(out.survivors.len(), 5);
+    assert!(out.survivors.iter().all(|&i| i < 5));
+}

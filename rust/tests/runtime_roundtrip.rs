@@ -1,17 +1,14 @@
 //! Integration: HLO artifacts load, compile and execute through the PJRT
 //! engine, and the numbers agree with rust-side reference math.
 
+mod common;
+
 use hcfl::prelude::*;
 use hcfl::util::rng::Rng;
 
-fn engine() -> Engine {
-    Engine::from_artifacts(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"), 1)
-        .expect("run `make artifacts` first")
-}
-
 #[test]
 fn ternary_matches_reference() {
-    let eng = engine();
+    let Some(eng) = common::engine(1) else { return };
     let mut rng = Rng::new(1);
     let w: Vec<f32> = (0..256).map(|_| rng.normal() * 0.1).collect();
 
@@ -37,7 +34,7 @@ fn ternary_matches_reference() {
 
 #[test]
 fn ae_encode_decode_shapes_and_bounds() {
-    let eng = engine();
+    let Some(eng) = common::engine(1) else { return };
     let ae = eng.manifest().autoencoder(256, 8).unwrap().clone();
     let mut rng = Rng::new(2);
     // Untrained AE params: random small weights.
@@ -96,7 +93,7 @@ fn ae_encode_decode_shapes_and_bounds() {
 
 #[test]
 fn spec_mismatch_is_rejected() {
-    let eng = engine();
+    let Some(eng) = common::engine(1) else { return };
     // wrong shape
     let err = eng
         .call("ternary_c256", vec![TensorValue::vec_f32(vec![0.0; 5])])
@@ -111,11 +108,7 @@ fn spec_mismatch_is_rejected() {
 
 #[test]
 fn multi_worker_round_robin() {
-    let eng = Engine::from_artifacts(
-        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
-        2,
-    )
-    .unwrap();
+    let Some(eng) = common::engine(2) else { return };
     let w: Vec<f32> = (0..256).map(|i| (i as f32 - 128.0) / 128.0).collect();
     let a = eng
         .call("ternary_c256", vec![TensorValue::vec_f32(w.clone())])
@@ -129,11 +122,7 @@ fn multi_worker_round_robin() {
 
 #[test]
 fn parallel_callers_share_engine() {
-    let eng = Engine::from_artifacts(
-        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
-        2,
-    )
-    .unwrap();
+    let Some(eng) = common::engine(2) else { return };
     let handles: Vec<_> = (0..4)
         .map(|t| {
             let eng = eng.clone();
