@@ -38,7 +38,7 @@ fn main() -> hcfl::error::Result<()> {
     let mut noisy = Vec::new();
     let mut l_w = 0.0;
     for k in 0..k_max {
-        let out = trainer.train(&global, &data.shards[k], 1, 64, 0.05, &mut rng, k % 4)?;
+        let out = trainer.train(&global, &data.shard(k), 1, 64, 0.05, &mut rng, k % 4)?;
         // Mirror the run pipeline: delta-encode against the broadcast.
         let delta: Vec<f32> = out.params.iter().zip(&global).map(|(w, g)| w - g).collect();
         let upd = compressor.compress(&delta, k % 4)?;

@@ -1,17 +1,111 @@
-//! End-to-end round benchmarks: one full FedAvg communication round per
-//! compression scheme (the system-level numbers behind the paper's
-//! Tables I-III), plus the eq.-13 modelled air-time comparison.
+//! End-to-end round benchmarks: the worker-pool client stage at large m
+//! (pool vs the old spawn-per-client pattern), then one full FedAvg
+//! communication round per compression scheme (the system-level numbers
+//! behind the paper's Tables I-III) plus the eq.-13 modelled air-time
+//! comparison.
+//!
+//! The client-stage section is engine-free (fake training) and always
+//! runs; the per-scheme rounds need the `pjrt` feature + artifacts and
+//! skip themselves otherwise.
 //!
 //! Run with `cargo bench --bench round`.
 
-use hcfl::compression::Scheme;
+use std::sync::Arc;
+
+use hcfl::compression::{Compressor, Identity, Scheme};
 use hcfl::config::ExperimentConfig;
+use hcfl::coordinator::pool::{ClientPool, ClientRunner, FakeTrainRunner, RoundInputs, WorkSpec};
 use hcfl::coordinator::Simulation;
-use hcfl::data::DataSpec;
+use hcfl::data::{synthetic, DataSpec, Partition};
 use hcfl::network::LinkModel;
 use hcfl::prelude::*;
 use hcfl::util::bench::bench;
 use hcfl::util::cli::Args;
+
+/// The ISSUE's large-m client stage: m=1000 fake-train clients through
+/// the persistent pool at several sizes, against the pre-refactor
+/// spawn-one-thread-per-client pattern.  The per-client work is
+/// identical (seeded fake update + identity encode), so the difference
+/// is pure scheduling overhead.
+fn client_stage_bench(budget: f64) {
+    let d = 802;
+    let m = 1000;
+    println!("== client stage at m={m} (fake train, d={d}): worker pool vs spawn-per-client ==");
+    // Lazy fleet: the fake runner reads only shard row counts, so a
+    // 1000-client fleet costs a seed vector, not 1000 rendered shards.
+    let fleet = Arc::new(synthetic(
+        &DataSpec {
+            classes: 10,
+            n_clients: m,
+            per_client: 600,
+            test_n: 16,
+            server_n: 8,
+            partition: Partition::Iid,
+            size_skew: 0.0,
+            lazy_shards: true,
+        },
+        7,
+    ));
+    let runner: Arc<dyn ClientRunner> = Arc::new(FakeTrainRunner::new(
+        Arc::new(Identity) as Arc<dyn Compressor>,
+        fleet,
+    ));
+    let global = Arc::new(vec![0.1f32; d]);
+    let specs: Vec<WorkSpec> = (0..m)
+        .map(|slot| WorkSpec {
+            slot,
+            client: slot,
+            seed: 0x5EED ^ ((slot as u64) << 1),
+        })
+        .collect();
+    let round = |global: &Arc<Vec<f32>>| RoundInputs {
+        global: Arc::clone(global),
+        epochs: 1,
+        batch: 16,
+        lr: 0.05,
+        encode_deltas: true,
+    };
+
+    for threads in [1usize, 4, 16] {
+        let pool = ClientPool::new(Arc::clone(&runner), threads, threads).unwrap();
+        bench(
+            &format!("client stage m={m} [pool x{threads}]"),
+            budget,
+            50,
+            || {
+                let msgs = pool.run_clients(round(&global), &specs).unwrap();
+                assert_eq!(msgs.len(), m);
+            },
+        );
+    }
+
+    bench(
+        &format!("client stage m={m} [spawn-per-client]"),
+        budget,
+        50,
+        || {
+            let inputs = round(&global);
+            let mut done = 0usize;
+            std::thread::scope(|s| {
+                let (tx, rx) = std::sync::mpsc::channel();
+                for spec in &specs {
+                    let tx = tx.clone();
+                    let runner = &runner;
+                    let inputs = &inputs;
+                    s.spawn(move || {
+                        let _ = tx.send(runner.run(spec, inputs, 0));
+                    });
+                }
+                drop(tx);
+                for msg in rx {
+                    msg.unwrap();
+                    done += 1;
+                }
+            });
+            assert_eq!(done, m);
+        },
+    );
+}
 
 fn bench_cfg(scheme: Scheme, workers: usize) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::quickstart();
@@ -21,12 +115,16 @@ fn bench_cfg(scheme: Scheme, workers: usize) -> ExperimentConfig {
     cfg.rounds = 1;
     cfg.local_epochs = 1;
     cfg.engine_workers = workers;
+    cfg.client_threads = workers;
     cfg.data = DataSpec {
         classes: 10,
         n_clients: 8,
         per_client: 600,
         test_n: 512,
         server_n: 600,
+        partition: Partition::Iid,
+        size_skew: 0.0,
+        lazy_shards: false,
     };
     cfg.ae.steps = 60; // bench measures the round loop, not AE training
     cfg.ae.premodel_epochs = 2;
@@ -38,13 +136,25 @@ fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
     let workers = args.usize_or("workers", 4).unwrap();
     let budget = args.f64_or("budget", 5.0).unwrap();
-    let engine = Engine::from_artifacts(
-        args.str_or("artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")),
-        workers,
-    )
-    .expect("run `make artifacts` first");
 
-    println!("== end-to-end round benchmarks (4 clients/round, LeNet-5, {workers} engine workers) ==");
+    client_stage_bench(budget);
+
+    if !hcfl::runtime::pjrt_enabled() {
+        eprintln!("skipping per-scheme round benchmarks: built without the `pjrt` feature");
+        return;
+    }
+    let artifacts = args
+        .str_or("artifacts", concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .to_string();
+    if !std::path::Path::new(&artifacts).join("manifest.json").is_file() {
+        eprintln!("skipping per-scheme round benchmarks: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::from_artifacts(&artifacts, workers).expect("artifacts load");
+
+    println!(
+        "\n== end-to-end round benchmarks (4 clients/round, LeNet-5, {workers} engine workers) =="
+    );
     let schemes = [
         Scheme::Fedavg,
         Scheme::Ternary,

@@ -62,6 +62,23 @@ impl TernaryCompressor {
         let n_chunks = d.div_ceil(chunk);
         d.div_ceil(4) + 4 * n_chunks
     }
+
+    /// Pure-Rust inverse of the wire payload: concatenated `q * alpha`
+    /// per chunk.  Used by [`Compressor::decompress`] and by the
+    /// engine-free codec property tests.
+    pub fn decode_chunks(chunks: &[TernaryChunk], d: usize) -> Result<Vec<f32>> {
+        let mut flat = Vec::with_capacity(d);
+        for c in chunks {
+            flat.extend(c.q.iter().map(|&q| q as f32 * c.alpha));
+        }
+        if flat.len() != d {
+            return Err(HcflError::Config(format!(
+                "ternary payload covers {} of {d} weights",
+                flat.len()
+            )));
+        }
+        Ok(flat)
+    }
 }
 
 impl Compressor for TernaryCompressor {
@@ -112,17 +129,7 @@ impl Compressor for TernaryCompressor {
                 ))
             }
         };
-        let mut flat = Vec::with_capacity(d);
-        for c in chunks {
-            flat.extend(c.q.iter().map(|&q| q as f32 * c.alpha));
-        }
-        if flat.len() != d {
-            return Err(HcflError::Config(format!(
-                "ternary payload covers {} of {d} weights",
-                flat.len()
-            )));
-        }
-        Ok(flat)
+        Self::decode_chunks(chunks, d)
     }
 }
 

@@ -126,8 +126,20 @@ pub struct ExperimentConfig {
     /// 8 for the paper's EMNIST dense segmentation, 1 otherwise.
     pub dense_parts: usize,
     pub seed: u64,
-    /// PJRT engine worker threads (simulated-client parallelism).
+    /// PJRT engine worker threads (executable caches / PJRT clients).
     pub engine_workers: usize,
+    /// Client-stage worker pool size: persistent threads that execute
+    /// surviving clients' train+encode work each round (no per-client
+    /// spawns).  Round results are bit-identical for any value; size it
+    /// to the host's cores for throughput.
+    pub client_threads: usize,
+    /// Replace engine-backed local training with a deterministic
+    /// pure-Rust fake update (global + seeded noise) and skip
+    /// evaluation.  Lets the full round pipeline — pool, device layer,
+    /// clock, aggregation, accounting — run without PJRT artifacts (CI
+    /// smoke runs, large-m benches, determinism tests).  Requires an
+    /// engine-free scheme (fedavg / topk).
+    pub fake_train: bool,
     pub data: DataSpec,
     pub ae: AeTrainConfig,
     /// Reuse trained AEs from `<artifacts>/cache` when available.
@@ -172,6 +184,8 @@ impl ExperimentConfig {
             dense_parts: 1,
             seed: 7,
             engine_workers: 2,
+            client_threads: 2,
+            fake_train: false,
             data: DataSpec::mnist(8),
             ae: AeTrainConfig::default(),
             use_ae_cache: true,
@@ -196,6 +210,8 @@ impl ExperimentConfig {
             dense_parts: 1,
             seed: 42,
             engine_workers: 4,
+            client_threads: 4,
+            fake_train: false,
             data: DataSpec::mnist(100),
             ae: AeTrainConfig::default(),
             use_ae_cache: true,
@@ -220,6 +236,8 @@ impl ExperimentConfig {
             dense_parts: 8,
             seed: 42,
             engine_workers: 4,
+            client_threads: 4,
+            fake_train: false,
             data: DataSpec::emnist(100),
             ae: AeTrainConfig::default(),
             use_ae_cache: true,
@@ -276,6 +294,34 @@ impl ExperimentConfig {
         }
         if self.dense_parts == 0 {
             return Err(HcflError::Config("dense_parts must be >= 1".into()));
+        }
+        if self.client_threads == 0 {
+            return Err(HcflError::Config("client_threads must be >= 1".into()));
+        }
+        self.data.partition.validate(self.data.classes)?;
+        let skew = self.data.size_skew;
+        if !skew.is_finite() || !(0.0..=0.5).contains(&skew) {
+            return Err(HcflError::Config(format!(
+                "size_skew must be in [0, 0.5], got {skew}"
+            )));
+        }
+        if skew > 0.0 {
+            // Worst-case shard under largest-remainder apportionment;
+            // every shard must still form at least one training batch.
+            let min_rows =
+                (self.data.per_client as f64 * (1.0 - skew) / (1.0 + skew)).floor() as usize;
+            if min_rows.saturating_sub(1) < self.batch {
+                return Err(HcflError::Config(format!(
+                    "size_skew {skew} can shrink a {}-row shard below batch {}",
+                    self.data.per_client, self.batch
+                )));
+            }
+        }
+        if self.fake_train && !matches!(self.scheme, Scheme::Fedavg | Scheme::TopK { .. }) {
+            return Err(HcflError::Config(format!(
+                "fake_train supports only engine-free schemes (fedavg/topk), got {}",
+                self.scheme.label()
+            )));
         }
         self.scenario.validate()?;
         Ok(())

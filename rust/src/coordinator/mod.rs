@@ -7,16 +7,21 @@
 //!    tables count both directions encoded, see [`broadcast`];
 //! 2. **device layer** — each selected client's [`DeviceProfile`] decides
 //!    whether it drops out this round (seeded, per-round stream);
-//! 3. **client stage** — surviving clients train locally **in parallel**
-//!    (one OS thread per client, pinned round-robin to PJRT engine
-//!    workers for executable-cache affinity) and encode their updates;
+//! 3. **client stage** ([`pool`]) — surviving clients train locally and
+//!    encode their updates on a persistent pool of `client_threads`
+//!    workers (each pinned to a PJRT engine worker for executable-cache
+//!    affinity).  A round enqueues one seeded [`pool::WorkSpec`] per
+//!    survivor and performs **zero thread spawns**, so m=1000 rounds at
+//!    K=10k cost the same scheduling overhead as m=4; results are
+//!    bit-identical for any pool size;
 //! 4. **round clock** ([`clock`]) — exact per-client byte counts and
 //!    device profiles become modelled compute + air times, and the
 //!    configured [`clock::RoundPolicy`] picks the surviving uploads and
 //!    the round makespan;
 //! 5. **aggregation** — survivors are decoded in modelled arrival order
 //!    and folded through the configured [`crate::fl::Aggregator`];
-//! 6. **evaluation** — the installed global model is scored.
+//! 6. **evaluation** — the installed global model is scored (skipped in
+//!    `fake_train` smoke mode, which has no engine to score on).
 //!
 //! Compute times in [`RoundRecord`] are measured; air times come from the
 //! link model (eq. 13) scaled by per-device rate multipliers.
@@ -24,13 +29,17 @@
 //! [`DeviceProfile`]: crate::network::DeviceProfile
 
 pub mod clock;
+pub mod pool;
 
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::time::Instant;
 
+use self::pool::{
+    ClientMsg, ClientPool, ClientRunner, FakeTrainRunner, RoundInputs, TrainEncodeRunner,
+    WorkSpec,
+};
 use crate::compression::{
-    CompressedUpdate, Compressor, HcflCompressor, Identity, Scheme, TernaryCompressor,
-    TopKCompressor,
+    Compressor, HcflCompressor, Identity, Scheme, TernaryCompressor, TopKCompressor,
 };
 use crate::config::ExperimentConfig;
 use crate::coordinator::clock::{client_timing, resolve, ClientTiming};
@@ -45,28 +54,16 @@ use crate::runtime::Engine;
 use crate::util::rng::Rng;
 use crate::util::stats;
 
-struct ClientMsg {
-    /// Selection slot of the sender (index into the round's selection).
-    slot: usize,
-    update: CompressedUpdate,
-    /// Exact post-training parameters (simulation-only side channel used
-    /// to measure reconstruction error at the server).
-    exact: Vec<f32>,
-    /// Samples on the client's shard (FedAvg n_k).
-    n_samples: usize,
-    /// Measured local train + encode wall time, seconds.
-    train_s: f64,
-}
-
 /// A fully-wired FL simulation.
 pub struct Simulation {
     engine: Engine,
     pub cfg: ExperimentConfig,
-    pub data: FlData,
+    pub data: Arc<FlData>,
     compressor: Arc<dyn Compressor>,
     trainer: LocalTrainer,
     server: Server,
     fleet: DeviceFleet,
+    pool: ClientPool,
     rng: Rng,
     /// Print one line per round to stderr.
     pub verbose: bool,
@@ -74,13 +71,13 @@ pub struct Simulation {
 
 impl Simulation {
     /// Build the simulation: generate data, sample the device fleet, spin
-    /// up the compressor (training autoencoders for HCFL schemes),
-    /// initialize the server.
+    /// up the compressor (training autoencoders for HCFL schemes), the
+    /// client worker pool, and the server.
     pub fn new(engine: &Engine, cfg: ExperimentConfig) -> Result<Simulation> {
         cfg.validate(engine.manifest())?;
         let mut data_spec = cfg.data.clone();
         data_spec.n_clients = cfg.n_clients;
-        let data = synthetic(&data_spec, cfg.seed);
+        let data = Arc::new(synthetic(&data_spec, cfg.seed));
         let trainer = LocalTrainer::new(engine, &cfg.model)?;
         let mut rng = Rng::new(cfg.seed);
         let server = Server::new(&trainer.model, &mut rng);
@@ -88,6 +85,19 @@ impl Simulation {
         // The HCFL pre-model must start from this run's actual init so
         // the compressor is trained on the trajectory it will compress.
         let compressor = build_compressor(engine, &cfg, &data, &server.global.flat)?;
+        let runner: Arc<dyn ClientRunner> = if cfg.fake_train {
+            Arc::new(FakeTrainRunner::new(
+                Arc::clone(&compressor),
+                Arc::clone(&data),
+            ))
+        } else {
+            Arc::new(TrainEncodeRunner::new(
+                trainer.clone(),
+                Arc::clone(&compressor),
+                Arc::clone(&data),
+            ))
+        };
+        let pool = ClientPool::new(runner, cfg.client_threads, engine.n_workers())?;
         Ok(Simulation {
             engine: engine.clone(),
             cfg,
@@ -96,6 +106,7 @@ impl Simulation {
             trainer,
             server,
             fleet,
+            pool,
             rng,
             verbose: false,
         })
@@ -110,9 +121,19 @@ impl Simulation {
         &self.compressor
     }
 
+    /// The engine this simulation runs on.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
     /// The sampled device population.
     pub fn fleet(&self) -> &DeviceFleet {
         &self.fleet
+    }
+
+    /// Client-stage pool size.
+    pub fn client_threads(&self) -> usize {
+        self.pool.n_threads()
     }
 
     /// Run all configured rounds.
@@ -171,61 +192,31 @@ impl Simulation {
             .map(|&k| drop_rng.next_f64() < self.fleet.profile(k).dropout_p)
             .collect();
 
-        // ---- stage 3: parallel client updates --------------------------
-        let (tx, rx) = mpsc::channel::<Result<ClientMsg>>();
-        let trainer = &self.trainer;
-        let compressor = &self.compressor;
-        let data = &self.data;
-        let cfg = &self.cfg;
-        let n_workers = self.engine.n_workers();
-
+        // ---- stage 3: client stage through the worker pool -------------
+        // One seeded work item per surviving client; no thread spawns.
+        let specs: Vec<WorkSpec> = selected
+            .iter()
+            .enumerate()
+            .filter(|&(slot, _)| !dropped[slot])
+            .map(|(slot, &k)| WorkSpec {
+                slot,
+                client: k,
+                seed: round_seed ^ ((k as u64) << 1),
+            })
+            .collect();
+        let round_inputs = RoundInputs {
+            global: Arc::clone(&global_recv),
+            epochs: self.cfg.local_epochs,
+            batch: self.cfg.batch,
+            lr: self.cfg.lr,
+            encode_deltas: self.cfg.encode_deltas,
+        };
         let mut msgs: Vec<Option<ClientMsg>> = Vec::with_capacity(m);
         msgs.resize_with(m, || None);
-        std::thread::scope(|s| -> Result<()> {
-            for (slot, &k) in selected.iter().enumerate() {
-                if dropped[slot] {
-                    continue;
-                }
-                let tx = tx.clone();
-                let global_recv = Arc::clone(&global_recv);
-                s.spawn(move || {
-                    let worker = slot % n_workers;
-                    let mut crng = Rng::new(round_seed ^ ((k as u64) << 1));
-                    let started = Instant::now();
-                    let result = (|| -> Result<ClientMsg> {
-                        let out = trainer.train(
-                            &global_recv,
-                            &data.shards[k],
-                            cfg.local_epochs,
-                            cfg.batch,
-                            cfg.lr,
-                            &mut crng,
-                            worker,
-                        )?;
-                        let payload =
-                            encode_payload(&out.params, &global_recv, cfg.encode_deltas);
-                        let update = compressor.compress(&payload, worker)?;
-                        Ok(ClientMsg {
-                            slot,
-                            update,
-                            exact: out.params,
-                            n_samples: data.shards[k].n,
-                            train_s: started.elapsed().as_secs_f64(),
-                        })
-                    })();
-                    let _ = tx.send(result);
-                });
-            }
-            drop(tx);
-            for msg in rx {
-                // Propagate the first client failure as-is (the error
-                // already carries its own kind and message).
-                let msg = msg?;
-                let slot = msg.slot;
-                msgs[slot] = Some(msg);
-            }
-            Ok(())
-        })?;
+        for msg in self.pool.run_clients(round_inputs, &specs)? {
+            let slot = msg.slot;
+            msgs[slot] = Some(msg);
+        }
 
         // ---- stage 4: round clock --------------------------------------
         // Modelled compute time = the round's reference compute time (mean
@@ -283,9 +274,14 @@ impl Simulation {
         // wasted air time and the global model carries over unchanged.
 
         // ---- stage 6: evaluation ---------------------------------------
-        let (accuracy, loss) =
+        let (accuracy, loss) = if self.cfg.fake_train {
+            // Fake training has no engine to score on; the smoke pipeline
+            // measures traffic, participation and timing — not learning.
+            (0.0, 0.0)
+        } else {
             self.trainer
-                .evaluate(&self.server.global.flat, &self.data.test, 0)?;
+                .evaluate(&self.server.global.flat, &self.data.test, 0)?
+        };
 
         // Cost accounting (clock layer outputs, exact per-client bytes):
         // every transmitting client's upload hits the air even when the

@@ -1,0 +1,279 @@
+//! Persistent worker-pool client stage.
+//!
+//! The pre-pool coordinator spawned one OS thread per selected client per
+//! round, which caps the `scenarios` sweep far below the paper's K=10k
+//! regime (m=1000 surviving clients meant 1000 thread spawns *per
+//! round*).  The pool spawns `client_threads` workers once per
+//! [`crate::coordinator::Simulation`]; every round pushes one
+//! [`WorkSpec`] per surviving client onto a shared queue and collects
+//! exactly as many [`ClientMsg`]s back — zero spawns on the round path.
+//!
+//! Determinism: a work item carries its selection slot and its private
+//! RNG seed (`round_seed ^ (client_id << 1)`, unchanged from the
+//! spawn-per-client implementation), so a client's result never depends
+//! on which pool thread ran it, in what order, or how many threads
+//! exist — per-round results are bit-identical for any pool size
+//! (guarded by `tests/pool_determinism.rs`).  Each pool thread pins to
+//! one PJRT engine worker (`thread_idx % engine_workers`) so per-worker
+//! executable caches stay warm across rounds.
+
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::compression::{CompressedUpdate, Compressor};
+use crate::coordinator::encode_payload;
+use crate::data::FlData;
+use crate::error::{HcflError, Result};
+use crate::fl::LocalTrainer;
+use crate::util::rng::Rng;
+
+/// One client's contribution to a round, as reported by the client stage.
+pub struct ClientMsg {
+    /// Selection slot of the sender (index into the round's selection).
+    pub slot: usize,
+    pub update: CompressedUpdate,
+    /// Exact post-training parameters (simulation-only side channel used
+    /// to measure reconstruction error at the server).
+    pub exact: Vec<f32>,
+    /// Samples on the client's shard (FedAvg n_k).
+    pub n_samples: usize,
+    /// Measured local train + encode wall time, seconds.
+    pub train_s: f64,
+}
+
+/// One unit of client work; everything that identifies the computation,
+/// so results are independent of scheduling.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkSpec {
+    /// Selection slot within the round.
+    pub slot: usize,
+    /// Global client id.
+    pub client: usize,
+    /// The client's private RNG seed for this round.
+    pub seed: u64,
+}
+
+/// Round-constant inputs shared by every work item of one round.
+pub struct RoundInputs {
+    /// The broadcast global model every client starts from.
+    pub global: Arc<Vec<f32>>,
+    /// Local epochs E.
+    pub epochs: usize,
+    /// Local mini-batch size B.
+    pub batch: usize,
+    pub lr: f32,
+    /// Put `Δ = w_local − w_broadcast` on the wire instead of raw weights.
+    pub encode_deltas: bool,
+}
+
+/// What a pool thread does with one work item.
+pub trait ClientRunner: Send + Sync {
+    fn run(&self, spec: &WorkSpec, round: &RoundInputs, engine_worker: usize)
+        -> Result<ClientMsg>;
+}
+
+struct WorkItem {
+    spec: WorkSpec,
+    round: Arc<RoundInputs>,
+    reply: mpsc::Sender<Result<ClientMsg>>,
+}
+
+/// A fixed pool of client-stage worker threads over a shared work queue.
+pub struct ClientPool {
+    tx: Option<mpsc::Sender<WorkItem>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ClientPool {
+    /// Spawn `threads` workers (>= 1), each pinned to engine worker
+    /// `thread_idx % engine_workers`.
+    pub fn new(
+        runner: Arc<dyn ClientRunner>,
+        threads: usize,
+        engine_workers: usize,
+    ) -> Result<ClientPool> {
+        let threads = threads.max(1);
+        let engine_workers = engine_workers.max(1);
+        let (tx, rx) = mpsc::channel::<WorkItem>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let rx = Arc::clone(&rx);
+            let runner = Arc::clone(&runner);
+            let engine_worker = w % engine_workers;
+            let join = std::thread::Builder::new()
+                .name(format!("client-pool-{w}"))
+                .spawn(move || loop {
+                    // Hold the queue lock only while dequeuing; recv
+                    // blocks between rounds and ends when the pool drops.
+                    let item = {
+                        let Ok(queue) = rx.lock() else { break };
+                        match queue.recv() {
+                            Ok(item) => item,
+                            Err(_) => break,
+                        }
+                    };
+                    let result = runner.run(&item.spec, &item.round, engine_worker);
+                    // A dead receiver means the round was abandoned.
+                    let _ = item.reply.send(result);
+                })
+                .map_err(|e| HcflError::Engine(format!("client pool spawn failed: {e}")))?;
+            workers.push(join);
+        }
+        Ok(ClientPool {
+            tx: Some(tx),
+            workers,
+        })
+    }
+
+    /// Pool size.
+    pub fn n_threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run one round's client stage: enqueue every spec, collect exactly
+    /// as many results.  Results come back in completion order — callers
+    /// index by `ClientMsg::slot`.  On failure the whole batch is drained
+    /// first (so no stale reply can leak into a later round), then the
+    /// first error is returned.
+    pub fn run_clients(&self, round: RoundInputs, specs: &[WorkSpec]) -> Result<Vec<ClientMsg>> {
+        let round = Arc::new(round);
+        let (reply_tx, reply_rx) = mpsc::channel::<Result<ClientMsg>>();
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| HcflError::Engine("client pool is shut down".into()))?;
+        for &spec in specs {
+            tx.send(WorkItem {
+                spec,
+                round: Arc::clone(&round),
+                reply: reply_tx.clone(),
+            })
+            .map_err(|_| HcflError::Engine("client pool queue disconnected".into()))?;
+        }
+        drop(reply_tx);
+        let mut out = Vec::with_capacity(specs.len());
+        let mut first_err: Option<HcflError> = None;
+        for _ in 0..specs.len() {
+            let reply = reply_rx
+                .recv()
+                .map_err(|_| HcflError::Engine("client pool worker vanished".into()))?;
+            match reply {
+                Ok(msg) => out.push(msg),
+                Err(e) => first_err = first_err.or(Some(e)),
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for ClientPool {
+    fn drop(&mut self) {
+        self.tx.take(); // closes the queue; workers exit at the next recv
+        for join in self.workers.drain(..) {
+            let _ = join.join();
+        }
+    }
+}
+
+/// The real client stage: local SGD through the engine, then wire
+/// encoding, exactly as the spawn-per-client implementation did.
+pub struct TrainEncodeRunner {
+    trainer: LocalTrainer,
+    compressor: Arc<dyn Compressor>,
+    data: Arc<FlData>,
+}
+
+impl TrainEncodeRunner {
+    pub fn new(
+        trainer: LocalTrainer,
+        compressor: Arc<dyn Compressor>,
+        data: Arc<FlData>,
+    ) -> TrainEncodeRunner {
+        TrainEncodeRunner {
+            trainer,
+            compressor,
+            data,
+        }
+    }
+}
+
+impl ClientRunner for TrainEncodeRunner {
+    fn run(
+        &self,
+        spec: &WorkSpec,
+        round: &RoundInputs,
+        engine_worker: usize,
+    ) -> Result<ClientMsg> {
+        let shard = self.data.shard(spec.client);
+        let mut crng = Rng::new(spec.seed);
+        let started = Instant::now();
+        let out = self.trainer.train(
+            &round.global,
+            &shard,
+            round.epochs,
+            round.batch,
+            round.lr,
+            &mut crng,
+            engine_worker,
+        )?;
+        let payload = encode_payload(&out.params, &round.global, round.encode_deltas);
+        let update = self.compressor.compress(&payload, engine_worker)?;
+        Ok(ClientMsg {
+            slot: spec.slot,
+            update,
+            exact: out.params,
+            n_samples: shard.n,
+            train_s: started.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Engine-free stand-in for local training: the "update" is the global
+/// model plus seeded Gaussian noise scaled by the learning rate.
+/// Deterministic in the work item's seed, so it drives the full
+/// pool → clock → aggregation pipeline (CI smoke runs, large-m benches,
+/// determinism tests) without PJRT artifacts.  Shard pixels are never
+/// rendered — only the client's row count is read (FedAvg `n_k` for the
+/// aggregation layer), so a lazy K=10k fleet costs nothing here.
+pub struct FakeTrainRunner {
+    compressor: Arc<dyn Compressor>,
+    data: Arc<FlData>,
+}
+
+impl FakeTrainRunner {
+    pub fn new(compressor: Arc<dyn Compressor>, data: Arc<FlData>) -> FakeTrainRunner {
+        FakeTrainRunner { compressor, data }
+    }
+}
+
+impl ClientRunner for FakeTrainRunner {
+    fn run(
+        &self,
+        spec: &WorkSpec,
+        round: &RoundInputs,
+        engine_worker: usize,
+    ) -> Result<ClientMsg> {
+        let mut crng = Rng::new(spec.seed);
+        let started = Instant::now();
+        let scale = round.lr * (round.epochs.max(1) as f32).sqrt() * 0.1;
+        let params: Vec<f32> = round
+            .global
+            .iter()
+            .map(|g| g + scale * crng.normal())
+            .collect();
+        let payload = encode_payload(&params, &round.global, round.encode_deltas);
+        let update = self.compressor.compress(&payload, engine_worker)?;
+        Ok(ClientMsg {
+            slot: spec.slot,
+            update,
+            exact: params,
+            n_samples: self.data.shard_rows(spec.client),
+            train_s: started.elapsed().as_secs_f64(),
+        })
+    }
+}

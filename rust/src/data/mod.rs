@@ -4,13 +4,25 @@
 //! grayscale class-conditional images: each class owns a procedural
 //! template of oriented strokes (drawn from a class-seeded PRNG) and each
 //! sample perturbs the template with translation, per-stroke jitter and
-//! pixel noise.  The result is an IID, easily-learnable-but-not-trivial
+//! pixel noise.  The result is an easily-learnable-but-not-trivial
 //! classification task with exactly the tensor shapes of the paper's
 //! datasets — which is all the paper's evaluation uses them for.
+//!
+//! How samples distribute over clients is the [`Partition`] layer's job:
+//! IID (paper §II-A, the default), McMahan-style label shards, or
+//! Dirichlet class proportions.  Shards can be materialized up front
+//! (`Eager`, small K) or regenerated per access from per-shard seeds
+//! (`Lazy`, the K=10k regime — an eager MNIST-geometry fleet at K=10k
+//! would hold ~19 GB of pixels).  Both modes are bit-identical.
 
+mod partition;
 mod synth;
 
+pub use partition::{label_entropy, Partition};
 pub use synth::{render_sample, ClassTemplate};
+
+use std::borrow::Cow;
+use std::sync::Arc;
 
 use crate::error::{HcflError, Result};
 use crate::util::rng::Rng;
@@ -84,6 +96,20 @@ pub struct DataSpec {
     pub test_n: usize,
     /// Small server-side dataset for HCFL pre-model training (§III-D).
     pub server_n: usize,
+    /// How client shards relate to the global label distribution.
+    pub partition: Partition,
+    /// Shard-size heterogeneity in [0, 0.5]: client `k` holds a share of
+    /// the total sample budget proportional to `1 + size_skew · u_k`
+    /// with seeded `u_k ~ U[-1, 1)`, apportioned by largest remainder so
+    /// the total is conserved exactly (`n_clients · per_client` rows).
+    /// 0 (default) keeps every shard at exactly `per_client` rows — with
+    /// equal shards, `SampleWeighted` aggregation degenerates to the
+    /// uniform mean, so the non-IID arms set this to see the difference.
+    pub size_skew: f64,
+    /// Regenerate shards on demand from per-shard seeds instead of
+    /// materializing all of them up front.  Mandatory at the K=10k
+    /// regime; bit-identical to eager generation.
+    pub lazy_shards: bool,
 }
 
 impl DataSpec {
@@ -95,6 +121,9 @@ impl DataSpec {
             per_client: 600,
             test_n: 1024,
             server_n: 600,
+            partition: Partition::Iid,
+            size_skew: 0.0,
+            lazy_shards: false,
         }
     }
 
@@ -106,27 +135,196 @@ impl DataSpec {
             per_client: 1128,
             test_n: 1024,
             server_n: 1128,
+            partition: Partition::Iid,
+            size_skew: 0.0,
+            lazy_shards: false,
         }
     }
 }
 
-/// The full federated data layout: IID client shards + test + server set.
+/// The full federated data layout: client shards (eager or lazy) plus
+/// the IID test and server sets.
 #[derive(Debug, Clone)]
 pub struct FlData {
-    pub shards: Vec<Dataset>,
+    shards: ShardSource,
     pub test: Dataset,
     pub server: Dataset,
     pub spec: DataSpec,
 }
 
-/// Generate the synthetic federated dataset.  Every shard is IID: samples
-/// are drawn from the same class-template distribution with a per-shard
-/// RNG stream (paper §II-A assumes IID clients).
+#[derive(Debug, Clone)]
+enum ShardSource {
+    /// All shards materialized (laptop-scale K).
+    Eager(Vec<Dataset>),
+    /// Shards rebuilt per access from per-shard seeds (the K=10k regime).
+    Lazy(ShardGen),
+}
+
+/// Deterministic per-shard generator: everything needed to rebuild any
+/// client's shard in isolation, bit-identical to eager generation.
+#[derive(Debug, Clone)]
+struct ShardGen {
+    templates: Arc<Vec<ClassTemplate>>,
+    partition: Partition,
+    classes: usize,
+    /// Per-shard row counts (all equal to `per_client` unless
+    /// `size_skew` > 0; total always `n_clients * per_client`).
+    sizes: Arc<Vec<usize>>,
+    /// Per-shard RNG seeds, precomputed so shard `k` never depends on
+    /// generating shards `0..k` first.
+    seeds: Arc<Vec<u64>>,
+}
+
+impl ShardGen {
+    fn generate(&self, k: usize) -> Dataset {
+        let mut rng = Rng::new(self.seeds[k]);
+        generate_shard(
+            &self.partition,
+            &self.templates,
+            self.classes,
+            self.sizes[k],
+            &mut rng,
+        )
+    }
+}
+
+/// Apportion the total sample budget over clients: equal shards for
+/// `size_skew == 0`, otherwise largest-remainder rounding of seeded
+/// weights `1 + size_skew · U[-1, 1)` — the total is conserved exactly
+/// and the draw comes from its own stream, so shard seeds, templates and
+/// the test/server sets never move when the skew changes.
+fn shard_sizes(spec: &DataSpec, seed: u64) -> Vec<usize> {
+    let total = spec.n_clients * spec.per_client;
+    if spec.size_skew == 0.0 || spec.n_clients == 0 {
+        return vec![spec.per_client; spec.n_clients];
+    }
+    let mut rng = Rng::new(seed ^ 0x517E_0F5E_ED00_0001);
+    let weights: Vec<f64> = (0..spec.n_clients)
+        .map(|_| 1.0 + spec.size_skew * (2.0 * rng.next_f64() - 1.0))
+        .collect();
+    let weight_sum: f64 = weights.iter().sum();
+    let mut sizes = Vec::with_capacity(spec.n_clients);
+    let mut remainders: Vec<(f64, usize)> = Vec::with_capacity(spec.n_clients);
+    let mut assigned = 0usize;
+    for (k, w) in weights.iter().enumerate() {
+        let exact = total as f64 * w / weight_sum;
+        let floor = exact.floor() as usize;
+        sizes.push(floor);
+        assigned += floor;
+        remainders.push((exact - floor as f64, k));
+    }
+    // hand the leftover rows to the largest remainders (ties by client id)
+    remainders.sort_by(|a, b| {
+        b.0.partial_cmp(&a.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.1.cmp(&b.1))
+    });
+    let mut leftover = total - assigned;
+    for &(_, k) in &remainders {
+        if leftover == 0 {
+            break;
+        }
+        sizes[k] += 1;
+        leftover -= 1;
+    }
+    sizes
+}
+
+fn generate_shard(
+    partition: &Partition,
+    templates: &[ClassTemplate],
+    classes: usize,
+    per_client: usize,
+    rng: &mut Rng,
+) -> Dataset {
+    let mut x = Vec::with_capacity(per_client * IMG_DIM);
+    let mut y = Vec::with_capacity(per_client);
+    match partition {
+        // The pre-partition IID stream, preserved bit for bit: label draw
+        // and render interleave per sample.
+        Partition::Iid => {
+            for _ in 0..per_client {
+                let c = rng.below(classes);
+                x.extend_from_slice(&render_sample(&templates[c], rng));
+                y.push(c as i32);
+            }
+        }
+        p => {
+            let labels = p.client_labels(classes, per_client, rng);
+            for &c in &labels {
+                x.extend_from_slice(&render_sample(&templates[c], rng));
+                y.push(c as i32);
+            }
+        }
+    }
+    Dataset {
+        x,
+        y,
+        n: per_client,
+        dim: IMG_DIM,
+        classes,
+    }
+}
+
+impl FlData {
+    /// Client `k`'s shard: borrowed when eager, regenerated when lazy.
+    pub fn shard(&self, k: usize) -> Cow<'_, Dataset> {
+        match &self.shards {
+            ShardSource::Eager(v) => Cow::Borrowed(&v[k]),
+            ShardSource::Lazy(g) => Cow::Owned(g.generate(k)),
+        }
+    }
+
+    /// Number of client shards.
+    pub fn n_shards(&self) -> usize {
+        self.spec.n_clients
+    }
+
+    /// Rows on client `k`'s shard (FedAvg `n_k`), without generating it.
+    pub fn shard_rows(&self, k: usize) -> usize {
+        match &self.shards {
+            ShardSource::Eager(v) => v[k].n,
+            ShardSource::Lazy(g) => g.sizes[k],
+        }
+    }
+
+    /// Whether shards are rebuilt per access instead of held in memory.
+    pub fn is_lazy(&self) -> bool {
+        matches!(self.shards, ShardSource::Lazy(_))
+    }
+}
+
+/// Generate the synthetic federated dataset.  Client shards follow the
+/// spec's [`Partition`]; the test and server sets always sample the
+/// global IID mix (they model the server's own data, paper §III-D).
 pub fn synthetic(spec: &DataSpec, seed: u64) -> FlData {
     let mut root = Rng::new(seed ^ 0x5EED_DA7A);
-    let templates: Vec<ClassTemplate> = (0..spec.classes)
-        .map(|c| ClassTemplate::new(seed, c))
-        .collect();
+    let templates: Arc<Vec<ClassTemplate>> = Arc::new(
+        (0..spec.classes)
+            .map(|c| ClassTemplate::new(seed, c))
+            .collect(),
+    );
+
+    // Per-shard seeds reproduce the historical `root.fork(k + 1)` stream
+    // exactly, but are precomputed so a lazy source can rebuild shard k
+    // in isolation (and so eager == lazy bit for bit).
+    let seeds: Arc<Vec<u64>> = Arc::new(
+        (0..spec.n_clients)
+            .map(|k| root.next_u64() ^ (k as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .collect(),
+    );
+    let shard_gen = ShardGen {
+        templates: Arc::clone(&templates),
+        partition: spec.partition.clone(),
+        classes: spec.classes,
+        sizes: Arc::new(shard_sizes(spec, seed)),
+        seeds,
+    };
+    let shards = if spec.lazy_shards {
+        ShardSource::Lazy(shard_gen)
+    } else {
+        ShardSource::Eager((0..spec.n_clients).map(|k| shard_gen.generate(k)).collect())
+    };
 
     let make_set = |n: usize, rng: &mut Rng| -> Dataset {
         let mut x = Vec::with_capacity(n * IMG_DIM);
@@ -146,12 +344,6 @@ pub fn synthetic(spec: &DataSpec, seed: u64) -> FlData {
         }
     };
 
-    let shards = (0..spec.n_clients)
-        .map(|k| {
-            let mut rng = root.fork(k as u64 + 1);
-            make_set(spec.per_client, &mut rng)
-        })
-        .collect();
     let mut test_rng = root.fork(0xABCD);
     let test = make_set(spec.test_n, &mut test_rng);
     let mut server_rng = root.fork(0xFEED);
@@ -169,39 +361,50 @@ pub fn synthetic(spec: &DataSpec, seed: u64) -> FlData {
 mod tests {
     use super::*;
 
-    #[test]
-    fn shapes_and_determinism() {
-        let spec = DataSpec {
+    fn spec(n_clients: usize, per_client: usize) -> DataSpec {
+        DataSpec {
             classes: 10,
-            n_clients: 3,
-            per_client: 32,
+            n_clients,
+            per_client,
             test_n: 16,
             server_n: 8,
-        };
-        let a = synthetic(&spec, 42);
-        let b = synthetic(&spec, 42);
-        let c = synthetic(&spec, 43);
-        assert_eq!(a.shards.len(), 3);
-        assert_eq!(a.shards[0].n, 32);
-        assert_eq!(a.shards[0].x.len(), 32 * IMG_DIM);
+            partition: Partition::Iid,
+            size_skew: 0.0,
+            lazy_shards: false,
+        }
+    }
+
+    #[test]
+    fn shapes_and_determinism() {
+        let mut s = spec(3, 32);
+        s.test_n = 16;
+        let a = synthetic(&s, 42);
+        let b = synthetic(&s, 42);
+        let c = synthetic(&s, 43);
+        assert_eq!(a.n_shards(), 3);
+        assert_eq!(a.shard(0).n, 32);
+        assert_eq!(a.shard(0).x.len(), 32 * IMG_DIM);
         assert_eq!(a.test.n, 16);
-        assert_eq!(a.shards[1].x, b.shards[1].x);
-        assert_ne!(a.shards[1].x, c.shards[1].x);
+        assert_eq!(a.shard(1).x, b.shard(1).x);
+        assert_ne!(a.shard(1).x, c.shard(1).x);
         // shards differ from each other
-        assert_ne!(a.shards[0].x, a.shards[1].x);
+        assert_ne!(a.shard(0).x, a.shard(1).x);
     }
 
     #[test]
     fn pixel_range_and_label_range() {
-        let spec = DataSpec {
+        let s = DataSpec {
             classes: 47,
             n_clients: 1,
             per_client: 64,
             test_n: 8,
             server_n: 8,
+            partition: Partition::Iid,
+            size_skew: 0.0,
+            lazy_shards: false,
         };
-        let d = synthetic(&spec, 7);
-        let shard = &d.shards[0];
+        let d = synthetic(&s, 7);
+        let shard = d.shard(0);
         assert!(shard.x.iter().all(|&p| (0.0..=1.0).contains(&p)));
         assert!(shard.y.iter().all(|&c| (0..47).contains(&c)));
         // more than one class present
@@ -229,15 +432,8 @@ mod tests {
 
     #[test]
     fn gather_and_epoch_batches() {
-        let spec = DataSpec {
-            classes: 10,
-            n_clients: 1,
-            per_client: 40,
-            test_n: 8,
-            server_n: 8,
-        };
-        let d = synthetic(&spec, 3);
-        let shard = &d.shards[0];
+        let d = synthetic(&spec(1, 40), 3);
+        let shard = d.shard(0);
         let (x, y) = shard.gather(&[0, 5, 7]);
         assert_eq!(x.len(), 3 * IMG_DIM);
         assert_eq!(y.len(), 3);
@@ -248,5 +444,52 @@ mod tests {
         assert_eq!(ey.len(), 32);
         // too-large epoch is rejected
         assert!(shard.epoch_batches(8, 6, &mut rng).is_err());
+    }
+
+    #[test]
+    fn size_skew_conserves_the_total_budget_exactly() {
+        let mut s = spec(9, 100);
+        s.size_skew = 0.4;
+        let sizes = shard_sizes(&s, 5);
+        assert_eq!(sizes.len(), 9);
+        assert_eq!(sizes.iter().sum::<usize>(), 900);
+        // genuinely unequal, but bounded by the weight envelope
+        assert!(sizes.iter().any(|&n| n != 100));
+        for &n in &sizes {
+            let lo = (100.0 * (1.0 - s.size_skew) / (1.0 + s.size_skew)).floor() as usize;
+            assert!(n >= lo.saturating_sub(1), "shard of {n} rows below floor");
+        }
+        // deterministic, and independent of the shard-content streams
+        assert_eq!(sizes, shard_sizes(&s, 5));
+        let data = synthetic(&s, 5);
+        for (k, &n) in sizes.iter().enumerate() {
+            assert_eq!(data.shard_rows(k), n);
+            assert_eq!(data.shard(k).n, n);
+            assert_eq!(data.shard(k).y.len(), n);
+        }
+        // skew must not move the test/server sets or the shard seeds
+        let mut equal = s.clone();
+        equal.size_skew = 0.0;
+        let base = synthetic(&equal, 5);
+        assert_eq!(base.test.x, data.test.x);
+        assert_eq!(base.server.x, data.server.x);
+    }
+
+    #[test]
+    fn lazy_source_is_bit_identical_to_eager() {
+        let mut s = spec(4, 24);
+        s.partition = Partition::Dirichlet { alpha: 0.4 };
+        s.size_skew = 0.3;
+        let eager = synthetic(&s, 77);
+        s.lazy_shards = true;
+        let lazy = synthetic(&s, 77);
+        assert!(!eager.is_lazy() && lazy.is_lazy());
+        // out-of-order lazy access must not matter
+        for k in [3usize, 0, 2, 1] {
+            assert_eq!(eager.shard(k).x, lazy.shard(k).x);
+            assert_eq!(eager.shard(k).y, lazy.shard(k).y);
+        }
+        assert_eq!(eager.test.x, lazy.test.x);
+        assert_eq!(eager.server.x, lazy.server.x);
     }
 }

@@ -1,0 +1,172 @@
+//! Client data partition schemes (IID and non-IID label skew).
+//!
+//! The paper's evaluation assumes IID clients (§II-A), but the round
+//! policies (`Deadline` / `FastestM`) and `SampleWeighted` aggregation
+//! only show their effects once the *surviving* client set is biased —
+//! which requires heterogeneous shards.  Two standard label-skew schemes
+//! from the compression-aided-FL literature sit next to the IID baseline:
+//!
+//! * [`Partition::LabelShards`] — McMahan-style pathological non-IID:
+//!   every client holds exactly `shards_per_client` distinct labels.
+//! * [`Partition::Dirichlet`] — per-client class proportions drawn from
+//!   `Dir(alpha, …, alpha)`; small `alpha` concentrates each shard on a
+//!   few labels, `alpha → ∞` approaches the IID class balance.
+//!
+//! Every scheme conserves rows exactly (a client's shard always has
+//! `per_client` samples) and derives all randomness from the client's own
+//! seeded stream, so shards can be generated lazily and out of order.
+
+use crate::error::{HcflError, Result};
+use crate::util::rng::Rng;
+
+/// How client shards relate to the global label distribution.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum Partition {
+    /// Every shard samples the same class-uniform mix (paper §II-A).
+    #[default]
+    Iid,
+    /// Each client holds exactly `shards_per_client` distinct labels,
+    /// dealt in near-equal proportions (pathological non-IID).
+    LabelShards { shards_per_client: usize },
+    /// Per-client class proportions `p ~ Dir(alpha, …, alpha)`.
+    Dirichlet { alpha: f64 },
+}
+
+impl Partition {
+    pub fn label(&self) -> String {
+        match self {
+            Partition::Iid => "iid".to_string(),
+            Partition::LabelShards { shards_per_client } => {
+                format!("shards-{shards_per_client}")
+            }
+            Partition::Dirichlet { alpha } => format!("dirichlet-{alpha}"),
+        }
+    }
+
+    pub fn validate(&self, classes: usize) -> Result<()> {
+        match self {
+            Partition::Iid => Ok(()),
+            Partition::LabelShards { shards_per_client } => {
+                if *shards_per_client == 0 || *shards_per_client > classes {
+                    return Err(HcflError::Config(format!(
+                        "label-shards needs 1 <= shards_per_client <= {classes} \
+                         (the class count), got {shards_per_client}"
+                    )));
+                }
+                Ok(())
+            }
+            Partition::Dirichlet { alpha } => {
+                if !alpha.is_finite() || *alpha <= 0.0 {
+                    return Err(HcflError::Config(format!(
+                        "dirichlet alpha must be positive and finite, got {alpha}"
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The label sequence of one client's shard: always exactly
+    /// `per_client` entries in `[0, classes)`, drawn from the client's
+    /// own RNG stream.
+    pub fn client_labels(&self, classes: usize, per_client: usize, rng: &mut Rng) -> Vec<usize> {
+        match self {
+            Partition::Iid => (0..per_client).map(|_| rng.below(classes)).collect(),
+            Partition::LabelShards { shards_per_client } => {
+                let spc = (*shards_per_client).clamp(1, classes);
+                let own = rng.choose(classes, spc);
+                // Deal rows round-robin over the client's labels: label
+                // counts differ by at most one row, rows conserved exactly.
+                (0..per_client).map(|i| own[i % spc]).collect()
+            }
+            Partition::Dirichlet { alpha } => {
+                // p ~ Dir(alpha): normalized Gamma(alpha, 1) draws.
+                let gammas: Vec<f64> = (0..classes).map(|_| rng.gamma(*alpha)).collect();
+                let total: f64 = gammas.iter().sum();
+                if !(total.is_finite() && total > 0.0) {
+                    // Extreme alpha can underflow every gamma draw to 0:
+                    // the limit distribution is a single seeded class.
+                    let c = rng.below(classes);
+                    return vec![c; per_client];
+                }
+                let mut cdf = Vec::with_capacity(classes);
+                let mut acc = 0.0;
+                for g in &gammas {
+                    acc += g / total;
+                    cdf.push(acc);
+                }
+                (0..per_client)
+                    .map(|_| {
+                        let u = rng.next_f64();
+                        cdf.iter().position(|&c| u < c).unwrap_or(classes - 1)
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Shannon entropy (nats) of a label multiset — the standard skew
+/// measure for partition schemes: `ln(classes)` is perfectly balanced,
+/// 0 is a single-label shard.
+pub fn label_entropy(y: &[i32], classes: usize) -> f64 {
+    let mut counts = vec![0usize; classes];
+    for &c in y {
+        counts[c as usize] += 1;
+    }
+    let n = y.len().max(1) as f64;
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.ln()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation_bounds() {
+        assert!(Partition::Iid.validate(10).is_ok());
+        assert!(Partition::LabelShards { shards_per_client: 2 }.validate(10).is_ok());
+        assert!(Partition::LabelShards { shards_per_client: 0 }.validate(10).is_err());
+        assert!(Partition::LabelShards { shards_per_client: 11 }.validate(10).is_err());
+        assert!(Partition::Dirichlet { alpha: 0.3 }.validate(10).is_ok());
+        assert!(Partition::Dirichlet { alpha: 0.0 }.validate(10).is_err());
+        assert!(Partition::Dirichlet { alpha: f64::NAN }.validate(10).is_err());
+    }
+
+    #[test]
+    fn labels_conserve_rows_and_stay_in_range() {
+        let schemes = [
+            Partition::Iid,
+            Partition::LabelShards { shards_per_client: 3 },
+            Partition::Dirichlet { alpha: 0.2 },
+        ];
+        for p in schemes {
+            let mut rng = Rng::new(9);
+            let labels = p.client_labels(10, 137, &mut rng);
+            assert_eq!(labels.len(), 137, "{p:?}");
+            assert!(labels.iter().all(|&c| c < 10), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn entropy_extremes() {
+        let uniform: Vec<i32> = (0..100).map(|i| i % 10).collect();
+        assert!((label_entropy(&uniform, 10) - (10f64).ln()).abs() < 1e-12);
+        let single = vec![3i32; 100];
+        assert_eq!(label_entropy(&single, 10), 0.0);
+    }
+
+    #[test]
+    fn partition_labels() {
+        assert_eq!(Partition::Iid.label(), "iid");
+        assert_eq!(Partition::LabelShards { shards_per_client: 2 }.label(), "shards-2");
+        assert!(Partition::Dirichlet { alpha: 0.3 }.label().starts_with("dirichlet-"));
+    }
+}

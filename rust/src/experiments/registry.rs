@@ -63,7 +63,8 @@ fn drivers() -> Vec<(&'static str, &'static str, Driver)> {
         ),
         (
             "scenarios",
-            "Scenario sweep: straggler fleets under sync/deadline/fastest-m policies",
+            "Scenario sweep: straggler fleets under sync/deadline/fastest-m policies \
+             + non-IID partitions x aggregators (--smoke for the engine-free CI run)",
             scenarios::scenarios,
         ),
         (

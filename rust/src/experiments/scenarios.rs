@@ -1,27 +1,88 @@
-//! Scenario sweep: HCFL vs FedAvg under straggler-heavy IoT fleets.
+//! Scenario sweep: HCFL vs FedAvg under straggler-heavy IoT fleets and
+//! non-IID client shards.
 //!
 //! Not a figure from the paper — it exercises the regime the paper's
 //! title promises (very large scale IoT) but its synchronous simulator
 //! could not show: heterogeneous devices, deadline / fastest-m round
-//! policies, and the resulting participation and modelled-makespan
-//! trade-off.  Compression and semi-synchrony compose: HCFL shrinks air
-//! time, the round policy bounds compute stragglers.
+//! policies, label-skewed shards, and the resulting participation /
+//! makespan / aggregation-bias trade-offs.  Compression and
+//! semi-synchrony compose: HCFL shrinks air time, the round policy
+//! bounds compute stragglers, and `SampleWeighted` aggregation corrects
+//! for the biased survivor sets that non-IID shards expose.
 //!
-//! `repro experiment --id scenarios [--clients K] [--fracs-pct 10,30,50]
-//!  [--slowdown 8] [--rounds N] [--ratio 32]`
+//! `repro experiment --id scenarios [--clients K] [--client-threads N]
+//!  [--fracs-pct 10,30,50] [--slowdown 8] [--rounds N] [--ratio 32]
+//!  [--per-client N] [--alpha F] [--shards-per-client N] [--size-skew F]
+//!  [--iid-only] [--smoke]`
 //!
-//! `--clients` scales to the ISSUE's K=100..10k sweep when the host can
-//! afford it; the default stays laptop-sized.
+//! `--clients` scales to the paper's K=10k regime (m=1000 at the preset
+//! C=0.1): shards generate lazily above K=512 so a 10k-client fleet
+//! never materializes ~19 GB of pixels, and the worker-pool client stage
+//! runs a round with zero per-client thread spawns.  `--smoke` shrinks
+//! everything to a seconds-long engine-free run (fake training on the
+//! synthetic manifest) so CI executes this driver on every PR.
 
 use crate::compression::Scheme;
 use crate::config::{ExperimentConfig, ScenarioConfig};
 use crate::coordinator::clock::{calibrated_deadline, RoundPolicy};
 use crate::coordinator::Simulation;
+use crate::data::Partition;
 use crate::error::Result;
 use crate::experiments::common::{slug, Scale};
 use crate::experiments::registry::ExperimentCtx;
+use crate::fl::AggregatorKind;
 use crate::metrics::{RunReport, Table};
 use crate::network::DevicePreset;
+
+/// Shared sweep knobs resolved once from the CLI.
+struct Knobs {
+    clients: usize,
+    rounds: usize,
+    epochs: usize,
+    client_threads: usize,
+    per_client: Option<usize>,
+    slowdown: f64,
+    ratio: usize,
+    smoke: bool,
+}
+
+impl Knobs {
+    /// The two schemes every arm compares.  Smoke mode has no engine, so
+    /// TopK stands in for HCFL as the "compressed" arm (both are pure
+    /// Rust on the wire path).
+    fn schemes(&self) -> [Scheme; 2] {
+        if self.smoke {
+            [Scheme::Fedavg, Scheme::TopK { keep: 0.1 }]
+        } else {
+            [Scheme::Fedavg, Scheme::Hcfl { ratio: self.ratio }]
+        }
+    }
+
+    fn base_cfg(&self, scheme: Scheme) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::mnist(scheme, self.rounds);
+        cfg.n_clients = self.clients;
+        cfg.data.n_clients = self.clients;
+        cfg.local_epochs = self.epochs;
+        cfg.client_threads = self.client_threads;
+        // Lazy shard generation above laptop scale: eager MNIST-geometry
+        // shards at K=10k would hold ~19 GB of pixels.
+        cfg.data.lazy_shards = self.clients > 512;
+        if self.smoke {
+            cfg.model = "fake".into();
+            cfg.fake_train = true;
+            cfg.batch = 16;
+            cfg.data.per_client = 64;
+            cfg.data.test_n = 64;
+            cfg.data.server_n = 16;
+            cfg.use_ae_cache = false;
+        }
+        // --per-client wins over the smoke default
+        if let Some(per_client) = self.per_client {
+            cfg.data.per_client = per_client;
+        }
+        cfg
+    }
+}
 
 /// Run one config, calibrating the policy from a synchronous probe round.
 ///
@@ -59,15 +120,30 @@ fn run_with_policy(
 /// The `scenarios` experiment driver.
 pub fn scenarios(ctx: &ExperimentCtx) -> Result<()> {
     let args = &ctx.args;
-    let scale = Scale::from_args(args, 4, 1)?;
-    let clients = args.usize_or("clients", 20)?;
-    let fracs = args.usize_list_or("fracs-pct", &[10, 30, 50])?;
-    let slowdown = args.f64_or("slowdown", 8.0)?;
-    let ratio = args.usize_or("ratio", 32)?;
+    let smoke = args.flag("smoke");
+    let scale = Scale::from_args(args, if smoke { 2 } else { 4 }, 1)?;
+    let knobs = Knobs {
+        clients: args.usize_or("clients", if smoke { 24 } else { 20 })?,
+        rounds: scale.rounds,
+        epochs: scale.epochs,
+        client_threads: args.usize_or("client-threads", 4)?,
+        per_client: match args.str_opt("per-client") {
+            Some(_) => Some(args.usize_or("per-client", 600)?),
+            None => None,
+        },
+        slowdown: args.f64_or("slowdown", 8.0)?,
+        ratio: args.usize_or("ratio", 32)?,
+        smoke,
+    };
+    let default_fracs: &[usize] = if smoke { &[30] } else { &[10, 30, 50] };
+    let fracs = args.usize_list_or("fracs-pct", default_fracs)?;
 
     println!(
-        "Scenario sweep — K={clients}, {} rounds, stragglers {slowdown}x slower",
-        scale.rounds
+        "Scenario sweep — K={}, {} rounds, stragglers {}x slower{}",
+        knobs.clients,
+        knobs.rounds,
+        knobs.slowdown,
+        if smoke { " [smoke: fake train]" } else { "" }
     );
     println!("(round 1 is a synchronous calibration round in every run)");
     let mut table = Table::new(&[
@@ -83,14 +159,14 @@ pub fn scenarios(ctx: &ExperimentCtx) -> Result<()> {
 
     for &pct in &fracs {
         let frac = pct as f64 / 100.0;
-        for scheme in [Scheme::Fedavg, Scheme::Hcfl { ratio }] {
-            let mut cfg = ExperimentConfig::mnist(scheme, scale.rounds);
-            cfg.n_clients = clients;
-            cfg.data.n_clients = clients;
-            cfg.local_epochs = scale.epochs;
+        for scheme in knobs.schemes() {
+            let mut cfg = knobs.base_cfg(scheme);
             cfg.scenario = ScenarioConfig {
                 policy: RoundPolicy::Synchronous,
-                devices: DevicePreset::Stragglers { frac, slowdown },
+                devices: DevicePreset::Stragglers {
+                    frac,
+                    slowdown: knobs.slowdown,
+                },
                 ..ScenarioConfig::default()
             };
 
@@ -115,12 +191,9 @@ pub fn scenarios(ctx: &ExperimentCtx) -> Result<()> {
             // preset default) the HCFL compressor reloads rather than
             // retrains, so the rebuild only costs data generation.
             for (name, make_policy) in policies {
-                let tag = format!(
-                    "scenario_{}_{pct}pct_{name}",
-                    slug(&scheme.label())
-                );
+                let tag = format!("scenario_{}_{pct}pct_{name}", slug(&scheme.label()));
                 let report =
-                    run_with_policy(ctx, cfg.clone(), scale.rounds, make_policy, &tag)?;
+                    run_with_policy(ctx, cfg.clone(), knobs.rounds, make_policy, &tag)?;
                 table.row(vec![
                     report.scheme.clone(),
                     format!("{pct}%"),
@@ -139,5 +212,78 @@ pub fn scenarios(ctx: &ExperimentCtx) -> Result<()> {
         }
     }
     println!("{}", table.render());
+
+    // ---- non-IID arms: partition × scheme × aggregator -----------------
+    // Calibrated-deadline rounds over a straggler fleet make the
+    // surviving set biased; with label-skewed shards that bias reaches
+    // the global model, which is what SampleWeighted aggregation exists
+    // to correct.  Shard sizes are skewed too (`--size-skew`): with
+    // equal shards n_k is constant and SampleWeighted degenerates to the
+    // uniform mean.
+    if args.flag("iid-only") {
+        return Ok(());
+    }
+    let alpha = args.f64_or("alpha", 0.3)?;
+    let spc = args.usize_or("shards-per-client", 2)?;
+    let size_skew = args.f64_or("size-skew", 0.3)?;
+    let partitions = [
+        Partition::Dirichlet { alpha },
+        Partition::LabelShards {
+            shards_per_client: spc,
+        },
+    ];
+    println!(
+        "Non-IID arms — calibrated deadline over a 30% x{} straggler fleet",
+        knobs.slowdown
+    );
+    let mut ntable = Table::new(&[
+        "Scheme",
+        "Partition",
+        "Aggregator",
+        "Final acc",
+        "Participation",
+        "Makespan (s)",
+        "Upload (MB)",
+    ]);
+    for partition in &partitions {
+        for scheme in knobs.schemes() {
+            for agg in [AggregatorKind::UniformMean, AggregatorKind::SampleWeighted] {
+                let mut cfg = knobs.base_cfg(scheme);
+                cfg.data.partition = partition.clone();
+                cfg.data.size_skew = size_skew;
+                cfg.scenario = ScenarioConfig {
+                    policy: RoundPolicy::Synchronous,
+                    aggregator: agg.clone(),
+                    devices: DevicePreset::Stragglers {
+                        frac: 0.3,
+                        slowdown: knobs.slowdown,
+                    },
+                };
+                let tag = format!(
+                    "scenario_noniid_{}_{}_{}",
+                    slug(&scheme.label()),
+                    slug(&partition.label()),
+                    slug(&agg.label())
+                );
+                let report = run_with_policy(
+                    ctx,
+                    cfg,
+                    knobs.rounds,
+                    |t_max_s| RoundPolicy::Deadline { t_max_s },
+                    &tag,
+                )?;
+                ntable.row(vec![
+                    report.scheme.clone(),
+                    partition.label(),
+                    agg.label(),
+                    format!("{:.4}", report.final_accuracy()),
+                    format!("{:.2}", report.mean_participation()),
+                    format!("{:.2}", report.total_makespan()),
+                    format!("{:.2}", report.total_up_bytes() as f64 / 1e6),
+                ]);
+            }
+        }
+    }
+    println!("{}", ntable.render());
     Ok(())
 }

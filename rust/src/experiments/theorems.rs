@@ -41,7 +41,7 @@ pub fn thm1(ctx: &ExperimentCtx) -> Result<()> {
     let mut noisy = Vec::with_capacity(k_max);
     let mut l_w_sum = 0.0;
     for k in 0..k_max {
-        let out = trainer.train(&global, &data.shards[k], 1, cfg.batch, cfg.lr, &mut rng, 0)?;
+        let out = trainer.train(&global, &data.shard(k), 1, cfg.batch, cfg.lr, &mut rng, 0)?;
         // Mirror the run pipeline: delta-encode against the broadcast.
         let delta: Vec<f32> = out.params.iter().zip(&global).map(|(w, g)| w - g).collect();
         let upd = compressor.compress(&delta, 0)?;

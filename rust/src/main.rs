@@ -6,6 +6,7 @@
 //! * `list` — list available experiments.
 
 use hcfl::compression::Scheme;
+use hcfl::data::Partition;
 use hcfl::error::{HcflError, Result};
 use hcfl::prelude::*;
 use hcfl::util::cli::Args;
@@ -24,10 +25,18 @@ fn usage() -> ! {
            --keep F                TopK keep fraction (default 0.15)\n\
            --rounds N --clients K --participation C --epochs E --batch B --lr F\n\
            --seed N --workers N --dense-parts N --ae-steps N --no-cache --quiet\n\
+           --client-threads N      client-stage worker pool size (default: 4)\n\
+           --partition iid|shards|dirichlet   shard label distribution\n\
+           --shards-per-client N   labels per client for --partition shards (default 2)\n\
+           --alpha F               Dirichlet concentration (default 0.3)\n\
+           --size-skew F           shard-size heterogeneity in [0, 0.5] (default 0)\n\
+           --lazy-shards           regenerate shards on demand (auto above K=512)\n\
            --csv PATH              write the per-round series\n\
          common options:\n\
            --artifacts DIR   artifact directory (default: artifacts)\n\
-           --workers N       PJRT engine workers (default: 4)"
+           --workers N       PJRT engine workers (default: 4)\n\
+           --smoke           engine-free fake-train mode on the synthetic manifest\n\
+                             (experiment command; used by CI)"
     );
     std::process::exit(2);
 }
@@ -43,6 +52,21 @@ fn parse_scheme(args: &Args) -> Result<Scheme> {
             ratio: args.usize_or("ratio", 8)?,
         }),
         other => Err(HcflError::Config(format!("unknown scheme '{other}'"))),
+    }
+}
+
+fn parse_partition(args: &Args) -> Result<Partition> {
+    match args.str_or("partition", "iid") {
+        "iid" => Ok(Partition::Iid),
+        "shards" => Ok(Partition::LabelShards {
+            shards_per_client: args.usize_or("shards-per-client", 2)?,
+        }),
+        "dirichlet" => Ok(Partition::Dirichlet {
+            alpha: args.f64_or("alpha", 0.3)?,
+        }),
+        other => Err(HcflError::Config(format!(
+            "unknown partition '{other}' (iid|shards|dirichlet)"
+        ))),
     }
 }
 
@@ -69,6 +93,10 @@ fn cmd_run(args: &Args, artifacts: &str) -> Result<()> {
     cfg.ae.steps = args.usize_or("ae-steps", cfg.ae.steps)?;
     cfg.use_ae_cache = !args.flag("no-cache");
     cfg.engine_workers = workers;
+    cfg.client_threads = args.usize_or("client-threads", cfg.client_threads)?;
+    cfg.data.partition = parse_partition(args)?;
+    cfg.data.size_skew = args.f64_or("size-skew", 0.0)?;
+    cfg.data.lazy_shards = args.flag("lazy-shards") || cfg.n_clients > 512;
     cfg.data.n_clients = cfg.n_clients;
 
     let mut sim = Simulation::new(&engine, cfg)?;
@@ -108,7 +136,14 @@ fn main() -> Result<()> {
                 .map(|s| s.to_string())
                 .unwrap_or_else(|| usage());
             let workers = args.usize_or("workers", 4)?;
-            let engine = Engine::from_artifacts(&artifacts, workers)?;
+            // --smoke / --fake-train: run engine-free on the synthetic
+            // manifest (no artifacts needed; drivers that honour the
+            // flag swap in fake training).
+            let engine = if args.flag("smoke") || args.flag("fake-train") {
+                Engine::with_manifest(Manifest::synthetic(), workers)?
+            } else {
+                Engine::from_artifacts(&artifacts, workers)?
+            };
             let ctx = hcfl::experiments::ExperimentCtx {
                 engine,
                 args: args.clone(),

@@ -244,6 +244,81 @@ impl Manifest {
         Ok(manifest)
     }
 
+    /// A minimal in-memory manifest for engine-free runs: one "fake"
+    /// model with a paper-shaped conv/dense layer split and stub
+    /// executable entries, so config validation and every pure-Rust
+    /// pipeline layer work without artifacts on disk.  Execution jobs
+    /// against the stub entries still fail — `fake_train` mode never
+    /// submits any.
+    pub fn synthetic() -> Manifest {
+        let stub_exec = ExecSpec {
+            file: "unavailable".into(),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+        };
+        let mut executables = BTreeMap::new();
+        for name in ["fake_train_step_b16", "fake_train_epoch", "fake_eval"] {
+            executables.insert(name.to_string(), stub_exec.clone());
+        }
+        let layers = vec![
+            LayerMeta {
+                name: "conv".into(),
+                shape: vec![3, 3, 1, 8],
+                offset: 0,
+                size: 72,
+                segment: "conv".into(),
+            },
+            LayerMeta {
+                name: "dense_w".into(),
+                shape: vec![72, 10],
+                offset: 72,
+                size: 720,
+                segment: "dense".into(),
+            },
+            LayerMeta {
+                name: "dense_b".into(),
+                shape: vec![10],
+                offset: 792,
+                size: 10,
+                segment: "dense".into(),
+            },
+        ];
+        let mut train_step = BTreeMap::new();
+        train_step.insert(16usize, "fake_train_step_b16".to_string());
+        let mut models = BTreeMap::new();
+        models.insert(
+            "fake".to_string(),
+            ModelMeta {
+                name: "fake".into(),
+                d: 802,
+                classes: 10,
+                input_dim: 784,
+                layers,
+                train_step,
+                train_epoch: EpochMeta {
+                    batch: 16,
+                    n_batches: 2,
+                    name: "fake_train_epoch".into(),
+                },
+                eval: EvalMeta {
+                    batch: 16,
+                    name: "fake_eval".into(),
+                },
+            },
+        );
+        let mut chunks = BTreeMap::new();
+        chunks.insert("conv".to_string(), 256);
+        chunks.insert("dense".to_string(), 1024);
+        Manifest {
+            dir: PathBuf::from("synthetic"),
+            executables,
+            models,
+            autoencoders: BTreeMap::new(),
+            ternary: BTreeMap::new(),
+            chunks,
+        }
+    }
+
     /// Cross-checks: every referenced executable exists, layer tables are
     /// gapless, AE keys match chunk/ratio.
     pub fn validate(&self) -> Result<()> {
@@ -332,5 +407,20 @@ impl Manifest {
             .get(&format!("c{chunk}"))
             .map(|s| s.as_str())
             .ok_or_else(|| HcflError::Manifest(format!("no ternary kernel for c{chunk}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_manifest_is_internally_consistent() {
+        let m = Manifest::synthetic();
+        m.validate().unwrap();
+        let model = m.model("fake").unwrap();
+        assert_eq!(model.d, 802);
+        assert_eq!(model.eval.batch, 16);
+        assert!(model.train_step.contains_key(&16));
     }
 }

@@ -92,6 +92,42 @@ impl Rng {
         }
     }
 
+    /// Gamma(shape, 1) via Marsaglia–Tsang squeeze rejection, with the
+    /// `G(a) = G(a+1) · U^(1/a)` boost for shape < 1.  Feeds the
+    /// Dirichlet shard partitioner (`data::Partition::Dirichlet`).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(
+            shape.is_finite() && shape > 0.0,
+            "Rng::gamma needs a positive finite shape, got {shape}"
+        );
+        if shape < 1.0 {
+            let u = loop {
+                let u = self.next_f64();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return self.gamma(shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal() as f64;
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4) {
+                return d * v;
+            }
+            if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
     /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -161,6 +197,21 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
         assert!(mean.abs() < 0.02, "mean {mean}");
         assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        // Gamma(a, 1) has mean a and variance a in both sampler branches.
+        for a in [0.5f64, 2.5] {
+            let mut r = Rng::new(13);
+            let n = 50_000;
+            let xs: Vec<f64> = (0..n).map(|_| r.gamma(a)).collect();
+            assert!(xs.iter().all(|&x| x >= 0.0));
+            let mean = xs.iter().sum::<f64>() / n as f64;
+            let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+            assert!((mean - a).abs() < 0.05 * a.max(1.0), "shape {a}: mean {mean}");
+            assert!((var - a).abs() < 0.15 * a.max(1.0), "shape {a}: var {var}");
+        }
     }
 
     #[test]

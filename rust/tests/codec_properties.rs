@@ -1,0 +1,142 @@
+//! Engine-free property tests over the pure-Rust codec paths.
+//!
+//! The engine-backed integration tests in `compression_pipeline.rs` skip
+//! themselves without the `pjrt` feature + generated artifacts, so CI
+//! used to exercise none of the codec properties.  Everything here runs
+//! under plain `cargo test -q` on every build: the properties cover the
+//! reference quantizer (`TernaryCompressor::quantize_ref`, which the
+//! engine kernel is itself tested against), the wire-size accounting,
+//! and the pure sparsification/identity codecs.
+//!
+//! proptest is not available offline; these use the same
+//! seeded-random-case sweep pattern (many generated cases per property,
+//! deterministic seeds).
+
+use hcfl::compression::{Compressor, Identity, TernaryChunk, TernaryCompressor, TopKCompressor};
+use hcfl::util::rng::Rng;
+
+fn random_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+/// Pure-Rust mirror of the compressor's chunking: quantize each
+/// 1024-slice (including the partial tail) with the reference TWN math.
+fn quantize_chunked(v: &[f32], chunk: usize) -> Vec<TernaryChunk> {
+    v.chunks(chunk).map(TernaryCompressor::quantize_ref).collect()
+}
+
+#[test]
+fn identity_property_lossless_any_length() {
+    let c = Identity;
+    let mut rng = Rng::new(11);
+    for case in 0..50 {
+        let n = 1 + rng.below(5000);
+        let v = random_vec(&mut rng, n, 0.5);
+        let upd = c.compress(&v, 0).unwrap();
+        assert_eq!(upd.wire_bytes, 4 * n, "case {case}");
+        assert_eq!(c.decompress(&upd, n, 0).unwrap(), v);
+    }
+}
+
+#[test]
+fn ternary_property_roundtrip_is_scaled_sign() {
+    let chunk = 1024;
+    let mut rng = Rng::new(22);
+    for case in 0..12 {
+        // lengths around the chunk boundary exercise the tail path
+        let n = [512, 1024, 1025, 2048, 3000, 4096][case % 6];
+        let v = random_vec(&mut rng, n, 0.2);
+        let chunks = quantize_chunked(&v, chunk);
+        let back = TernaryCompressor::decode_chunks(&chunks, n).unwrap();
+        assert_eq!(back.len(), n);
+        // every reconstructed value is 0 or ±alpha of its chunk, with
+        // the sign of the original
+        for (i, (orig, rec)) in v.iter().zip(&back).enumerate() {
+            if *rec != 0.0 {
+                assert_eq!(rec.signum(), orig.signum(), "case {case}");
+                let alpha = chunks[i / chunk].alpha;
+                assert!(
+                    (rec.abs() - alpha).abs() < 1e-6,
+                    "case {case}: |rec| {} != alpha {alpha}",
+                    rec.abs()
+                );
+            }
+        }
+        // wire size: ~2 bits per weight
+        let wire = TernaryCompressor::wire_bytes_for(n, chunk);
+        assert!(wire < n, "case {case}: {wire} bytes for {n} weights");
+    }
+}
+
+#[test]
+fn ternary_property_alpha_is_mean_of_kept_magnitudes() {
+    let mut rng = Rng::new(33);
+    for case in 0..30 {
+        let n = 8 + rng.below(2000);
+        let v = random_vec(&mut rng, n, 0.5);
+        let t = TernaryCompressor::quantize_ref(&v);
+        assert_eq!(t.q.len(), n, "case {case}");
+        let kept: Vec<f32> = v
+            .iter()
+            .zip(&t.q)
+            .filter(|(_, &q)| q != 0)
+            .map(|(x, _)| x.abs())
+            .collect();
+        if kept.is_empty() {
+            assert_eq!(t.alpha, 0.0, "case {case}");
+        } else {
+            let mean = kept.iter().sum::<f32>() / kept.len() as f32;
+            assert!((t.alpha - mean).abs() < 1e-4, "case {case}");
+        }
+        // the threshold keeps exactly the weights above 0.7 * mean|w|
+        // (same association order as quantize_ref, so f32-exact)
+        let mean_abs = v.iter().map(|x| x.abs()).sum::<f32>() / n as f32;
+        let delta = 0.7 * mean_abs;
+        for (x, &q) in v.iter().zip(&t.q) {
+            assert_eq!(q != 0, x.abs() > delta, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn ternary_wire_size_property() {
+    let mut rng = Rng::new(44);
+    for _ in 0..50 {
+        let d = 1 + rng.below(100_000);
+        let chunk = 1024;
+        let wire = TernaryCompressor::wire_bytes_for(d, chunk);
+        // 2 bits per weight packed four-per-byte + one f32 scale per chunk
+        assert_eq!(wire, d.div_ceil(4) + 4 * d.div_ceil(chunk));
+        // compression vs 4 B/weight approaches 16x for large d
+        if d >= 16 * chunk {
+            let ratio = (4 * d) as f64 / wire as f64;
+            assert!(ratio > 15.0 && ratio < 16.1, "d={d}: ratio {ratio}");
+        }
+    }
+}
+
+#[test]
+fn topk_property_preserves_top_magnitudes() {
+    let mut rng = Rng::new(55);
+    for _ in 0..30 {
+        let n = 10 + rng.below(3000);
+        let keep = 0.05 + rng.next_f64() * 0.9;
+        let c = TopKCompressor::new(keep).unwrap();
+        let v = random_vec(&mut rng, n, 1.0);
+        let upd = c.compress(&v, 0).unwrap();
+        let back = c.decompress(&upd, n, 0).unwrap();
+        let k = c.k_for(n);
+        assert_eq!(upd.wire_bytes, 8 * k);
+        // kept entries equal original; dropped are zero
+        let kept = back.iter().filter(|x| **x != 0.0).count();
+        assert!(kept <= k);
+        let mut mags: Vec<f32> = v.iter().map(|x| x.abs()).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let threshold = mags[k - 1];
+        for (orig, rec) in v.iter().zip(&back) {
+            if orig.abs() > threshold {
+                assert_eq!(orig, rec);
+            }
+        }
+    }
+}

@@ -5,7 +5,7 @@ mod common;
 use hcfl::compression::Scheme;
 use hcfl::config::ExperimentConfig;
 use hcfl::coordinator::Simulation;
-use hcfl::data::DataSpec;
+use hcfl::data::{DataSpec, Partition};
 use hcfl::prelude::*;
 
 fn tiny_cfg(scheme: Scheme) -> ExperimentConfig {
@@ -21,6 +21,9 @@ fn tiny_cfg(scheme: Scheme) -> ExperimentConfig {
         per_client: 128,
         test_n: 512,
         server_n: 128,
+        partition: Partition::Iid,
+        size_skew: 0.0,
+        lazy_shards: false,
     };
     // keep the AE phase cheap in CI
     cfg.ae.steps = 30;
@@ -105,6 +108,58 @@ fn runs_are_reproducible() {
         assert_eq!(a.accuracy, b.accuracy);
         assert_eq!(a.up_bytes, b.up_bytes);
         assert_eq!(a.completed, b.completed);
+    }
+}
+
+#[test]
+fn pool_size_never_changes_results_end_to_end() {
+    // Engine-backed twin of tests/pool_determinism.rs: real local
+    // training through PJRT must also be bit-identical for any
+    // client-pool size.
+    let Some(eng) = common::engine(2) else { return };
+    let run = |client_threads: usize| {
+        let mut cfg = tiny_cfg(Scheme::Fedavg);
+        cfg.client_threads = client_threads;
+        let mut sim = Simulation::new(&eng, cfg).unwrap();
+        let report = sim.run().unwrap();
+        (sim.global().to_vec(), report)
+    };
+    let (g1, r1) = run(1);
+    for client_threads in [4usize, 16] {
+        let (g, r) = run(client_threads);
+        assert_eq!(
+            g1, g,
+            "global model diverged at client_threads={client_threads}"
+        );
+        for (a, b) in r1.rounds.iter().zip(&r.rounds) {
+            assert_eq!(a.accuracy, b.accuracy);
+            assert_eq!(a.loss, b.loss);
+            assert_eq!(a.recon_mse, b.recon_mse);
+            assert_eq!(a.up_bytes, b.up_bytes);
+            assert_eq!(a.completed, b.completed);
+        }
+    }
+}
+
+#[test]
+fn noniid_partitions_run_end_to_end() {
+    // Dirichlet and LabelShards shards must reach the aggregator through
+    // the real engine path.
+    let Some(eng) = common::engine(2) else { return };
+    for partition in [
+        Partition::Dirichlet { alpha: 0.3 },
+        Partition::LabelShards {
+            shards_per_client: 2,
+        },
+    ] {
+        let mut cfg = tiny_cfg(Scheme::Fedavg);
+        cfg.data.partition = partition.clone();
+        cfg.scenario.aggregator = AggregatorKind::SampleWeighted;
+        let mut sim = Simulation::new(&eng, cfg).unwrap();
+        let report = sim.run().unwrap();
+        assert_eq!(report.rounds.len(), 2, "{partition:?}");
+        assert!(report.rounds[0].completed > 0, "{partition:?}");
+        assert!(report.rounds[0].up_bytes > 0, "{partition:?}");
     }
 }
 

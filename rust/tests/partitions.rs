@@ -1,0 +1,171 @@
+//! Partition-scheme invariants, engine-free (always run in CI):
+//! exact row conservation, per-seed determinism, label-skew behavior of
+//! `Dirichlet{alpha}`, the `LabelShards` distinct-label guarantee, and
+//! lazy/eager shard-source equivalence.
+
+use hcfl::data::{label_entropy, synthetic, DataSpec, Partition, IMG_DIM};
+
+fn spec(partition: Partition, n_clients: usize, per_client: usize, classes: usize) -> DataSpec {
+    DataSpec {
+        classes,
+        n_clients,
+        per_client,
+        test_n: 16,
+        server_n: 8,
+        partition,
+        size_skew: 0.0,
+        lazy_shards: false,
+    }
+}
+
+fn all_partitions() -> [Partition; 3] {
+    [
+        Partition::Iid,
+        Partition::LabelShards {
+            shards_per_client: 3,
+        },
+        Partition::Dirichlet { alpha: 0.3 },
+    ]
+}
+
+#[test]
+fn every_partition_conserves_rows_exactly() {
+    for p in all_partitions() {
+        let s = spec(p.clone(), 7, 50, 10);
+        let data = synthetic(&s, 11);
+        for k in 0..7 {
+            let shard = data.shard(k);
+            assert_eq!(shard.n, 50, "{p:?}");
+            assert_eq!(shard.y.len(), 50, "{p:?}");
+            assert_eq!(shard.x.len(), 50 * IMG_DIM, "{p:?}");
+            assert!(shard.y.iter().all(|&c| (0..10).contains(&c)), "{p:?}");
+        }
+    }
+}
+
+#[test]
+fn every_partition_is_deterministic_per_seed() {
+    for p in all_partitions() {
+        let s = spec(p.clone(), 4, 40, 10);
+        let a = synthetic(&s, 9);
+        let b = synthetic(&s, 9);
+        let c = synthetic(&s, 10);
+        for k in 0..4 {
+            assert_eq!(a.shard(k).x, b.shard(k).x, "{p:?}");
+            assert_eq!(a.shard(k).y, b.shard(k).y, "{p:?}");
+        }
+        // a different seed moves at least the pixel streams
+        assert_ne!(a.shard(0).x, c.shard(0).x, "{p:?}");
+    }
+}
+
+#[test]
+fn label_shards_gives_exactly_that_many_distinct_labels() {
+    for spc in [1usize, 2, 4] {
+        let s = spec(
+            Partition::LabelShards {
+                shards_per_client: spc,
+            },
+            10,
+            60,
+            10,
+        );
+        let data = synthetic(&s, 5);
+        for k in 0..10 {
+            let shard = data.shard(k);
+            let mut labels = shard.y.clone();
+            labels.sort_unstable();
+            labels.dedup();
+            assert_eq!(labels.len(), spc, "client {k} at spc={spc}");
+            // near-equal label proportions: counts differ by at most 1
+            let counts: Vec<usize> = labels
+                .iter()
+                .map(|&l| shard.y.iter().filter(|&&c| c == l).count())
+                .collect();
+            let (min, max) = (
+                counts.iter().min().unwrap(),
+                counts.iter().max().unwrap(),
+            );
+            assert!(max - min <= 1, "client {k}: counts {counts:?}");
+        }
+    }
+}
+
+#[test]
+fn dirichlet_alpha_controls_label_entropy() {
+    let classes = 10;
+    let mean_entropy = |partition: Partition| -> f64 {
+        let s = spec(partition, 20, 200, classes);
+        let data = synthetic(&s, 3);
+        let ents: Vec<f64> = (0..20)
+            .map(|k| label_entropy(&data.shard(k).y, classes))
+            .collect();
+        ents.iter().sum::<f64>() / ents.len() as f64
+    };
+    let concentrated = mean_entropy(Partition::Dirichlet { alpha: 0.05 });
+    let spread = mean_entropy(Partition::Dirichlet { alpha: 1000.0 });
+    let iid = mean_entropy(Partition::Iid);
+
+    // small alpha concentrates labels: entropy well below the IID level
+    assert!(
+        concentrated < spread - 0.5,
+        "alpha=0.05 entropy {concentrated} not below alpha=1000 entropy {spread}"
+    );
+    // alpha -> infinity approaches the IID class balance
+    assert!(
+        (spread - iid).abs() < 0.15,
+        "alpha=1000 entropy {spread} vs iid {iid}"
+    );
+    assert!(
+        spread > (classes as f64).ln() - 0.2,
+        "alpha=1000 entropy {spread} far from uniform bound"
+    );
+}
+
+#[test]
+fn size_skew_varies_n_k_but_conserves_the_total() {
+    for p in all_partitions() {
+        let mut s = spec(p.clone(), 12, 80, 10);
+        s.size_skew = 0.4;
+        let data = synthetic(&s, 13);
+        let sizes: Vec<usize> = (0..12).map(|k| data.shard_rows(k)).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 12 * 80, "{p:?}");
+        assert!(sizes.iter().any(|&n| n != 80), "{p:?}: no size variation");
+        for k in 0..12 {
+            let shard = data.shard(k);
+            assert_eq!(shard.n, sizes[k], "{p:?}");
+            assert_eq!(shard.y.len(), sizes[k], "{p:?}");
+        }
+    }
+}
+
+#[test]
+fn lazy_shards_match_eager_for_every_partition() {
+    for p in all_partitions() {
+        let mut s = spec(p.clone(), 6, 32, 10);
+        s.size_skew = 0.25;
+        let eager = synthetic(&s, 21);
+        s.lazy_shards = true;
+        let lazy = synthetic(&s, 21);
+        assert!(lazy.is_lazy() && !eager.is_lazy());
+        // access out of order: lazy shards must not depend on generation
+        // order
+        for k in [5usize, 0, 3, 1, 4, 2] {
+            assert_eq!(eager.shard(k).x, lazy.shard(k).x, "{p:?} shard {k}");
+            assert_eq!(eager.shard(k).y, lazy.shard(k).y, "{p:?} shard {k}");
+        }
+        assert_eq!(eager.test.x, lazy.test.x, "{p:?}");
+        assert_eq!(eager.server.x, lazy.server.x, "{p:?}");
+    }
+}
+
+#[test]
+fn partition_validation_is_enforced() {
+    assert!(Partition::LabelShards {
+        shards_per_client: 11
+    }
+    .validate(10)
+    .is_err());
+    assert!(Partition::Dirichlet { alpha: -1.0 }.validate(10).is_err());
+    assert!(Partition::Dirichlet { alpha: 0.5 }.validate(10).is_ok());
+}

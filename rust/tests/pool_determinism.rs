@@ -1,0 +1,210 @@
+//! The worker-pool client stage must be invisible in the results: the
+//! same seed + the same scenario produce a bit-identical global model
+//! and identical deterministic round-record fields for any
+//! `client_threads`.  Runs the full pipeline in fake-train mode on the
+//! synthetic manifest, so it needs no PJRT artifacts and always runs in
+//! CI (an engine-backed twin lives in `fl_end_to_end.rs`).
+
+use std::sync::Arc;
+
+use hcfl::compression::{Compressor, Identity, Scheme};
+use hcfl::coordinator::pool::{
+    ClientMsg, ClientPool, ClientRunner, FakeTrainRunner, RoundInputs, WorkSpec,
+};
+use hcfl::data::{synthetic, DataSpec, FlData, Partition};
+use hcfl::error::{HcflError, Result};
+use hcfl::fl::AggregatorKind;
+use hcfl::metrics::RoundRecord;
+use hcfl::network::DevicePreset;
+use hcfl::prelude::*;
+
+/// A lazy fleet the fake runner can read `n_k` from without rendering a
+/// single pixel.
+fn lazy_fleet(n_clients: usize) -> Arc<FlData> {
+    let spec = DataSpec {
+        classes: 10,
+        n_clients,
+        per_client: 600,
+        test_n: 16,
+        server_n: 8,
+        partition: Partition::Iid,
+        size_skew: 0.25,
+        lazy_shards: true,
+    };
+    Arc::new(synthetic(&spec, 99))
+}
+
+fn fake_cfg(client_threads: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::mnist(Scheme::TopK { keep: 0.2 }, 3);
+    cfg.model = "fake".into();
+    cfg.fake_train = true;
+    cfg.n_clients = 40;
+    cfg.data.n_clients = 40;
+    cfg.participation = 0.5;
+    cfg.batch = 16;
+    cfg.data.per_client = 64;
+    cfg.data.test_n = 64;
+    cfg.data.server_n = 16;
+    // Non-IID shards + unequal shard sizes + a lossy policy + weighted
+    // aggregation: the most order-sensitive configuration the pipeline
+    // offers.
+    cfg.data.partition = Partition::Dirichlet { alpha: 0.3 };
+    cfg.data.size_skew = 0.25;
+    cfg.client_threads = client_threads;
+    cfg.scenario = ScenarioConfig {
+        policy: RoundPolicy::FastestM { m: 12 },
+        aggregator: AggregatorKind::SampleWeighted,
+        devices: DevicePreset::Iot {
+            sigma: 0.5,
+            dropout_p: 0.1,
+        },
+    };
+    cfg
+}
+
+fn run(client_threads: usize) -> (Vec<f32>, Vec<RoundRecord>) {
+    let engine = Engine::with_manifest(Manifest::synthetic(), 2).unwrap();
+    let mut sim = Simulation::new(&engine, fake_cfg(client_threads)).unwrap();
+    assert_eq!(sim.client_threads(), client_threads);
+    let report = sim.run().unwrap();
+    (sim.global().to_vec(), report.rounds)
+}
+
+#[test]
+fn results_are_bit_identical_across_pool_sizes() {
+    let (g1, r1) = run(1);
+    for client_threads in [4usize, 16] {
+        let (g, r) = run(client_threads);
+        assert_eq!(
+            g1, g,
+            "global model diverged at client_threads={client_threads}"
+        );
+        assert_eq!(r1.len(), r.len());
+        for (a, b) in r1.iter().zip(&r) {
+            // deterministic fields only: wall/compute times are measured
+            // and legitimately vary between runs
+            assert_eq!(a.round, b.round);
+            assert_eq!(a.up_bytes, b.up_bytes);
+            assert_eq!(a.down_bytes, b.down_bytes);
+            assert_eq!(a.selected, b.selected);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.dropped, b.dropped);
+            assert_eq!(a.stragglers, b.stragglers);
+            assert_eq!(a.recon_mse, b.recon_mse);
+        }
+    }
+}
+
+#[test]
+fn pool_reports_every_submitted_item_exactly_once() {
+    let fleet = lazy_fleet(200);
+    let compressor: Arc<dyn Compressor> = Arc::new(Identity);
+    let runner: Arc<dyn ClientRunner> =
+        Arc::new(FakeTrainRunner::new(compressor, Arc::clone(&fleet)));
+    let pool = ClientPool::new(runner, 7, 3).unwrap();
+    let global = Arc::new(vec![0.5f32; 64]);
+    let specs: Vec<WorkSpec> = (0..200)
+        .map(|slot| WorkSpec {
+            slot,
+            client: slot,
+            seed: 0xAB ^ ((slot as u64) << 1),
+        })
+        .collect();
+    let round = RoundInputs {
+        global,
+        epochs: 1,
+        batch: 16,
+        lr: 0.05,
+        encode_deltas: true,
+    };
+    let msgs = pool.run_clients(round, &specs).unwrap();
+    assert_eq!(msgs.len(), 200);
+    let mut slots: Vec<usize> = msgs.iter().map(|m| m.slot).collect();
+    slots.sort_unstable();
+    assert_eq!(slots, (0..200).collect::<Vec<_>>());
+    // n_k flows through from the (skewed) shard sizes
+    for msg in &msgs {
+        assert_eq!(msg.n_samples, fleet.shard_rows(msg.slot));
+    }
+    // same seed => same payload, regardless of which thread ran it
+    let by_slot = |msgs: &[ClientMsg], slot: usize| -> Vec<f32> {
+        msgs.iter().find(|m| m.slot == slot).unwrap().exact.clone()
+    };
+    let first = by_slot(&msgs, 17);
+    let pool2 = ClientPool::new(
+        Arc::new(FakeTrainRunner::new(Arc::new(Identity), fleet)) as Arc<dyn ClientRunner>,
+        1,
+        1,
+    )
+    .unwrap();
+    let round2 = RoundInputs {
+        global: Arc::new(vec![0.5f32; 64]),
+        epochs: 1,
+        batch: 16,
+        lr: 0.05,
+        encode_deltas: true,
+    };
+    let msgs2 = pool2.run_clients(round2, &specs).unwrap();
+    assert_eq!(first, by_slot(&msgs2, 17));
+}
+
+/// A runner that fails on one specific slot: the pool must drain the
+/// batch and surface the error.
+struct FailOnSlot(usize);
+
+impl ClientRunner for FailOnSlot {
+    fn run(
+        &self,
+        spec: &WorkSpec,
+        _round: &RoundInputs,
+        _engine_worker: usize,
+    ) -> Result<ClientMsg> {
+        if spec.slot == self.0 {
+            return Err(HcflError::Engine("injected client failure".into()));
+        }
+        Ok(ClientMsg {
+            slot: spec.slot,
+            update: Identity.compress(&[1.0, 2.0], 0)?,
+            exact: vec![1.0, 2.0],
+            n_samples: 1,
+            train_s: 0.0,
+        })
+    }
+}
+
+#[test]
+fn pool_propagates_client_failures() {
+    let pool = ClientPool::new(Arc::new(FailOnSlot(3)), 4, 2).unwrap();
+    let specs: Vec<WorkSpec> = (0..10)
+        .map(|slot| WorkSpec {
+            slot,
+            client: slot,
+            seed: slot as u64,
+        })
+        .collect();
+    let round = RoundInputs {
+        global: Arc::new(vec![0.0; 2]),
+        epochs: 1,
+        batch: 1,
+        lr: 0.1,
+        encode_deltas: false,
+    };
+    let err = pool.run_clients(round, &specs).unwrap_err();
+    assert!(err.to_string().contains("injected client failure"));
+    // the pool survives a failed round: the next batch still works
+    let round = RoundInputs {
+        global: Arc::new(vec![0.0; 2]),
+        epochs: 1,
+        batch: 1,
+        lr: 0.1,
+        encode_deltas: false,
+    };
+    let ok_specs: Vec<WorkSpec> = (10..20)
+        .map(|slot| WorkSpec {
+            slot,
+            client: slot,
+            seed: slot as u64,
+        })
+        .collect();
+    assert_eq!(pool.run_clients(round, &ok_specs).unwrap().len(), 10);
+}
