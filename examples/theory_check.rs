@@ -42,7 +42,7 @@ fn main() -> hcfl::error::Result<()> {
         // Mirror the run pipeline: delta-encode against the broadcast.
         let delta: Vec<f32> = out.params.iter().zip(&global).map(|(w, g)| w - g).collect();
         let upd = compressor.compress(&delta, k % 4)?;
-        let mut rec = compressor.decompress(&upd, trainer.model.d, k % 4)?;
+        let mut rec = compressor.decompress(upd, trainer.model.d, k % 4)?;
         for (v, g) in rec.iter_mut().zip(&global) {
             *v += g;
         }

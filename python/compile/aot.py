@@ -34,6 +34,11 @@ CHUNKS = {"conv": 256, "dense": 1024}
 RATIOS = [4, 8, 16, 32]
 AE_TRAIN_BATCH = 64
 EVAL_BATCH = 512
+# Batched codec dispatch sizes (chunks per engine call).  The Rust codec
+# greedily tiles a segment range with the largest size that fits and
+# falls back to the per-chunk executable for the remainder; this ladder
+# covers LeNet's ranges (11 conv / 41 dense chunks) in <= 3 calls each.
+CODEC_BATCHES = [2, 8, 32]
 
 # Per-model epoch geometry: shard_size / batch batches per local epoch.
 MODELS = {
@@ -175,6 +180,28 @@ def build_artifact_specs() -> List[Artifact]:
                     ],
                 )
             )
+            for n in CODEC_BATCHES:
+                arts.append(
+                    Artifact(
+                        name=f"{key}_encode_n{n}",
+                        fn=_tuplize(train.make_ae_encode_batch(chunk, ratio)),
+                        inputs=[_spec("f32", [dae]), _spec("f32", [n, chunk])],
+                    )
+                )
+                arts.append(
+                    Artifact(
+                        name=f"{key}_decode_n{n}",
+                        fn=_tuplize(train.make_ae_decode_batch(chunk, ratio)),
+                        inputs=[
+                            _spec("f32", [dae]),
+                            _spec("f32", [n, code]),
+                            _spec("f32", [n]),  # lo
+                            _spec("f32", [n]),  # hi
+                            _spec("f32", [n]),  # mu
+                            _spec("f32", [n]),  # sd
+                        ],
+                    )
+                )
 
     # ---- T-FedAvg ternary quantizer ----------------------------------------
     for chunk in sorted(set(CHUNKS.values())):
@@ -185,6 +212,14 @@ def build_artifact_specs() -> List[Artifact]:
                 inputs=[_spec("f32", [chunk])],
             )
         )
+        for n in CODEC_BATCHES:
+            arts.append(
+                Artifact(
+                    name=f"ternary_c{chunk}_n{n}",
+                    fn=_tuplize(train.make_ternary_batch(chunk)),
+                    inputs=[_spec("f32", [n, chunk])],
+                )
+            )
 
     return arts
 
@@ -216,6 +251,10 @@ def build_manifest(arts: List[Artifact]) -> dict:
         "autoencoders": {},
         "ternary": {
             f"c{chunk}": f"ternary_c{chunk}" for chunk in sorted(set(CHUNKS.values()))
+        },
+        "ternary_batch": {
+            f"c{chunk}": {str(n): f"ternary_c{chunk}_n{n}" for n in CODEC_BATCHES}
+            for chunk in sorted(set(CHUNKS.values()))
         },
     }
     for mname, cfg in MODELS.items():
@@ -250,6 +289,12 @@ def build_manifest(arts: List[Artifact]) -> dict:
                 "layers": lay.manifest(),
                 "encode": f"ae_{key}_encode",
                 "decode": f"ae_{key}_decode",
+                "encode_batch": {
+                    str(n): f"ae_{key}_encode_n{n}" for n in CODEC_BATCHES
+                },
+                "decode_batch": {
+                    str(n): f"ae_{key}_decode_n{n}" for n in CODEC_BATCHES
+                },
                 "train": {
                     "batch": AE_TRAIN_BATCH,
                     "name": f"ae_{key}_train_b{AE_TRAIN_BATCH}",

@@ -131,6 +131,17 @@ def make_ae_encode(chunk: int, ratio: int) -> Callable:
     return encode
 
 
+def make_ae_encode_batch(chunk: int, ratio: int) -> Callable:
+    """Batched compressor: (flat_ae[Dae], w[N, chunk]) ->
+    (codes[N, code], lo[N], hi[N], mu[N], sd[N]).
+
+    ``vmap`` of :func:`make_ae_encode` over the chunk axis, so every row
+    runs the identical per-chunk math — the Rust codec dispatches whole
+    segment ranges through these instead of one engine call per chunk.
+    """
+    return jax.vmap(make_ae_encode(chunk, ratio), in_axes=(None, 0))
+
+
 def make_ae_decode(chunk: int, ratio: int) -> Callable:
     """Server-side extractor: (flat_ae, code, lo, hi, mu, sd) -> w_hat.
 
@@ -153,6 +164,12 @@ def make_ae_decode(chunk: int, ratio: int) -> Callable:
     return decode
 
 
+def make_ae_decode_batch(chunk: int, ratio: int) -> Callable:
+    """Batched extractor: (flat_ae, codes[N, code], lo[N], hi[N], mu[N],
+    sd[N]) -> w_hat[N, chunk] (``vmap`` of :func:`make_ae_decode`)."""
+    return jax.vmap(make_ae_decode(chunk, ratio), in_axes=(None, 0, 0, 0, 0, 0))
+
+
 # --------------------------------------------------------------------------
 # T-FedAvg baseline
 # --------------------------------------------------------------------------
@@ -166,3 +183,9 @@ def make_ternary(chunk: int) -> Callable:
 
     del chunk
     return quantize
+
+
+def make_ternary_batch(chunk: int) -> Callable:
+    """(w[N, chunk]) -> (q[N, chunk], alpha[N]): row-wise TWN quantization
+    (``vmap`` of :func:`make_ternary`)."""
+    return jax.vmap(make_ternary(chunk), in_axes=(0,))

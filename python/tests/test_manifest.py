@@ -69,6 +69,24 @@ def test_autoencoder_entries(manifest):
             assert ref in manifest["executables"]
 
 
+def test_batched_codec_entries(manifest):
+    """Batched encode/decode/ternary executables resolve and cover the
+    advertised CODEC_BATCHES ladder (absent only in pre-batching
+    manifests, which the Rust side also tolerates)."""
+    batches = {str(n) for n in aot.CODEC_BATCHES}
+    for acfg in manifest["autoencoders"].values():
+        for field in ("encode_batch", "decode_batch"):
+            refs = acfg.get(field, {})
+            assert set(refs) == batches
+            for name in refs.values():
+                assert name in manifest["executables"]
+    for key, sizes in manifest.get("ternary_batch", {}).items():
+        assert key in manifest["ternary"]
+        assert set(sizes) == batches
+        for name in sizes.values():
+            assert name in manifest["executables"]
+
+
 def test_model_executable_refs_resolve(manifest):
     for mcfg in manifest["models"].values():
         for name in mcfg["train_step"].values():

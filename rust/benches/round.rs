@@ -1,12 +1,17 @@
 //! End-to-end round benchmarks: the worker-pool client stage at large m
-//! (pool vs the old spawn-per-client pattern), then one full FedAvg
-//! communication round per compression scheme (the system-level numbers
-//! behind the paper's Tables I-III) plus the eq.-13 modelled air-time
-//! comparison.
+//! (pool vs the old spawn-per-client pattern), the K≥1000 aggregation
+//! fold (single-threaded streaming baseline vs the deterministic
+//! reduction tree), then one full FedAvg communication round per
+//! compression scheme (the system-level numbers behind the paper's
+//! Tables I-III) plus the eq.-13 modelled air-time comparison.
 //!
-//! The client-stage section is engine-free (fake training) and always
-//! runs; the per-scheme rounds need the `pjrt` feature + artifacts and
-//! skip themselves otherwise.
+//! The client-stage and aggregation sections are engine-free (fake
+//! training / pure folds) and always run; the per-scheme rounds need the
+//! `pjrt` feature + artifacts and skip themselves otherwise.
+//!
+//! Every section's results land in `BENCH_round.json` (per-case median
+//! ns + throughput; see `util::bench::write_json`) so CI can archive the
+//! perf trajectory across PRs.
 //!
 //! Run with `cargo bench --bench round`.
 
@@ -14,20 +19,25 @@ use std::sync::Arc;
 
 use hcfl::compression::{Compressor, Identity, Scheme};
 use hcfl::config::ExperimentConfig;
-use hcfl::coordinator::pool::{ClientPool, ClientRunner, FakeTrainRunner, RoundInputs, WorkSpec};
+use hcfl::coordinator::pool::{
+    reduce_tree, ClientPool, ClientRunner, FakeTrainRunner, RoundInputs, WorkSpec,
+    WorkerCtx, WorkerPool,
+};
 use hcfl::coordinator::Simulation;
 use hcfl::data::{synthetic, DataSpec, Partition};
+use hcfl::fl::{finish_tree, AggregatorKind, UpdateMeta, WeightedLeaf, TREE_FAN_IN};
 use hcfl::network::LinkModel;
 use hcfl::prelude::*;
-use hcfl::util::bench::bench;
+use hcfl::util::bench::{bench_items, write_json, BenchResult};
 use hcfl::util::cli::Args;
+use hcfl::util::rng::Rng;
 
 /// The ISSUE's large-m client stage: m=1000 fake-train clients through
 /// the persistent pool at several sizes, against the pre-refactor
 /// spawn-one-thread-per-client pattern.  The per-client work is
-/// identical (seeded fake update + identity encode), so the difference
-/// is pure scheduling overhead.
-fn client_stage_bench(budget: f64) {
+/// identical (seeded fake update + identity encode + wire packing), so
+/// the difference is pure scheduling overhead.
+fn client_stage_bench(budget: f64, results: &mut Vec<BenchResult>) {
     let d = 802;
     let m = 1000;
     println!("== client stage at m={m} (fake train, d={d}): worker pool vs spawn-per-client ==");
@@ -68,21 +78,23 @@ fn client_stage_bench(budget: f64) {
 
     for threads in [1usize, 4, 16] {
         let pool = ClientPool::new(Arc::clone(&runner), threads, threads).unwrap();
-        bench(
+        results.push(bench_items(
             &format!("client stage m={m} [pool x{threads}]"),
             budget,
             50,
+            m,
             || {
                 let msgs = pool.run_clients(round(&global), &specs).unwrap();
                 assert_eq!(msgs.len(), m);
             },
-        );
+        ));
     }
 
-    bench(
+    results.push(bench_items(
         &format!("client stage m={m} [spawn-per-client]"),
         budget,
         50,
+        m,
         || {
             let inputs = round(&global);
             let mut done = 0usize;
@@ -93,7 +105,12 @@ fn client_stage_bench(budget: f64) {
                     let runner = &runner;
                     let inputs = &inputs;
                     s.spawn(move || {
-                        let _ = tx.send(runner.run(spec, inputs, 0));
+                        let mut ctx = WorkerCtx {
+                            thread_idx: 0,
+                            engine_worker: 0,
+                            scratch: Default::default(),
+                        };
+                        let _ = tx.send(runner.run(spec, inputs, &mut ctx));
                     });
                 }
                 drop(tx);
@@ -104,7 +121,69 @@ fn client_stage_bench(budget: f64) {
             });
             assert_eq!(done, m);
         },
-    );
+    ));
+}
+
+/// The ISSUE's K≥1000 aggregation fold: the pre-PR single-threaded
+/// streaming mean against the reduction tree on 1, 4 and 16 pool
+/// threads.  Sample-weighted leaves, the heavier of the two rules.
+/// Both arms start from an owned clone of each decoded update — that is
+/// what the round pipeline hands either fold — so the comparison
+/// measures the fold, not an asymmetric memcpy.
+fn aggregation_bench(budget: f64, results: &mut Vec<BenchResult>) {
+    let k = 1024usize;
+    let d = 8192usize;
+    println!("\n== aggregation fold at K={k}, d={d}: streaming baseline vs reduction tree ==");
+    let mut rng = Rng::new(99);
+    let updates: Vec<(f64, Vec<f32>)> = (0..k)
+        .map(|i| {
+            (
+                (100 + (i * 31) % 500) as f64,
+                (0..d).map(|_| rng.normal() * 0.2).collect(),
+            )
+        })
+        .collect();
+
+    results.push(bench_items(
+        &format!("aggregate K={k} [streaming baseline]"),
+        budget,
+        50,
+        k,
+        || {
+            let mut agg = AggregatorKind::SampleWeighted.build(d);
+            for (i, (w, x)) in updates.iter().enumerate() {
+                let owned = x.clone();
+                agg.push(
+                    &owned,
+                    &UpdateMeta {
+                        client: i,
+                        n_samples: *w as usize,
+                        arrival_s: i as f64,
+                    },
+                )
+                .unwrap();
+            }
+            assert_eq!(agg.finish().unwrap().len(), d);
+        },
+    ));
+
+    for threads in [1usize, 4, 16] {
+        let pool = WorkerPool::new(threads, threads).unwrap();
+        results.push(bench_items(
+            &format!("aggregate K={k} [tree x{threads}]"),
+            budget,
+            50,
+            k,
+            || {
+                let leaves: Vec<WeightedLeaf> = updates
+                    .iter()
+                    .map(|(w, x)| WeightedLeaf::new(*w, x.clone()))
+                    .collect();
+                let root = reduce_tree(&pool, leaves, TREE_FAN_IN).unwrap().unwrap();
+                assert_eq!(finish_tree(root).unwrap().len(), d);
+            },
+        ));
+    }
 }
 
 fn bench_cfg(scheme: Scheme, workers: usize) -> ExperimentConfig {
@@ -136,11 +215,23 @@ fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
     let workers = args.usize_or("workers", 4).unwrap();
     let budget = args.f64_or("budget", 5.0).unwrap();
+    let json_path = args
+        .str_or("json", "BENCH_round.json")
+        .to_string();
+    let mut results: Vec<BenchResult> = Vec::new();
 
-    client_stage_bench(budget);
+    client_stage_bench(budget, &mut results);
+    aggregation_bench(budget, &mut results);
+
+    let emit = |results: &[BenchResult]| {
+        let path = std::path::Path::new(&json_path);
+        write_json(path, "round", results).expect("write bench json");
+        println!("\nwrote {} ({} cases)", path.display(), results.len());
+    };
 
     if !hcfl::runtime::pjrt_enabled() {
         eprintln!("skipping per-scheme round benchmarks: built without the `pjrt` feature");
+        emit(&results);
         return;
     }
     let artifacts = args
@@ -148,6 +239,7 @@ fn main() {
         .to_string();
     if !std::path::Path::new(&artifacts).join("manifest.json").is_file() {
         eprintln!("skipping per-scheme round benchmarks: no artifacts (run `make artifacts`)");
+        emit(&results);
         return;
     }
     let engine = Engine::from_artifacts(&artifacts, workers).expect("artifacts load");
@@ -168,11 +260,17 @@ fn main() {
             .expect("simulation setup");
         let mut t = 0usize;
         let mut wire = 0usize;
-        bench(&format!("round e2e [{}]", scheme.label()), budget, 20, || {
-            t += 1;
-            let rec = sim.run_round(t).expect("round");
-            wire = rec.up_bytes as usize / 4; // per-client
-        });
+        results.push(bench_items(
+            &format!("round e2e [{}]", scheme.label()),
+            budget,
+            20,
+            4,
+            || {
+                t += 1;
+                let rec = sim.run_round(t).expect("round");
+                wire = rec.up_bytes as usize / 4; // per-client
+            },
+        ));
         wire_rows.push((scheme.label(), wire));
     }
 
@@ -192,4 +290,5 @@ fn main() {
             base as f64 / (*wire).max(1) as f64
         );
     }
+    emit(&results);
 }

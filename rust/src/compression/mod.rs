@@ -15,10 +15,12 @@
 pub mod hcfl;
 pub mod ternary;
 pub mod topk;
+pub mod wire;
 
 pub use hcfl::HcflCompressor;
 pub use ternary::TernaryCompressor;
 pub use topk::TopKCompressor;
+pub use wire::WireScratch;
 
 use crate::error::Result;
 
@@ -106,12 +108,41 @@ pub trait Compressor: Send + Sync {
     fn compress(&self, flat: &[f32], worker: usize) -> Result<CompressedUpdate>;
 
     /// Server side: wire update -> flat parameter vector of length `d`.
-    fn decompress(&self, upd: &CompressedUpdate, d: usize, worker: usize)
+    ///
+    /// Consumes the update: each payload is decoded exactly once, and
+    /// ownership lets lossless codecs hand the buffer straight back
+    /// instead of double-buffering every update (the FedAvg baseline
+    /// used to clone the full vector here).
+    fn decompress(&self, upd: CompressedUpdate, d: usize, worker: usize)
         -> Result<Vec<f32>>;
 
     fn name(&self) -> String {
         self.scheme().label()
     }
+}
+
+/// Split `n` chunks into batched engine dispatches: greedily take the
+/// largest available batch size that still fits, then fall back to
+/// per-chunk (batch 1) calls for the remainder.  The plan length is
+/// `n / max_size + O(|sizes|)` — a handful of dispatches where the
+/// per-chunk path needed n, which is what collapses the codec hot path
+/// from O(chunks) to O(segments) engine calls.  `sizes` must be sorted
+/// ascending (BTreeMap key order); an empty slice degenerates to the
+/// pure per-chunk plan.
+pub fn plan_batches(n: usize, sizes: &[usize]) -> Vec<usize> {
+    let mut plan = Vec::new();
+    let mut rem = n;
+    while rem > 0 {
+        let step = sizes
+            .iter()
+            .rev()
+            .find(|&&b| b <= rem)
+            .copied()
+            .unwrap_or(1);
+        plan.push(step);
+        rem -= step;
+    }
+    plan
 }
 
 /// Uncompressed FedAvg baseline: 4 bytes per weight, lossless.
@@ -132,14 +163,14 @@ impl Compressor for Identity {
 
     fn decompress(
         &self,
-        upd: &CompressedUpdate,
+        upd: CompressedUpdate,
         d: usize,
         _worker: usize,
     ) -> Result<Vec<f32>> {
-        match &upd.payload {
+        match upd.payload {
             Payload::Raw(v) => {
                 debug_assert_eq!(v.len(), d);
-                Ok(v.clone())
+                Ok(v)
             }
             _ => Err(crate::error::HcflError::Config(
                 "identity decompress got non-raw payload".into(),
@@ -158,8 +189,45 @@ mod tests {
         let flat: Vec<f32> = (0..100).map(|i| i as f32 * 0.1).collect();
         let upd = c.compress(&flat, 0).unwrap();
         assert_eq!(upd.wire_bytes, 400);
-        let back = c.decompress(&upd, flat.len(), 0).unwrap();
+        let back = c.decompress(upd, flat.len(), 0).unwrap();
         assert_eq!(back, flat);
+    }
+
+    #[test]
+    fn identity_decompress_reuses_the_payload_buffer() {
+        // The consuming decompress hands the raw payload back without a
+        // copy: the returned vector is the same allocation.
+        let c = Identity;
+        let upd = c.compress(&[1.0, 2.0, 3.0], 0).unwrap();
+        let ptr = match &upd.payload {
+            Payload::Raw(v) => v.as_ptr(),
+            _ => unreachable!(),
+        };
+        let back = c.decompress(upd, 3, 0).unwrap();
+        assert_eq!(back.as_ptr(), ptr);
+    }
+
+    #[test]
+    fn batch_plans_cover_exactly_and_stay_logarithmic() {
+        // greedy largest-first decomposition
+        assert_eq!(plan_batches(41, &[2, 8, 32]), vec![32, 8, 1]);
+        assert_eq!(plan_batches(11, &[2, 8, 32]), vec![8, 2, 1]);
+        assert_eq!(plan_batches(3, &[2, 8, 32]), vec![2, 1]);
+        assert_eq!(plan_batches(1, &[2, 8, 32]), vec![1]);
+        assert_eq!(plan_batches(0, &[2, 8, 32]), Vec::<usize>::new());
+        // no batched executables -> pure per-chunk fallback
+        assert_eq!(plan_batches(4, &[]), vec![1, 1, 1, 1]);
+        // every plan covers n exactly, and with the batch ladder the
+        // dispatch count collapses to n/32 + a constant tail
+        for n in 0..500usize {
+            let plan = plan_batches(n, &[2, 8, 32]);
+            assert_eq!(plan.iter().sum::<usize>(), n);
+            assert!(
+                plan.len() <= n / 32 + 8,
+                "n={n}: {} dispatches",
+                plan.len()
+            );
+        }
     }
 
     #[test]

@@ -1,14 +1,23 @@
 //! T-FedAvg baseline (paper [22]): ternary weight quantization.
 //!
-//! Full chunks run through the `ternary_c1024` Pallas kernel executable;
-//! the final partial chunk is quantized in Rust with identical TWN math
-//! (padding the kernel input with zeros would bias delta = 0.7·mean|w|).
+//! Full chunks run through the `ternary_c1024` Pallas kernel
+//! executable, batched: runs of full chunks are shipped as one
+//! `[batch, chunk]` tensor through the manifest's `ternary_batch`
+//! executables ([`crate::compression::plan_batches`]), with the
+//! per-chunk kernel as the remainder/fallback path.  The final partial
+//! chunk is quantized in Rust with identical TWN math (padding the
+//! kernel input with zeros would bias delta = 0.7·mean|w|).
 //!
 //! Wire format: 2 bits per weight (values in {-1, 0, +1}) packed four per
 //! byte, plus one f32 scale per chunk — the 16x-ish compression the paper
-//! reports for T-FedAvg.
+//! reports for T-FedAvg.  `wire::pack_ternary` emits exactly
+//! [`TernaryCompressor::wire_bytes_for`] bytes.
 
-use crate::compression::{CompressedUpdate, Compressor, Payload, Scheme, TernaryChunk};
+use std::collections::BTreeMap;
+
+use crate::compression::{
+    plan_batches, CompressedUpdate, Compressor, Payload, Scheme, TernaryChunk,
+};
 use crate::error::{HcflError, Result};
 use crate::runtime::Engine;
 use crate::tensor::TensorValue;
@@ -17,17 +26,27 @@ use crate::tensor::TensorValue;
 pub struct TernaryCompressor {
     engine: Engine,
     exec: String,
+    /// batch size -> batched quantizer executable (may be empty)
+    batch_execs: BTreeMap<usize, String>,
     chunk: usize,
 }
 
 impl TernaryCompressor {
     pub fn new(engine: Engine, chunk: usize) -> Result<Self> {
         let exec = engine.manifest().ternary_exec(chunk)?.to_string();
+        let batch_execs = engine.manifest().ternary_batch_execs(chunk);
         Ok(TernaryCompressor {
             engine,
             exec,
+            batch_execs,
             chunk,
         })
+    }
+
+    /// Test hook: force the per-chunk path (see
+    /// [`crate::compression::HcflCompressor::disable_batched`]).
+    pub fn disable_batched(&mut self) {
+        self.batch_execs.clear();
     }
 
     /// Exact TWN quantization in Rust (used for the tail chunk and as the
@@ -87,12 +106,14 @@ impl Compressor for TernaryCompressor {
     }
 
     fn compress(&self, flat: &[f32], worker: usize) -> Result<CompressedUpdate> {
+        let n_full = flat.len() / self.chunk;
         let mut chunks = Vec::with_capacity(flat.len().div_ceil(self.chunk));
-        let mut off = 0;
-        while off < flat.len() {
-            let end = (off + self.chunk).min(flat.len());
-            let slice = &flat[off..end];
-            if slice.len() == self.chunk {
+        let sizes: Vec<usize> = self.batch_execs.keys().copied().collect();
+        let mut i = 0usize; // full-chunk cursor
+        for batch in plan_batches(n_full, &sizes) {
+            let start = i * self.chunk;
+            if batch == 1 {
+                let slice = &flat[start..start + self.chunk];
                 let outs = self.engine.call_on(
                     worker,
                     &self.exec,
@@ -105,9 +126,41 @@ impl Compressor for TernaryCompressor {
                     alpha,
                 });
             } else {
-                chunks.push(Self::quantize_ref(slice));
+                let end = start + batch * self.chunk;
+                let exec = &self.batch_execs[&batch];
+                let outs = self.engine.call_on(
+                    worker,
+                    exec,
+                    vec![TensorValue::f32(
+                        flat[start..end].to_vec(),
+                        vec![batch, self.chunk],
+                    )?],
+                )?;
+                let qf = outs[0].as_f32()?;
+                let alphas = outs[1].as_f32()?;
+                if qf.len() != batch * self.chunk || alphas.len() != batch {
+                    return Err(HcflError::Engine(format!(
+                        "batched ternary '{exec}' returned {} values / {} scales \
+                         for batch {batch}",
+                        qf.len(),
+                        alphas.len()
+                    )));
+                }
+                for row in 0..batch {
+                    chunks.push(TernaryChunk {
+                        q: qf[row * self.chunk..(row + 1) * self.chunk]
+                            .iter()
+                            .map(|&v| v as i8)
+                            .collect(),
+                        alpha: alphas[row],
+                    });
+                }
             }
-            off = end;
+            i += batch;
+        }
+        // partial tail chunk: exact TWN math in Rust
+        if n_full * self.chunk < flat.len() {
+            chunks.push(Self::quantize_ref(&flat[n_full * self.chunk..]));
         }
         Ok(CompressedUpdate {
             wire_bytes: Self::wire_bytes_for(flat.len(), self.chunk),
@@ -117,7 +170,7 @@ impl Compressor for TernaryCompressor {
 
     fn decompress(
         &self,
-        upd: &CompressedUpdate,
+        upd: CompressedUpdate,
         d: usize,
         _worker: usize,
     ) -> Result<Vec<f32>> {

@@ -58,23 +58,19 @@ impl Compressor for TopKCompressor {
 
     fn decompress(
         &self,
-        upd: &CompressedUpdate,
+        upd: CompressedUpdate,
         d: usize,
         _worker: usize,
     ) -> Result<Vec<f32>> {
-        match &upd.payload {
-            Payload::Sparse {
-                d: dd,
-                idx,
-                val,
-            } => {
-                if *dd != d {
+        match upd.payload {
+            Payload::Sparse { d: dd, idx, val } => {
+                if dd != d {
                     return Err(HcflError::Config(format!(
                         "sparse payload d {dd} != expected {d}"
                     )));
                 }
                 let mut flat = vec![0.0f32; d];
-                for (&i, &v) in idx.iter().zip(val) {
+                for (&i, &v) in idx.iter().zip(&val) {
                     flat[i as usize] = v;
                 }
                 Ok(flat)
@@ -95,9 +91,9 @@ mod tests {
         let c = TopKCompressor::new(0.4).unwrap();
         let flat = vec![0.1, -5.0, 0.2, 3.0, -0.05];
         let upd = c.compress(&flat, 0).unwrap();
-        let back = c.decompress(&upd, flat.len(), 0).unwrap();
-        assert_eq!(back, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
         assert_eq!(upd.wire_bytes, 8 * 2);
+        let back = c.decompress(upd, flat.len(), 0).unwrap();
+        assert_eq!(back, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
     }
 
     #[test]
@@ -105,7 +101,7 @@ mod tests {
         let c = TopKCompressor::new(1.0).unwrap();
         let flat = vec![1.0, -2.0, 3.0];
         let upd = c.compress(&flat, 0).unwrap();
-        assert_eq!(c.decompress(&upd, 3, 0).unwrap(), flat);
+        assert_eq!(c.decompress(upd, 3, 0).unwrap(), flat);
     }
 
     #[test]
@@ -118,6 +114,6 @@ mod tests {
     fn wrong_d_rejected() {
         let c = TopKCompressor::new(0.5).unwrap();
         let upd = c.compress(&[1.0, 2.0], 0).unwrap();
-        assert!(c.decompress(&upd, 3, 0).is_err());
+        assert!(c.decompress(upd, 3, 0).is_err());
     }
 }

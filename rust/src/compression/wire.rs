@@ -1,0 +1,455 @@
+//! Packed wire buffers: every [`Payload`] serialized to the actual
+//! bytes it would occupy on the air.
+//!
+//! Until this module existed, `wire_bytes` was a per-scheme closed-form
+//! formula; now it is the measured length of the packed buffer.  The
+//! layouts (framing ignored for all schemes equally, exactly as the
+//! formulas did):
+//!
+//! * **Raw** — little-endian f32s, `4·d` bytes.
+//! * **HCFL** — per chunk, in range/chunk order: the code as f32-LE
+//!   (`4·code_len` bytes) followed by 16 bytes of side info
+//!   (lo, hi, mu, sd as f32-LE).  Total = `Σ n_chunks·(4·code_len+16)`,
+//!   byte-identical to [`super::hcfl::hcfl_wire_bytes`].
+//! * **Ternary** — one f32-LE scale per chunk (`4·n_chunks` bytes), then
+//!   the concatenated quantized values packed 2 bits each, four per
+//!   byte, LSB first (`0b00` = 0, `0b01` = +1, `0b10` = −1).  Total =
+//!   `4·n_chunks + ceil(d/4)`, byte-identical to
+//!   [`super::TernaryCompressor::wire_bytes_for`].
+//! * **Sparse (Top-K)** — `u32` d, `u32` k, the sorted indices
+//!   delta-coded as LEB128 varints (first index absolute, then gaps),
+//!   then the kept values as f32-LE.  This is the one scheme whose
+//!   packed size *beats* its old `8·k` formula — delta varints make the
+//!   index stream sublinear for dense keeps.
+//!
+//! Packing is allocation-free in steady state: callers thread a
+//! [`WireScratch`] (one per pool worker, see `coordinator/pool.rs`)
+//! whose internal buffer is reused across rounds.  Unpacking needs the
+//! receiver's static knowledge of the layout — the model geometry the
+//! server already owns — via [`HcflWireLayout`] / the `(d, chunk)` pair,
+//! mirroring how a real deployment would parse a headerless payload.
+
+use crate::compression::{ChunkCode, Payload, RangeCodes, TernaryChunk};
+use crate::error::{HcflError, Result};
+
+/// A reusable packing buffer.  One lives in each pool worker's context
+/// so steady-state rounds measure wire sizes with zero allocation.
+#[derive(Debug, Default)]
+pub struct WireScratch {
+    buf: Vec<u8>,
+}
+
+impl WireScratch {
+    pub fn new() -> WireScratch {
+        WireScratch { buf: Vec::new() }
+    }
+
+    /// Pack `payload` into the internal buffer and return the packed
+    /// length — the measured `wire_bytes` of the update.
+    pub fn pack(&mut self, payload: &Payload) -> Result<usize> {
+        self.buf.clear();
+        pack_payload(payload, &mut self.buf)?;
+        Ok(self.buf.len())
+    }
+
+    /// The bytes of the most recent [`WireScratch::pack`].
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Append any payload's packed form to `out`.
+pub fn pack_payload(payload: &Payload, out: &mut Vec<u8>) -> Result<()> {
+    match payload {
+        Payload::Raw(v) => {
+            pack_raw(v, out);
+            Ok(())
+        }
+        Payload::HcflCodes(codes) => {
+            pack_hcfl(codes, out);
+            Ok(())
+        }
+        Payload::TernaryChunks(chunks) => pack_ternary(chunks, out),
+        Payload::Sparse { d, idx, val } => pack_sparse(*d, idx, val, out),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Raw (FedAvg)
+// ---------------------------------------------------------------------------
+
+pub fn pack_raw(values: &[f32], out: &mut Vec<u8>) {
+    out.reserve(4 * values.len());
+    for v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub fn unpack_raw(bytes: &[u8], d: usize) -> Result<Vec<f32>> {
+    if bytes.len() != 4 * d {
+        return Err(HcflError::Config(format!(
+            "raw wire buffer is {} bytes, expected {}",
+            bytes.len(),
+            4 * d
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// HCFL
+// ---------------------------------------------------------------------------
+
+/// The receiver-side shape of one packed HCFL range.
+#[derive(Debug, Clone)]
+pub struct RangeLayout {
+    pub range_idx: usize,
+    pub n_chunks: usize,
+    pub code_len: usize,
+}
+
+/// The receiver-side shape of a whole packed HCFL update, derivable
+/// from the compressor's static configuration (see
+/// [`super::HcflCompressor::wire_layout`]).
+#[derive(Debug, Clone)]
+pub struct HcflWireLayout {
+    pub ranges: Vec<RangeLayout>,
+}
+
+impl HcflWireLayout {
+    /// Packed size in bytes (equals `hcfl_wire_bytes`).
+    pub fn packed_len(&self) -> usize {
+        self.ranges
+            .iter()
+            .map(|r| r.n_chunks * (4 * r.code_len + 16))
+            .sum()
+    }
+}
+
+pub fn pack_hcfl(codes: &[RangeCodes], out: &mut Vec<u8>) {
+    for rc in codes {
+        for cc in &rc.chunks {
+            for v in &cc.code {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            out.extend_from_slice(&cc.lo.to_le_bytes());
+            out.extend_from_slice(&cc.hi.to_le_bytes());
+            out.extend_from_slice(&cc.mu.to_le_bytes());
+            out.extend_from_slice(&cc.sd.to_le_bytes());
+        }
+    }
+}
+
+pub fn unpack_hcfl(bytes: &[u8], layout: &HcflWireLayout) -> Result<Vec<RangeCodes>> {
+    if bytes.len() != layout.packed_len() {
+        return Err(HcflError::Config(format!(
+            "hcfl wire buffer is {} bytes, layout expects {}",
+            bytes.len(),
+            layout.packed_len()
+        )));
+    }
+    let mut pos = 0usize;
+    let mut read_f32 = |bytes: &[u8]| -> f32 {
+        let v = f32::from_le_bytes([
+            bytes[pos],
+            bytes[pos + 1],
+            bytes[pos + 2],
+            bytes[pos + 3],
+        ]);
+        pos += 4;
+        v
+    };
+    let mut out = Vec::with_capacity(layout.ranges.len());
+    for r in &layout.ranges {
+        let mut chunks = Vec::with_capacity(r.n_chunks);
+        for _ in 0..r.n_chunks {
+            let code: Vec<f32> = (0..r.code_len).map(|_| read_f32(bytes)).collect();
+            let lo = read_f32(bytes);
+            let hi = read_f32(bytes);
+            let mu = read_f32(bytes);
+            let sd = read_f32(bytes);
+            chunks.push(ChunkCode {
+                code,
+                lo,
+                hi,
+                mu,
+                sd,
+            });
+        }
+        out.push(RangeCodes {
+            range_idx: r.range_idx,
+            chunks,
+        });
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Ternary
+// ---------------------------------------------------------------------------
+
+pub fn pack_ternary(chunks: &[TernaryChunk], out: &mut Vec<u8>) -> Result<()> {
+    for c in chunks {
+        out.extend_from_slice(&c.alpha.to_le_bytes());
+    }
+    let mut byte = 0u8;
+    let mut filled = 0u32;
+    for c in chunks {
+        for &q in &c.q {
+            let bits: u8 = match q {
+                0 => 0b00,
+                1 => 0b01,
+                -1 => 0b10,
+                other => {
+                    return Err(HcflError::Config(format!(
+                        "ternary value {other} is not in {{-1, 0, 1}}"
+                    )))
+                }
+            };
+            byte |= bits << (2 * filled);
+            filled += 1;
+            if filled == 4 {
+                out.push(byte);
+                byte = 0;
+                filled = 0;
+            }
+        }
+    }
+    if filled > 0 {
+        out.push(byte);
+    }
+    Ok(())
+}
+
+pub fn unpack_ternary(bytes: &[u8], d: usize, chunk: usize) -> Result<Vec<TernaryChunk>> {
+    let n_chunks = d.div_ceil(chunk);
+    let expect = 4 * n_chunks + d.div_ceil(4);
+    if bytes.len() != expect {
+        return Err(HcflError::Config(format!(
+            "ternary wire buffer is {} bytes, expected {expect}",
+            bytes.len()
+        )));
+    }
+    let alphas: Vec<f32> = bytes[..4 * n_chunks]
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    let packed = &bytes[4 * n_chunks..];
+    let mut q_all = Vec::with_capacity(d);
+    for i in 0..d {
+        let bits = (packed[i / 4] >> (2 * (i % 4))) & 0b11;
+        q_all.push(match bits {
+            0b00 => 0i8,
+            0b01 => 1,
+            0b10 => -1,
+            _ => {
+                return Err(HcflError::Config(
+                    "ternary wire buffer has an invalid 0b11 symbol".into(),
+                ))
+            }
+        });
+    }
+    // padding bits past d must be zero for the buffer to be canonical
+    if d % 4 != 0 {
+        let tail = packed[d / 4] >> (2 * (d % 4));
+        if tail != 0 {
+            return Err(HcflError::Config(
+                "ternary wire buffer has non-zero padding bits".into(),
+            ));
+        }
+    }
+    let mut out = Vec::with_capacity(n_chunks);
+    for (i, alpha) in alphas.into_iter().enumerate() {
+        let start = i * chunk;
+        let end = ((i + 1) * chunk).min(d);
+        out.push(TernaryChunk {
+            q: q_all[start..end].to_vec(),
+            alpha,
+        });
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Sparse (Top-K)
+// ---------------------------------------------------------------------------
+
+fn push_varint(mut v: u32, out: &mut Vec<u8>) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+fn read_varint(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+    let mut v = 0u32;
+    let mut shift = 0u32;
+    loop {
+        let byte = *bytes
+            .get(*pos)
+            .ok_or_else(|| HcflError::Config("sparse wire buffer truncated".into()))?;
+        *pos += 1;
+        if shift >= 32 {
+            return Err(HcflError::Config("sparse varint overflows u32".into()));
+        }
+        v |= ((byte & 0x7F) as u32) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+pub fn pack_sparse(d: usize, idx: &[u32], val: &[f32], out: &mut Vec<u8>) -> Result<()> {
+    if idx.len() != val.len() {
+        return Err(HcflError::Config(format!(
+            "sparse payload has {} indices but {} values",
+            idx.len(),
+            val.len()
+        )));
+    }
+    out.extend_from_slice(&(d as u32).to_le_bytes());
+    out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+    let mut prev: Option<u32> = None;
+    for &i in idx {
+        match prev {
+            None => push_varint(i, out),
+            Some(p) => {
+                if i <= p {
+                    return Err(HcflError::Config(
+                        "sparse indices must be strictly ascending".into(),
+                    ));
+                }
+                push_varint(i - p, out);
+            }
+        }
+        prev = Some(i);
+    }
+    for v in val {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(())
+}
+
+pub fn unpack_sparse(bytes: &[u8]) -> Result<Payload> {
+    if bytes.len() < 8 {
+        return Err(HcflError::Config("sparse wire buffer truncated".into()));
+    }
+    let d = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
+    let k = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+    let mut pos = 8usize;
+    let mut idx = Vec::with_capacity(k);
+    let mut prev = 0u32;
+    for i in 0..k {
+        let delta = read_varint(bytes, &mut pos)?;
+        let v = if i == 0 { delta } else { prev + delta };
+        idx.push(v);
+        prev = v;
+    }
+    if bytes.len() != pos + 4 * k {
+        return Err(HcflError::Config(format!(
+            "sparse wire buffer is {} bytes, expected {}",
+            bytes.len(),
+            pos + 4 * k
+        )));
+    }
+    let val: Vec<f32> = bytes[pos..]
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Ok(Payload::Sparse { d, idx, val })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_roundtrip_and_length() {
+        let v = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        let mut out = Vec::new();
+        pack_raw(&v, &mut out);
+        assert_eq!(out.len(), 16);
+        assert_eq!(unpack_raw(&out, 4).unwrap(), v);
+        assert!(unpack_raw(&out, 3).is_err());
+    }
+
+    #[test]
+    fn ternary_symbols_pack_four_per_byte() {
+        let chunks = vec![
+            TernaryChunk {
+                q: vec![0, 1, -1, 0, 1],
+                alpha: 0.5,
+            },
+            TernaryChunk {
+                q: vec![-1, -1],
+                alpha: 0.25,
+            },
+        ];
+        let mut out = Vec::new();
+        pack_ternary(&chunks, &mut out).unwrap();
+        // 2 alphas (8 B) + 7 symbols packed into 2 bytes
+        assert_eq!(out.len(), 8 + 2);
+        // chunk size 5: first chunk full, second is the 2-wide tail
+        let back = unpack_ternary(&out, 7, 5).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].q, chunks[0].q);
+        assert_eq!(back[1].q, chunks[1].q);
+        assert_eq!(back[0].alpha, 0.5);
+        assert_eq!(back[1].alpha, 0.25);
+    }
+
+    #[test]
+    fn ternary_rejects_invalid_symbols() {
+        let mut out = Vec::new();
+        let bad = vec![TernaryChunk {
+            q: vec![2],
+            alpha: 1.0,
+        }];
+        assert!(pack_ternary(&bad, &mut out).is_err());
+    }
+
+    #[test]
+    fn sparse_varints_round_trip() {
+        let idx = vec![0u32, 1, 5, 300, 70_000];
+        let val = vec![1.0f32, -2.0, 3.0, -4.0, 5.0];
+        let mut out = Vec::new();
+        pack_sparse(100_000, &idx, &val, &mut out).unwrap();
+        // delta varints beat the old fixed 4 B/index accounting
+        assert!(out.len() < 8 + 8 * idx.len());
+        match unpack_sparse(&out).unwrap() {
+            Payload::Sparse { d, idx: i, val: v } => {
+                assert_eq!(d, 100_000);
+                assert_eq!(i, idx);
+                assert_eq!(v, val);
+            }
+            _ => unreachable!(),
+        }
+        // non-ascending indices are a packing bug, not a wire format
+        let mut junk = Vec::new();
+        assert!(pack_sparse(10, &[3, 3], &[1.0, 2.0], &mut junk).is_err());
+    }
+
+    #[test]
+    fn scratch_reuses_its_buffer() {
+        let mut scratch = WireScratch::new();
+        let p = Payload::Raw(vec![0.5f32; 256]);
+        let n1 = scratch.pack(&p).unwrap();
+        assert_eq!(n1, 1024);
+        let cap = scratch.buf.capacity();
+        let ptr = scratch.buf.as_ptr();
+        for _ in 0..10 {
+            assert_eq!(scratch.pack(&p).unwrap(), 1024);
+        }
+        assert_eq!(scratch.buf.capacity(), cap);
+        assert_eq!(scratch.buf.as_ptr(), ptr);
+    }
+}

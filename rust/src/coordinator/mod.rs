@@ -13,13 +13,19 @@
 //!    affinity).  A round enqueues one seeded [`pool::WorkSpec`] per
 //!    survivor and performs **zero thread spawns**, so m=1000 rounds at
 //!    K=10k cost the same scheduling overhead as m=4; results are
-//!    bit-identical for any pool size;
+//!    bit-identical for any pool size.  Every update's `wire_bytes` is
+//!    the measured length of its packed wire buffer
+//!    (`compression/wire.rs`), packed into the worker's reusable
+//!    scratch;
 //! 4. **round clock** ([`clock`]) — exact per-client byte counts and
 //!    device profiles become modelled compute + air times, and the
 //!    configured [`clock::RoundPolicy`] picks the surviving uploads and
 //!    the round makespan;
-//! 5. **aggregation** — survivors are decoded in modelled arrival order
-//!    and folded through the configured [`crate::fl::Aggregator`];
+//! 5. **aggregation** — survivors decode in parallel on the same pool,
+//!    become weight-scaled leaves in modelled arrival order, and fold
+//!    through a fixed-fan-in reduction tree ([`pool::reduce_tree`])
+//!    whose shape depends only on arrival order — bit-identical for any
+//!    pool size;
 //! 6. **evaluation** — the installed global model is scored (skipped in
 //!    `fake_train` smoke mode, which has no engine to score on).
 //!
@@ -35,17 +41,21 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use self::pool::{
-    ClientMsg, ClientPool, ClientRunner, FakeTrainRunner, RoundInputs, TrainEncodeRunner,
-    WorkSpec,
+    reduce_tree, ClientMsg, ClientPool, ClientRunner, FakeTrainRunner, RoundInputs,
+    TrainEncodeRunner, WorkSpec, WorkerCtx,
 };
 use crate::compression::{
     Compressor, HcflCompressor, Identity, Scheme, TernaryCompressor, TopKCompressor,
+    WireScratch,
 };
 use crate::config::ExperimentConfig;
 use crate::coordinator::clock::{client_timing, resolve, ClientTiming};
 use crate::data::{synthetic, FlData};
 use crate::error::Result;
-use crate::fl::{select_clients, LocalTrainer, Server, UpdateMeta};
+use crate::fl::{
+    finish_tree, select_clients, LocalTrainer, Server, UpdateMeta, WeightedLeaf,
+    TREE_FAN_IN,
+};
 use crate::hcfl::prepare_autoencoders;
 use crate::metrics::{RoundRecord, RunReport};
 use crate::model::{merge_segment_ranges, split_dense};
@@ -246,32 +256,80 @@ impl Simulation {
             .collect();
         let outcome = resolve(&self.cfg.scenario.policy, &timings);
 
-        // ---- stage 5: decode + aggregate in modelled arrival order -----
-        let mut agg = self.cfg.scenario.aggregator.build(d);
-        let mut server_time_s = 0.0f64;
-        let mut recon_sum = 0.0f64;
+        // Uplink byte accounting must happen before stage 5 consumes the
+        // survivor messages: every transmitting client's upload hits the
+        // air even when the policy later ignores it.
+        let up_bytes: u64 = msgs
+            .iter()
+            .flatten()
+            .map(|msg| msg.update.wire_bytes as u64)
+            .sum();
+
+        // ---- stage 5: parallel decode + reduction-tree aggregation -----
+        // Survivors decode on the pool (each thread against its pinned
+        // engine worker), become weight-scaled leaves in modelled arrival
+        // order, and fold through the fixed-fan-in reduction tree.  The
+        // tree shape and every per-node summation order depend only on
+        // the arrival order, so the result is bit-identical for any
+        // `client_threads` (tests/pool_determinism.rs).
+        let kind = self.cfg.scenario.aggregator.clone();
+        let t0_arrival = outcome
+            .survivors
+            .first()
+            .map(|&i| timings[i].arrival_s())
+            .unwrap_or(0.0);
+        let encode_deltas = self.cfg.encode_deltas;
+        let mut jobs = Vec::with_capacity(outcome.survivors.len());
         for &i in &outcome.survivors {
-            let msg = msgs[i].as_ref().expect("survivor sent an update");
-            let t0 = Instant::now();
-            let mut decoded = self.compressor.decompress(&msg.update, d, 0)?;
-            decode_payload(&mut decoded, &global_recv, self.cfg.encode_deltas);
-            server_time_s += t0.elapsed().as_secs_f64();
-            recon_sum += mse(&decoded, &msg.exact);
+            let msg = msgs[i].take().expect("survivor sent an update");
             let meta = UpdateMeta {
                 client: timings[i].client,
                 n_samples: msg.n_samples,
                 arrival_s: timings[i].arrival_s(),
             };
-            let t1 = Instant::now();
-            agg.push(&decoded, &meta)?;
-            server_time_s += t1.elapsed().as_secs_f64();
+            let compressor = Arc::clone(&self.compressor);
+            let global = Arc::clone(&global_recv);
+            let kind = kind.clone();
+            jobs.push(
+                move |ctx: &mut WorkerCtx| -> Result<(WeightedLeaf, f64, f64)> {
+                    // Only the server's real work (decode + weighting) is
+                    // timed; the reconstruction MSE is simulation-only
+                    // instrumentation and stays outside the measured
+                    // server time, as before the pool.
+                    let t0 = Instant::now();
+                    let mut decoded =
+                        compressor.decompress(msg.update, d, ctx.engine_worker)?;
+                    decode_payload(&mut decoded, &global, encode_deltas);
+                    let mut decode_s = t0.elapsed().as_secs_f64();
+                    let recon = mse(&decoded, &msg.exact);
+                    let t1 = Instant::now();
+                    let w = kind.weight(&meta, t0_arrival)?;
+                    let leaf = WeightedLeaf::new(w, decoded);
+                    decode_s += t1.elapsed().as_secs_f64();
+                    Ok((leaf, recon, decode_s))
+                },
+            );
         }
-        let completed = agg.count();
-        if completed > 0 {
-            self.server.install(agg.finish()?)?;
+        let mut leaves = Vec::with_capacity(jobs.len());
+        let mut recon_sum = 0.0f64;
+        // Summed per-survivor decode time (the pre-pool semantics: total
+        // server-side work, not overlapped wall time) ...
+        let mut server_time_s = 0.0f64;
+        for res in self.pool.workers().scatter(jobs)? {
+            let (leaf, recon, decode_s) = res?;
+            recon_sum += recon;
+            server_time_s += decode_s;
+            leaves.push(leaf);
+        }
+        let completed = leaves.len();
+        // ... plus the aggregation fold itself.
+        let t_fold = Instant::now();
+        if let Some(root) = reduce_tree(self.pool.workers(), leaves, TREE_FAN_IN)? {
+            self.server.install(finish_tree(root)?)?;
         }
         // else: every upload was lost to dropout/policy; the round is
         // wasted air time and the global model carries over unchanged.
+        server_time_s += t_fold.elapsed().as_secs_f64();
 
         // ---- stage 6: evaluation ---------------------------------------
         let (accuracy, loss) = if self.cfg.fake_train {
@@ -284,15 +342,9 @@ impl Simulation {
         };
 
         // Cost accounting (clock layer outputs, exact per-client bytes):
-        // every transmitting client's upload hits the air even when the
-        // policy later ignores it, so air time covers all alive clients —
-        // capped at the makespan, past which cut transmissions stop.
-        // The broadcast reaches all m selected.
-        let up_bytes: u64 = msgs
-            .iter()
-            .flatten()
-            .map(|msg| msg.update.wire_bytes as u64)
-            .sum();
+        // air time covers all alive clients — capped at the makespan,
+        // past which cut transmissions stop.  The broadcast reaches all
+        // m selected.
         let comm_time_s = timings
             .iter()
             .filter(|tm| !tm.dropped)
@@ -325,16 +377,18 @@ impl Simulation {
 ///
 /// Paper Fig. 3 puts the only decoder at the server, so the broadcast
 /// itself is always exact; `compress_downlink=true` additionally
-/// *accounts* the broadcast at the encoded wire size, mirroring the
-/// paper's symmetric Tables I/II.  The returned payload is therefore the
-/// exact global model in both cases.
+/// *accounts* the broadcast at the encoded wire size — the measured
+/// length of the packed wire buffer (`compression/wire.rs`), mirroring
+/// the paper's symmetric Tables I/II.  The returned payload is
+/// therefore the exact global model in both cases.
 pub fn broadcast(
     compressor: &dyn Compressor,
     global: &[f32],
     compress_downlink: bool,
 ) -> Result<(Arc<Vec<f32>>, usize)> {
     let down_bytes = if compress_downlink {
-        compressor.compress(global, 0)?.wire_bytes
+        let upd = compressor.compress(global, 0)?;
+        WireScratch::new().pack(&upd.payload)?
     } else {
         4 * global.len()
     };

@@ -1,32 +1,182 @@
-//! Persistent worker-pool client stage.
+//! Persistent worker pool: the client stage and the server's parallel
+//! decode + reduction-tree aggregation share one set of threads.
 //!
 //! The pre-pool coordinator spawned one OS thread per selected client per
 //! round, which caps the `scenarios` sweep far below the paper's K=10k
 //! regime (m=1000 surviving clients meant 1000 thread spawns *per
-//! round*).  The pool spawns `client_threads` workers once per
-//! [`crate::coordinator::Simulation`]; every round pushes one
-//! [`WorkSpec`] per surviving client onto a shared queue and collects
-//! exactly as many [`ClientMsg`]s back — zero spawns on the round path.
+//! round*).  [`WorkerPool`] spawns `client_threads` workers once per
+//! [`crate::coordinator::Simulation`]; every stage scatters closures onto
+//! the shared queue and collects exactly as many results back — zero
+//! spawns on the round path.  Each pool thread owns a [`WorkerCtx`]: its
+//! pinned PJRT engine worker (`thread_idx % engine_workers`, so
+//! per-worker executable caches stay warm across rounds) and a reusable
+//! [`WireScratch`] so steady-state wire packing allocates nothing.
 //!
-//! Determinism: a work item carries its selection slot and its private
-//! RNG seed (`round_seed ^ (client_id << 1)`, unchanged from the
+//! Determinism: a client work item carries its selection slot and its
+//! private RNG seed (`round_seed ^ (client_id << 1)`, unchanged from the
 //! spawn-per-client implementation), so a client's result never depends
 //! on which pool thread ran it, in what order, or how many threads
 //! exist — per-round results are bit-identical for any pool size
-//! (guarded by `tests/pool_determinism.rs`).  Each pool thread pins to
-//! one PJRT engine worker (`thread_idx % engine_workers`) so per-worker
-//! executable caches stay warm across rounds.
+//! (guarded by `tests/pool_determinism.rs`).  The same argument covers
+//! [`reduce_tree`]: the tree shape and every node's summation order are
+//! pure functions of the leaf order, and threads only decide *when* a
+//! node is computed, never *what* it sums.
 
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::compression::{CompressedUpdate, Compressor};
+use crate::compression::{CompressedUpdate, Compressor, WireScratch};
 use crate::coordinator::encode_payload;
 use crate::data::FlData;
 use crate::error::{HcflError, Result};
-use crate::fl::LocalTrainer;
+use crate::fl::{combine_leaves, LocalTrainer, WeightedLeaf};
 use crate::util::rng::Rng;
+
+/// Per-thread state a pool worker hands to every task it runs.
+pub struct WorkerCtx {
+    /// Index of this pool thread.
+    pub thread_idx: usize,
+    /// The PJRT engine worker this thread pins its calls to.
+    pub engine_worker: usize,
+    /// Reusable wire-packing buffer (grown once, reused every round).
+    pub scratch: WireScratch,
+}
+
+type Task = Box<dyn FnOnce(&mut WorkerCtx) + Send>;
+
+/// A fixed pool of worker threads over a shared closure queue.
+pub struct WorkerPool {
+    tx: Option<mpsc::Sender<Task>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers (>= 1), each pinned to engine worker
+    /// `thread_idx % engine_workers`.
+    pub fn new(threads: usize, engine_workers: usize) -> Result<WorkerPool> {
+        let threads = threads.max(1);
+        let engine_workers = engine_workers.max(1);
+        let (tx, rx) = mpsc::channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let rx = Arc::clone(&rx);
+            let join = std::thread::Builder::new()
+                .name(format!("client-pool-{w}"))
+                .spawn(move || {
+                    let mut ctx = WorkerCtx {
+                        thread_idx: w,
+                        engine_worker: w % engine_workers,
+                        scratch: WireScratch::new(),
+                    };
+                    loop {
+                        // Hold the queue lock only while dequeuing; recv
+                        // blocks between stages and ends when the pool
+                        // drops.
+                        let task = {
+                            let Ok(queue) = rx.lock() else { break };
+                            match queue.recv() {
+                                Ok(task) => task,
+                                Err(_) => break,
+                            }
+                        };
+                        task(&mut ctx);
+                    }
+                })
+                .map_err(|e| HcflError::Engine(format!("client pool spawn failed: {e}")))?;
+            workers.push(join);
+        }
+        Ok(WorkerPool {
+            tx: Some(tx),
+            workers,
+        })
+    }
+
+    /// Pool size.
+    pub fn n_threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Scatter `jobs` across the pool and gather every result, returned
+    /// in job order (a barrier: blocks until the whole batch ran).
+    /// Results must be independent of which thread runs a job and when —
+    /// callers own that invariant; the pool only moves closures.
+    pub fn scatter<T, F>(&self, jobs: Vec<F>) -> Result<Vec<T>>
+    where
+        T: Send + 'static,
+        F: FnOnce(&mut WorkerCtx) -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| HcflError::Engine("worker pool is shut down".into()))?;
+        let (reply_tx, reply_rx) = mpsc::channel::<(usize, T)>();
+        for (i, job) in jobs.into_iter().enumerate() {
+            let reply = reply_tx.clone();
+            tx.send(Box::new(move |ctx: &mut WorkerCtx| {
+                // A dead receiver means the batch was abandoned.
+                let _ = reply.send((i, job(ctx)));
+            }))
+            .map_err(|_| HcflError::Engine("worker pool queue disconnected".into()))?;
+        }
+        drop(reply_tx);
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for _ in 0..n {
+            let (i, out) = reply_rx
+                .recv()
+                .map_err(|_| HcflError::Engine("worker pool worker vanished".into()))?;
+            slots[i] = Some(out);
+        }
+        Ok(slots
+            .into_iter()
+            .map(|s| s.expect("every job reported exactly once"))
+            .collect())
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // closes the queue; workers exit at the next recv
+        for join in self.workers.drain(..) {
+            let _ = join.join();
+        }
+    }
+}
+
+/// Fold weighted leaves through the fixed-fan-in reduction tree, level
+/// by level, each level's nodes computed in parallel on the pool.
+/// Returns `None` for an empty leaf set.  Bit-identical for any pool
+/// size: group boundaries are `fan_in`-sized arrival-order slices and
+/// [`combine_leaves`] folds each group left-to-right, so no arithmetic
+/// depends on scheduling.
+pub fn reduce_tree(
+    pool: &WorkerPool,
+    mut nodes: Vec<WeightedLeaf>,
+    fan_in: usize,
+) -> Result<Option<WeightedLeaf>> {
+    if fan_in < 2 {
+        return Err(HcflError::Config(format!(
+            "reduction tree fan-in must be >= 2, got {fan_in}"
+        )));
+    }
+    while nodes.len() > 1 {
+        let mut groups: Vec<Vec<WeightedLeaf>> =
+            Vec::with_capacity(nodes.len().div_ceil(fan_in));
+        let mut iter = nodes.into_iter().peekable();
+        while iter.peek().is_some() {
+            groups.push(iter.by_ref().take(fan_in).collect());
+        }
+        let jobs: Vec<_> = groups
+            .into_iter()
+            .map(|group| move |_ctx: &mut WorkerCtx| combine_leaves(group))
+            .collect();
+        nodes = pool.scatter(jobs)?.into_iter().collect::<Result<Vec<_>>>()?;
+    }
+    Ok(nodes.pop())
+}
 
 /// One client's contribution to a round, as reported by the client stage.
 pub struct ClientMsg {
@@ -67,22 +217,17 @@ pub struct RoundInputs {
     pub encode_deltas: bool,
 }
 
-/// What a pool thread does with one work item.
+/// What a pool thread does with one work item.  `ctx` carries the
+/// thread's pinned engine worker and its reusable wire scratch.
 pub trait ClientRunner: Send + Sync {
-    fn run(&self, spec: &WorkSpec, round: &RoundInputs, engine_worker: usize)
+    fn run(&self, spec: &WorkSpec, round: &RoundInputs, ctx: &mut WorkerCtx)
         -> Result<ClientMsg>;
 }
 
-struct WorkItem {
-    spec: WorkSpec,
-    round: Arc<RoundInputs>,
-    reply: mpsc::Sender<Result<ClientMsg>>,
-}
-
-/// A fixed pool of client-stage worker threads over a shared work queue.
+/// The client stage: a [`WorkerPool`] plus the runner it drives.
 pub struct ClientPool {
-    tx: Option<mpsc::Sender<WorkItem>>,
-    workers: Vec<JoinHandle<()>>,
+    pool: WorkerPool,
+    runner: Arc<dyn ClientRunner>,
 }
 
 impl ClientPool {
@@ -93,95 +238,45 @@ impl ClientPool {
         threads: usize,
         engine_workers: usize,
     ) -> Result<ClientPool> {
-        let threads = threads.max(1);
-        let engine_workers = engine_workers.max(1);
-        let (tx, rx) = mpsc::channel::<WorkItem>();
-        let rx = Arc::new(Mutex::new(rx));
-        let mut workers = Vec::with_capacity(threads);
-        for w in 0..threads {
-            let rx = Arc::clone(&rx);
-            let runner = Arc::clone(&runner);
-            let engine_worker = w % engine_workers;
-            let join = std::thread::Builder::new()
-                .name(format!("client-pool-{w}"))
-                .spawn(move || loop {
-                    // Hold the queue lock only while dequeuing; recv
-                    // blocks between rounds and ends when the pool drops.
-                    let item = {
-                        let Ok(queue) = rx.lock() else { break };
-                        match queue.recv() {
-                            Ok(item) => item,
-                            Err(_) => break,
-                        }
-                    };
-                    let result = runner.run(&item.spec, &item.round, engine_worker);
-                    // A dead receiver means the round was abandoned.
-                    let _ = item.reply.send(result);
-                })
-                .map_err(|e| HcflError::Engine(format!("client pool spawn failed: {e}")))?;
-            workers.push(join);
-        }
         Ok(ClientPool {
-            tx: Some(tx),
-            workers,
+            pool: WorkerPool::new(threads, engine_workers)?,
+            runner,
         })
     }
 
     /// Pool size.
     pub fn n_threads(&self) -> usize {
-        self.workers.len()
+        self.pool.n_threads()
     }
 
-    /// Run one round's client stage: enqueue every spec, collect exactly
-    /// as many results.  Results come back in completion order — callers
-    /// index by `ClientMsg::slot`.  On failure the whole batch is drained
-    /// first (so no stale reply can leak into a later round), then the
-    /// first error is returned.
+    /// The underlying pool — the aggregation stage runs its parallel
+    /// decode and [`reduce_tree`] on the same threads.
+    pub fn workers(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Run one round's client stage: scatter every spec, collect exactly
+    /// as many results (in spec order — callers index by
+    /// [`ClientMsg::slot`]).  The whole batch always completes (so no
+    /// stale reply can leak into a later round); the first error in spec
+    /// order is returned.
     pub fn run_clients(&self, round: RoundInputs, specs: &[WorkSpec]) -> Result<Vec<ClientMsg>> {
         let round = Arc::new(round);
-        let (reply_tx, reply_rx) = mpsc::channel::<Result<ClientMsg>>();
-        let tx = self
-            .tx
-            .as_ref()
-            .ok_or_else(|| HcflError::Engine("client pool is shut down".into()))?;
-        for &spec in specs {
-            tx.send(WorkItem {
-                spec,
-                round: Arc::clone(&round),
-                reply: reply_tx.clone(),
+        let jobs: Vec<_> = specs
+            .iter()
+            .map(|&spec| {
+                let runner = Arc::clone(&self.runner);
+                let round = Arc::clone(&round);
+                move |ctx: &mut WorkerCtx| runner.run(&spec, &round, ctx)
             })
-            .map_err(|_| HcflError::Engine("client pool queue disconnected".into()))?;
-        }
-        drop(reply_tx);
-        let mut out = Vec::with_capacity(specs.len());
-        let mut first_err: Option<HcflError> = None;
-        for _ in 0..specs.len() {
-            let reply = reply_rx
-                .recv()
-                .map_err(|_| HcflError::Engine("client pool worker vanished".into()))?;
-            match reply {
-                Ok(msg) => out.push(msg),
-                Err(e) => first_err = first_err.or(Some(e)),
-            }
-        }
-        if let Some(e) = first_err {
-            return Err(e);
-        }
-        Ok(out)
-    }
-}
-
-impl Drop for ClientPool {
-    fn drop(&mut self) {
-        self.tx.take(); // closes the queue; workers exit at the next recv
-        for join in self.workers.drain(..) {
-            let _ = join.join();
-        }
+            .collect();
+        self.pool.scatter(jobs)?.into_iter().collect()
     }
 }
 
 /// The real client stage: local SGD through the engine, then wire
-/// encoding, exactly as the spawn-per-client implementation did.
+/// encoding.  `wire_bytes` is the measured packed-buffer length, not a
+/// formula (see `compression/wire.rs`).
 pub struct TrainEncodeRunner {
     trainer: LocalTrainer,
     compressor: Arc<dyn Compressor>,
@@ -207,7 +302,7 @@ impl ClientRunner for TrainEncodeRunner {
         &self,
         spec: &WorkSpec,
         round: &RoundInputs,
-        engine_worker: usize,
+        ctx: &mut WorkerCtx,
     ) -> Result<ClientMsg> {
         let shard = self.data.shard(spec.client);
         let mut crng = Rng::new(spec.seed);
@@ -219,10 +314,11 @@ impl ClientRunner for TrainEncodeRunner {
             round.batch,
             round.lr,
             &mut crng,
-            engine_worker,
+            ctx.engine_worker,
         )?;
         let payload = encode_payload(&out.params, &round.global, round.encode_deltas);
-        let update = self.compressor.compress(&payload, engine_worker)?;
+        let mut update = self.compressor.compress(&payload, ctx.engine_worker)?;
+        update.wire_bytes = ctx.scratch.pack(&update.payload)?;
         Ok(ClientMsg {
             slot: spec.slot,
             update,
@@ -256,7 +352,7 @@ impl ClientRunner for FakeTrainRunner {
         &self,
         spec: &WorkSpec,
         round: &RoundInputs,
-        engine_worker: usize,
+        ctx: &mut WorkerCtx,
     ) -> Result<ClientMsg> {
         let mut crng = Rng::new(spec.seed);
         let started = Instant::now();
@@ -267,7 +363,8 @@ impl ClientRunner for FakeTrainRunner {
             .map(|g| g + scale * crng.normal())
             .collect();
         let payload = encode_payload(&params, &round.global, round.encode_deltas);
-        let update = self.compressor.compress(&payload, engine_worker)?;
+        let mut update = self.compressor.compress(&payload, ctx.engine_worker)?;
+        update.wire_bytes = ctx.scratch.pack(&update.payload)?;
         Ok(ClientMsg {
             slot: spec.slot,
             update,

@@ -45,7 +45,7 @@ pub fn thm1(ctx: &ExperimentCtx) -> Result<()> {
         // Mirror the run pipeline: delta-encode against the broadcast.
         let delta: Vec<f32> = out.params.iter().zip(&global).map(|(w, g)| w - g).collect();
         let upd = compressor.compress(&delta, 0)?;
-        let mut recon = compressor.decompress(&upd, trainer.model.d, 0)?;
+        let mut recon = compressor.decompress(upd, trainer.model.d, 0)?;
         for (v, g) in recon.iter_mut().zip(&global) {
             *v += g;
         }
@@ -135,7 +135,7 @@ pub fn thm2(ctx: &ExperimentCtx) -> Result<()> {
                 }
             }
         }
-        let recon = compressor.decompress(&upd, model.d, 0)?;
+        let recon = compressor.decompress(upd, model.d, 0)?;
         mse_sum += snap
             .iter()
             .zip(&recon)

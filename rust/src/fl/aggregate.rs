@@ -8,6 +8,21 @@
 //! once deadline cuts make the surviving set biased) and
 //! [`StalenessDiscounted`] (exponentially down-weights late arrivals
 //! relative to the fastest, as in adaptive/asynchronous FL for IoT).
+//!
+//! Two folds implement those rules:
+//!
+//! * the streaming [`Aggregator`]s below — the sequential reference
+//!   (`acc += (x − acc)·w/W`), kept for the pre-refactor regression
+//!   guarantee and single-threaded callers;
+//! * the **reduction tree** ([`WeightedLeaf`] / [`combine_leaves`] /
+//!   [`finish_tree`]) — the coordinator's hot path at K=10k.  Leaves are
+//!   weight-scaled updates in modelled arrival order; interior nodes
+//!   combine a fixed fan-in ([`TREE_FAN_IN`]) of consecutive children
+//!   left-to-right.  The tree *shape* and every per-node summation order
+//!   depend only on the leaf order, never on which pool thread computes
+//!   a node, so the fold is bit-identical for any `client_threads`
+//!   (`tests/pool_determinism.rs`).  The parallel driver lives in
+//!   [`crate::coordinator::pool::reduce_tree`].
 
 use crate::error::{HcflError, Result};
 use crate::fl::RunningAverage;
@@ -55,6 +70,100 @@ impl AggregatorKind {
             }
         }
     }
+
+    /// One update's scalar weight under this rule.  `t0_arrival` is the
+    /// fastest surviving arrival (the staleness reference); the uniform
+    /// and sample rules ignore it.  Shared by the streaming fold and
+    /// the reduction-tree leaves so both paths implement the exact same
+    /// weighting.
+    pub fn weight(&self, meta: &UpdateMeta, t0_arrival: f64) -> Result<f64> {
+        match self {
+            AggregatorKind::UniformMean => Ok(1.0),
+            AggregatorKind::SampleWeighted => {
+                if meta.n_samples == 0 {
+                    return Err(HcflError::Config(format!(
+                        "client {} has an empty shard; sample weighting undefined",
+                        meta.client
+                    )));
+                }
+                Ok(meta.n_samples as f64)
+            }
+            AggregatorKind::StalenessDiscounted { lambda } => {
+                Ok((-lambda * (meta.arrival_s - t0_arrival).max(0.0)).exp())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reduction tree
+// ---------------------------------------------------------------------------
+
+/// Fan-in of the deterministic reduction tree.  Fixed — the tree shape
+/// must be a pure function of the leaf count, never of the pool size.
+pub const TREE_FAN_IN: usize = 8;
+
+/// One reduction-tree node: the weighted sum `Σ wᵢ·xᵢ` of the leaves
+/// under it (f32, elementwise) plus the exact total weight (f64).
+pub struct WeightedLeaf {
+    pub weight: f64,
+    pub sum: Vec<f32>,
+}
+
+impl WeightedLeaf {
+    /// Scale a decoded update into a leaf.  The multiply runs in f64 and
+    /// rounds once per element, so a weight of exactly 1.0 (uniform
+    /// mean) leaves the bits untouched.
+    pub fn new(weight: f64, mut x: Vec<f32>) -> WeightedLeaf {
+        if weight != 1.0 {
+            for v in &mut x {
+                *v = (*v as f64 * weight) as f32;
+            }
+        }
+        WeightedLeaf { weight, sum: x }
+    }
+}
+
+/// Combine a group of consecutive children into their parent node by
+/// folding left-to-right into the first child's buffer (no allocation).
+/// The group is always a contiguous arrival-order slice, so the
+/// summation order is fixed by the leaf order alone.
+pub fn combine_leaves(group: Vec<WeightedLeaf>) -> Result<WeightedLeaf> {
+    let mut iter = group.into_iter();
+    let mut acc = iter
+        .next()
+        .ok_or_else(|| HcflError::Config("combining an empty leaf group".into()))?;
+    for leaf in iter {
+        if leaf.sum.len() != acc.sum.len() {
+            return Err(HcflError::Config(format!(
+                "aggregation dim mismatch: {} vs {}",
+                leaf.sum.len(),
+                acc.sum.len()
+            )));
+        }
+        acc.weight += leaf.weight;
+        for (a, x) in acc.sum.iter_mut().zip(&leaf.sum) {
+            *a += x;
+        }
+    }
+    Ok(acc)
+}
+
+/// Normalize the root node into the aggregated model:
+/// `out = (Σ wᵢ·xᵢ) / Σ wᵢ`, dividing in f64 per element.
+pub fn finish_tree(root: WeightedLeaf) -> Result<Vec<f32>> {
+    if root.weight <= 0.0 || !root.weight.is_finite() {
+        return Err(HcflError::Config(format!(
+            "aggregating zero total weight ({})",
+            root.weight
+        )));
+    }
+    let w = root.weight;
+    Ok(root
+        .sum
+        .into_iter()
+        .map(|s| (s as f64 / w) as f32)
+        .collect())
 }
 
 /// Streaming fold of decoded updates (pushed in modelled arrival order).
@@ -131,21 +240,15 @@ impl WeightedMean {
     }
 
     fn weight_of(&mut self, meta: &UpdateMeta) -> Result<f64> {
+        // Same rule as the reduction-tree leaves: delegate to
+        // `AggregatorKind::weight` so the two folds can never drift.
         match &mut self.weighting {
-            Weighting::Samples => {
-                if meta.n_samples == 0 {
-                    return Err(HcflError::Config(format!(
-                        "client {} has an empty shard; sample weighting undefined",
-                        meta.client
-                    )));
-                }
-                Ok(meta.n_samples as f64)
-            }
+            Weighting::Samples => AggregatorKind::SampleWeighted.weight(meta, 0.0),
             Weighting::Staleness { lambda, t0 } => {
                 // Updates arrive in modelled arrival order, so the first
                 // push fixes the freshness reference.
                 let t0 = *t0.get_or_insert(meta.arrival_s);
-                Ok((-*lambda * (meta.arrival_s - t0).max(0.0)).exp())
+                AggregatorKind::StalenessDiscounted { lambda: *lambda }.weight(meta, t0)
             }
         }
     }
@@ -271,6 +374,101 @@ mod tests {
         assert!(agg.push(&[1.0], &meta(0, 1, 0.0)).is_err());
         assert!(AggregatorKind::SampleWeighted.build(2).finish().is_err());
         assert!(AggregatorKind::UniformMean.build(2).finish().is_err());
+    }
+
+    /// Sequential reference of the tree fold: combine fan-in-sized
+    /// consecutive groups level by level (what `pool::reduce_tree`
+    /// computes in parallel).
+    fn tree_fold(mut nodes: Vec<WeightedLeaf>, fan_in: usize) -> WeightedLeaf {
+        while nodes.len() > 1 {
+            let mut next = Vec::with_capacity(nodes.len().div_ceil(fan_in));
+            let mut iter = nodes.into_iter().peekable();
+            while iter.peek().is_some() {
+                let group: Vec<WeightedLeaf> = iter.by_ref().take(fan_in).collect();
+                next.push(combine_leaves(group).unwrap());
+            }
+            nodes = next;
+        }
+        nodes.pop().unwrap()
+    }
+
+    #[test]
+    fn tree_uniform_mean_equals_plain_mean() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let updates: Vec<Vec<f32>> = (0..23)
+            .map(|_| (0..17).map(|_| rng.normal()).collect())
+            .collect();
+        let leaves: Vec<WeightedLeaf> = updates
+            .iter()
+            .map(|u| WeightedLeaf::new(1.0, u.clone()))
+            .collect();
+        let out = finish_tree(tree_fold(leaves, TREE_FAN_IN)).unwrap();
+        for j in 0..17 {
+            let mean: f64 =
+                updates.iter().map(|u| u[j] as f64).sum::<f64>() / updates.len() as f64;
+            assert!((out[j] as f64 - mean).abs() < 1e-5, "dim {j}");
+        }
+        // unit weight must not perturb the leaf bits
+        let leaf = WeightedLeaf::new(1.0, updates[0].clone());
+        assert_eq!(leaf.sum, updates[0]);
+    }
+
+    #[test]
+    fn tree_matches_streaming_weighted_mean() {
+        let mut rng = crate::util::rng::Rng::new(8);
+        let updates: Vec<(Vec<f32>, usize)> = (0..19)
+            .map(|i| {
+                (
+                    (0..9).map(|_| rng.normal() * 0.4).collect(),
+                    100 + 37 * i,
+                )
+            })
+            .collect();
+        let mut streaming: Box<dyn Aggregator> = AggregatorKind::SampleWeighted.build(9);
+        let mut leaves = Vec::new();
+        for (i, (u, n)) in updates.iter().enumerate() {
+            let m = meta(i, *n, i as f64);
+            streaming.push(u, &m).unwrap();
+            let w = AggregatorKind::SampleWeighted.weight(&m, 0.0).unwrap();
+            leaves.push(WeightedLeaf::new(w, u.clone()));
+        }
+        let a = streaming.finish().unwrap();
+        let b = finish_tree(tree_fold(leaves, TREE_FAN_IN)).unwrap();
+        // different summation orders, same mean up to f32 rounding noise
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn tree_error_paths() {
+        assert!(combine_leaves(Vec::new()).is_err());
+        let bad = vec![
+            WeightedLeaf::new(1.0, vec![1.0, 2.0]),
+            WeightedLeaf::new(1.0, vec![1.0]),
+        ];
+        assert!(combine_leaves(bad).is_err());
+        assert!(finish_tree(WeightedLeaf {
+            weight: 0.0,
+            sum: vec![1.0]
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn weight_rule_matches_streaming_semantics() {
+        let kind = AggregatorKind::StalenessDiscounted { lambda: 1.0 };
+        let w0 = kind.weight(&meta(0, 1, 2.0), 2.0).unwrap();
+        let w1 = kind.weight(&meta(1, 1, 2.0 + 3.0f64.ln()), 2.0).unwrap();
+        assert!((w0 - 1.0).abs() < 1e-12);
+        assert!((w1 - 1.0 / 3.0).abs() < 1e-12);
+        assert!(AggregatorKind::SampleWeighted
+            .weight(&meta(0, 0, 0.0), 0.0)
+            .is_err());
+        assert_eq!(
+            AggregatorKind::UniformMean.weight(&meta(0, 0, 9.0), 0.0).unwrap(),
+            1.0
+        );
     }
 
     #[test]

@@ -5,6 +5,9 @@ pub mod aggregate;
 mod client;
 mod server;
 
-pub use aggregate::{Aggregator, AggregatorKind, UpdateMeta};
+pub use aggregate::{
+    combine_leaves, finish_tree, Aggregator, AggregatorKind, UpdateMeta, WeightedLeaf,
+    TREE_FAN_IN,
+};
 pub use client::{LocalOutcome, LocalTrainer};
 pub use server::{select_clients, RunningAverage, Server};

@@ -36,6 +36,7 @@ struct WorkerHandle {
 struct EngineInner {
     workers: Vec<Mutex<WorkerHandle>>,
     next: AtomicUsize,
+    calls: AtomicUsize,
     manifest: Manifest,
 }
 
@@ -83,6 +84,7 @@ impl Engine {
             inner: Arc::new(EngineInner {
                 workers,
                 next: AtomicUsize::new(0),
+                calls: AtomicUsize::new(0),
                 manifest,
             }),
         })
@@ -96,6 +98,13 @@ impl Engine {
     /// Number of worker threads.
     pub fn n_workers(&self) -> usize {
         self.inner.workers.len()
+    }
+
+    /// Total executable dispatches submitted so far (across all workers).
+    /// The batched-codec tests use deltas of this counter to assert the
+    /// hot path issues O(segments), not O(chunks), engine calls.
+    pub fn dispatch_count(&self) -> usize {
+        self.inner.calls.load(Ordering::Relaxed)
     }
 
     /// Execute `exec` with `inputs`, round-robin across workers.
@@ -113,6 +122,7 @@ impl Engine {
     ) -> Result<Vec<TensorValue>> {
         let spec = self.inner.manifest.exec_spec(exec)?;
         validate_inputs(exec, &spec.inputs, &inputs)?;
+        self.inner.calls.fetch_add(1, Ordering::Relaxed);
 
         let (reply_tx, reply_rx) = mpsc::channel();
         {
@@ -249,6 +259,14 @@ fn to_literal(t: &TensorValue) -> Result<xla::Literal> {
             } else {
                 let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
                 xla::Literal::vec1(data).reshape(&dims)?
+            }
+        }
+        TensorValue::SharedF32 { data, shape } => {
+            if shape.is_empty() {
+                xla::Literal::scalar(data[0])
+            } else {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data.as_slice()).reshape(&dims)?
             }
         }
         TensorValue::I32 { data, shape } => {

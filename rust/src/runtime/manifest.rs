@@ -80,6 +80,11 @@ pub struct AeMeta {
     pub layers: Vec<LayerMeta>,
     pub encode: String,
     pub decode: String,
+    /// Batched encode executables, keyed by batch size (chunks per
+    /// call).  Optional: absent in pre-batching manifests, in which case
+    /// the codec falls back to the per-chunk `encode`/`decode` path.
+    pub encode_batch: BTreeMap<usize, String>,
+    pub decode_batch: BTreeMap<usize, String>,
     pub train_batch: usize,
     pub train: String,
 }
@@ -93,6 +98,9 @@ pub struct Manifest {
     pub autoencoders: BTreeMap<String, AeMeta>,
     /// chunk-size key ("c256") -> ternary executable name
     pub ternary: BTreeMap<String, String>,
+    /// chunk-size key ("c256") -> batch size -> batched ternary
+    /// executable name (optional; same fallback rule as the AE maps)
+    pub ternary_batch: BTreeMap<String, BTreeMap<usize, String>>,
     /// segment name -> chunk size ("conv" -> 256, "dense" -> 1024)
     pub chunks: BTreeMap<String, usize>,
 }
@@ -106,6 +114,28 @@ fn parse_tensor_spec(v: &Value) -> Result<TensorSpec> {
         .map(|d| d.as_usize())
         .collect::<Result<Vec<_>>>()?;
     Ok(TensorSpec { dtype, shape })
+}
+
+/// Parse an optional `{"<batch>": "<exec>"}` map (absent -> empty).
+/// Batch 1 is the per-chunk executable's job and is rejected so the
+/// dispatch planner's fallback rule stays unambiguous.
+fn parse_batch_map(v: Option<&Value>) -> Result<BTreeMap<usize, String>> {
+    let Some(v) = v else {
+        return Ok(BTreeMap::new());
+    };
+    let mut out = BTreeMap::new();
+    for (b, exec) in v.as_obj()? {
+        let batch = b.parse::<usize>().map_err(|_| {
+            HcflError::Manifest(format!("bad batched-codec batch key '{b}'"))
+        })?;
+        if batch < 2 {
+            return Err(HcflError::Manifest(format!(
+                "batched-codec batch size must be >= 2, got {batch}"
+            )));
+        }
+        out.insert(batch, exec.as_str()?.to_string());
+    }
+    Ok(out)
 }
 
 fn parse_layers(v: &Value) -> Result<Vec<LayerMeta>> {
@@ -216,6 +246,8 @@ impl Manifest {
                     layers: parse_layers(a.get("layers")?)?,
                     encode: a.get("encode")?.as_str()?.to_string(),
                     decode: a.get("decode")?.as_str()?.to_string(),
+                    encode_batch: parse_batch_map(a.opt("encode_batch"))?,
+                    decode_batch: parse_batch_map(a.opt("decode_batch"))?,
                     train_batch: tr.get("batch")?.as_usize()?,
                     train: tr.get("name")?.as_str()?.to_string(),
                 },
@@ -225,6 +257,13 @@ impl Manifest {
         let mut ternary = BTreeMap::new();
         for (key, name) in root.get("ternary")?.as_obj()? {
             ternary.insert(key.clone(), name.as_str()?.to_string());
+        }
+
+        let mut ternary_batch = BTreeMap::new();
+        if let Some(tb) = root.opt("ternary_batch") {
+            for (key, sizes) in tb.as_obj()? {
+                ternary_batch.insert(key.clone(), parse_batch_map(Some(sizes))?);
+            }
         }
 
         let mut chunks = BTreeMap::new();
@@ -238,6 +277,7 @@ impl Manifest {
             models,
             autoencoders,
             ternary,
+            ternary_batch,
             chunks,
         };
         manifest.validate()?;
@@ -315,6 +355,7 @@ impl Manifest {
             models,
             autoencoders: BTreeMap::new(),
             ternary: BTreeMap::new(),
+            ternary_batch: BTreeMap::new(),
             chunks,
         }
     }
@@ -356,6 +397,9 @@ impl Manifest {
             check(&a.encode)?;
             check(&a.decode)?;
             check(&a.train)?;
+            for exec in a.encode_batch.values().chain(a.decode_batch.values()) {
+                check(exec)?;
+            }
             if a.key != format!("c{}_r{}", a.chunk, a.ratio) {
                 return Err(HcflError::Manifest(format!("bad AE key '{}'", a.key)));
             }
@@ -368,6 +412,11 @@ impl Manifest {
         }
         for name in self.ternary.values() {
             check(name)?;
+        }
+        for sizes in self.ternary_batch.values() {
+            for name in sizes.values() {
+                check(name)?;
+            }
         }
         Ok(())
     }
@@ -408,11 +457,36 @@ impl Manifest {
             .map(|s| s.as_str())
             .ok_or_else(|| HcflError::Manifest(format!("no ternary kernel for c{chunk}")))
     }
+
+    /// Batched ternary executables for a chunk size (empty when the
+    /// manifest predates batched codecs — callers fall back per-chunk).
+    pub fn ternary_batch_execs(&self, chunk: usize) -> BTreeMap<usize, String> {
+        self.ternary_batch
+            .get(&format!("c{chunk}"))
+            .cloned()
+            .unwrap_or_default()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn batch_maps_parse_and_reject_batch_one() {
+        let v = Value::parse(r#"{"2": "x_n2", "8": "x_n8"}"#).unwrap();
+        let m = parse_batch_map(Some(&v)).unwrap();
+        assert_eq!(m.get(&2).unwrap(), "x_n2");
+        assert_eq!(m.get(&8).unwrap(), "x_n8");
+        assert_eq!(m.len(), 2);
+        // absent map -> empty (pre-batching manifests stay loadable)
+        assert!(parse_batch_map(None).unwrap().is_empty());
+        // batch 1 belongs to the per-chunk executable
+        let bad = Value::parse(r#"{"1": "x_n1"}"#).unwrap();
+        assert!(parse_batch_map(Some(&bad)).is_err());
+        let junk = Value::parse(r#"{"two": "x"}"#).unwrap();
+        assert!(parse_batch_map(Some(&junk)).is_err());
+    }
 
     #[test]
     fn synthetic_manifest_is_internally_consistent() {

@@ -4,6 +4,8 @@
 //! not `Send`); callers talk in [`TensorValue`]s, which are plain
 //! `Vec`-backed and cross thread boundaries freely.
 
+use std::sync::Arc;
+
 use crate::error::{HcflError, Result};
 
 /// Element type of a tensor (matches the manifest's `dtype` strings).
@@ -24,10 +26,34 @@ impl Dtype {
 }
 
 /// A shaped host tensor (row-major).
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `SharedF32` carries an `Arc` to the payload so round-constant inputs
+/// (the HCFL autoencoder parameters, ~megabytes per chunk size) cross
+/// the engine channel by reference count instead of being cloned into
+/// every call — the codec hot path sends the same parameter vector with
+/// every encode/decode dispatch.
+#[derive(Debug, Clone)]
 pub enum TensorValue {
     F32 { data: Vec<f32>, shape: Vec<usize> },
+    SharedF32 { data: Arc<Vec<f32>>, shape: Vec<usize> },
     I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl PartialEq for TensorValue {
+    fn eq(&self, other: &Self) -> bool {
+        // Semantic equality: an owned and a shared f32 tensor with the
+        // same shape and bits are the same value.
+        match (self, other) {
+            (TensorValue::I32 { data: a, shape: sa }, TensorValue::I32 { data: b, shape: sb }) => {
+                sa == sb && a == b
+            }
+            (TensorValue::I32 { .. }, _) | (_, TensorValue::I32 { .. }) => false,
+            _ => {
+                self.shape() == other.shape()
+                    && self.as_f32().ok() == other.as_f32().ok()
+            }
+        }
+    }
 }
 
 impl TensorValue {
@@ -43,6 +69,12 @@ impl TensorValue {
     pub fn vec_f32(data: Vec<f32>) -> TensorValue {
         let shape = vec![data.len()];
         TensorValue::F32 { data, shape }
+    }
+
+    /// 1-D f32 vector shared by reference count (no payload clone).
+    pub fn shared_f32(data: Arc<Vec<f32>>) -> TensorValue {
+        let shape = vec![data.len()];
+        TensorValue::SharedF32 { data, shape }
     }
 
     /// f32 tensor with explicit shape (element count must match).
@@ -71,20 +103,23 @@ impl TensorValue {
 
     pub fn dtype(&self) -> Dtype {
         match self {
-            TensorValue::F32 { .. } => Dtype::F32,
+            TensorValue::F32 { .. } | TensorValue::SharedF32 { .. } => Dtype::F32,
             TensorValue::I32 { .. } => Dtype::I32,
         }
     }
 
     pub fn shape(&self) -> &[usize] {
         match self {
-            TensorValue::F32 { shape, .. } | TensorValue::I32 { shape, .. } => shape,
+            TensorValue::F32 { shape, .. }
+            | TensorValue::SharedF32 { shape, .. }
+            | TensorValue::I32 { shape, .. } => shape,
         }
     }
 
     pub fn len(&self) -> usize {
         match self {
             TensorValue::F32 { data, .. } => data.len(),
+            TensorValue::SharedF32 { data, .. } => data.len(),
             TensorValue::I32 { data, .. } => data.len(),
         }
     }
@@ -97,14 +132,19 @@ impl TensorValue {
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             TensorValue::F32 { data, .. } => Ok(data),
+            TensorValue::SharedF32 { data, .. } => Ok(data.as_slice()),
             _ => Err(HcflError::Engine("expected f32 tensor".into())),
         }
     }
 
-    /// Consume into the f32 payload.
+    /// Consume into the f32 payload (a shared tensor clones only when
+    /// other references are still alive).
     pub fn into_f32(self) -> Result<Vec<f32>> {
         match self {
             TensorValue::F32 { data, .. } => Ok(data),
+            TensorValue::SharedF32 { data, .. } => {
+                Ok(Arc::try_unwrap(data).unwrap_or_else(|a| a.as_ref().clone()))
+            }
             _ => Err(HcflError::Engine("expected f32 tensor".into())),
         }
     }
@@ -139,6 +179,22 @@ mod tests {
         assert_eq!(t.shape(), &[] as &[usize]);
         assert_eq!(t.scalar().unwrap(), 3.5);
         assert!(TensorValue::vec_f32(vec![1.0, 2.0]).scalar().is_err());
+    }
+
+    #[test]
+    fn shared_tensor_behaves_like_owned() {
+        let data = Arc::new(vec![1.0f32, 2.0, 3.0]);
+        let shared = TensorValue::shared_f32(Arc::clone(&data));
+        let owned = TensorValue::vec_f32(vec![1.0, 2.0, 3.0]);
+        assert_eq!(shared.dtype(), Dtype::F32);
+        assert_eq!(shared.shape(), &[3]);
+        assert_eq!(shared.as_f32().unwrap(), owned.as_f32().unwrap());
+        // semantic equality across representations
+        assert_eq!(shared, owned);
+        // into_f32 clones only while another Arc is alive
+        assert_eq!(shared.into_f32().unwrap(), vec![1.0, 2.0, 3.0]);
+        let unique = TensorValue::shared_f32(Arc::new(vec![5.0f32]));
+        assert_eq!(unique.into_f32().unwrap(), vec![5.0]);
     }
 
     #[test]

@@ -2,7 +2,10 @@
 //!
 //! `cargo bench` runs the `rust/benches/*.rs` binaries (declared with
 //! `harness = false`); they use this module for warmup, adaptive
-//! iteration and robust summary statistics.
+//! iteration and robust summary statistics.  Drivers can collect their
+//! [`BenchResult`]s and emit a machine-readable JSON report
+//! ([`write_json`]) so the perf trajectory is trackable across PRs (CI
+//! uploads `BENCH_round.json` as an artifact).
 
 use std::time::Instant;
 
@@ -16,6 +19,10 @@ pub struct BenchResult {
     pub mean_s: f64,
     pub p50_s: f64,
     pub p95_s: f64,
+    /// Work items processed per iteration (clients, updates, bytes …);
+    /// 0 when the case has no natural unit.  JSON reports derive
+    /// `throughput_per_s = items / p50_s` from it.
+    pub items: usize,
 }
 
 impl BenchResult {
@@ -29,6 +36,69 @@ impl BenchResult {
             fmt_time(self.p95_s),
         )
     }
+
+    /// Items per second at the median, if the case declared items.
+    pub fn throughput_per_s(&self) -> Option<f64> {
+        if self.items > 0 && self.p50_s > 0.0 {
+            Some(self.items as f64 / self.p50_s)
+        } else {
+            None
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize results as a machine-readable report (per-case median
+/// nanoseconds + throughput), e.g. `BENCH_round.json`.
+pub fn to_json(bench: &str, results: &[BenchResult]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("{{\n \"bench\": \"{}\",\n \"results\": [", json_escape(bench)));
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let throughput = match r.throughput_per_s() {
+            Some(t) => format!("{t:.3}"),
+            None => "null".to_string(),
+        };
+        out.push_str(&format!(
+            "\n  {{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {:.0}, \
+             \"p50_ns\": {:.0}, \"p95_ns\": {:.0}, \"items\": {}, \
+             \"throughput_per_s\": {}}}",
+            json_escape(&r.name),
+            r.iters,
+            r.mean_s * 1e9,
+            r.p50_s * 1e9,
+            r.p95_s * 1e9,
+            r.items,
+            throughput,
+        ));
+    }
+    out.push_str("\n ]\n}\n");
+    out
+}
+
+/// Write the JSON report to `path`.
+pub fn write_json(
+    path: &std::path::Path,
+    bench: &str,
+    results: &[BenchResult],
+) -> std::io::Result<()> {
+    std::fs::write(path, to_json(bench, results))
 }
 
 fn fmt_time(s: f64) -> String {
@@ -43,7 +113,19 @@ fn fmt_time(s: f64) -> String {
 
 /// Run `f` with 2 warmup calls, then until `budget_s` seconds or
 /// `max_iters`, whichever first (at least 3 timed iterations).
-pub fn bench<F: FnMut()>(name: &str, budget_s: f64, max_iters: usize, mut f: F) -> BenchResult {
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, max_iters: usize, f: F) -> BenchResult {
+    bench_items(name, budget_s, max_iters, 0, f)
+}
+
+/// [`bench`] with a work-item count per iteration, so the JSON report
+/// can derive throughput.
+pub fn bench_items<F: FnMut()>(
+    name: &str,
+    budget_s: f64,
+    max_iters: usize,
+    items: usize,
+    mut f: F,
+) -> BenchResult {
     for _ in 0..2 {
         f();
     }
@@ -63,6 +145,7 @@ pub fn bench<F: FnMut()>(name: &str, budget_s: f64, max_iters: usize, mut f: F) 
         mean_s: stats::mean(&samples),
         p50_s: stats::percentile(&samples, 0.5),
         p95_s: stats::percentile(&samples, 0.95),
+        items,
     };
     println!("{}", res.line());
     res
@@ -86,5 +169,44 @@ mod tests {
         assert!(fmt_time(2.0).ends_with(" s"));
         assert!(fmt_time(0.002).ends_with(" ms"));
         assert!(fmt_time(2e-6).ends_with(" µs"));
+    }
+
+    #[test]
+    fn json_report_is_machine_readable() {
+        let results = vec![
+            BenchResult {
+                name: "case \"a\"".into(),
+                iters: 5,
+                mean_s: 1.5e-3,
+                p50_s: 1.0e-3,
+                p95_s: 2.0e-3,
+                items: 1000,
+            },
+            BenchResult {
+                name: "case-b".into(),
+                iters: 3,
+                mean_s: 2.0,
+                p50_s: 2.0,
+                p95_s: 2.0,
+                items: 0,
+            },
+        ];
+        let text = to_json("round", &results);
+        // parseable by our own strict JSON parser
+        let v = crate::util::json::Value::parse(&text).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str().unwrap(), "round");
+        let arr = v.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "case \"a\"");
+        assert_eq!(arr[0].get("p50_ns").unwrap().as_usize().unwrap(), 1_000_000);
+        // 1000 items at 1 ms median -> 1e6 items/s
+        let tput = arr[0].get("throughput_per_s").unwrap().as_f64().unwrap();
+        assert!((tput - 1e6).abs() < 1.0);
+        assert_eq!(
+            *arr[1].get("throughput_per_s").unwrap(),
+            crate::util::json::Value::Null
+        );
+        // itemless cases report no throughput
+        assert!(results[1].throughput_per_s().is_none());
     }
 }

@@ -34,7 +34,7 @@ fn identity_property_lossless_any_length() {
         let v = random_vec(&mut rng, n, 0.5);
         let upd = c.compress(&v, 0).unwrap();
         assert_eq!(upd.wire_bytes, 4 * n, "case {case}");
-        assert_eq!(c.decompress(&upd, n, 0).unwrap(), v);
+        assert_eq!(c.decompress(upd, n, 0).unwrap(), v);
     }
 }
 
@@ -124,9 +124,9 @@ fn topk_property_preserves_top_magnitudes() {
         let c = TopKCompressor::new(keep).unwrap();
         let v = random_vec(&mut rng, n, 1.0);
         let upd = c.compress(&v, 0).unwrap();
-        let back = c.decompress(&upd, n, 0).unwrap();
         let k = c.k_for(n);
         assert_eq!(upd.wire_bytes, 8 * k);
+        let back = c.decompress(upd, n, 0).unwrap();
         // kept entries equal original; dropped are zero
         let kept = back.iter().filter(|x| **x != 0.0).count();
         assert!(kept <= k);

@@ -13,13 +13,22 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use hcfl::compression::hcfl::{hcfl_wire_bytes, AeHandle};
-use hcfl::compression::{Compressor, HcflCompressor, TernaryCompressor};
-use hcfl::model::{merge_segment_ranges, split_dense};
+use hcfl::compression::{
+    plan_batches, wire, Compressor, HcflCompressor, Payload, TernaryCompressor,
+};
+use hcfl::model::{chunk_count, merge_segment_ranges, split_dense};
 use hcfl::prelude::*;
 use hcfl::util::rng::Rng;
 
 fn random_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+/// Canonical byte image of a payload (bit-level comparison helper).
+fn packed(p: &Payload) -> Vec<u8> {
+    let mut out = Vec::new();
+    wire::pack_payload(p, &mut out).unwrap();
+    out
 }
 
 #[test]
@@ -29,7 +38,7 @@ fn ternary_engine_matches_rust_reference() {
     let mut rng = Rng::new(33);
     let v = random_vec(&mut rng, 1024, 0.3);
     let upd = c.compress(&v, 0).unwrap();
-    let back = c.decompress(&upd, 1024, 0).unwrap();
+    let back = c.decompress(upd, 1024, 0).unwrap();
     let r = TernaryCompressor::quantize_ref(&v);
     let expect: Vec<f32> = r.q.iter().map(|&q| q as f32 * r.alpha).collect();
     for (a, b) in back.iter().zip(&expect) {
@@ -71,18 +80,127 @@ fn hcfl_pipeline_shape_and_wire_size() {
         // wire matches the closed-form accounting
         let expect = hcfl_wire_bytes(c.ranges(), &eng.manifest().chunks, ratio);
         assert_eq!(upd.wire_bytes, expect);
+        let wire_bytes = upd.wire_bytes;
         // decompression reproduces the right shape and is finite
-        let back = c.decompress(&upd, model_d, 0).unwrap();
+        let back = c.decompress(upd, model_d, 0).unwrap();
         assert_eq!(back.len(), model_d);
         assert!(back.iter().all(|x| x.is_finite()));
         // true ratio is in the right ballpark (below nominal due to side
         // info + padding, same effect as the paper's Tables I/II)
-        let true_ratio = (4 * model_d) as f64 / upd.wire_bytes as f64;
+        let true_ratio = (4 * model_d) as f64 / wire_bytes as f64;
         assert!(
             true_ratio > ratio as f64 * 0.5 && true_ratio < ratio as f64 * 1.05,
             "ratio {ratio}: true {true_ratio}"
         );
     }
+}
+
+/// Tentpole acceptance: the batched dispatch must produce bit-identical
+/// payloads and reconstructions to the per-chunk path while issuing
+/// O(segments) engine calls instead of O(chunks).
+#[test]
+fn hcfl_batched_dispatch_is_bit_identical_and_o_segments() {
+    let Some(eng) = common::engine(1) else { return };
+    let ratio = 8usize;
+    let batched = make_hcfl(&eng, ratio);
+    if eng
+        .manifest()
+        .autoencoder(1024, ratio)
+        .map(|ae| ae.encode_batch.is_empty())
+        .unwrap_or(true)
+    {
+        eprintln!("skipping: artifacts predate batched codec executables");
+        return;
+    }
+    let mut per_chunk = make_hcfl(&eng, ratio);
+    per_chunk.disable_batched();
+
+    let model_d = eng.manifest().model("lenet").unwrap().d;
+    let mut rng = Rng::new(77);
+    let v = random_vec(&mut rng, model_d, 0.1);
+
+    let before = eng.dispatch_count();
+    let upd_b = batched.compress(&v, 0).unwrap();
+    let batched_calls = eng.dispatch_count() - before;
+    let before = eng.dispatch_count();
+    let upd_p = per_chunk.compress(&v, 0).unwrap();
+    let per_chunk_calls = eng.dispatch_count() - before;
+
+    // call counts: per-chunk = total chunks, batched = the planned
+    // number of tiles per segment range
+    let mut total_chunks = 0usize;
+    let mut planned = 0usize;
+    for r in batched.ranges() {
+        let chunk = eng.manifest().chunks[&r.segment];
+        let n = chunk_count(r.len, chunk);
+        let sizes: Vec<usize> = eng
+            .manifest()
+            .autoencoder(chunk, ratio)
+            .unwrap()
+            .encode_batch
+            .keys()
+            .copied()
+            .collect();
+        total_chunks += n;
+        planned += plan_batches(n, &sizes).len();
+    }
+    assert_eq!(per_chunk_calls, total_chunks);
+    assert_eq!(batched_calls, planned);
+    assert!(
+        batched_calls * 4 <= total_chunks,
+        "batched path made {batched_calls} calls for {total_chunks} chunks"
+    );
+
+    // payloads are bit-identical (canonical packed form)
+    assert_eq!(upd_b.wire_bytes, upd_p.wire_bytes);
+    assert_eq!(packed(&upd_b.payload), packed(&upd_p.payload));
+
+    // reconstructions are bit-identical too, and batched decode also
+    // collapses the call count
+    let before = eng.dispatch_count();
+    let back_b = batched.decompress(upd_b, model_d, 0).unwrap();
+    let batched_dec = eng.dispatch_count() - before;
+    let before = eng.dispatch_count();
+    let back_p = per_chunk.decompress(upd_p, model_d, 0).unwrap();
+    let per_chunk_dec = eng.dispatch_count() - before;
+    assert_eq!(back_b, back_p);
+    assert!(batched_dec * 4 <= per_chunk_dec);
+}
+
+#[test]
+fn ternary_batched_dispatch_is_bit_identical() {
+    let Some(eng) = common::engine(1) else { return };
+    let batched = TernaryCompressor::new(eng.clone(), 1024).unwrap();
+    if eng.manifest().ternary_batch_execs(1024).is_empty() {
+        eprintln!("skipping: artifacts predate batched codec executables");
+        return;
+    }
+    let mut per_chunk = TernaryCompressor::new(eng.clone(), 1024).unwrap();
+    per_chunk.disable_batched();
+
+    // 43 full chunks + a partial tail
+    let d = 43 * 1024 + 700;
+    let mut rng = Rng::new(88);
+    let v = random_vec(&mut rng, d, 0.2);
+
+    let before = eng.dispatch_count();
+    let upd_b = batched.compress(&v, 0).unwrap();
+    let batched_calls = eng.dispatch_count() - before;
+    let before = eng.dispatch_count();
+    let upd_p = per_chunk.compress(&v, 0).unwrap();
+    let per_chunk_calls = eng.dispatch_count() - before;
+
+    assert_eq!(per_chunk_calls, 43);
+    assert!(
+        batched_calls * 4 <= per_chunk_calls,
+        "batched ternary made {batched_calls} calls"
+    );
+    assert_eq!(upd_b.wire_bytes, upd_p.wire_bytes);
+    assert_eq!(packed(&upd_b.payload), packed(&upd_p.payload));
+    assert_eq!(
+        batched.decompress(upd_b, d, 0).unwrap(),
+        per_chunk.decompress(upd_p, d, 0).unwrap()
+    );
 }
 
 #[test]
@@ -95,7 +213,7 @@ fn hcfl_variance_preserving_decode() {
     let mut rng = Rng::new(66);
     let v = random_vec(&mut rng, model_d, 0.05);
     let upd = c.compress(&v, 0).unwrap();
-    let back = c.decompress(&upd, model_d, 0).unwrap();
+    let back = c.decompress(upd, model_d, 0).unwrap();
     let var_orig: f64 = v.iter().map(|x| (*x as f64).powi(2)).sum::<f64>() / v.len() as f64;
     let var_back: f64 =
         back.iter().map(|x| (*x as f64).powi(2)).sum::<f64>() / back.len() as f64;

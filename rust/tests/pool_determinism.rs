@@ -9,11 +9,13 @@ use std::sync::Arc;
 
 use hcfl::compression::{Compressor, Identity, Scheme};
 use hcfl::coordinator::pool::{
-    ClientMsg, ClientPool, ClientRunner, FakeTrainRunner, RoundInputs, WorkSpec,
+    reduce_tree, ClientMsg, ClientPool, ClientRunner, FakeTrainRunner, RoundInputs,
+    WorkSpec, WorkerCtx, WorkerPool,
 };
 use hcfl::data::{synthetic, DataSpec, FlData, Partition};
 use hcfl::error::{HcflError, Result};
-use hcfl::fl::AggregatorKind;
+use hcfl::fl::{finish_tree, AggregatorKind, WeightedLeaf, TREE_FAN_IN};
+use hcfl::util::rng::Rng;
 use hcfl::metrics::RoundRecord;
 use hcfl::network::DevicePreset;
 use hcfl::prelude::*;
@@ -148,6 +150,52 @@ fn pool_reports_every_submitted_item_exactly_once() {
     assert_eq!(first, by_slot(&msgs2, 17));
 }
 
+/// The acceptance-criterion twin of the client-stage test: the
+/// reduction-tree aggregation fold must be bit-identical for any pool
+/// size, because the tree shape and every node's summation order are
+/// pure functions of the leaf order.
+#[test]
+fn reduction_tree_is_bit_identical_across_pool_sizes() {
+    let d = 1003; // not a multiple of the fan-in
+    let mut rng = Rng::new(4242);
+    // deliberately unequal weights (sample-weighted regime)
+    let leaves_src: Vec<(f64, Vec<f32>)> = (0..257)
+        .map(|i| {
+            (
+                (50 + (i * 37) % 600) as f64,
+                (0..d).map(|_| rng.normal() * 0.3).collect(),
+            )
+        })
+        .collect();
+    let fold = |threads: usize| -> Vec<f32> {
+        let pool = WorkerPool::new(threads, threads).unwrap();
+        let leaves: Vec<WeightedLeaf> = leaves_src
+            .iter()
+            .map(|(w, x)| WeightedLeaf::new(*w, x.clone()))
+            .collect();
+        let root = reduce_tree(&pool, leaves, TREE_FAN_IN).unwrap().unwrap();
+        finish_tree(root).unwrap()
+    };
+    let reference = fold(1);
+    for threads in [4usize, 16] {
+        // exact f32 equality, not approximate: same tree, same bits
+        assert_eq!(reference, fold(threads), "client_threads={threads}");
+    }
+    // empty leaf set folds to nothing, single leaf folds to itself
+    let pool = WorkerPool::new(3, 3).unwrap();
+    assert!(reduce_tree(&pool, Vec::new(), TREE_FAN_IN).unwrap().is_none());
+    let one = reduce_tree(
+        &pool,
+        vec![WeightedLeaf::new(2.0, vec![4.0f32; 8])],
+        TREE_FAN_IN,
+    )
+    .unwrap()
+    .unwrap();
+    assert_eq!(finish_tree(one).unwrap(), vec![4.0f32; 8]);
+    // degenerate fan-in is a config error
+    assert!(reduce_tree(&pool, Vec::new(), 1).is_err());
+}
+
 /// A runner that fails on one specific slot: the pool must drain the
 /// batch and surface the error.
 struct FailOnSlot(usize);
@@ -157,7 +205,7 @@ impl ClientRunner for FailOnSlot {
         &self,
         spec: &WorkSpec,
         _round: &RoundInputs,
-        _engine_worker: usize,
+        _ctx: &mut WorkerCtx,
     ) -> Result<ClientMsg> {
         if spec.slot == self.0 {
             return Err(HcflError::Engine("injected client failure".into()));

@@ -4,8 +4,11 @@
 
 use hcfl::compression::{Compressor, Identity, TopKCompressor};
 use hcfl::coordinator::clock::{client_timing, resolve, RoundPolicy};
+use hcfl::coordinator::pool::{reduce_tree, WorkerPool};
 use hcfl::coordinator::{broadcast, decode_payload, encode_payload};
-use hcfl::fl::{AggregatorKind, RunningAverage, UpdateMeta};
+use hcfl::fl::{
+    finish_tree, AggregatorKind, RunningAverage, UpdateMeta, WeightedLeaf, TREE_FAN_IN,
+};
 use hcfl::network::{DeviceFleet, DevicePreset, LinkModel};
 use hcfl::util::rng::Rng;
 
@@ -25,7 +28,7 @@ fn delta_roundtrip_is_exact_for_identity() {
     // encode_deltas=true: the wire carries Δ = w − g ...
     let delta = encode_payload(&w, &g, true);
     let upd = Identity.compress(&delta, 0).unwrap();
-    let mut decoded = Identity.decompress(&upd, d, 0).unwrap();
+    let mut decoded = Identity.decompress(upd, d, 0).unwrap();
     // ... losslessly: Δ̂ == Δ bit for bit ...
     assert_eq!(decoded, delta);
     // ... and the server reconstructs w = g + Δ̂ exactly up to one f32
@@ -55,7 +58,7 @@ fn raw_payload_roundtrip_is_bitwise_identity() {
     let payload = encode_payload(&w, &g, false);
     assert_eq!(payload, w);
     let upd = Identity.compress(&payload, 0).unwrap();
-    let mut decoded = Identity.decompress(&upd, d, 0).unwrap();
+    let mut decoded = Identity.decompress(upd, d, 0).unwrap();
     decode_payload(&mut decoded, &g, false);
     assert_eq!(decoded, w);
 }
@@ -91,9 +94,13 @@ fn compress_downlink_toggles_wire_size_but_never_the_broadcast() {
 fn synchronous_uniform_homogeneous_matches_prerefactor_fold() {
     // The pre-refactor coordinator folded decoded updates through
     // RunningAverage while a homogeneous synchronous round delivered all
-    // of them.  The pipeline must reproduce that bit for bit: identical
-    // survivor set (everyone, in selection order — homogeneous arrivals
-    // tie) and identical f32 aggregation arithmetic.
+    // of them.  Two guarantees survive the tree-aggregation rewrite:
+    // the streaming Aggregator stays bit-identical to RunningAverage
+    // (the sequential reference), and the reduction tree — the fold
+    // `run_round` actually executes now — computes the same uniform
+    // mean up to f32 summation-order rounding on the identical
+    // survivor set (everyone, in selection order — homogeneous
+    // arrivals tie).
     let mut rng = Rng::new(104);
     let d = 512;
     let m = 10;
@@ -142,7 +149,23 @@ fn synchronous_uniform_homogeneous_matches_prerefactor_fold() {
         )
         .unwrap();
     }
-    assert_eq!(pre.finish().unwrap(), agg.finish().unwrap());
+    let reference = pre.finish().unwrap();
+    assert_eq!(reference, agg.finish().unwrap());
+
+    // The reduction tree run_round executes now: same survivors in the
+    // same order, uniform unit weights, result equal to the streaming
+    // mean up to the f32 rounding of the re-associated summation.
+    let pool = WorkerPool::new(3, 3).unwrap();
+    let leaves: Vec<WeightedLeaf> = outcome
+        .survivors
+        .iter()
+        .map(|&i| WeightedLeaf::new(1.0, updates[i].clone()))
+        .collect();
+    let root = reduce_tree(&pool, leaves, TREE_FAN_IN).unwrap().unwrap();
+    let tree = finish_tree(root).unwrap();
+    for (j, (a, b)) in reference.iter().zip(&tree).enumerate() {
+        assert!((a - b).abs() < 1e-5, "dim {j}: streaming {a} vs tree {b}");
+    }
 }
 
 // ---- device -> clock -> policy integration -----------------------------

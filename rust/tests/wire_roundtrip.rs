@@ -1,0 +1,184 @@
+//! Engine-free property tests of the packed wire layer
+//! (`compression/wire.rs`): pack → unpack must reproduce the in-memory
+//! payload bit-for-bit for all four schemes, and the packed buffer
+//! length must equal the closed-form `wire_bytes` accounting for
+//! ternary and HCFL (the formulas the clock layer used before wire
+//! sizes were measured).
+
+use hcfl::compression::hcfl::hcfl_wire_bytes;
+use hcfl::compression::wire::{
+    self, HcflWireLayout, RangeLayout, WireScratch,
+};
+use hcfl::compression::{
+    ChunkCode, Compressor, Payload, RangeCodes, TernaryChunk, TernaryCompressor,
+    TopKCompressor,
+};
+use hcfl::model::SegmentRange;
+use hcfl::util::rng::Rng;
+
+fn random_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+#[test]
+fn raw_pack_unpack_is_bit_identical() {
+    let mut rng = Rng::new(1);
+    for _ in 0..20 {
+        let d = 1 + rng.below(4000);
+        let v = random_vec(&mut rng, d, 0.7);
+        let payload = Payload::Raw(v.clone());
+        let mut scratch = WireScratch::new();
+        let len = scratch.pack(&payload).unwrap();
+        assert_eq!(len, 4 * d); // identical to Identity's wire_bytes
+        assert_eq!(wire::unpack_raw(scratch.bytes(), d).unwrap(), v);
+    }
+}
+
+#[test]
+fn ternary_pack_unpack_matches_payload_and_formula() {
+    let chunk = 1024;
+    let mut rng = Rng::new(2);
+    for case in 0..20 {
+        let d = 1 + rng.below(20_000);
+        let v = random_vec(&mut rng, d, 0.3);
+        let chunks: Vec<TernaryChunk> = v
+            .chunks(chunk)
+            .map(TernaryCompressor::quantize_ref)
+            .collect();
+        let payload = Payload::TernaryChunks(chunks.clone());
+        let mut scratch = WireScratch::new();
+        let len = scratch.pack(&payload).unwrap();
+        // packed length equals the closed-form accounting
+        assert_eq!(
+            len,
+            TernaryCompressor::wire_bytes_for(d, chunk),
+            "case {case}: d={d}"
+        );
+        // round trip is bit-identical to the in-memory payload path
+        let back = wire::unpack_ternary(scratch.bytes(), d, chunk).unwrap();
+        assert_eq!(back.len(), chunks.len());
+        for (a, b) in chunks.iter().zip(&back) {
+            assert_eq!(a.q, b.q, "case {case}");
+            assert_eq!(a.alpha.to_bits(), b.alpha.to_bits(), "case {case}");
+        }
+        // and the decoded vectors agree exactly
+        assert_eq!(
+            TernaryCompressor::decode_chunks(&chunks, d).unwrap(),
+            TernaryCompressor::decode_chunks(&back, d).unwrap()
+        );
+    }
+}
+
+/// Build a synthetic HCFL payload with the exact geometry the codec
+/// produces (full-length codes, 16 B side info per chunk).
+fn fake_hcfl_payload(
+    rng: &mut Rng,
+    ranges: &[(usize, usize)], // (n_chunks, code_len) per range
+) -> (Payload, HcflWireLayout) {
+    let mut codes = Vec::new();
+    let mut layouts = Vec::new();
+    for (ri, &(n_chunks, code_len)) in ranges.iter().enumerate() {
+        let chunks: Vec<ChunkCode> = (0..n_chunks)
+            .map(|_| ChunkCode {
+                code: random_vec(rng, code_len, 1.0),
+                lo: rng.normal(),
+                hi: rng.normal(),
+                mu: rng.normal(),
+                sd: rng.normal().abs(),
+            })
+            .collect();
+        codes.push(RangeCodes {
+            range_idx: ri,
+            chunks,
+        });
+        layouts.push(RangeLayout {
+            range_idx: ri,
+            n_chunks,
+            code_len,
+        });
+    }
+    (Payload::HcflCodes(codes), HcflWireLayout { ranges: layouts })
+}
+
+#[test]
+fn hcfl_pack_unpack_matches_payload_and_formula() {
+    let mut rng = Rng::new(3);
+    // LeNet-ish geometry: 11 conv chunks of c256 at 1:8, 41 dense of
+    // c1024 at 1:8
+    let (payload, layout) = fake_hcfl_payload(&mut rng, &[(11, 32), (41, 128)]);
+    let mut scratch = WireScratch::new();
+    let len = scratch.pack(&payload).unwrap();
+    assert_eq!(len, layout.packed_len());
+
+    // the layout-derived length equals the closed-form hcfl_wire_bytes
+    // for the equivalent segment ranges
+    let ranges = vec![
+        SegmentRange {
+            segment: "conv".into(),
+            label: "conv".into(),
+            offset: 0,
+            len: 11 * 256 - 100, // padded tail chunk, same chunk count
+        },
+        SegmentRange {
+            segment: "dense".into(),
+            label: "dense".into(),
+            offset: 11 * 256 - 100,
+            len: 40 * 1024 + 1,
+        },
+    ];
+    let chunk_of_segment: std::collections::BTreeMap<String, usize> =
+        [("conv".to_string(), 256), ("dense".to_string(), 1024)]
+            .into_iter()
+            .collect();
+    assert_eq!(len, hcfl_wire_bytes(&ranges, &chunk_of_segment, 8));
+
+    // bit-identical round trip
+    let back = wire::unpack_hcfl(scratch.bytes(), &layout).unwrap();
+    let Payload::HcflCodes(orig) = &payload else {
+        unreachable!()
+    };
+    assert_eq!(back.len(), orig.len());
+    for (a, b) in orig.iter().zip(&back) {
+        assert_eq!(a.range_idx, b.range_idx);
+        assert_eq!(a.chunks.len(), b.chunks.len());
+        for (ca, cb) in a.chunks.iter().zip(&b.chunks) {
+            assert_eq!(ca.code, cb.code);
+            assert_eq!(ca.lo.to_bits(), cb.lo.to_bits());
+            assert_eq!(ca.hi.to_bits(), cb.hi.to_bits());
+            assert_eq!(ca.mu.to_bits(), cb.mu.to_bits());
+            assert_eq!(ca.sd.to_bits(), cb.sd.to_bits());
+        }
+    }
+
+    // truncated buffers are rejected
+    assert!(wire::unpack_hcfl(&scratch.bytes()[..len - 1], &layout).is_err());
+}
+
+#[test]
+fn sparse_pack_unpack_is_bit_identical_and_beats_formula() {
+    let mut rng = Rng::new(4);
+    for case in 0..20 {
+        let d = 50 + rng.below(30_000);
+        let keep = 0.05 + rng.next_f64() * 0.4;
+        let c = TopKCompressor::new(keep).unwrap();
+        let v = random_vec(&mut rng, d, 1.0);
+        let upd = c.compress(&v, 0).unwrap();
+        let k = c.k_for(d);
+        let mut scratch = WireScratch::new();
+        let len = scratch.pack(&upd.payload).unwrap();
+        // delta varints make the measured size beat the old 8k formula
+        assert!(len < 8 * k + 8, "case {case}: {len} vs {}", 8 * k);
+        let back = wire::unpack_sparse(scratch.bytes()).unwrap();
+        let (Payload::Sparse { d: d0, idx: i0, val: v0 }, Payload::Sparse { d: d1, idx: i1, val: v1 }) =
+            (&upd.payload, &back)
+        else {
+            unreachable!()
+        };
+        assert_eq!(d0, d1);
+        assert_eq!(i0, i1);
+        assert_eq!(
+            v0.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            v1.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}
