@@ -1,0 +1,159 @@
+//! Cross-round straggler carry-over: deadline rounds with carry on vs
+//! off.
+//!
+//! Runs the same compressed FedAvg workload twice over a straggler-heavy
+//! fleet under a calibrated deadline — once discarding every late upload
+//! (the classic semi-synchronous rule) and once carrying them into the
+//! next round with staleness-discounted weights
+//! (`CarryPolicy::CarryDiscounted`, see `coordinator/session.rs`).  Per
+//! round it prints who folded (fresh + carried) and what left for the
+//! future; the summary compares rounds-to-target-loss and total folded
+//! updates.
+//!
+//! Works out of the box without PJRT artifacts: it falls back to the
+//! engine-free fake-train mode on the synthetic manifest, where
+//! carry-over counts, participation and timing are real but loss is not
+//! measured.  CI runs it in that mode on every PR.
+//!
+//! ```bash
+//! cargo run --release --example carryover \
+//!     [-- --clients 256 --rounds 8 --frac 0.2 --slowdown 8 \
+//!         --lambda 0.5 --max-age 2 --target-loss 1.0]
+//! ```
+
+use hcfl::compression::Scheme;
+use hcfl::coordinator::clock::{calibrated_deadline, RoundPolicy};
+use hcfl::network::DevicePreset;
+use hcfl::prelude::*;
+use hcfl::util::cli::Args;
+
+fn main() -> hcfl::error::Result<()> {
+    let args = Args::from_env();
+    let clients = args.usize_or("clients", 256)?;
+    let rounds = args.usize_or("rounds", 8)?;
+    let frac = args.f64_or("frac", 0.2)?;
+    let slowdown = args.f64_or("slowdown", 8.0)?;
+    let lambda = args.f64_or("lambda", 0.5)?;
+    let max_age = args.usize_or("max-age", 2)?;
+    let target_loss = args.f64_or("target-loss", 1.0)?;
+    let client_threads = args.usize_or("client-threads", 4)?;
+    let ratio = args.usize_or("ratio", 32)?;
+
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let have_engine = hcfl::runtime::pjrt_enabled()
+        && std::path::Path::new(artifacts).join("manifest.json").is_file();
+    let engine = if have_engine {
+        Engine::from_artifacts(artifacts, 4)?
+    } else {
+        println!("(no PJRT artifacts: running the pipeline in fake-train mode)");
+        Engine::with_manifest(Manifest::synthetic(), 4)?
+    };
+    let scheme = if have_engine {
+        Scheme::Hcfl { ratio }
+    } else {
+        Scheme::TopK { keep: 0.2 }
+    };
+
+    let base_cfg = {
+        let mut cfg = ExperimentConfig::mnist(scheme, rounds);
+        cfg.n_clients = clients;
+        cfg.data.n_clients = clients;
+        cfg.participation = 0.25;
+        cfg.local_epochs = 1;
+        cfg.client_threads = client_threads;
+        cfg.data.lazy_shards = clients > 512;
+        cfg.scenario.devices = DevicePreset::Stragglers { frac, slowdown };
+        if !have_engine {
+            cfg.model = "fake".into();
+            cfg.fake_train = true;
+            cfg.batch = 16;
+            cfg.data.per_client = 64;
+            cfg.data.test_n = 64;
+            cfg.data.server_n = 16;
+        }
+        cfg
+    };
+
+    println!(
+        "{} with K={clients} (m={}), {:.0}% of devices {slowdown}x stragglers",
+        scheme.label(),
+        base_cfg.m(),
+        frac * 100.0
+    );
+
+    // One synchronous probe round fixes the deadline's absolute time
+    // scale (modelled compute depends on the host's measured speed).
+    let mut probe_sim = Simulation::new(&engine, base_cfg.clone())?;
+    let probe = probe_sim.run_round(1)?;
+    let t_max = calibrated_deadline(&base_cfg.link, &probe, 3.0);
+    println!(
+        "fleet: {}/{clients} stragglers; synchronous makespan {:.2}s -> deadline {:.2}s\n",
+        probe_sim.fleet().n_slow(),
+        probe.makespan_s,
+        t_max
+    );
+
+    let arms = [
+        ("carry off", CarryPolicy::Discard),
+        (
+            "carry on",
+            CarryPolicy::CarryDiscounted {
+                lambda,
+                max_age_rounds: max_age,
+            },
+        ),
+    ];
+    for (name, carry) in arms {
+        let mut cfg = base_cfg.clone();
+        cfg.scenario.policy = RoundPolicy::Deadline { t_max_s: t_max };
+        cfg.scenario.carry = carry;
+        println!("== {name}: {} ==", cfg.scenario.label());
+        let mut sim = Simulation::new(&engine, cfg)?;
+        let mut records = Vec::with_capacity(rounds);
+        for t in 1..=rounds {
+            let rec = sim.run_round(t)?;
+            println!(
+                "  round {t}: loss {:.4}  acc {:.3}  folded {}+{} of {}  cut {}  \
+                 carried out {}",
+                rec.loss,
+                rec.accuracy,
+                rec.completed,
+                rec.carried_in,
+                rec.selected,
+                rec.stragglers,
+                rec.carried_out,
+            );
+            records.push(rec);
+        }
+        let report = hcfl::metrics::RunReport {
+            scheme: sim.compressor().name(),
+            model: sim.cfg.model.clone(),
+            rounds: records,
+        };
+        let to_target = report
+            .rounds
+            .iter()
+            .find(|r| r.loss > 0.0 && r.loss <= target_loss)
+            .map(|r| r.round);
+        let reached = if !have_engine {
+            "n/a (fake-train mode measures traffic, not learning)".to_string()
+        } else {
+            match to_target {
+                Some(t) => format!("{t}"),
+                None => format!("not reached in {rounds} rounds"),
+            }
+        };
+        println!(
+            "  => rounds to loss <= {target_loss}: {reached}; \
+             folded {} fresh + {} carried of {} cut ({} expired, {} still in \
+             flight); modelled run time {:.2}s\n",
+            report.rounds.iter().map(|r| r.completed).sum::<usize>(),
+            report.total_carried_in(),
+            report.total_stragglers(),
+            report.total_carried_expired(),
+            sim.carry_pending(),
+            report.total_makespan(),
+        );
+    }
+    Ok(())
+}

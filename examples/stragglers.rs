@@ -2,10 +2,14 @@
 //!
 //! Runs the same HCFL-compressed FedAvg workload over a heterogeneous
 //! IoT fleet (a fraction of devices 8x slower in compute and uplink)
-//! under the three round policies and prints, per round, who made it
-//! into the aggregate: the synchronous round waits out every straggler
-//! (huge modelled makespan), the deadline and fastest-m rounds cut them
-//! and keep the makespan near the fast cohort's arrival.
+//! under the three round policies — plus the deadline policy with
+//! cross-round carry-over — and prints, per round, who made it into the
+//! aggregate: the synchronous round waits out every straggler (huge
+//! modelled makespan), the deadline and fastest-m rounds cut them and
+//! keep the makespan near the fast cohort's arrival, and the carry arm
+//! folds the cut uploads into the next round with staleness-discounted
+//! weights instead of wasting them (see `examples/carryover.rs` for the
+//! dedicated study).
 //!
 //! ```bash
 //! cargo run --release --example stragglers \
@@ -66,24 +70,42 @@ fn main() -> hcfl::error::Result<()> {
 
     let fast = clients - n_slow;
     let policies = [
-        ("synchronous", RoundPolicy::Synchronous),
-        ("deadline", RoundPolicy::Deadline { t_max_s: t_max }),
-        ("fastest-m", RoundPolicy::FastestM { m: fast.max(1) }),
+        ("synchronous", RoundPolicy::Synchronous, CarryPolicy::Discard),
+        (
+            "deadline",
+            RoundPolicy::Deadline { t_max_s: t_max },
+            CarryPolicy::Discard,
+        ),
+        (
+            "fastest-m",
+            RoundPolicy::FastestM { m: fast.max(1) },
+            CarryPolicy::Discard,
+        ),
+        (
+            "deadline + carry",
+            RoundPolicy::Deadline { t_max_s: t_max },
+            CarryPolicy::CarryDiscounted {
+                lambda: 0.5,
+                max_age_rounds: 2,
+            },
+        ),
     ];
 
-    for (name, policy) in policies {
+    for (name, policy, carry) in policies {
         let mut cfg = base_cfg.clone();
         cfg.scenario.policy = policy;
+        cfg.scenario.carry = carry;
         println!("== {name}: {} ==", cfg.scenario.label());
         let mut sim = Simulation::new(&engine, cfg)?;
         let mut report_rounds = Vec::with_capacity(rounds);
         for t in 1..=rounds {
             let rec = sim.run_round(t)?;
             println!(
-                "  round {t}: acc {:.3}  aggregated {}/{}  cut {} stragglers  \
+                "  round {t}: acc {:.3}  aggregated {}+{} of {}  cut {} stragglers  \
                  makespan {:>7.2}s  up {:.0} KB",
                 rec.accuracy,
                 rec.completed,
+                rec.carried_in,
                 rec.selected,
                 rec.stragglers,
                 rec.makespan_s,
@@ -93,8 +115,10 @@ fn main() -> hcfl::error::Result<()> {
         }
         let total_makespan: f64 = report_rounds.iter().map(|r| r.makespan_s).sum();
         let total_cut: usize = report_rounds.iter().map(|r| r.stragglers).sum();
+        let total_carried: usize = report_rounds.iter().map(|r| r.carried_in).sum();
         println!(
-            "  => final acc {:.3}, modelled run time {:.2}s, {total_cut} straggler uploads cut\n",
+            "  => final acc {:.3}, modelled run time {:.2}s, {total_cut} straggler uploads cut, \
+             {total_carried} carried into later rounds\n",
             report_rounds.last().map(|r| r.accuracy).unwrap_or(0.0),
             total_makespan
         );

@@ -10,7 +10,7 @@
 //! ```
 
 use hcfl::compression::Scheme;
-use hcfl::coordinator::build_compressor;
+use hcfl::coordinator::session::build_compressor;
 use hcfl::data::synthetic;
 use hcfl::fl::LocalTrainer;
 use hcfl::model::init_flat;

@@ -1,13 +1,14 @@
 //! End-to-end round benchmarks: the worker-pool client stage at large m
 //! (pool vs the old spawn-per-client pattern), the K≥1000 aggregation
 //! fold (single-threaded streaming baseline vs the deterministic
-//! reduction tree), then one full FedAvg communication round per
+//! reduction tree), the session-driven deadline round with cross-round
+//! carry-over on vs off, then one full FedAvg communication round per
 //! compression scheme (the system-level numbers behind the paper's
 //! Tables I-III) plus the eq.-13 modelled air-time comparison.
 //!
-//! The client-stage and aggregation sections are engine-free (fake
-//! training / pure folds) and always run; the per-scheme rounds need the
-//! `pjrt` feature + artifacts and skip themselves otherwise.
+//! The client-stage, aggregation and session sections are engine-free
+//! (fake training / pure folds) and always run; the per-scheme rounds
+//! need the `pjrt` feature + artifacts and skip themselves otherwise.
 //!
 //! Every section's results land in `BENCH_round.json` (per-case median
 //! ns + throughput; see `util::bench::write_json`) so CI can archive the
@@ -19,11 +20,12 @@ use std::sync::Arc;
 
 use hcfl::compression::{Compressor, Identity, Scheme};
 use hcfl::config::ExperimentConfig;
+use hcfl::coordinator::clock::{calibrated_deadline, RoundPolicy};
 use hcfl::coordinator::pool::{
     reduce_tree, ClientPool, ClientRunner, FakeTrainRunner, RoundInputs, WorkSpec,
     WorkerCtx, WorkerPool,
 };
-use hcfl::coordinator::Simulation;
+use hcfl::coordinator::{CarryPolicy, Simulation};
 use hcfl::data::{synthetic, DataSpec, Partition};
 use hcfl::fl::{finish_tree, AggregatorKind, UpdateMeta, WeightedLeaf, TREE_FAN_IN};
 use hcfl::network::LinkModel;
@@ -186,6 +188,63 @@ fn aggregation_bench(budget: f64, results: &mut Vec<BenchResult>) {
     }
 }
 
+/// The session-driven round at m=128 under a calibrated deadline with
+/// 20% 8x stragglers: carry off (late uploads discarded, the
+/// pre-session behavior) vs carry on (late uploads decoded, carried and
+/// folded into the next round).  Engine-free fake training, so the
+/// measured cost is the session lifecycle itself — broadcast, submit,
+/// resolve, parallel decode, carry bookkeeping and the reduction tree.
+fn session_round_bench(budget: f64, results: &mut Vec<BenchResult>) {
+    let m = 128;
+    println!("\n== session-driven deadline round at m={m}, 20% stragglers: carry off vs on ==");
+    for (label, carry) in [
+        ("carry off", CarryPolicy::Discard),
+        (
+            "carry on",
+            CarryPolicy::CarryDiscounted {
+                lambda: 0.5,
+                max_age_rounds: 2,
+            },
+        ),
+    ] {
+        let mut cfg = ExperimentConfig::mnist(Scheme::TopK { keep: 0.1 }, 1_000_000);
+        cfg.model = "fake".into();
+        cfg.fake_train = true;
+        cfg.n_clients = 256;
+        cfg.data.n_clients = 256;
+        cfg.participation = 0.5;
+        cfg.batch = 16;
+        cfg.data.per_client = 64;
+        cfg.data.test_n = 64;
+        cfg.data.server_n = 16;
+        cfg.client_threads = 8;
+        cfg.engine_workers = 2;
+        cfg.scenario.devices = DevicePreset::Stragglers {
+            frac: 0.2,
+            slowdown: 8.0,
+        };
+        cfg.scenario.carry = carry;
+        let engine = Engine::with_manifest(Manifest::synthetic(), 2).unwrap();
+        let mut sim = Simulation::new(&engine, cfg).unwrap();
+        // one synchronous probe fixes the deadline's absolute scale
+        let probe = sim.run_round(1).unwrap();
+        let t_max = calibrated_deadline(&sim.cfg.link, &probe, 3.0);
+        sim.cfg.scenario.policy = RoundPolicy::Deadline { t_max_s: t_max };
+        let mut t = 1usize;
+        results.push(bench_items(
+            &format!("session round m={m} deadline [{label}]"),
+            budget,
+            50,
+            m,
+            || {
+                t += 1;
+                let rec = sim.run_round(t).expect("session round");
+                assert!(rec.selected == m);
+            },
+        ));
+    }
+}
+
 fn bench_cfg(scheme: Scheme, workers: usize) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::quickstart();
     cfg.scheme = scheme;
@@ -222,6 +281,7 @@ fn main() {
 
     client_stage_bench(budget, &mut results);
     aggregation_bench(budget, &mut results);
+    session_round_bench(budget, &mut results);
 
     let emit = |results: &[BenchResult]| {
         let path = std::path::Path::new(&json_path);

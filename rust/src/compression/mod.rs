@@ -116,6 +116,30 @@ pub trait Compressor: Send + Sync {
     fn decompress(&self, upd: CompressedUpdate, d: usize, worker: usize)
         -> Result<Vec<f32>>;
 
+    /// What the client puts on the wire (see
+    /// `ExperimentConfig::encode_deltas`): the update
+    /// `Δ = w_local − w_broadcast`, or the raw weights of the paper's
+    /// Algorithm 1.  Scheme-independent framing shared by every codec
+    /// (provided method), applied *before* [`Compressor::compress`].
+    fn encode_payload(&self, params: &[f32], global: &[f32], encode_deltas: bool) -> Vec<f32> {
+        if encode_deltas {
+            params.iter().zip(global).map(|(w, g)| w - g).collect()
+        } else {
+            params.to_vec()
+        }
+    }
+
+    /// Server-side inverse of [`Compressor::encode_payload`]:
+    /// reconstruct `ŵ = g + Δ̂` in place when delta coding is on,
+    /// applied *after* [`Compressor::decompress`].
+    fn decode_payload(&self, decoded: &mut [f32], global: &[f32], encode_deltas: bool) {
+        if encode_deltas {
+            for (v, g) in decoded.iter_mut().zip(global) {
+                *v += g;
+            }
+        }
+    }
+
     fn name(&self) -> String {
         self.scheme().label()
     }

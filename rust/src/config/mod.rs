@@ -4,6 +4,7 @@
 
 use crate::compression::Scheme;
 use crate::coordinator::clock::RoundPolicy;
+use crate::coordinator::session::CarryPolicy;
 use crate::data::DataSpec;
 use crate::error::{HcflError, Result};
 use crate::fl::AggregatorKind;
@@ -21,6 +22,10 @@ pub struct ScenarioConfig {
     pub policy: RoundPolicy,
     pub aggregator: AggregatorKind,
     pub devices: DevicePreset,
+    /// What happens to uploads the policy cuts: discard (the paper's
+    /// implicit rule) or decode and fold into a later round with
+    /// staleness-discounted weights (`coordinator::session`).
+    pub carry: CarryPolicy,
 }
 
 impl Default for ScenarioConfig {
@@ -29,6 +34,7 @@ impl Default for ScenarioConfig {
             policy: RoundPolicy::Synchronous,
             aggregator: AggregatorKind::UniformMean,
             devices: DevicePreset::Homogeneous,
+            carry: CarryPolicy::Discard,
         }
     }
 }
@@ -41,12 +47,18 @@ impl ScenarioConfig {
             policy: RoundPolicy::Deadline { t_max_s: deadline_s },
             aggregator: AggregatorKind::UniformMean,
             devices: DevicePreset::Stragglers { frac, slowdown },
+            carry: CarryPolicy::Discard,
         }
     }
 
     pub fn label(&self) -> String {
+        let carry = if self.carry.carries() {
+            format!(" / {}", self.carry.label())
+        } else {
+            String::new()
+        };
         format!(
-            "{} / {} / {:?}",
+            "{} / {} / {:?}{carry}",
             self.policy.label(),
             self.aggregator.label(),
             self.devices
@@ -101,6 +113,22 @@ impl ScenarioConfig {
                 return Err(HcflError::Config(format!(
                     "staleness lambda must be >= 0, got {lambda}"
                 )));
+            }
+        }
+        if let CarryPolicy::CarryDiscounted {
+            lambda,
+            max_age_rounds,
+        } = &self.carry
+        {
+            if !lambda.is_finite() || *lambda < 0.0 {
+                return Err(HcflError::Config(format!(
+                    "carry lambda must be >= 0, got {lambda}"
+                )));
+            }
+            if *max_age_rounds == 0 {
+                return Err(HcflError::Config(
+                    "carry max_age_rounds must be >= 1 (0 is CarryPolicy::Discard)".into(),
+                ));
             }
         }
         Ok(())
@@ -350,6 +378,7 @@ mod tests {
         assert_eq!(s.policy, RoundPolicy::Synchronous);
         assert_eq!(s.aggregator, AggregatorKind::UniformMean);
         assert_eq!(s.devices, DevicePreset::Homogeneous);
+        assert_eq!(s.carry, CarryPolicy::Discard);
         assert!(s.validate().is_ok());
     }
 
@@ -383,11 +412,35 @@ mod tests {
                 aggregator: AggregatorKind::StalenessDiscounted { lambda: -1.0 },
                 ..ScenarioConfig::default()
             },
+            ScenarioConfig {
+                carry: CarryPolicy::CarryDiscounted {
+                    lambda: -0.5,
+                    max_age_rounds: 2,
+                },
+                ..ScenarioConfig::default()
+            },
+            ScenarioConfig {
+                carry: CarryPolicy::CarryDiscounted {
+                    lambda: 0.5,
+                    max_age_rounds: 0,
+                },
+                ..ScenarioConfig::default()
+            },
         ];
         for s in bad {
             assert!(s.validate().is_err(), "accepted invalid scenario {s:?}");
         }
         assert!(ScenarioConfig::stragglers(0.3, 8.0, 1.0).validate().is_ok());
+        let carrying = ScenarioConfig {
+            carry: CarryPolicy::CarryDiscounted {
+                lambda: 0.5,
+                max_age_rounds: 2,
+            },
+            ..ScenarioConfig::default()
+        };
+        assert!(carrying.validate().is_ok());
+        assert!(carrying.label().contains("carry"));
+        assert!(!ScenarioConfig::default().label().contains("carry"));
     }
 
     #[test]

@@ -100,9 +100,14 @@ pub struct RoundOutcome {
     /// Indices into the `timings` slice, in modelled arrival order; only
     /// these uploads reach the aggregator.
     pub survivors: Vec<usize>,
+    /// Indices of the alive-but-cut uploads, in modelled arrival order.
+    /// Resolution used to discard these identities; sessions need them
+    /// to attribute carried-over updates without recomputing timings.
+    pub late: Vec<usize>,
     /// Selected clients that vanished (device dropout).
     pub dropped: usize,
-    /// Alive clients cut by the policy (deadline miss / not in fastest m).
+    /// Alive clients cut by the policy (deadline miss / not in fastest
+    /// m); always `late.len()`.
     pub stragglers: usize,
     /// Modelled round duration: the slowest surviving arrival, or the
     /// full deadline whenever any selected upload never made it (the
@@ -150,24 +155,22 @@ pub fn resolve(policy: &RoundPolicy, timings: &[ClientTiming]) -> RoundOutcome {
             .then(timings[a].order.cmp(&timings[b].order))
     });
 
-    let (survivors, stragglers, makespan_s) = match policy {
+    let (survivors, late, makespan_s) = match policy {
         RoundPolicy::Synchronous => {
             let makespan = alive
                 .last()
                 .map(|&i| timings[i].arrival_s())
                 .unwrap_or(0.0);
-            (alive, 0, makespan)
+            (alive, Vec::new(), makespan)
         }
         RoundPolicy::Deadline { t_max_s } => {
-            let survivors: Vec<usize> = alive
+            let (survivors, late): (Vec<usize>, Vec<usize>) = alive
                 .iter()
                 .copied()
-                .filter(|&i| timings[i].arrival_s() <= *t_max_s)
-                .collect();
-            let cut = alive.len() - survivors.len();
+                .partition(|&i| timings[i].arrival_s() <= *t_max_s);
             // See resolve()'s doc: slowness is undetectable, so any
             // missing upload — cut or dropped — means waiting out t_max.
-            let makespan = if cut > 0 || dropped > 0 {
+            let makespan = if !late.is_empty() || dropped > 0 {
                 *t_max_s
             } else {
                 survivors
@@ -175,22 +178,24 @@ pub fn resolve(policy: &RoundPolicy, timings: &[ClientTiming]) -> RoundOutcome {
                     .map(|&i| timings[i].arrival_s())
                     .unwrap_or(0.0)
             };
-            (survivors, cut, makespan)
+            (survivors, late, makespan)
         }
         RoundPolicy::FastestM { m } => {
             let keep = (*m).min(alive.len());
-            let cut = alive.len() - keep;
+            let late: Vec<usize> = alive[keep..].to_vec();
             let survivors: Vec<usize> = alive[..keep].to_vec();
             let makespan = survivors
                 .last()
                 .map(|&i| timings[i].arrival_s())
                 .unwrap_or(0.0);
-            (survivors, cut, makespan)
+            (survivors, late, makespan)
         }
     };
 
+    let stragglers = late.len();
     RoundOutcome {
         survivors,
+        late,
         dropped,
         stragglers,
         makespan_s,
@@ -227,6 +232,7 @@ mod tests {
         let ts = vec![timing(0, 1.0, false), timing(1, 5.0, false), timing(2, 2.0, false)];
         let out = resolve(&RoundPolicy::Deadline { t_max_s: 3.0 }, &ts);
         assert_eq!(out.survivors, vec![0, 2]);
+        assert_eq!(out.late, vec![1], "cut identities must survive resolution");
         assert_eq!(out.stragglers, 1);
         assert_eq!(out.dropped, 0);
         // someone was cut: the server waited out the whole deadline
@@ -257,6 +263,7 @@ mod tests {
         let ts = vec![timing(0, 10.0, false), timing(1, 20.0, false)];
         let out = resolve(&RoundPolicy::Deadline { t_max_s: 0.5 }, &ts);
         assert!(out.survivors.is_empty());
+        assert_eq!(out.late, vec![0, 1]); // arrival order
         assert_eq!(out.stragglers, 2);
         assert_eq!(out.makespan_s, 0.5);
     }
@@ -271,7 +278,8 @@ mod tests {
         ];
         let out = resolve(&RoundPolicy::FastestM { m: 2 }, &ts);
         assert_eq!(out.survivors, vec![1, 2]);
-        assert_eq!(out.stragglers, 1); // client 0 was alive but too slow
+        assert_eq!(out.late, vec![0]); // client 0 was alive but too slow
+        assert_eq!(out.stragglers, 1);
         assert_eq!(out.dropped, 1);
         assert!((out.makespan_s - 3.3).abs() < 1e-12);
 
@@ -326,6 +334,9 @@ mod tests {
             completed: 4,
             dropped: 0,
             stragglers: 0,
+            carried_in: 0,
+            carried_out: 0,
+            carried_expired: 0,
             makespan_s: 99.0, // deliberately unused by the calibration
             client_time_s: 0.5,
             server_time_s: 0.0,

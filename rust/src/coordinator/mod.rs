@@ -1,10 +1,14 @@
 //! The round coordinator: wires data, compressor, clients and server into
-//! a layered round-execution pipeline.
+//! a layered round-execution pipeline driven through the event-driven
+//! [`session`] lifecycle.
 //!
-//! Per round, the stages run in order:
+//! Per round, [`Simulation::run_round`] pumps the stages through one
+//! [`FlSession`] round:
 //!
-//! 1. **broadcast** — the server ships the global model; the paper's
-//!    tables count both directions encoded, see [`broadcast`];
+//! 1. **begin_round** ([`session`]) — the server broadcasts the global
+//!    model (the paper's tables count both directions encoded, see
+//!    `ExperimentConfig::compress_downlink`) and ingests the previous
+//!    round's [`session::CarryOver`], expiring what aged out;
 //! 2. **device layer** — each selected client's [`DeviceProfile`] decides
 //!    whether it drops out this round (seeded, per-round stream);
 //! 3. **client stage** ([`pool`]) — surviving clients train locally and
@@ -17,15 +21,17 @@
 //!    the measured length of its packed wire buffer
 //!    (`compression/wire.rs`), packed into the worker's reusable
 //!    scratch;
-//! 4. **round clock** ([`clock`]) — exact per-client byte counts and
-//!    device profiles become modelled compute + air times, and the
-//!    configured [`clock::RoundPolicy`] picks the surviving uploads and
-//!    the round makespan;
-//! 5. **aggregation** — survivors decode in parallel on the same pool,
-//!    become weight-scaled leaves in modelled arrival order, and fold
-//!    through a fixed-fan-in reduction tree ([`pool::reduce_tree`])
-//!    whose shape depends only on arrival order — bit-identical for any
-//!    pool size;
+//! 4. **submit + resolve** — every arrival becomes a
+//!    [`session::ClientUpdate`] (exact per-client byte counts and device
+//!    profiles become modelled compute + air times via [`clock`]), and
+//!    the configured [`clock::RoundPolicy`] splits arrivals into
+//!    survivors and late uploads;
+//! 5. **finalize** — survivors decode in parallel on the same pool,
+//!    become weight-scaled leaves in modelled arrival order behind any
+//!    carried-in leaves, and fold through a fixed-fan-in reduction tree
+//!    ([`pool::reduce_tree`]) whose shape depends only on arrival order —
+//!    bit-identical for any pool size; late uploads become the next
+//!    round's carry-over when [`session::CarryPolicy`] allows;
 //! 6. **evaluation** — the installed global model is scored (skipped in
 //!    `fake_train` smoke mode, which has no engine to score on).
 //!
@@ -36,42 +42,45 @@
 
 pub mod clock;
 pub mod pool;
+pub mod session;
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use self::pool::{
-    reduce_tree, ClientMsg, ClientPool, ClientRunner, FakeTrainRunner, RoundInputs,
-    TrainEncodeRunner, WorkSpec, WorkerCtx,
+    ClientMsg, ClientPool, ClientRunner, FakeTrainRunner, RoundInputs, TrainEncodeRunner,
+    WorkSpec,
 };
-use crate::compression::{
-    Compressor, HcflCompressor, Identity, Scheme, TernaryCompressor, TopKCompressor,
-    WireScratch,
-};
+pub use self::session::{CarryOver, CarryPolicy, FlSession};
+use crate::compression::Compressor;
 use crate::config::ExperimentConfig;
-use crate::coordinator::clock::{client_timing, resolve, ClientTiming};
+use crate::coordinator::clock::{client_timing, ClientTiming};
+use crate::coordinator::session::{build_compressor, ClientUpdate};
 use crate::data::{synthetic, FlData};
 use crate::error::Result;
-use crate::fl::{
-    finish_tree, select_clients, LocalTrainer, Server, UpdateMeta, WeightedLeaf,
-    TREE_FAN_IN,
-};
-use crate::hcfl::prepare_autoencoders;
+use crate::fl::{select_clients, LocalTrainer, Server};
 use crate::metrics::{RoundRecord, RunReport};
-use crate::model::{merge_segment_ranges, split_dense};
 use crate::network::DeviceFleet;
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
 use crate::util::stats;
+
+/// The per-round seed stream: independent of the selection and training
+/// RNGs, so device dropouts and per-client work seeds never perturb the
+/// learning trajectory.  Public so regression tests can replay a round's
+/// client stage outside the simulation.
+pub fn round_seed(seed: u64, t: usize) -> u64 {
+    seed ^ (t as u64).wrapping_mul(0xD1B5_4A32_D192_ED03)
+}
 
 /// A fully-wired FL simulation.
 pub struct Simulation {
     engine: Engine,
     pub cfg: ExperimentConfig,
     pub data: Arc<FlData>,
-    compressor: Arc<dyn Compressor>,
     trainer: LocalTrainer,
-    server: Server,
+    session: FlSession,
+    carry: CarryOver,
     fleet: DeviceFleet,
     pool: ClientPool,
     rng: Rng,
@@ -82,7 +91,7 @@ pub struct Simulation {
 impl Simulation {
     /// Build the simulation: generate data, sample the device fleet, spin
     /// up the compressor (training autoencoders for HCFL schemes), the
-    /// client worker pool, and the server.
+    /// client worker pool, and the server session.
     pub fn new(engine: &Engine, cfg: ExperimentConfig) -> Result<Simulation> {
         cfg.validate(engine.manifest())?;
         let mut data_spec = cfg.data.clone();
@@ -95,6 +104,14 @@ impl Simulation {
         // The HCFL pre-model must start from this run's actual init so
         // the compressor is trained on the trajectory it will compress.
         let compressor = build_compressor(engine, &cfg, &data, &server.global.flat)?;
+        let session = FlSession::new(
+            server,
+            Arc::clone(&compressor),
+            cfg.scenario.aggregator.clone(),
+            cfg.scenario.carry.clone(),
+            cfg.encode_deltas,
+            cfg.compress_downlink,
+        );
         let runner: Arc<dyn ClientRunner> = if cfg.fake_train {
             Arc::new(FakeTrainRunner::new(
                 Arc::clone(&compressor),
@@ -112,9 +129,9 @@ impl Simulation {
             engine: engine.clone(),
             cfg,
             data,
-            compressor,
             trainer,
-            server,
+            session,
+            carry: CarryOver::empty(),
             fleet,
             pool,
             rng,
@@ -124,16 +141,22 @@ impl Simulation {
 
     /// Current global model.
     pub fn global(&self) -> &[f32] {
-        &self.server.global.flat
+        self.session.global()
     }
 
+    /// The wire codec (owned by the session).
     pub fn compressor(&self) -> &Arc<dyn Compressor> {
-        &self.compressor
+        self.session.compressor()
     }
 
     /// The engine this simulation runs on.
     pub fn engine(&self) -> &Engine {
         &self.engine
+    }
+
+    /// The server-side session (carry policy, global model).
+    pub fn session(&self) -> &FlSession {
+        &self.session
     }
 
     /// The sampled device population.
@@ -146,23 +169,29 @@ impl Simulation {
         self.pool.n_threads()
     }
 
+    /// Late updates currently in flight toward a future round.
+    pub fn carry_pending(&self) -> usize {
+        self.carry.len()
+    }
+
     /// Run all configured rounds.
     pub fn run(&mut self) -> Result<RunReport> {
         let mut rounds = Vec::with_capacity(self.cfg.rounds);
         for t in 1..=self.cfg.rounds {
             let rec = self.run_round(t)?;
             if self.verbose {
-                let part = if rec.completed < rec.selected {
+                let part = if rec.completed < rec.selected || rec.carried_in > 0 {
                     format!(
-                        " [{}/{} agg, {} dropped, {} cut]",
-                        rec.completed, rec.selected, rec.dropped, rec.stragglers
+                        " [{}/{} agg, {} dropped, {} cut, {}+ carried]",
+                        rec.completed, rec.selected, rec.dropped, rec.stragglers,
+                        rec.carried_in
                     )
                 } else {
                     String::new()
                 };
                 eprintln!(
                     "[{}] round {t:>3}: acc {:.4} loss {:.4} recon {:.2e} up {:.1} KB{part}",
-                    self.compressor.name(),
+                    self.session.compressor().name(),
                     rec.accuracy,
                     rec.loss,
                     rec.recon_mse,
@@ -172,37 +201,44 @@ impl Simulation {
             rounds.push(rec);
         }
         Ok(RunReport {
-            scheme: self.compressor.name(),
+            scheme: self.session.compressor().name(),
             model: self.cfg.model.clone(),
             rounds,
         })
     }
 
-    /// One communication round through the staged pipeline.
+    /// One communication round: a thin driver that pumps the staged
+    /// pipeline through the session lifecycle
+    /// (`begin_round → submit/mark_dropped → resolve → finalize`).
     pub fn run_round(&mut self, t: usize) -> Result<RoundRecord> {
         let wall0 = Instant::now();
-        let d = self.trainer.model.d;
         let selected = select_clients(self.cfg.n_clients, self.cfg.participation, &mut self.rng);
         let m = selected.len();
 
-        // ---- stage 1: broadcast ----------------------------------------
-        let (global_recv, down_bytes) = broadcast(
-            self.compressor.as_ref(),
-            &self.server.global.flat,
-            self.cfg.compress_downlink,
-        )?;
+        // ---- the session opens the round: broadcast + carry ingest -----
+        // Scenario knobs stay live-read from `cfg` (drivers calibrate
+        // the policy — and may flip aggregation/carry — after a probe
+        // round).  Note: a round that errors past this point drops the
+        // in-flight carry-over with the abandoned session; a failed
+        // round is fatal to the run, not retryable.
+        self.session.set_scenario(
+            self.cfg.scenario.aggregator.clone(),
+            self.cfg.scenario.carry.clone(),
+        );
+        let carry = std::mem::take(&mut self.carry);
+        let mut round = self.session.begin_round(t, carry)?;
 
-        // ---- stage 2: device layer (dropouts) --------------------------
+        // ---- device layer (dropouts) -----------------------------------
         // A per-round stream independent of selection and training RNGs,
         // so heterogeneity presets never perturb the learning trajectory.
-        let round_seed = self.cfg.seed ^ (t as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
+        let round_seed = round_seed(self.cfg.seed, t);
         let mut drop_rng = Rng::new(round_seed ^ 0x0D10_D0A7_5EED_0001);
         let dropped: Vec<bool> = selected
             .iter()
             .map(|&k| drop_rng.next_f64() < self.fleet.profile(k).dropout_p)
             .collect();
 
-        // ---- stage 3: client stage through the worker pool -------------
+        // ---- client stage through the worker pool ----------------------
         // One seeded work item per surviving client; no thread spawns.
         let specs: Vec<WorkSpec> = selected
             .iter()
@@ -215,7 +251,7 @@ impl Simulation {
             })
             .collect();
         let round_inputs = RoundInputs {
-            global: Arc::clone(&global_recv),
+            global: Arc::clone(round.global()),
             epochs: self.cfg.local_epochs,
             batch: self.cfg.batch,
             lr: self.cfg.lr,
@@ -228,249 +264,61 @@ impl Simulation {
             msgs[slot] = Some(msg);
         }
 
-        // ---- stage 4: round clock --------------------------------------
-        // Modelled compute time = the round's reference compute time (mean
-        // measured train+encode) scaled per device, so survivor sets and
-        // aggregation order are deterministic under OS scheduling noise.
+        // ---- pump arrivals into the session in arrival order -----------
+        // Modelled compute time = the round's reference compute time
+        // (mean measured train+encode) scaled per device, so survivor
+        // sets and aggregation order are deterministic under OS
+        // scheduling noise.
         let measured: Vec<f64> = msgs.iter().flatten().map(|msg| msg.train_s).collect();
         let reference_compute_s = stats::mean(&measured);
         let transmitting = measured.len();
-        let timings: Vec<ClientTiming> = selected
-            .iter()
-            .enumerate()
-            .map(|(slot, &k)| {
-                let up = msgs[slot].as_ref().map(|msg| msg.update.wire_bytes).unwrap_or(0);
-                client_timing(
-                    &self.cfg.link,
-                    self.fleet.profile(k),
-                    k,
-                    slot,
-                    up,
-                    down_bytes,
-                    reference_compute_s,
-                    m,
-                    transmitting,
-                    dropped[slot],
-                )
-            })
-            .collect();
-        let outcome = resolve(&self.cfg.scenario.policy, &timings);
-
-        // Uplink byte accounting must happen before stage 5 consumes the
-        // survivor messages: every transmitting client's upload hits the
-        // air even when the policy later ignores it.
-        let up_bytes: u64 = msgs
-            .iter()
-            .flatten()
-            .map(|msg| msg.update.wire_bytes as u64)
-            .sum();
-
-        // ---- stage 5: parallel decode + reduction-tree aggregation -----
-        // Survivors decode on the pool (each thread against its pinned
-        // engine worker), become weight-scaled leaves in modelled arrival
-        // order, and fold through the fixed-fan-in reduction tree.  The
-        // tree shape and every per-node summation order depend only on
-        // the arrival order, so the result is bit-identical for any
-        // `client_threads` (tests/pool_determinism.rs).
-        let kind = self.cfg.scenario.aggregator.clone();
-        let t0_arrival = outcome
-            .survivors
-            .first()
-            .map(|&i| timings[i].arrival_s())
-            .unwrap_or(0.0);
-        let encode_deltas = self.cfg.encode_deltas;
-        let mut jobs = Vec::with_capacity(outcome.survivors.len());
-        for &i in &outcome.survivors {
-            let msg = msgs[i].take().expect("survivor sent an update");
-            let meta = UpdateMeta {
-                client: timings[i].client,
-                n_samples: msg.n_samples,
-                arrival_s: timings[i].arrival_s(),
-            };
-            let compressor = Arc::clone(&self.compressor);
-            let global = Arc::clone(&global_recv);
-            let kind = kind.clone();
-            jobs.push(
-                move |ctx: &mut WorkerCtx| -> Result<(WeightedLeaf, f64, f64)> {
-                    // Only the server's real work (decode + weighting) is
-                    // timed; the reconstruction MSE is simulation-only
-                    // instrumentation and stays outside the measured
-                    // server time, as before the pool.
-                    let t0 = Instant::now();
-                    let mut decoded =
-                        compressor.decompress(msg.update, d, ctx.engine_worker)?;
-                    decode_payload(&mut decoded, &global, encode_deltas);
-                    let mut decode_s = t0.elapsed().as_secs_f64();
-                    let recon = mse(&decoded, &msg.exact);
-                    let t1 = Instant::now();
-                    let w = kind.weight(&meta, t0_arrival)?;
-                    let leaf = WeightedLeaf::new(w, decoded);
-                    decode_s += t1.elapsed().as_secs_f64();
-                    Ok((leaf, recon, decode_s))
-                },
+        let down_bytes = round.down_bytes();
+        for (slot, &k) in selected.iter().enumerate() {
+            let up = msgs[slot]
+                .as_ref()
+                .map(|msg| msg.update.wire_bytes)
+                .unwrap_or(0);
+            let timing: ClientTiming = client_timing(
+                &self.cfg.link,
+                self.fleet.profile(k),
+                k,
+                slot,
+                up,
+                down_bytes,
+                reference_compute_s,
+                m,
+                transmitting,
+                dropped[slot],
             );
+            match msgs[slot].take() {
+                Some(msg) => round.submit(ClientUpdate {
+                    payload: msg.update,
+                    n_samples: msg.n_samples,
+                    timing,
+                    exact: msg.exact,
+                    train_s: msg.train_s,
+                }),
+                None => round.mark_dropped(timing),
+            }
         }
-        let mut leaves = Vec::with_capacity(jobs.len());
-        let mut recon_sum = 0.0f64;
-        // Summed per-survivor decode time (the pre-pool semantics: total
-        // server-side work, not overlapped wall time) ...
-        let mut server_time_s = 0.0f64;
-        for res in self.pool.workers().scatter(jobs)? {
-            let (leaf, recon, decode_s) = res?;
-            recon_sum += recon;
-            server_time_s += decode_s;
-            leaves.push(leaf);
-        }
-        let completed = leaves.len();
-        // ... plus the aggregation fold itself.
-        let t_fold = Instant::now();
-        if let Some(root) = reduce_tree(self.pool.workers(), leaves, TREE_FAN_IN)? {
-            self.server.install(finish_tree(root)?)?;
-        }
-        // else: every upload was lost to dropout/policy; the round is
-        // wasted air time and the global model carries over unchanged.
-        server_time_s += t_fold.elapsed().as_secs_f64();
 
-        // ---- stage 6: evaluation ---------------------------------------
+        // ---- resolve + finalize: policy, decode, tree fold, carry ------
+        let resolved = round.resolve(&self.cfg.scenario.policy);
+        let (mut rec, carry) = resolved.finalize(self.pool.workers())?;
+        self.carry = carry;
+
+        // ---- evaluation ------------------------------------------------
         let (accuracy, loss) = if self.cfg.fake_train {
             // Fake training has no engine to score on; the smoke pipeline
             // measures traffic, participation and timing — not learning.
             (0.0, 0.0)
         } else {
             self.trainer
-                .evaluate(&self.server.global.flat, &self.data.test, 0)?
+                .evaluate(self.session.global(), &self.data.test, 0)?
         };
-
-        // Cost accounting (clock layer outputs, exact per-client bytes):
-        // air time covers all alive clients — capped at the makespan,
-        // past which cut transmissions stop.  The broadcast reaches all
-        // m selected.
-        let comm_time_s = timings
-            .iter()
-            .filter(|tm| !tm.dropped)
-            .map(|tm| tm.downlink_s + tm.uplink_s)
-            .fold(0.0, f64::max)
-            .min(outcome.makespan_s);
-
-        Ok(RoundRecord {
-            round: t,
-            accuracy,
-            loss,
-            recon_mse: recon_sum / completed.max(1) as f64,
-            up_bytes,
-            down_bytes: (down_bytes * m) as u64,
-            selected: m,
-            completed,
-            dropped: outcome.dropped,
-            stragglers: outcome.stragglers,
-            makespan_s: outcome.makespan_s,
-            client_time_s: reference_compute_s,
-            server_time_s,
-            comm_time_s,
-            wall_time_s: wall0.elapsed().as_secs_f64(),
-        })
-    }
-}
-
-/// Stage-1 broadcast: the payload every client receives plus the
-/// accounted wire size.
-///
-/// Paper Fig. 3 puts the only decoder at the server, so the broadcast
-/// itself is always exact; `compress_downlink=true` additionally
-/// *accounts* the broadcast at the encoded wire size — the measured
-/// length of the packed wire buffer (`compression/wire.rs`), mirroring
-/// the paper's symmetric Tables I/II.  The returned payload is
-/// therefore the exact global model in both cases.
-pub fn broadcast(
-    compressor: &dyn Compressor,
-    global: &[f32],
-    compress_downlink: bool,
-) -> Result<(Arc<Vec<f32>>, usize)> {
-    let down_bytes = if compress_downlink {
-        let upd = compressor.compress(global, 0)?;
-        WireScratch::new().pack(&upd.payload)?
-    } else {
-        4 * global.len()
-    };
-    Ok((Arc::new(global.to_vec()), down_bytes))
-}
-
-/// What the client puts on the wire (see `ExperimentConfig::encode_deltas`):
-/// the update `Δ = w_local − w_broadcast`, or the raw weights of the
-/// paper's Algorithm 1.
-pub fn encode_payload(params: &[f32], global: &[f32], encode_deltas: bool) -> Vec<f32> {
-    if encode_deltas {
-        params.iter().zip(global).map(|(w, g)| w - g).collect()
-    } else {
-        params.to_vec()
-    }
-}
-
-/// Server-side inverse of [`encode_payload`]: reconstruct `ŵ = g + Δ̂`
-/// in place when delta coding is on.
-pub fn decode_payload(decoded: &mut [f32], global: &[f32], encode_deltas: bool) {
-    if encode_deltas {
-        for (v, g) in decoded.iter_mut().zip(global) {
-            *v += g;
-        }
-    }
-}
-
-fn mse(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    if a.is_empty() {
-        return 0.0;
-    }
-    a.iter()
-        .zip(b)
-        .map(|(x, y)| {
-            let d = (*x - *y) as f64;
-            d * d
-        })
-        .sum::<f64>()
-        / a.len() as f64
-}
-
-/// Construct the configured compression scheme (training HCFL
-/// autoencoders on the server dataset when needed).
-pub fn build_compressor(
-    engine: &Engine,
-    cfg: &ExperimentConfig,
-    data: &FlData,
-    init_params: &[f32],
-) -> Result<Arc<dyn Compressor>> {
-    match cfg.scheme {
-        Scheme::Fedavg => Ok(Arc::new(Identity)),
-        Scheme::Ternary => Ok(Arc::new(TernaryCompressor::new(engine.clone(), 1024)?)),
-        Scheme::TopK { keep } => Ok(Arc::new(TopKCompressor::new(keep)?)),
-        Scheme::Hcfl { ratio } => {
-            let model = engine.manifest().model(&cfg.model)?;
-            let ranges = split_dense(&merge_segment_ranges(&model.layers), cfg.dense_parts);
-            let chunk_of_segment = engine.manifest().chunks.clone();
-            let cache_dir = engine.manifest().dir.join("cache");
-            let mut ae_cfg = cfg.ae.clone();
-            // Match the pre-model's per-client epochs to the run's E so
-            // snapshot delta magnitudes match what will be compressed.
-            ae_cfg.premodel_local_epochs = cfg.local_epochs;
-            let aes = prepare_autoencoders(
-                engine,
-                &cfg.model,
-                &data.server,
-                &ranges,
-                &chunk_of_segment,
-                ratio,
-                &ae_cfg,
-                cfg.use_ae_cache.then_some(cache_dir.as_path()),
-                init_params,
-                cfg.encode_deltas,
-            )?;
-            Ok(Arc::new(HcflCompressor::new(
-                engine.clone(),
-                ratio,
-                ranges,
-                aes,
-                chunk_of_segment,
-            )?))
-        }
+        rec.accuracy = accuracy;
+        rec.loss = loss;
+        rec.wall_time_s = wall0.elapsed().as_secs_f64();
+        Ok(rec)
     }
 }

@@ -27,7 +27,6 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::compression::{CompressedUpdate, Compressor, WireScratch};
-use crate::coordinator::encode_payload;
 use crate::data::FlData;
 use crate::error::{HcflError, Result};
 use crate::fl::{combine_leaves, LocalTrainer, WeightedLeaf};
@@ -316,7 +315,9 @@ impl ClientRunner for TrainEncodeRunner {
             &mut crng,
             ctx.engine_worker,
         )?;
-        let payload = encode_payload(&out.params, &round.global, round.encode_deltas);
+        let payload = self
+            .compressor
+            .encode_payload(&out.params, &round.global, round.encode_deltas);
         let mut update = self.compressor.compress(&payload, ctx.engine_worker)?;
         update.wire_bytes = ctx.scratch.pack(&update.payload)?;
         Ok(ClientMsg {
@@ -362,7 +363,9 @@ impl ClientRunner for FakeTrainRunner {
             .iter()
             .map(|g| g + scale * crng.normal())
             .collect();
-        let payload = encode_payload(&params, &round.global, round.encode_deltas);
+        let payload = self
+            .compressor
+            .encode_payload(&params, &round.global, round.encode_deltas);
         let mut update = self.compressor.compress(&payload, ctx.engine_worker)?;
         update.wire_bytes = ctx.scratch.pack(&update.payload)?;
         Ok(ClientMsg {

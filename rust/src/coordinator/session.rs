@@ -1,0 +1,840 @@
+//! The event-driven round lifecycle: a typed session state machine for
+//! the server side of one communication round, plus the cross-round
+//! carry-over of late (straggler) uploads.
+//!
+//! The old API was one blocking call — a round began, resolved and
+//! aggregated inside `Simulation::run_round` with no seam for an update
+//! to outlive it, so deadline and fastest-m policies discarded every
+//! late upload: at IoT scale that wastes exactly the client compute HCFL
+//! exists to make affordable.  The session turns the round into an
+//! explicit lifecycle any driver can pump — the simulator, the
+//! engine-free `fake_train` path, and a future real transport all share
+//! it:
+//!
+//! ```text
+//! FlSession::begin_round(t, carry)      ──> RoundSession<Open>
+//!   submit(ClientUpdate)*                    (one per arrival)
+//!   mark_dropped(ClientTiming)*              (one per vanished device)
+//!   resolve(&RoundPolicy)               ──> RoundSession<Resolved>
+//!   finalize(&WorkerPool)               ──> (RoundRecord, CarryOver)
+//! ```
+//!
+//! The typestate makes illegal transitions unrepresentable: only an
+//! `Open` session accepts arrivals, only a `Resolved` one can finalize,
+//! and `finalize` consumes the session.  Dropping an unfinalized session
+//! is safe — nothing touches the global model before `finalize`.
+//!
+//! **Carry-over.**  With [`CarryPolicy::CarryDiscounted`], `finalize`
+//! decodes the round's late arrivals instead of discarding them and
+//! returns them in a [`CarryOver`]; the driver hands that to the next
+//! `begin_round`.  A carried update keeps its *rebased* arrival time —
+//! its original modelled arrival minus one round makespan per round it
+//! has been in flight — so the next round's `resolve` treats it like
+//! any other upload: it folds when it lands before the round closes
+//! (`t_max` for `Deadline`, the last fresh survivor for `FastestM`,
+//! always for `Synchronous`) and is carried again otherwise, until
+//! `max_age_rounds` expires it.  When it folds, its weight is
+//!
+//! ```text
+//! w = base_weight × exp(-lambda × age_rounds)
+//! ```
+//!
+//! where `base_weight` is [`AggregatorKind::weight`] evaluated in its
+//! *birth* round against that round's freshness reference (the same
+//! `t0_arrival` rule the streaming and tree folds share), and the
+//! exponential is the cross-round staleness discount.  Carried leaves
+//! enter the reduction tree *before* the fresh survivors, in arrival
+//! order — they reached the server first — so the tree shape and every
+//! per-node summation order stay pure functions of the leaf order and
+//! the fold remains bit-identical for any `client_threads`
+//! (`tests/session_carryover.rs`).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::compression::{
+    CompressedUpdate, Compressor, HcflCompressor, Identity, Scheme, TernaryCompressor,
+    TopKCompressor, WireScratch,
+};
+use crate::config::ExperimentConfig;
+use crate::coordinator::clock::{resolve, ClientTiming, RoundOutcome, RoundPolicy};
+use crate::coordinator::pool::{reduce_tree, WorkerCtx, WorkerPool};
+use crate::data::FlData;
+use crate::error::Result;
+use crate::fl::{
+    finish_tree, AggregatorKind, Server, UpdateMeta, WeightedLeaf, TREE_FAN_IN,
+};
+use crate::hcfl::prepare_autoencoders;
+use crate::metrics::RoundRecord;
+use crate::model::{merge_segment_ranges, split_dense};
+use crate::runtime::Engine;
+use crate::util::stats;
+
+/// What happens to uploads that miss the round policy's cut.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CarryPolicy {
+    /// Late uploads are wasted air time (the pre-session behavior, and
+    /// the paper's implicit rule).
+    Discard,
+    /// Decode late uploads and fold them into the round they finally
+    /// reach, down-weighted by `exp(-lambda * age_rounds)`; updates
+    /// older than `max_age_rounds` rounds expire unfolded.
+    CarryDiscounted { lambda: f64, max_age_rounds: usize },
+}
+
+impl CarryPolicy {
+    /// Whether late uploads survive the round at all.
+    pub fn carries(&self) -> bool {
+        matches!(self, CarryPolicy::CarryDiscounted { .. })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            CarryPolicy::Discard => "discard".to_string(),
+            CarryPolicy::CarryDiscounted {
+                lambda,
+                max_age_rounds,
+            } => format!("carry l={lambda:.2} age<={max_age_rounds}"),
+        }
+    }
+}
+
+/// One arrival at the server: the encoded wire payload plus everything
+/// the clock layer modelled about its journey.
+pub struct ClientUpdate {
+    /// The encoded payload as it came off the wire.
+    pub payload: CompressedUpdate,
+    /// Samples on the sender's shard (FedAvg `n_k`).
+    pub n_samples: usize,
+    /// The sender's modelled round timeline (carries the arrival time
+    /// and the selection-slot tie-break).
+    pub timing: ClientTiming,
+    /// Simulation-only side channel: exact post-training parameters for
+    /// reconstruction-error instrumentation (empty disables).
+    pub exact: Vec<f32>,
+    /// Measured client train+encode wall time, seconds.
+    pub train_s: f64,
+}
+
+/// A decoded-but-late update in flight between rounds.
+#[derive(Debug, Clone)]
+pub struct CarriedUpdate {
+    /// Global client id of the sender.
+    pub client: usize,
+    /// Samples on the sender's shard.
+    pub n_samples: usize,
+    /// Round the update was trained in.
+    pub born_round: usize,
+    /// The birth round's aggregation weight ([`AggregatorKind::weight`]
+    /// against the birth round's freshness reference): what the update
+    /// would have weighed had it made the cut.
+    pub base_weight: f64,
+    /// Arrival time on the *current* round's clock: the original
+    /// modelled arrival minus one round makespan per round already
+    /// missed.
+    pub arrival_s: f64,
+    /// Decoded (and delta-reconstructed) parameters, ready to weight.
+    pub decoded: Vec<f32>,
+}
+
+/// Late updates that outlive their round.  `finalize` returns it, the
+/// driver hands it to the next `begin_round` — the explicit flow is the
+/// transport seam: a real deployment persists this between rounds.
+#[derive(Debug, Clone, Default)]
+pub struct CarryOver {
+    /// In arrival order: re-carried (oldest first), then newly late.
+    pub updates: Vec<CarriedUpdate>,
+}
+
+impl CarryOver {
+    /// The empty carry-over every run starts from.
+    pub fn empty() -> CarryOver {
+        CarryOver::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.updates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.updates.is_empty()
+    }
+}
+
+/// The server side of a multi-round FL run: owns the global model and
+/// the round-lifecycle state machine.  One `FlSession` outlives every
+/// round; each round is a [`RoundSession`] borrowed from it.
+pub struct FlSession {
+    server: Server,
+    compressor: Arc<dyn Compressor>,
+    aggregator: AggregatorKind,
+    carry: CarryPolicy,
+    encode_deltas: bool,
+    compress_downlink: bool,
+}
+
+impl FlSession {
+    pub fn new(
+        server: Server,
+        compressor: Arc<dyn Compressor>,
+        aggregator: AggregatorKind,
+        carry: CarryPolicy,
+        encode_deltas: bool,
+        compress_downlink: bool,
+    ) -> FlSession {
+        FlSession {
+            server,
+            compressor,
+            aggregator,
+            carry,
+            encode_deltas,
+            compress_downlink,
+        }
+    }
+
+    /// Current global model.
+    pub fn global(&self) -> &[f32] {
+        &self.server.global.flat
+    }
+
+    /// Model dimensionality.
+    pub fn d(&self) -> usize {
+        self.server.model.d
+    }
+
+    pub fn compressor(&self) -> &Arc<dyn Compressor> {
+        &self.compressor
+    }
+
+    pub fn carry_policy(&self) -> &CarryPolicy {
+        &self.carry
+    }
+
+    /// Re-sync the scenario knobs a driver may tune between rounds.
+    /// The codebase's calibration idiom mutates `Simulation::cfg` after
+    /// construction (a probe round fixes the deadline's time scale);
+    /// `run_round` calls this so the aggregation rule and carry policy
+    /// stay as live as the round policy.
+    pub fn set_scenario(&mut self, aggregator: AggregatorKind, carry: CarryPolicy) {
+        self.aggregator = aggregator;
+        self.carry = carry;
+    }
+
+    /// Open round `t`: broadcast the global model (accounted per the
+    /// downlink rule, see `ExperimentConfig::compress_downlink`) and
+    /// ingest the previous round's carry-over, expiring updates older
+    /// than the carry policy allows.
+    pub fn begin_round(&mut self, t: usize, carry: CarryOver) -> Result<RoundSession<'_, Open>> {
+        let wall0 = Instant::now();
+        let down_bytes = if self.compress_downlink {
+            let upd = self.compressor.compress(&self.server.global.flat, 0)?;
+            WireScratch::new().pack(&upd.payload)?
+        } else {
+            4 * self.server.global.flat.len()
+        };
+        let global = Arc::new(self.server.global.flat.clone());
+        let mut carried = Vec::with_capacity(carry.updates.len());
+        let mut expired = 0usize;
+        for u in carry.updates {
+            let keep = match &self.carry {
+                CarryPolicy::Discard => false,
+                CarryPolicy::CarryDiscounted { max_age_rounds, .. } => {
+                    t.saturating_sub(u.born_round) <= *max_age_rounds
+                }
+            };
+            if keep {
+                carried.push(u);
+            } else {
+                expired += 1;
+            }
+        }
+        Ok(RoundSession {
+            fl: self,
+            t,
+            wall0,
+            state: Open {
+                global,
+                down_bytes,
+                carried,
+                expired,
+                timings: Vec::new(),
+                arrivals: Vec::new(),
+                train_s: Vec::new(),
+            },
+        })
+    }
+}
+
+/// The payload half of a submitted arrival (timing lives in `timings`).
+struct ArrivalData {
+    payload: CompressedUpdate,
+    n_samples: usize,
+    exact: Vec<f32>,
+}
+
+/// State of a round that is accepting arrivals.
+pub struct Open {
+    global: Arc<Vec<f32>>,
+    down_bytes: usize,
+    carried: Vec<CarriedUpdate>,
+    expired: usize,
+    timings: Vec<ClientTiming>,
+    /// Parallel to `timings`; `None` marks a dropped device.
+    arrivals: Vec<Option<ArrivalData>>,
+    train_s: Vec<f64>,
+}
+
+/// State of a round whose policy has split arrivals into survivors and
+/// late uploads.
+pub struct Resolved {
+    global: Arc<Vec<f32>>,
+    down_bytes: usize,
+    fold_carried: Vec<CarriedUpdate>,
+    carry_again: Vec<CarriedUpdate>,
+    expired: usize,
+    timings: Vec<ClientTiming>,
+    arrivals: Vec<Option<ArrivalData>>,
+    train_s: Vec<f64>,
+    outcome: RoundOutcome,
+    makespan_s: f64,
+}
+
+/// One round of the session state machine; `S` is [`Open`] or
+/// [`Resolved`].
+pub struct RoundSession<'s, S> {
+    fl: &'s mut FlSession,
+    t: usize,
+    wall0: Instant,
+    state: S,
+}
+
+impl<S> RoundSession<'_, S> {
+    /// The round number this session was opened for.
+    pub fn round(&self) -> usize {
+        self.t
+    }
+}
+
+impl<'s> RoundSession<'s, Open> {
+    /// The broadcast payload every selected client starts from (always
+    /// the exact global model — paper Fig. 3 puts the only decoder at
+    /// the server).
+    pub fn global(&self) -> &Arc<Vec<f32>> {
+        &self.state.global
+    }
+
+    /// Accounted per-client broadcast wire size.
+    pub fn down_bytes(&self) -> usize {
+        self.state.down_bytes
+    }
+
+    /// Carried updates from previous rounds still in flight (after
+    /// expiry).
+    pub fn carried_pending(&self) -> usize {
+        self.state.carried.len()
+    }
+
+    /// Carried updates expired unfolded at `begin_round`.
+    pub fn expired(&self) -> usize {
+        self.state.expired
+    }
+
+    /// Record one upload reaching the server.  Submission order does not
+    /// matter: `resolve` orders arrivals by modelled arrival time with
+    /// the selection-slot tie-break.
+    pub fn submit(&mut self, u: ClientUpdate) {
+        debug_assert!(!u.timing.dropped, "a dropped device cannot submit");
+        self.state.train_s.push(u.train_s);
+        self.state.timings.push(u.timing);
+        self.state.arrivals.push(Some(ArrivalData {
+            payload: u.payload,
+            n_samples: u.n_samples,
+            exact: u.exact,
+        }));
+    }
+
+    /// Record a selected device that vanished this round: nothing
+    /// arrives, but the round still accounts its broadcast and — under
+    /// `Deadline` — waits out the full `t_max` for it.
+    pub fn mark_dropped(&mut self, timing: ClientTiming) {
+        debug_assert!(timing.dropped, "mark_dropped needs a dropped timing");
+        self.state.timings.push(timing);
+        self.state.arrivals.push(None);
+    }
+
+    /// Apply the round policy: split fresh arrivals into survivors and
+    /// late, and the carried updates into fold-now and carry-again.
+    pub fn resolve(self, policy: &RoundPolicy) -> RoundSession<'s, Resolved> {
+        let Open {
+            global,
+            down_bytes,
+            carried,
+            expired,
+            timings,
+            arrivals,
+            train_s,
+        } = self.state;
+        let outcome = resolve(policy, &timings);
+
+        // When the round closes for a carried upload: the deadline is
+        // absolute, fastest-m closes at its last fresh survivor, and a
+        // synchronous server waits for everything it knows is in flight.
+        // A fastest-m round with no fresh survivors cannot close at its
+        // m-th arrival — the in-flight carried uploads are the only
+        // arrivals, so the server waits for them (otherwise they would
+        // rebase by a zero makespan and age out without ever getting a
+        // chance to fold).
+        let close = match policy {
+            RoundPolicy::Synchronous => f64::INFINITY,
+            RoundPolicy::Deadline { t_max_s } => *t_max_s,
+            RoundPolicy::FastestM { .. } if outcome.survivors.is_empty() => f64::INFINITY,
+            RoundPolicy::FastestM { .. } => outcome.makespan_s,
+        };
+        let mut fold_carried = Vec::new();
+        let mut carry_again = Vec::new();
+        for u in carried {
+            if u.arrival_s <= close {
+                fold_carried.push(u);
+            } else {
+                carry_again.push(u);
+            }
+        }
+        // A folded carried upload can land after the last fresh
+        // survivor; the round cannot close before it does.
+        let mut makespan_s = outcome.makespan_s;
+        for u in &fold_carried {
+            makespan_s = makespan_s.max(u.arrival_s);
+        }
+        // An in-flight carried upload is indistinguishable from a
+        // straggler: a deadline round waits out the full t_max for it.
+        if let RoundPolicy::Deadline { t_max_s } = policy {
+            if !carry_again.is_empty() {
+                makespan_s = *t_max_s;
+            }
+        }
+        // Rebase what stays in flight onto the next round's clock.
+        for u in &mut carry_again {
+            u.arrival_s -= makespan_s;
+        }
+
+        RoundSession {
+            fl: self.fl,
+            t: self.t,
+            wall0: self.wall0,
+            state: Resolved {
+                global,
+                down_bytes,
+                fold_carried,
+                carry_again,
+                expired,
+                timings,
+                arrivals,
+                train_s,
+                outcome,
+                makespan_s,
+            },
+        }
+    }
+}
+
+impl RoundSession<'_, Resolved> {
+    /// What the policy decided (survivor/late index sets, counts).
+    pub fn outcome(&self) -> &RoundOutcome {
+        &self.state.outcome
+    }
+
+    /// Global client ids of the policy's survivors, in arrival order.
+    pub fn survivor_clients(&self) -> Vec<usize> {
+        self.state
+            .outcome
+            .survivors
+            .iter()
+            .map(|&i| self.state.timings[i].client)
+            .collect()
+    }
+
+    /// Global client ids of the alive-but-cut uploads, in arrival order.
+    pub fn late_clients(&self) -> Vec<usize> {
+        self.state
+            .outcome
+            .late
+            .iter()
+            .map(|&i| self.state.timings[i].client)
+            .collect()
+    }
+
+    /// Carried updates that fold into this round's tree.
+    pub fn carried_in(&self) -> usize {
+        self.state.fold_carried.len()
+    }
+
+    /// Carried updates expired unfolded at `begin_round`.
+    pub fn expired(&self) -> usize {
+        self.state.expired
+    }
+
+    /// Decode survivors in parallel on the pool, fold carried leaves and
+    /// fresh survivors through the fixed-fan-in reduction tree, install
+    /// the aggregated model, and hand back the round record plus the
+    /// carry-over for the next round.
+    pub fn finalize(self, pool: &WorkerPool) -> Result<(RoundRecord, CarryOver)> {
+        let Resolved {
+            global,
+            down_bytes,
+            fold_carried,
+            mut carry_again,
+            expired,
+            timings,
+            mut arrivals,
+            train_s,
+            outcome,
+            makespan_s,
+        } = self.state;
+        let fl = self.fl;
+        let t = self.t;
+        let d = fl.server.model.d;
+        let m = timings.len();
+
+        // Uplink accounting covers every transmitting client: cut and
+        // carried uploads hit the air whether or not they fold here.
+        let up_bytes: u64 = arrivals
+            .iter()
+            .flatten()
+            .map(|a| a.payload.wire_bytes as u64)
+            .sum();
+        let reference_compute_s = stats::mean(&train_s);
+        // The freshness reference: the first surviving arrival, as
+        // before the session.  When the policy cuts *everyone*, the
+        // survivors' fold never reads it, but the late-decode path
+        // still freezes base weights against it — use the earliest
+        // alive arrival so a staleness rule measures lateness relative
+        // to the round's own fastest upload, never the clock origin.
+        let t0_arrival = outcome
+            .survivors
+            .first()
+            .or(outcome.late.first())
+            .map(|&i| timings[i].arrival_s())
+            .unwrap_or(0.0);
+
+        // ---- parallel decode: fresh survivors become weighted leaves --
+        // Only the server's real work (decode + weighting) is timed; the
+        // reconstruction MSE is simulation-only instrumentation and
+        // stays outside the measured server time.
+        let kind = fl.aggregator.clone();
+        let encode_deltas = fl.encode_deltas;
+        let mut jobs = Vec::with_capacity(outcome.survivors.len());
+        for &i in &outcome.survivors {
+            let arr = arrivals[i].take().expect("survivor submitted an update");
+            let meta = UpdateMeta {
+                client: timings[i].client,
+                n_samples: arr.n_samples,
+                arrival_s: timings[i].arrival_s(),
+            };
+            let compressor = Arc::clone(&fl.compressor);
+            let global = Arc::clone(&global);
+            let kind = kind.clone();
+            jobs.push(
+                move |ctx: &mut WorkerCtx| -> Result<(WeightedLeaf, f64, f64)> {
+                    let t0 = Instant::now();
+                    let mut decoded =
+                        compressor.decompress(arr.payload, d, ctx.engine_worker)?;
+                    compressor.decode_payload(&mut decoded, &global, encode_deltas);
+                    let mut decode_s = t0.elapsed().as_secs_f64();
+                    let recon = if arr.exact.is_empty() {
+                        0.0
+                    } else {
+                        mse(&decoded, &arr.exact)
+                    };
+                    let t1 = Instant::now();
+                    let w = kind.weight(&meta, t0_arrival)?;
+                    let leaf = WeightedLeaf::new(w, decoded);
+                    decode_s += t1.elapsed().as_secs_f64();
+                    Ok((leaf, recon, decode_s))
+                },
+            );
+        }
+        let mut fresh = Vec::with_capacity(jobs.len());
+        let mut recon_sum = 0.0f64;
+        // Summed per-survivor decode time: total server-side work, not
+        // overlapped wall time (the pre-pool semantics).
+        let mut server_time_s = 0.0f64;
+        for res in pool.scatter(jobs)? {
+            let (leaf, recon, decode_s) = res?;
+            recon_sum += recon;
+            server_time_s += decode_s;
+            fresh.push(leaf);
+        }
+        let completed = fresh.len();
+
+        // ---- parallel decode: late arrivals become carry-over ---------
+        // Decoded *now*, against this round's broadcast — a late delta
+        // must be reconstructed on the global model its client trained
+        // from.  Its base weight is this round's AggregatorKind::weight,
+        // frozen before the update leaves its birth round.
+        if fl.carry.carries() {
+            let mut jobs = Vec::with_capacity(outcome.late.len());
+            for &i in &outcome.late {
+                let arr = arrivals[i].take().expect("late client submitted an update");
+                let meta = UpdateMeta {
+                    client: timings[i].client,
+                    n_samples: arr.n_samples,
+                    arrival_s: timings[i].arrival_s(),
+                };
+                let rebased_arrival = timings[i].arrival_s() - makespan_s;
+                let compressor = Arc::clone(&fl.compressor);
+                let global = Arc::clone(&global);
+                let kind = kind.clone();
+                jobs.push(move |ctx: &mut WorkerCtx| -> Result<(CarriedUpdate, f64)> {
+                    let t0 = Instant::now();
+                    let mut decoded =
+                        compressor.decompress(arr.payload, d, ctx.engine_worker)?;
+                    compressor.decode_payload(&mut decoded, &global, encode_deltas);
+                    let base_weight = kind.weight(&meta, t0_arrival)?;
+                    let decode_s = t0.elapsed().as_secs_f64();
+                    Ok((
+                        CarriedUpdate {
+                            client: meta.client,
+                            n_samples: meta.n_samples,
+                            born_round: t,
+                            base_weight,
+                            arrival_s: rebased_arrival,
+                            decoded,
+                        },
+                        decode_s,
+                    ))
+                });
+            }
+            for res in pool.scatter(jobs)? {
+                let (carried, decode_s) = res?;
+                server_time_s += decode_s;
+                carry_again.push(carried);
+            }
+        }
+        let carried_out = carry_again.len();
+
+        // ---- reduction tree: carried leaves first, in arrival order ---
+        // The carry discount is sequential f64 arithmetic, so carried
+        // weights — like the tree shape — never depend on the pool size.
+        let lambda = match &fl.carry {
+            CarryPolicy::CarryDiscounted { lambda, .. } => *lambda,
+            CarryPolicy::Discard => 0.0,
+        };
+        let carried_in = fold_carried.len();
+        let mut leaves = Vec::with_capacity(carried_in + fresh.len());
+        for u in fold_carried {
+            let age = t.saturating_sub(u.born_round).max(1);
+            let w = u.base_weight * (-lambda * age as f64).exp();
+            leaves.push(WeightedLeaf::new(w, u.decoded));
+        }
+        leaves.extend(fresh);
+        let t_fold = Instant::now();
+        if let Some(root) = reduce_tree(pool, leaves, TREE_FAN_IN)? {
+            fl.server.install(finish_tree(root)?)?;
+        }
+        // else: every upload was lost to dropout/policy and nothing was
+        // carried in; the round is wasted air time and the global model
+        // carries over unchanged.
+        server_time_s += t_fold.elapsed().as_secs_f64();
+
+        // Cost accounting (clock layer outputs, exact per-client bytes):
+        // air time covers all alive clients — capped at the makespan,
+        // past which cut transmissions stop.  The broadcast reaches all
+        // m selected.
+        let comm_time_s = timings
+            .iter()
+            .filter(|tm| !tm.dropped)
+            .map(|tm| tm.downlink_s + tm.uplink_s)
+            .fold(0.0, f64::max)
+            .min(makespan_s);
+
+        let record = RoundRecord {
+            round: t,
+            // Evaluation is an engine concern; the driver fills these in.
+            accuracy: 0.0,
+            loss: 0.0,
+            recon_mse: recon_sum / completed.max(1) as f64,
+            up_bytes,
+            down_bytes: (down_bytes * m) as u64,
+            selected: m,
+            completed,
+            dropped: outcome.dropped,
+            stragglers: outcome.stragglers,
+            carried_in,
+            carried_out,
+            carried_expired: expired,
+            makespan_s,
+            client_time_s: reference_compute_s,
+            server_time_s,
+            comm_time_s,
+            wall_time_s: self.wall0.elapsed().as_secs_f64(),
+        };
+        Ok((
+            record,
+            CarryOver {
+                updates: carry_again,
+            },
+        ))
+    }
+}
+
+fn mse(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Construct the configured compression scheme (training HCFL
+/// autoencoders on the server dataset when needed).
+pub fn build_compressor(
+    engine: &Engine,
+    cfg: &ExperimentConfig,
+    data: &FlData,
+    init_params: &[f32],
+) -> Result<Arc<dyn Compressor>> {
+    match cfg.scheme {
+        Scheme::Fedavg => Ok(Arc::new(Identity)),
+        Scheme::Ternary => Ok(Arc::new(TernaryCompressor::new(engine.clone(), 1024)?)),
+        Scheme::TopK { keep } => Ok(Arc::new(TopKCompressor::new(keep)?)),
+        Scheme::Hcfl { ratio } => {
+            let model = engine.manifest().model(&cfg.model)?;
+            let ranges = split_dense(&merge_segment_ranges(&model.layers), cfg.dense_parts);
+            let chunk_of_segment = engine.manifest().chunks.clone();
+            let cache_dir = engine.manifest().dir.join("cache");
+            let mut ae_cfg = cfg.ae.clone();
+            // Match the pre-model's per-client epochs to the run's E so
+            // snapshot delta magnitudes match what will be compressed.
+            ae_cfg.premodel_local_epochs = cfg.local_epochs;
+            let aes = prepare_autoencoders(
+                engine,
+                &cfg.model,
+                &data.server,
+                &ranges,
+                &chunk_of_segment,
+                ratio,
+                &ae_cfg,
+                cfg.use_ae_cache.then_some(cache_dir.as_path()),
+                init_params,
+                cfg.encode_deltas,
+            )?;
+            Ok(Arc::new(HcflCompressor::new(
+                engine.clone(),
+                ratio,
+                ranges,
+                aes,
+                chunk_of_segment,
+            )?))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use crate::util::rng::Rng;
+
+    fn session(carry: CarryPolicy) -> FlSession {
+        let model = Manifest::synthetic().model("fake").unwrap().clone();
+        let mut rng = Rng::new(5);
+        let server = Server::new(&model, &mut rng);
+        FlSession::new(
+            server,
+            Arc::new(Identity),
+            AggregatorKind::UniformMean,
+            carry,
+            true,
+            false,
+        )
+    }
+
+    fn carried(born_round: usize, arrival_s: f64) -> CarriedUpdate {
+        CarriedUpdate {
+            client: 7,
+            n_samples: 10,
+            born_round,
+            base_weight: 1.0,
+            arrival_s,
+            decoded: vec![0.0; 4],
+        }
+    }
+
+    #[test]
+    fn begin_round_expires_by_age() {
+        let mut fl = session(CarryPolicy::CarryDiscounted {
+            lambda: 0.5,
+            max_age_rounds: 2,
+        });
+        let carry = CarryOver {
+            updates: vec![carried(1, 0.5), carried(3, 0.5), carried(4, 0.5)],
+        };
+        let round = fl.begin_round(5, carry).unwrap();
+        // ages 4, 2, 1 against max_age 2: the first expires
+        assert_eq!(round.carried_pending(), 2);
+        assert_eq!(round.expired(), 1);
+    }
+
+    #[test]
+    fn discard_policy_drops_any_carry_over() {
+        let mut fl = session(CarryPolicy::Discard);
+        let carry = CarryOver {
+            updates: vec![carried(1, 0.5)],
+        };
+        let round = fl.begin_round(2, carry).unwrap();
+        assert_eq!(round.carried_pending(), 0);
+        assert_eq!(round.expired(), 1);
+    }
+
+    #[test]
+    fn carried_folds_under_every_policy_close_rule() {
+        let mut fl = session(CarryPolicy::CarryDiscounted {
+            lambda: 0.5,
+            max_age_rounds: 3,
+        });
+        // an empty fastest-m round cannot close at its m-th arrival:
+        // the carried upload is the only arrival and folds
+        let round = fl
+            .begin_round(
+                2,
+                CarryOver {
+                    updates: vec![carried(1, 5.0)],
+                },
+            )
+            .unwrap();
+        let resolved = round.resolve(&RoundPolicy::FastestM { m: 3 });
+        assert_eq!(resolved.carried_in(), 1);
+        // a synchronous server waits for everything it knows is in
+        // flight, however late
+        let round = fl
+            .begin_round(
+                3,
+                CarryOver {
+                    updates: vec![carried(2, 123.0)],
+                },
+            )
+            .unwrap();
+        let resolved = round.resolve(&RoundPolicy::Synchronous);
+        assert_eq!(resolved.carried_in(), 1);
+    }
+
+    #[test]
+    fn carry_policy_labels() {
+        assert_eq!(CarryPolicy::Discard.label(), "discard");
+        assert!(!CarryPolicy::Discard.carries());
+        let c = CarryPolicy::CarryDiscounted {
+            lambda: 0.25,
+            max_age_rounds: 3,
+        };
+        assert!(c.carries());
+        assert!(c.label().contains("0.25"));
+        assert!(c.label().contains('3'));
+    }
+}

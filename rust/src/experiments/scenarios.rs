@@ -25,7 +25,7 @@
 use crate::compression::Scheme;
 use crate::config::{ExperimentConfig, ScenarioConfig};
 use crate::coordinator::clock::{calibrated_deadline, RoundPolicy};
-use crate::coordinator::Simulation;
+use crate::coordinator::{CarryPolicy, Simulation};
 use crate::data::Partition;
 use crate::error::Result;
 use crate::experiments::common::{slug, Scale};
@@ -213,6 +213,74 @@ pub fn scenarios(ctx: &ExperimentCtx) -> Result<()> {
     }
     println!("{}", table.render());
 
+    // ---- carry-over arms: scheme × carry on/off under a deadline -------
+    // The session layer's cross-round carry-over: late uploads that a
+    // Deadline round would discard are decoded, staleness-discounted and
+    // folded into the round they finally reach.  Compare against the
+    // discard baseline for both schemes — compression shrinks air time,
+    // carry-over recovers the straggler compute the policy cut.
+    let carry_lambda = args.f64_or("carry-lambda", 0.5)?;
+    let carry_age = args.usize_or("carry-age", 2)?;
+    println!(
+        "Carry-over arms — calibrated deadline over a 30% x{} straggler fleet",
+        knobs.slowdown
+    );
+    let mut ctable = Table::new(&[
+        "Scheme",
+        "Carry",
+        "Final acc",
+        "Participation",
+        "Carried in/out",
+        "Makespan (s)",
+        "Upload (MB)",
+    ]);
+    for scheme in knobs.schemes() {
+        for carry in [
+            CarryPolicy::Discard,
+            CarryPolicy::CarryDiscounted {
+                lambda: carry_lambda,
+                max_age_rounds: carry_age,
+            },
+        ] {
+            let mut cfg = knobs.base_cfg(scheme);
+            cfg.scenario = ScenarioConfig {
+                policy: RoundPolicy::Synchronous,
+                devices: DevicePreset::Stragglers {
+                    frac: 0.3,
+                    slowdown: knobs.slowdown,
+                },
+                carry: carry.clone(),
+                ..ScenarioConfig::default()
+            };
+            let tag = format!(
+                "scenario_carry_{}_{}",
+                slug(&scheme.label()),
+                if carry.carries() { "on" } else { "off" }
+            );
+            let report = run_with_policy(
+                ctx,
+                cfg,
+                knobs.rounds,
+                |t_max_s| RoundPolicy::Deadline { t_max_s },
+                &tag,
+            )?;
+            ctable.row(vec![
+                report.scheme.clone(),
+                carry.label(),
+                format!("{:.4}", report.final_accuracy()),
+                format!("{:.2}", report.mean_participation()),
+                format!(
+                    "{}/{}",
+                    report.total_carried_in(),
+                    report.total_carried_out()
+                ),
+                format!("{:.2}", report.total_makespan()),
+                format!("{:.2}", report.total_up_bytes() as f64 / 1e6),
+            ]);
+        }
+    }
+    println!("{}", ctable.render());
+
     // ---- non-IID arms: partition × scheme × aggregator -----------------
     // Calibrated-deadline rounds over a straggler fleet make the
     // surviving set biased; with label-skewed shards that bias reaches
@@ -258,6 +326,7 @@ pub fn scenarios(ctx: &ExperimentCtx) -> Result<()> {
                         frac: 0.3,
                         slowdown: knobs.slowdown,
                     },
+                    carry: CarryPolicy::Discard,
                 };
                 let tag = format!(
                     "scenario_noniid_{}_{}_{}",

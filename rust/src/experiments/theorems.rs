@@ -4,7 +4,7 @@ use std::collections::BTreeMap;
 
 use crate::config::ExperimentConfig;
 use crate::compression::Scheme;
-use crate::coordinator::build_compressor;
+use crate::coordinator::session::build_compressor;
 use crate::data::synthetic;
 use crate::error::Result;
 use crate::experiments::registry::ExperimentCtx;

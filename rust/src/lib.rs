@@ -42,6 +42,7 @@ pub mod prelude {
     pub use crate::compression::{Compressor, Scheme};
     pub use crate::config::{ExperimentConfig, ScenarioConfig};
     pub use crate::coordinator::clock::RoundPolicy;
+    pub use crate::coordinator::session::{CarryOver, CarryPolicy, FlSession};
     pub use crate::coordinator::Simulation;
     pub use crate::data::Dataset;
     pub use crate::error::HcflError;

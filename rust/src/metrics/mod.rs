@@ -31,6 +31,20 @@ pub struct RoundRecord {
     /// Alive clients cut by the round policy (deadline miss / not in the
     /// fastest m).
     pub stragglers: usize,
+    /// Carried-over updates from earlier rounds folded into this round's
+    /// aggregate (staleness-discounted; see `coordinator::session`).
+    /// Not counted in `completed`, which attributes this round's own
+    /// uploads.
+    pub carried_in: usize,
+    /// Late updates leaving this round for a future one (newly cut plus
+    /// still-in-flight carry-over).
+    pub carried_out: usize,
+    /// Carried updates that exceeded `max_age_rounds` and expired
+    /// unfolded on entry to this round.  Over a run,
+    /// `total_carried_out = total_carried_in + total_carried_expired +
+    /// carry still in flight when the run ends` (the driver's pending
+    /// `CarryOver`, see `Simulation::carry_pending`).
+    pub carried_expired: usize,
     /// Modelled round makespan: the slowest *surviving* client's arrival
     /// (or the full deadline when any selected upload went missing —
     /// see `coordinator::clock::resolve`), seconds.
@@ -107,6 +121,22 @@ impl RunReport {
         self.rounds.iter().map(|r| r.stragglers as u64).sum()
     }
 
+    /// Carried-over updates folded across the whole run.
+    pub fn total_carried_in(&self) -> u64 {
+        self.rounds.iter().map(|r| r.carried_in as u64).sum()
+    }
+
+    /// Late updates that left a round for a future one, summed over
+    /// rounds (an update carried twice counts twice).
+    pub fn total_carried_out(&self) -> u64 {
+        self.rounds.iter().map(|r| r.carried_out as u64).sum()
+    }
+
+    /// Carried updates that aged out unfolded over the whole run.
+    pub fn total_carried_expired(&self) -> u64 {
+        self.rounds.iter().map(|r| r.carried_expired as u64).sum()
+    }
+
     /// Mean fraction of selected clients whose update was aggregated.
     pub fn mean_participation(&self) -> f64 {
         stats::mean(
@@ -149,12 +179,12 @@ impl RunReport {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,accuracy,loss,recon_mse,up_bytes,down_bytes,selected,completed,dropped,stragglers,makespan_s,client_time_s,server_time_s,comm_time_s,wall_time_s"
+            "round,accuracy,loss,recon_mse,up_bytes,down_bytes,selected,completed,dropped,stragglers,carried_in,carried_out,carried_expired,makespan_s,client_time_s,server_time_s,comm_time_s,wall_time_s"
         )?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{:.6},{:.6},{:.8},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6}",
+                "{},{:.6},{:.6},{:.8},{},{},{},{},{},{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6}",
                 r.round,
                 r.accuracy,
                 r.loss,
@@ -165,6 +195,9 @@ impl RunReport {
                 r.completed,
                 r.dropped,
                 r.stragglers,
+                r.carried_in,
+                r.carried_out,
+                r.carried_expired,
                 r.makespan_s,
                 r.client_time_s,
                 r.server_time_s,
@@ -239,6 +272,9 @@ mod tests {
             completed: 3,
             dropped: 1,
             stragglers: 0,
+            carried_in: 1,
+            carried_out: 2,
+            carried_expired: 1,
             makespan_s: 0.5,
             client_time_s: 0.1,
             server_time_s: 0.01,
@@ -261,6 +297,9 @@ mod tests {
         assert!(rep.accuracy_stddev_tail(2) > 0.0);
         assert_eq!(rep.total_dropped(), 3);
         assert_eq!(rep.total_stragglers(), 0);
+        assert_eq!(rep.total_carried_in(), 3);
+        assert_eq!(rep.total_carried_out(), 6);
+        assert_eq!(rep.total_carried_expired(), 3);
         assert!((rep.mean_participation() - 0.75).abs() < 1e-12);
         assert!((rep.total_makespan() - 1.5).abs() < 1e-12);
     }

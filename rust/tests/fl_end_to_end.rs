@@ -179,6 +179,7 @@ fn deadline_policy_cuts_stragglers_end_to_end() {
             frac: 0.5,
             slowdown: 1000.0,
         },
+        ..ScenarioConfig::default()
     };
     // The fleet is sampled from the run seed; pick one whose 4-device
     // fleet is mixed (some but not all stragglers) so the cut is visible.

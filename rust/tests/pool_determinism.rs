@@ -60,6 +60,7 @@ fn fake_cfg(client_threads: usize) -> ExperimentConfig {
             sigma: 0.5,
             dropout_p: 0.1,
         },
+        ..ScenarioConfig::default()
     };
     cfg
 }

@@ -2,14 +2,18 @@
 //! engine: payload coding, downlink accounting, the device → clock →
 //! aggregation path, and the pre-refactor regression guarantee.
 
+use std::sync::Arc;
+
 use hcfl::compression::{Compressor, Identity, TopKCompressor};
 use hcfl::coordinator::clock::{client_timing, resolve, RoundPolicy};
 use hcfl::coordinator::pool::{reduce_tree, WorkerPool};
-use hcfl::coordinator::{broadcast, decode_payload, encode_payload};
+use hcfl::coordinator::session::{CarryOver, CarryPolicy, FlSession};
 use hcfl::fl::{
-    finish_tree, AggregatorKind, RunningAverage, UpdateMeta, WeightedLeaf, TREE_FAN_IN,
+    finish_tree, AggregatorKind, RunningAverage, Server, UpdateMeta, WeightedLeaf,
+    TREE_FAN_IN,
 };
 use hcfl::network::{DeviceFleet, DevicePreset, LinkModel};
+use hcfl::runtime::Manifest;
 use hcfl::util::rng::Rng;
 
 fn random_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
@@ -26,14 +30,14 @@ fn delta_roundtrip_is_exact_for_identity() {
     let w = random_vec(&mut rng, d, 0.5);
 
     // encode_deltas=true: the wire carries Δ = w − g ...
-    let delta = encode_payload(&w, &g, true);
+    let delta = Identity.encode_payload(&w, &g, true);
     let upd = Identity.compress(&delta, 0).unwrap();
     let mut decoded = Identity.decompress(upd, d, 0).unwrap();
     // ... losslessly: Δ̂ == Δ bit for bit ...
     assert_eq!(decoded, delta);
     // ... and the server reconstructs w = g + Δ̂ exactly up to one f32
     // rounding step per weight (the subtract/re-add pair).
-    decode_payload(&mut decoded, &g, true);
+    Identity.decode_payload(&mut decoded, &g, true);
     let mse: f64 = decoded
         .iter()
         .zip(&w)
@@ -55,11 +59,11 @@ fn raw_payload_roundtrip_is_bitwise_identity() {
     let w = random_vec(&mut rng, d, 0.5);
 
     // encode_deltas=false (Algorithm 1 literally): raw weights travel.
-    let payload = encode_payload(&w, &g, false);
+    let payload = Identity.encode_payload(&w, &g, false);
     assert_eq!(payload, w);
     let upd = Identity.compress(&payload, 0).unwrap();
     let mut decoded = Identity.decompress(upd, d, 0).unwrap();
-    decode_payload(&mut decoded, &g, false);
+    Identity.decode_payload(&mut decoded, &g, false);
     assert_eq!(decoded, w);
 }
 
@@ -67,13 +71,27 @@ fn raw_payload_roundtrip_is_bitwise_identity() {
 
 #[test]
 fn compress_downlink_toggles_wire_size_but_never_the_broadcast() {
-    let mut rng = Rng::new(103);
-    let d = 1000;
-    let g = random_vec(&mut rng, d, 0.2);
-    let topk = TopKCompressor::new(0.1).unwrap();
-
-    let (payload_plain, bytes_plain) = broadcast(&topk, &g, false).unwrap();
-    let (payload_coded, bytes_coded) = broadcast(&topk, &g, true).unwrap();
+    // The broadcast lives behind the session now: begin_round performs
+    // it and exposes the payload + accounted bytes.
+    let model = Manifest::synthetic().model("fake").unwrap().clone();
+    let open = |compress_downlink: bool| -> (Vec<f32>, usize, Vec<f32>) {
+        let server = Server::new(&model, &mut Rng::new(103));
+        let g = server.global.flat.clone();
+        let mut fl = FlSession::new(
+            server,
+            Arc::new(TopKCompressor::new(0.1).unwrap()),
+            AggregatorKind::UniformMean,
+            CarryPolicy::Discard,
+            true,
+            compress_downlink,
+        );
+        let round = fl.begin_round(1, CarryOver::empty()).unwrap();
+        ((**round.global()).clone(), round.down_bytes(), g)
+    };
+    let d = model.d;
+    let (payload_plain, bytes_plain, g) = open(false);
+    let (payload_coded, bytes_coded, g2) = open(true);
+    assert_eq!(g, g2, "same seed, same server init");
 
     // accounting follows the toggle ...
     assert_eq!(bytes_plain, 4 * d);
@@ -84,8 +102,8 @@ fn compress_downlink_toggles_wire_size_but_never_the_broadcast() {
     );
     // ... but the payload clients receive is the exact global either way
     // (paper Fig. 3: the only decoder lives at the server).
-    assert_eq!(*payload_plain, g);
-    assert_eq!(*payload_coded, g);
+    assert_eq!(payload_plain, g);
+    assert_eq!(payload_coded, g);
 }
 
 // ---- acceptance: pre-refactor regression -------------------------------
@@ -209,6 +227,15 @@ fn straggler_fleet_is_cut_by_deadline_and_fastest_m() {
     // every survivor is a reference device
     for &i in &out.survivors {
         assert_eq!(fleet.profile(timings[i].client).compute_mult, 1.0);
+    }
+    // the cut identities survive resolution, and they are exactly the
+    // slow devices (in arrival order)
+    assert_eq!(out.late.len(), n_slow);
+    for &i in &out.late {
+        assert!(fleet.profile(timings[i].client).compute_mult > 1.0);
+    }
+    for w in out.late.windows(2) {
+        assert!(timings[w[0]].arrival_s() <= timings[w[1]].arrival_s());
     }
 
     // fastest-m with m = fast population: same survivor set

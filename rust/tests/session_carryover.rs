@@ -1,0 +1,427 @@
+//! Engine-free tests of the event-driven `RoundSession` lifecycle and
+//! its cross-round straggler carry-over (`coordinator/session.rs`):
+//!
+//! * carry-over results are bit-identical for any pool size — both
+//!   driven directly through the session API with synthetic timings and
+//!   through the full fake-train `Simulation`;
+//! * `CarryDiscounted { max_age_rounds }` expires updates exactly;
+//! * carry off reproduces the pre-refactor `run_round` output on a
+//!   homogeneous synchronous fleet (regression pin: the old staged
+//!   pipeline is reimplemented here from primitives and compared bit
+//!   for bit);
+//! * carried leaves enter the next round's tree first, in arrival
+//!   order, with `base_weight * exp(-lambda * age)` weights.
+
+use std::sync::Arc;
+
+use hcfl::compression::{Compressor, Identity, Scheme, TopKCompressor};
+use hcfl::config::{ExperimentConfig, ScenarioConfig};
+use hcfl::coordinator::clock::{ClientTiming, RoundPolicy};
+use hcfl::coordinator::pool::{
+    reduce_tree, ClientMsg, ClientPool, ClientRunner, FakeTrainRunner, RoundInputs,
+    WorkSpec, WorkerPool,
+};
+use hcfl::coordinator::session::{CarryOver, CarryPolicy, ClientUpdate, FlSession};
+use hcfl::coordinator::{round_seed, Simulation};
+use hcfl::data::synthetic;
+use hcfl::fl::{
+    finish_tree, select_clients, AggregatorKind, Server, WeightedLeaf, TREE_FAN_IN,
+};
+use hcfl::metrics::RoundRecord;
+use hcfl::network::{DeviceFleet, DevicePreset, LinkModel};
+use hcfl::runtime::{Engine, Manifest};
+use hcfl::util::rng::Rng;
+
+const D: usize = 802; // the synthetic manifest's "fake" model
+
+fn mk_session(carry: CarryPolicy) -> FlSession {
+    let model = Manifest::synthetic().model("fake").unwrap().clone();
+    let server = Server::new(&model, &mut Rng::new(11));
+    FlSession::new(
+        server,
+        Arc::new(Identity),
+        AggregatorKind::UniformMean,
+        carry,
+        true,
+        false,
+    )
+}
+
+/// A synthetic arrival: seeded fake-trained params delta-encoded against
+/// the broadcast, landing at exactly `arrival_s` on the round clock.
+fn mk_update(client: usize, slot: usize, arrival_s: f64, global: &[f32], seed: u64) -> ClientUpdate {
+    let mut rng = Rng::new(seed);
+    let params: Vec<f32> = global.iter().map(|g| g + 0.1 * rng.normal()).collect();
+    let delta = Identity.encode_payload(&params, global, true);
+    let payload = Identity.compress(&delta, 0).unwrap();
+    ClientUpdate {
+        payload,
+        n_samples: 50 + client,
+        timing: ClientTiming {
+            client,
+            order: slot,
+            downlink_s: 0.0,
+            compute_s: arrival_s,
+            uplink_s: 0.0,
+            dropped: false,
+        },
+        exact: params,
+        train_s: 0.01,
+    }
+}
+
+/// Drive `rounds` deadline rounds straight through the session API: 7
+/// fast clients plus 3 stragglers whose uploads land after `t_max` and
+/// carry into the next round.  Timings are synthetic, so everything —
+/// survivor sets, carried counts, the folded bits — is deterministic.
+fn run_session(
+    threads: usize,
+    carry: CarryPolicy,
+    rounds: usize,
+    t_max: f64,
+) -> (Vec<f32>, Vec<RoundRecord>) {
+    let mut fl = mk_session(carry);
+    let pool = WorkerPool::new(threads, threads).unwrap();
+    let mut carryover = CarryOver::empty();
+    let mut recs = Vec::new();
+    for t in 1..=rounds {
+        let mut round = fl.begin_round(t, carryover).unwrap();
+        let g = Arc::clone(round.global());
+        for slot in 0..10usize {
+            let arrival = if slot < 7 {
+                0.2 + 0.01 * slot as f64
+            } else {
+                t_max + 0.5 + 0.3 * (slot - 7) as f64
+            };
+            let seed = 0xC0FFEE ^ ((t as u64) << 8) ^ slot as u64;
+            round.submit(mk_update(100 + slot, slot, arrival, &g, seed));
+        }
+        let resolved = round.resolve(&RoundPolicy::Deadline { t_max_s: t_max });
+        assert_eq!(resolved.outcome().late.len(), 3);
+        assert_eq!(resolved.late_clients(), vec![107, 108, 109]);
+        let (rec, co) = resolved.finalize(&pool).unwrap();
+        carryover = co;
+        recs.push(rec);
+    }
+    (fl.global().to_vec(), recs)
+}
+
+#[test]
+fn session_carry_is_bit_identical_across_pool_sizes() {
+    let carry = CarryPolicy::CarryDiscounted {
+        lambda: 0.5,
+        max_age_rounds: 2,
+    };
+    let (g1, r1) = run_session(1, carry.clone(), 3, 2.0);
+    // round 1 generates the carry, rounds 2 and 3 fold it
+    assert_eq!(r1[0].carried_in, 0);
+    assert_eq!(r1[0].carried_out, 3);
+    assert_eq!(r1[1].carried_in, 3);
+    assert_eq!(r1[1].carried_out, 3);
+    assert_eq!(r1[2].carried_in, 3);
+    for threads in [4usize, 16] {
+        let (g, r) = run_session(threads, carry.clone(), 3, 2.0);
+        assert_eq!(g1, g, "global diverged at {threads} pool threads");
+        for (a, b) in r1.iter().zip(&r) {
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.carried_in, b.carried_in);
+            assert_eq!(a.carried_out, b.carried_out);
+            assert_eq!(a.up_bytes, b.up_bytes);
+            assert_eq!(a.recon_mse, b.recon_mse);
+            assert_eq!(a.makespan_s, b.makespan_s);
+        }
+    }
+    // carrying actually changes the model relative to discarding
+    let (g_off, r_off) = run_session(1, CarryPolicy::Discard, 3, 2.0);
+    assert_ne!(g1, g_off);
+    assert!(r_off.iter().all(|r| r.carried_in == 0 && r.carried_out == 0));
+}
+
+#[test]
+fn carried_leaves_fold_first_with_discounted_weights() {
+    // Replay the session's aggregation by hand: round 1 folds the 7
+    // fast arrivals; round 2 folds the 3 carried leaves FIRST (arrival
+    // order, weight exp(-lambda * 1), decoded against round 1's
+    // broadcast) and then the 7 fresh survivors at weight 1.
+    let lambda = 0.5;
+    let carry = CarryPolicy::CarryDiscounted {
+        lambda,
+        max_age_rounds: 2,
+    };
+    let t_max = 2.0;
+    let (g2, _) = run_session(1, carry, 2, t_max);
+
+    let pool = WorkerPool::new(3, 3).unwrap();
+    let g0 = {
+        let model = Manifest::synthetic().model("fake").unwrap().clone();
+        Server::new(&model, &mut Rng::new(11)).global.flat
+    };
+    let decode = |slot: usize, t: u64, global: &[f32]| -> Vec<f32> {
+        let seed = 0xC0FFEE ^ (t << 8) ^ slot as u64;
+        let mut rng = Rng::new(seed);
+        let params: Vec<f32> = global.iter().map(|g| g + 0.1 * rng.normal()).collect();
+        let mut dec = Identity.encode_payload(&params, global, true);
+        Identity.decode_payload(&mut dec, global, true);
+        dec
+    };
+    // round 1: uniform mean of the 7 fast arrivals
+    let leaves: Vec<WeightedLeaf> = (0..7)
+        .map(|slot| WeightedLeaf::new(1.0, decode(slot, 1, &g0)))
+        .collect();
+    let g1 = finish_tree(reduce_tree(&pool, leaves, TREE_FAN_IN).unwrap().unwrap()).unwrap();
+    // round 2: carried leaves (slots 7..10 of round 1, decoded against
+    // g0) first, then the fresh survivors (decoded against g1)
+    let w_carried = (-lambda * 1.0).exp(); // base_weight 1.0, age 1
+    let mut leaves: Vec<WeightedLeaf> = (7..10)
+        .map(|slot| WeightedLeaf::new(w_carried, decode(slot, 1, &g0)))
+        .collect();
+    leaves.extend((0..7).map(|slot| WeightedLeaf::new(1.0, decode(slot, 2, &g1))));
+    let expected =
+        finish_tree(reduce_tree(&pool, leaves, TREE_FAN_IN).unwrap().unwrap()).unwrap();
+    assert_eq!(expected, g2, "carry weight rule or leaf order drifted");
+}
+
+#[test]
+fn max_age_expires_updates_exactly() {
+    // One upload late by several deadlines: its rebased arrival loses
+    // one makespan (= t_max, the round waits it out) per round, so it
+    // can only fold in round 4 at age 3.  max_age_rounds = 3 folds it
+    // there; max_age_rounds = 2 expires it at begin_round(4).
+    let t_max = 1.0;
+    let run = |max_age: usize| -> Vec<RoundRecord> {
+        let mut fl = mk_session(CarryPolicy::CarryDiscounted {
+            lambda: 0.1,
+            max_age_rounds: max_age,
+        });
+        let pool = WorkerPool::new(2, 2).unwrap();
+        let mut carryover = CarryOver::empty();
+        let mut recs = Vec::new();
+        for t in 1..=4usize {
+            let mut round = fl.begin_round(t, carryover).unwrap();
+            let g = Arc::clone(round.global());
+            round.submit(mk_update(0, 0, 0.1, &g, 7 ^ (t as u64) << 3));
+            if t == 1 {
+                // arrives 3.2 deadlines after its own broadcast:
+                // rebased 2.2 -> 1.2 -> 0.2, foldable in round 4
+                round.submit(mk_update(1, 1, 3.2 * t_max, &g, 99));
+            }
+            let resolved = round.resolve(&RoundPolicy::Deadline { t_max_s: t_max });
+            let (rec, co) = resolved.finalize(&pool).unwrap();
+            // an in-flight carried upload keeps the deadline round open
+            // the full t_max
+            if rec.carried_out > 0 {
+                assert_eq!(rec.makespan_s, t_max);
+            }
+            carryover = co;
+            recs.push(rec);
+        }
+        recs
+    };
+
+    let kept = run(3);
+    assert_eq!(
+        kept.iter().map(|r| r.carried_out).collect::<Vec<_>>(),
+        vec![1, 1, 1, 0]
+    );
+    assert_eq!(
+        kept.iter().map(|r| r.carried_in).collect::<Vec<_>>(),
+        vec![0, 0, 0, 1],
+        "a 3-round-late upload must fold exactly in round 4"
+    );
+    assert!(kept.iter().all(|r| r.carried_expired == 0));
+
+    let expired = run(2);
+    assert_eq!(
+        expired.iter().map(|r| r.carried_out).collect::<Vec<_>>(),
+        vec![1, 1, 1, 0]
+    );
+    assert_eq!(
+        expired.iter().map(|r| r.carried_in).collect::<Vec<_>>(),
+        vec![0, 0, 0, 0],
+        "age 3 > max_age_rounds 2 must expire unfolded"
+    );
+    assert_eq!(
+        expired.iter().map(|r| r.carried_expired).collect::<Vec<_>>(),
+        vec![0, 0, 0, 1],
+        "the expiry must land exactly on entry to round 4"
+    );
+}
+
+fn fake_cfg(scheme: Scheme, rounds: usize, client_threads: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::mnist(scheme, rounds);
+    cfg.model = "fake".into();
+    cfg.fake_train = true;
+    cfg.n_clients = 24;
+    cfg.data.n_clients = 24;
+    cfg.participation = 1.0;
+    cfg.batch = 16;
+    cfg.data.per_client = 64;
+    cfg.data.test_n = 64;
+    cfg.data.server_n = 16;
+    cfg.client_threads = client_threads;
+    cfg
+}
+
+/// The acceptance criterion end to end: a fake-train `Simulation` under
+/// a deadline with 8x stragglers and carry on is bit-identical for any
+/// `client_threads`.  The deadline and the fold boundary are placed
+/// hundreds of milliseconds from any modelled arrival, so measured
+/// compute noise (microseconds) cannot flip a survivor set.
+#[test]
+fn simulation_carry_is_bit_identical_across_pool_sizes() {
+    let preset = DevicePreset::Stragglers {
+        frac: 0.25,
+        slowdown: 8.0,
+    };
+    // a seed whose 24-device fleet is mixed
+    let seed = (42..64)
+        .find(|&s| {
+            let n = DeviceFleet::sample(24, &preset, s).n_slow();
+            (2..=8).contains(&n)
+        })
+        .expect("some seed yields a mixed fleet");
+    let n_slow = DeviceFleet::sample(24, &preset, seed).n_slow();
+
+    // FedAvg wire size is content-independent: every upload is 4*d
+    // bytes, so the modelled air times below are exact.
+    let link = LinkModel::default();
+    let up = link.uplink_time(4 * D, 24);
+    let down = link.downlink_time(4 * D, 24);
+    // fast arrival ~ down + up + eps; slow ~ down + 8*up + 8*eps: the
+    // deadline sits ~4 uplink-times above fast, ~3 below slow, and the
+    // carried rebased arrival (slow - t_max) refolds with ~150 ms margin.
+    let t_max = down + 5.0 * up;
+
+    let run = |threads: usize| -> (Vec<f32>, Vec<RoundRecord>) {
+        let engine = Engine::with_manifest(Manifest::synthetic(), 2).unwrap();
+        let mut cfg = fake_cfg(Scheme::Fedavg, 4, threads);
+        cfg.seed = seed;
+        cfg.scenario = ScenarioConfig {
+            policy: RoundPolicy::Deadline { t_max_s: t_max },
+            devices: preset.clone(),
+            carry: CarryPolicy::CarryDiscounted {
+                lambda: 0.5,
+                max_age_rounds: 2,
+            },
+            ..ScenarioConfig::default()
+        };
+        let mut sim = Simulation::new(&engine, cfg).unwrap();
+        let report = sim.run().unwrap();
+        (sim.global().to_vec(), report.rounds)
+    };
+
+    let (g1, r1) = run(1);
+    // stragglers are cut every round and fold one round later
+    assert_eq!(r1[0].stragglers, n_slow);
+    assert_eq!(r1[0].carried_in, 0);
+    assert_eq!(r1[0].carried_out, n_slow);
+    for r in &r1[1..] {
+        assert_eq!(r.stragglers, n_slow);
+        assert_eq!(r.carried_in, n_slow, "round {}", r.round);
+        assert_eq!(r.carried_out, n_slow);
+        assert_eq!(r.completed, 24 - n_slow);
+    }
+    for threads in [4usize, 16] {
+        let (g, r) = run(threads);
+        assert_eq!(g1, g, "global diverged at client_threads={threads}");
+        for (a, b) in r1.iter().zip(&r) {
+            assert_eq!(a.up_bytes, b.up_bytes);
+            assert_eq!(a.completed, b.completed);
+            assert_eq!(a.carried_in, b.carried_in);
+            assert_eq!(a.carried_out, b.carried_out);
+            assert_eq!(a.recon_mse, b.recon_mse);
+            assert_eq!(a.makespan_s, b.makespan_s);
+        }
+    }
+}
+
+/// Regression pin: with carry off, the session-driven `run_round` must
+/// reproduce the pre-refactor staged pipeline bit for bit on a
+/// homogeneous synchronous fleet.  The old pipeline — select, fake
+/// train on the pool, uniform-weight leaves in selection order, the
+/// fixed-fan-in tree — is reimplemented here from primitives.
+#[test]
+fn carry_off_matches_prerefactor_round_output() {
+    let engine = Engine::with_manifest(Manifest::synthetic(), 2).unwrap();
+    let cfg = fake_cfg(Scheme::TopK { keep: 0.2 }, 3, 3);
+    let mut sim = Simulation::new(&engine, cfg.clone()).unwrap();
+    let report = sim.run().unwrap();
+    for r in &report.rounds {
+        assert_eq!(r.completed, r.selected);
+        assert_eq!(r.stragglers, 0);
+        assert_eq!(r.carried_in, 0);
+        assert_eq!(r.carried_out, 0);
+    }
+
+    // The pre-refactor reference, from primitives.
+    let mut data_spec = cfg.data.clone();
+    data_spec.n_clients = cfg.n_clients;
+    let data = Arc::new(synthetic(&data_spec, cfg.seed));
+    let model = engine.manifest().model("fake").unwrap().clone();
+    let mut rng = Rng::new(cfg.seed);
+    let server = Server::new(&model, &mut rng); // same init stream
+    let mut global = server.global.flat.clone();
+    let compressor: Arc<dyn Compressor> = Arc::new(TopKCompressor::new(0.2).unwrap());
+    let runner: Arc<dyn ClientRunner> = Arc::new(FakeTrainRunner::new(
+        Arc::clone(&compressor),
+        Arc::clone(&data),
+    ));
+    let pool = ClientPool::new(runner, 5, 2).unwrap();
+    for t in 1..=cfg.rounds {
+        let selected = select_clients(cfg.n_clients, cfg.participation, &mut rng);
+        let seed = round_seed(cfg.seed, t);
+        let specs: Vec<WorkSpec> = selected
+            .iter()
+            .enumerate()
+            .map(|(slot, &k)| WorkSpec {
+                slot,
+                client: k,
+                seed: seed ^ ((k as u64) << 1),
+            })
+            .collect();
+        let inputs = RoundInputs {
+            global: Arc::new(global.clone()),
+            epochs: cfg.local_epochs,
+            batch: cfg.batch,
+            lr: cfg.lr,
+            encode_deltas: cfg.encode_deltas,
+        };
+        let mut msgs: Vec<Option<ClientMsg>> = Vec::new();
+        msgs.resize_with(selected.len(), || None);
+        for msg in pool.run_clients(inputs, &specs).unwrap() {
+            let slot = msg.slot;
+            msgs[slot] = Some(msg);
+        }
+        // homogeneous synchronous round: everyone survives, equal
+        // arrivals tie on the selection slot — selection order
+        let mut leaves = Vec::with_capacity(selected.len());
+        for slot_msg in &mut msgs {
+            let msg = slot_msg.take().unwrap();
+            let mut dec = compressor
+                .decompress(msg.update, model.d, 0)
+                .unwrap();
+            compressor.decode_payload(&mut dec, &global, cfg.encode_deltas);
+            leaves.push(WeightedLeaf::new(1.0, dec));
+        }
+        let root = reduce_tree(pool.workers(), leaves, TREE_FAN_IN)
+            .unwrap()
+            .unwrap();
+        global = finish_tree(root).unwrap();
+    }
+    assert_eq!(
+        global,
+        sim.global(),
+        "carry-off session output drifted from the pre-refactor pipeline"
+    );
+
+    // and carry ON is a no-op when nothing is ever late
+    let mut cfg_on = cfg;
+    cfg_on.scenario.carry = CarryPolicy::CarryDiscounted {
+        lambda: 0.5,
+        max_age_rounds: 2,
+    };
+    let mut sim_on = Simulation::new(&engine, cfg_on).unwrap();
+    sim_on.run().unwrap();
+    assert_eq!(sim.global(), sim_on.global());
+    assert_eq!(sim_on.carry_pending(), 0);
+}
