@@ -1,0 +1,122 @@
+//! CI bench-regression gate: compare a fresh `BENCH_round.json` against
+//! the committed `BENCH_baseline.json` and fail on meaningful
+//! throughput regressions.
+//!
+//!   bench_check <baseline.json> <fresh.json> [--tolerance 0.25]
+//!
+//! Baseline entries with a numeric `throughput_per_s` are enforced: the
+//! fresh run must reach at least `(1 - tolerance)` of the recorded
+//! throughput (default tolerance 25%, generous enough for shared CI
+//! runners).  Entries whose baseline throughput is `null` are
+//! record-only — they pin the case *names* so renames/disappearances
+//! are caught, but carry no number to regress against (the bootstrap
+//! state: refresh with `cargo bench --bench round` on a quiet machine,
+//! then `cp BENCH_round.json BENCH_baseline.json` and commit).
+//!
+//! Exit codes: 0 ok, 1 regression/missing case, 2 usage or unreadable
+//! input.
+
+use std::process::exit;
+
+use hcfl::util::json::Value;
+
+/// `(name, throughput_per_s)` rows of a bench report.
+fn load(path: &str) -> Result<Vec<(String, Option<f64>)>, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let v = Value::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let results = v
+        .get("results")
+        .and_then(|r| r.as_arr().map(<[Value]>::to_vec))
+        .map_err(|e| format!("{path}: {e}"))?;
+    let mut rows = Vec::with_capacity(results.len());
+    for r in &results {
+        let name = r
+            .get("name")
+            .and_then(|n| n.as_str().map(str::to_string))
+            .map_err(|e| format!("{path}: {e}"))?;
+        let tput = match r.get("throughput_per_s") {
+            Ok(Value::Null) | Err(_) => None,
+            Ok(t) => Some(t.as_f64().map_err(|e| format!("{path}: {name}: {e}"))?),
+        };
+        rows.push((name, tput));
+    }
+    Ok(rows)
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths = Vec::new();
+    let mut tolerance = 0.25f64;
+    let mut i = 0;
+    while i < argv.len() {
+        if argv[i] == "--tolerance" {
+            let Some(t) = argv.get(i + 1).and_then(|s| s.parse::<f64>().ok()) else {
+                eprintln!("--tolerance needs a number in (0, 1)");
+                exit(2);
+            };
+            tolerance = t;
+            i += 2;
+        } else {
+            paths.push(argv[i].clone());
+            i += 1;
+        }
+    }
+    if paths.len() != 2 || !(0.0..1.0).contains(&tolerance) {
+        eprintln!("usage: bench_check <baseline.json> <fresh.json> [--tolerance 0.25]");
+        exit(2);
+    }
+    let baseline = match load(&paths[0]) {
+        Ok(rows) => rows,
+        Err(e) => {
+            eprintln!("cannot read baseline: {e}");
+            eprintln!("bootstrap: cargo bench --bench round && cp BENCH_round.json BENCH_baseline.json");
+            exit(2);
+        }
+    };
+    let fresh = match load(&paths[1]) {
+        Ok(rows) => rows,
+        Err(e) => {
+            eprintln!("cannot read fresh report: {e}");
+            exit(2);
+        }
+    };
+
+    let mut failures = 0usize;
+    let mut enforced = 0usize;
+    for (name, base_tput) in &baseline {
+        let Some((_, fresh_tput)) = fresh.iter().find(|(n, _)| n == name) else {
+            eprintln!("FAIL {name}: case missing from the fresh report");
+            failures += 1;
+            continue;
+        };
+        let Some(base) = base_tput else {
+            println!("  ok {name}: record-only baseline (no throughput pinned)");
+            continue;
+        };
+        enforced += 1;
+        let Some(now) = fresh_tput else {
+            eprintln!("FAIL {name}: baseline has {base:.0}/s but the fresh run reports none");
+            failures += 1;
+            continue;
+        };
+        let floor = base * (1.0 - tolerance);
+        if *now < floor {
+            eprintln!(
+                "FAIL {name}: {now:.0}/s is {:.1}% below the {base:.0}/s baseline \
+                 (tolerance {:.0}%)",
+                100.0 * (1.0 - now / base),
+                100.0 * tolerance
+            );
+            failures += 1;
+        } else {
+            println!("  ok {name}: {now:.0}/s vs baseline {base:.0}/s");
+        }
+    }
+    println!(
+        "bench_check: {} baseline cases, {enforced} enforced, {failures} failures",
+        baseline.len()
+    );
+    if failures > 0 {
+        exit(1);
+    }
+}

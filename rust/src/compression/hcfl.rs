@@ -28,9 +28,10 @@
 
 use std::sync::Arc;
 
-use crate::compression::wire::{HcflWireLayout, RangeLayout};
+use crate::compression::wire::{self, HcflWireLayout, RangeLayout};
 use crate::compression::{
     plan_batches, ChunkCode, CompressedUpdate, Compressor, Payload, RangeCodes, Scheme,
+    WireScratch,
 };
 use crate::error::{HcflError, Result};
 use crate::model::{chunk_count, extract_chunk, write_chunk, SegmentRange};
@@ -314,6 +315,42 @@ impl HcflCompressor {
         write_chunk(dst, i, w_hat);
         Ok(())
     }
+
+    /// Decode structured chunk codes into a pre-sized flat slice —
+    /// the shared body of [`Compressor::decompress`] and
+    /// [`Compressor::unpack_into`].
+    fn decode_codes(
+        &self,
+        codes: Vec<RangeCodes>,
+        flat: &mut [f32],
+        worker: usize,
+    ) -> Result<()> {
+        for rc in codes {
+            let range = self.ranges.get(rc.range_idx).ok_or_else(|| {
+                HcflError::Config(format!("bad range index {}", rc.range_idx))
+            })?;
+            let chunk = self.chunk_size(&range.segment);
+            let ae = &self.aes[&chunk];
+            let dst = &mut flat[range.offset..range.offset + range.len];
+            let n = rc.chunks.len();
+            let sizes: Vec<usize> = ae.meta.decode_batch.keys().copied().collect();
+            let plan = plan_batches(n, &sizes);
+            let mut iter = rc.chunks.into_iter();
+            let mut i = 0usize;
+            for batch in plan {
+                if batch == 1 {
+                    let cc = iter.next().expect("plan covers the chunk count");
+                    self.decode_single(worker, ae, cc, dst, i)?;
+                } else {
+                    let group: Vec<ChunkCode> = iter.by_ref().take(batch).collect();
+                    let exec = &ae.meta.decode_batch[&batch];
+                    self.decode_batched(worker, ae, exec, &group, dst, i, chunk)?;
+                }
+                i += batch;
+            }
+        }
+        Ok(())
+    }
 }
 
 impl Compressor for HcflCompressor {
@@ -370,31 +407,26 @@ impl Compressor for HcflCompressor {
             }
         };
         let mut flat = vec![0.0f32; d];
-        for rc in codes {
-            let range = self.ranges.get(rc.range_idx).ok_or_else(|| {
-                HcflError::Config(format!("bad range index {}", rc.range_idx))
-            })?;
-            let chunk = self.chunk_size(&range.segment);
-            let ae = &self.aes[&chunk];
-            let dst = &mut flat[range.offset..range.offset + range.len];
-            let n = rc.chunks.len();
-            let sizes: Vec<usize> = ae.meta.decode_batch.keys().copied().collect();
-            let plan = plan_batches(n, &sizes);
-            let mut iter = rc.chunks.into_iter();
-            let mut i = 0usize;
-            for batch in plan {
-                if batch == 1 {
-                    let cc = iter.next().expect("plan covers the chunk count");
-                    self.decode_single(worker, ae, cc, dst, i)?;
-                } else {
-                    let group: Vec<ChunkCode> = iter.by_ref().take(batch).collect();
-                    let exec = &ae.meta.decode_batch[&batch];
-                    self.decode_batched(worker, ae, exec, &group, dst, i, chunk)?;
-                }
-                i += batch;
-            }
-        }
+        self.decode_codes(codes, &mut flat, worker)?;
         Ok(flat)
+    }
+
+    fn unpack_into(
+        &self,
+        bytes: &[u8],
+        d: usize,
+        worker: usize,
+        _scratch: &mut WireScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        // The AE decode executables need the structured per-chunk codes,
+        // so this path still parses a `Vec<RangeCodes>` — but the
+        // reconstruction is written straight into the caller's leaf
+        // buffer with no intermediate flat vector.
+        let codes = wire::unpack_hcfl(bytes, &self.wire_layout())?;
+        out.clear();
+        out.resize(d, 0.0);
+        self.decode_codes(codes, out, worker)
     }
 }
 

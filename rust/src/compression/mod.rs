@@ -13,6 +13,7 @@
 //! reproduce the paper's communication-cost tables.
 
 pub mod hcfl;
+pub mod simd;
 pub mod ternary;
 pub mod topk;
 pub mod wire;
@@ -20,7 +21,7 @@ pub mod wire;
 pub use hcfl::HcflCompressor;
 pub use ternary::TernaryCompressor;
 pub use topk::TopKCompressor;
-pub use wire::WireScratch;
+pub use wire::{WireScratch, WireUpdate};
 
 use crate::error::Result;
 
@@ -116,6 +117,22 @@ pub trait Compressor: Send + Sync {
     fn decompress(&self, upd: CompressedUpdate, d: usize, worker: usize)
         -> Result<Vec<f32>>;
 
+    /// Server side, zero-copy: decode a packed wire buffer (the bytes a
+    /// [`WireScratch::pack_update`] produced) straight into `out`
+    /// (resized to `d`) without materializing the structured
+    /// [`Payload`].  Bit-identical to `unpack → decompress`; `scratch`
+    /// supplies reusable internal buffers (e.g. the sparse index
+    /// stream).  This is the round pipeline's decode path; the
+    /// structured [`Compressor::decompress`] remains the reference.
+    fn unpack_into(
+        &self,
+        bytes: &[u8],
+        d: usize,
+        worker: usize,
+        scratch: &mut WireScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
+
     /// What the client puts on the wire (see
     /// `ExperimentConfig::encode_deltas`): the update
     /// `Δ = w_local − w_broadcast`, or the raw weights of the paper's
@@ -200,6 +217,17 @@ impl Compressor for Identity {
                 "identity decompress got non-raw payload".into(),
             )),
         }
+    }
+
+    fn unpack_into(
+        &self,
+        bytes: &[u8],
+        d: usize,
+        _worker: usize,
+        _scratch: &mut WireScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        wire::unpack_raw_into(bytes, d, out)
     }
 }
 

@@ -1,0 +1,728 @@
+//! Runtime-dispatched SIMD kernels for the wire hot path.
+//!
+//! Every packed-wire transform that runs once per client per round — the
+//! 2-bit ternary symbol pack/unpack, f32-LE bulk moves, the delta-varint
+//! index stream, and the weighted-leaf `axpy`/scale arithmetic of the
+//! reduction tree — lives here behind one seam:
+//!
+//! * **Scalar** — portable Rust, the mandatory fallback and the bit-exact
+//!   reference (exposed as [`scalar`] so tests and benches can pin the
+//!   vector paths against it).
+//! * **SSE2** — x86-64 baseline (always present on that target), used
+//!   where 128-bit lanes pay: symbol packing, the fold arithmetic,
+//!   varint widening.
+//! * **AVX2** — runtime-detected via `is_x86_feature_detected!`; the
+//!   ternary kernels process 32 symbols per iteration (16 symbols per
+//!   32-bit load on the unpack side) and the fold arithmetic 8 floats.
+//!
+//! The dispatch level is resolved **once per process** ([`level`]) and
+//! honours `HCFL_FORCE_SCALAR=1`, which pins every kernel to the scalar
+//! reference (CI runs one leg this way so both paths stay tested).
+//!
+//! **Bit-identity contract.** For any input, every vector kernel returns
+//! the exact bytes/bits of its scalar twin — the vector code uses the
+//! same single IEEE operation per element (one multiply, one add, one
+//! f64-widened multiply/divide), so no summation order or rounding step
+//! differs.  `tests/simd_kernels.rs` pins this property on randomized
+//! lengths including every remainder tail.
+
+use std::sync::OnceLock;
+
+use crate::error::{HcflError, Result};
+
+/// Which kernel tier [`level`] resolved to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// Portable Rust reference (also forced by `HCFL_FORCE_SCALAR=1`).
+    Scalar,
+    /// 128-bit kernels; the x86-64 baseline.
+    Sse2,
+    /// 256-bit kernels (runtime-detected).
+    Avx2,
+}
+
+impl Level {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Sse2 => "sse2",
+            Level::Avx2 => "avx2",
+        }
+    }
+}
+
+fn detect() -> Level {
+    let force = std::env::var("HCFL_FORCE_SCALAR").ok();
+    if force.as_deref().is_some_and(|v| !v.is_empty() && v != "0") {
+        return Level::Scalar;
+    }
+    detect_arch()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> Level {
+    if std::is_x86_feature_detected!("avx2") {
+        Level::Avx2
+    } else {
+        // SSE2 is part of the x86-64 baseline: no runtime check needed.
+        Level::Sse2
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_arch() -> Level {
+    Level::Scalar
+}
+
+/// The process-wide kernel tier, resolved on first use.
+pub fn level() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(detect)
+}
+
+fn bad_symbol(q: i8) -> HcflError {
+    HcflError::Config(format!("ternary value {q} is not in {{-1, 0, 1}}"))
+}
+
+fn bad_code() -> HcflError {
+    HcflError::Config("ternary wire buffer has an invalid 0b11 symbol".into())
+}
+
+// ---------------------------------------------------------------------------
+// Public dispatched API
+// ---------------------------------------------------------------------------
+
+/// Pack ternary symbols (`{-1, 0, +1}` as i8) two bits each, four per
+/// byte, LSB first (`0b00` = 0, `0b01` = +1, `0b10` = −1), appending
+/// `ceil(q.len()/4)` bytes to `out`; a final partial byte is
+/// zero-padded.  Errors on any symbol outside the alphabet.
+pub fn pack_2bit(q: &[i8], out: &mut Vec<u8>) -> Result<()> {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::pack_2bit(q, out) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { sse2::pack_2bit(q, out) },
+        _ => scalar::pack_2bit(q, out),
+    }
+}
+
+/// Unpack the first `n` 2-bit symbols of `packed` and write the
+/// dequantized values `q·alpha` into `out[..n]`.  Needs
+/// `packed.len() >= ceil(n/4)`; errors on any `0b11` symbol among the
+/// first `n`.  Padding bits past `n` are the caller's concern.
+pub fn unpack_2bit_f32(packed: &[u8], n: usize, alpha: f32, out: &mut [f32]) -> Result<()> {
+    debug_assert!(out.len() >= n && packed.len() >= n.div_ceil(4));
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::unpack_2bit_f32(packed, n, alpha, out) },
+        _ => scalar::unpack_2bit_f32(packed, n, alpha, out),
+    }
+}
+
+/// Append `values` as little-endian f32s (a bulk byte move on LE hosts).
+pub fn pack_f32_le(values: &[f32], out: &mut Vec<u8>) {
+    #[cfg(target_endian = "little")]
+    {
+        // An f32 slice reinterpreted as bytes IS its LE wire image.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(values.as_ptr() as *const u8, 4 * values.len())
+        };
+        out.extend_from_slice(bytes);
+    }
+    #[cfg(not(target_endian = "little"))]
+    scalar::pack_f32_le(values, out);
+}
+
+/// Decode `4·out.len()` little-endian bytes into `out` (a bulk byte
+/// move on LE hosts).
+pub fn unpack_f32_le(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), 4 * out.len());
+    #[cfg(target_endian = "little")]
+    unsafe {
+        std::ptr::copy_nonoverlapping(
+            bytes.as_ptr(),
+            out.as_mut_ptr() as *mut u8,
+            bytes.len(),
+        );
+    }
+    #[cfg(not(target_endian = "little"))]
+    scalar::unpack_f32_le(bytes, out);
+}
+
+/// Decode exactly `out.len()` LEB128 varints from `bytes` starting at
+/// `*pos`, advancing `*pos`.  Rejects truncated buffers, encodings that
+/// overflow `u32`, and non-canonical (overlong) encodings — see
+/// [`read_varint`].  The vector tiers batch runs of single-byte varints
+/// (the common case for dense Top-K index gaps) eight at a time.
+pub fn decode_varints(bytes: &[u8], pos: &mut usize, out: &mut [u32]) -> Result<()> {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::decode_varints(bytes, pos, out) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { sse2::decode_varints(bytes, pos, out) },
+        _ => scalar::decode_varints(bytes, pos, out),
+    }
+}
+
+/// One hardened LEB128 read: errors on a truncated buffer, on a 5-byte
+/// encoding whose final byte carries bits past `u32` (`> 0x0F`), on any
+/// continuation past 5 bytes, and on overlong encodings (a multi-byte
+/// varint whose final byte is `0x00` encodes its value non-minimally —
+/// a forgery vector, never produced by our packer).
+pub fn read_varint(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+    let mut v = 0u32;
+    let mut shift = 0u32;
+    loop {
+        let byte = *bytes
+            .get(*pos)
+            .ok_or_else(|| HcflError::Config("sparse wire buffer truncated".into()))?;
+        *pos += 1;
+        let payload = (byte & 0x7F) as u32;
+        if shift == 28 && (payload > 0x0F || byte & 0x80 != 0) {
+            return Err(HcflError::Config("sparse varint overflows u32".into()));
+        }
+        if shift > 0 && payload == 0 && byte & 0x80 == 0 {
+            return Err(HcflError::Config(
+                "sparse varint is overlong (non-canonical encoding)".into(),
+            ));
+        }
+        v |= payload << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Elementwise `acc[i] += x[i]` (the reduction-tree node fold).
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::add_assign(acc, x) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { sse2::add_assign(acc, x) },
+        _ => scalar::add_assign(acc, x),
+    }
+}
+
+/// Elementwise `x[i] = (x[i] as f64 * w) as f32` — the leaf weighting,
+/// widened to f64 and rounded once per element exactly like the scalar
+/// reference.
+pub fn scale_f64(x: &mut [f32], w: f64) {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::scale_f64(x, w) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { sse2::scale_f64(x, w) },
+        _ => scalar::scale_f64(x, w),
+    }
+}
+
+/// Elementwise `x[i] = (x[i] as f64 / w) as f32` — the root
+/// normalization of the reduction tree.
+pub fn div_f64(x: &mut [f32], w: f64) {
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::div_f64(x, w) },
+        #[cfg(target_arch = "x86_64")]
+        Level::Sse2 => unsafe { sse2::div_f64(x, w) },
+        _ => scalar::div_f64(x, w),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference kernels
+// ---------------------------------------------------------------------------
+
+/// Portable reference implementations: the mandatory fallback tier and
+/// the bit-exact oracle the vector kernels are pinned against.
+pub mod scalar {
+    use super::*;
+
+    pub fn pack_2bit(q: &[i8], out: &mut Vec<u8>) -> Result<()> {
+        let mut byte = 0u8;
+        let mut filled = 0u32;
+        for &v in q {
+            let bits: u8 = match v {
+                0 => 0b00,
+                1 => 0b01,
+                -1 => 0b10,
+                other => return Err(bad_symbol(other)),
+            };
+            byte |= bits << (2 * filled);
+            filled += 1;
+            if filled == 4 {
+                out.push(byte);
+                byte = 0;
+                filled = 0;
+            }
+        }
+        if filled > 0 {
+            out.push(byte);
+        }
+        Ok(())
+    }
+
+    pub fn unpack_2bit_f32(
+        packed: &[u8],
+        n: usize,
+        alpha: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        unpack_2bit_f32_from(packed, 0, n, alpha, out)
+    }
+
+    /// Tail helper shared with the vector kernels: decode symbols
+    /// `[start, n)`.
+    pub(super) fn unpack_2bit_f32_from(
+        packed: &[u8],
+        start: usize,
+        n: usize,
+        alpha: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        for i in start..n {
+            let bits = (packed[i / 4] >> (2 * (i % 4))) & 0b11;
+            let q: f32 = match bits {
+                0b00 => 0.0,
+                0b01 => 1.0,
+                0b10 => -1.0,
+                _ => return Err(bad_code()),
+            };
+            out[i] = q * alpha;
+        }
+        Ok(())
+    }
+
+    pub fn pack_f32_le(values: &[f32], out: &mut Vec<u8>) {
+        out.reserve(4 * values.len());
+        for v in values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    pub fn unpack_f32_le(bytes: &[u8], out: &mut [f32]) {
+        for (b, o) in bytes.chunks_exact(4).zip(out.iter_mut()) {
+            *o = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        }
+    }
+
+    pub fn decode_varints(bytes: &[u8], pos: &mut usize, out: &mut [u32]) -> Result<()> {
+        for slot in out.iter_mut() {
+            *slot = read_varint(bytes, pos)?;
+        }
+        Ok(())
+    }
+
+    pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+        for (a, v) in acc.iter_mut().zip(x) {
+            *a += v;
+        }
+    }
+
+    pub fn scale_f64(x: &mut [f32], w: f64) {
+        for v in x {
+            *v = (*v as f64 * w) as f32;
+        }
+    }
+
+    pub fn div_f64(x: &mut [f32], w: f64) {
+        for v in x {
+            *v = (*v as f64 / w) as f32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86-64 kernels
+// ---------------------------------------------------------------------------
+
+/// Spread the low 32 bits of `x` so bit `j` lands at bit `2j` (the
+/// classic interleave ladder): packs two symbol-plane masks into the
+/// 2-bit wire layout with two spreads and an OR.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn spread_u32(x: u32) -> u64 {
+    let mut v = x as u64;
+    v = (v | (v << 16)) & 0x0000_FFFF_0000_FFFF;
+    v = (v | (v << 8)) & 0x00FF_00FF_00FF_00FF;
+    v = (v | (v << 4)) & 0x0F0F_0F0F_0F0F_0F0F;
+    v = (v | (v << 2)) & 0x3333_3333_3333_3333;
+    v = (v | (v << 1)) & 0x5555_5555_5555_5555;
+    v
+}
+
+#[cfg(target_arch = "x86_64")]
+mod sse2 {
+    use super::*;
+    use core::arch::x86_64::*;
+
+    /// 16 symbols per iteration: the +1/−1 compare masks become two
+    /// movemask bit-planes, interleaved into 4 packed bytes.
+    pub unsafe fn pack_2bit(q: &[i8], out: &mut Vec<u8>) -> Result<()> {
+        let vec_n = q.len() & !15;
+        out.reserve(q.len().div_ceil(4));
+        let one = _mm_set1_epi8(1);
+        let neg = _mm_set1_epi8(-1);
+        let zero = _mm_setzero_si128();
+        let mut i = 0usize;
+        while i < vec_n {
+            let v = _mm_loadu_si128(q.as_ptr().add(i) as *const __m128i);
+            let m_pos = _mm_cmpeq_epi8(v, one);
+            let m_neg = _mm_cmpeq_epi8(v, neg);
+            let m_zero = _mm_cmpeq_epi8(v, zero);
+            let valid = _mm_or_si128(_mm_or_si128(m_pos, m_neg), m_zero);
+            if _mm_movemask_epi8(valid) != 0xFFFF {
+                // Replay the block through the scalar kernel so the
+                // error identifies the exact offending symbol.
+                return scalar::pack_2bit(&q[i..], out);
+            }
+            let bits0 = _mm_movemask_epi8(m_pos) as u32;
+            let bits1 = _mm_movemask_epi8(m_neg) as u32;
+            let packed = (spread_u32(bits0) | (spread_u32(bits1) << 1)) as u32;
+            out.extend_from_slice(&packed.to_le_bytes());
+            i += 16;
+        }
+        scalar::pack_2bit(&q[vec_n..], out)
+    }
+
+    /// Widen 8 bytes to 8 u32 lanes (the single-byte-varint fast path).
+    #[inline]
+    pub(super) unsafe fn widen_8(bytes: *const u8, out: *mut u32) {
+        let v = _mm_loadl_epi64(bytes as *const __m128i);
+        let zero = _mm_setzero_si128();
+        let w16 = _mm_unpacklo_epi8(v, zero);
+        let lo = _mm_unpacklo_epi16(w16, zero);
+        let hi = _mm_unpackhi_epi16(w16, zero);
+        _mm_storeu_si128(out as *mut __m128i, lo);
+        _mm_storeu_si128(out.add(4) as *mut __m128i, hi);
+    }
+
+    pub unsafe fn decode_varints(
+        bytes: &[u8],
+        pos: &mut usize,
+        out: &mut [u32],
+    ) -> Result<()> {
+        let mut i = 0usize;
+        while i + 8 <= out.len() && *pos + 8 <= bytes.len() {
+            let w = u64::from_le_bytes(bytes[*pos..*pos + 8].try_into().unwrap());
+            if w & 0x8080_8080_8080_8080 != 0 {
+                out[i] = read_varint(bytes, pos)?;
+                i += 1;
+                continue;
+            }
+            widen_8(bytes.as_ptr().add(*pos), out.as_mut_ptr().add(i));
+            *pos += 8;
+            i += 8;
+        }
+        scalar::decode_varints(bytes, pos, &mut out[i..])
+    }
+
+    pub unsafe fn add_assign(acc: &mut [f32], x: &[f32]) {
+        let n = acc.len() & !3;
+        let mut i = 0usize;
+        while i < n {
+            let a = _mm_loadu_ps(acc.as_ptr().add(i));
+            let b = _mm_loadu_ps(x.as_ptr().add(i));
+            _mm_storeu_ps(acc.as_mut_ptr().add(i), _mm_add_ps(a, b));
+            i += 4;
+        }
+        scalar::add_assign(&mut acc[n..], &x[n..]);
+    }
+
+    pub unsafe fn scale_f64(x: &mut [f32], w: f64) {
+        let wv = _mm_set1_pd(w);
+        let n = x.len() & !3;
+        let mut i = 0usize;
+        while i < n {
+            let v = _mm_loadu_ps(x.as_ptr().add(i));
+            let lo = _mm_cvtps_pd(v);
+            let hi = _mm_cvtps_pd(_mm_movehl_ps(v, v));
+            let lo = _mm_cvtpd_ps(_mm_mul_pd(lo, wv));
+            let hi = _mm_cvtpd_ps(_mm_mul_pd(hi, wv));
+            _mm_storeu_ps(x.as_mut_ptr().add(i), _mm_movelh_ps(lo, hi));
+            i += 4;
+        }
+        scalar::scale_f64(&mut x[n..], w);
+    }
+
+    pub unsafe fn div_f64(x: &mut [f32], w: f64) {
+        let wv = _mm_set1_pd(w);
+        let n = x.len() & !3;
+        let mut i = 0usize;
+        while i < n {
+            let v = _mm_loadu_ps(x.as_ptr().add(i));
+            let lo = _mm_cvtps_pd(v);
+            let hi = _mm_cvtps_pd(_mm_movehl_ps(v, v));
+            let lo = _mm_cvtpd_ps(_mm_div_pd(lo, wv));
+            let hi = _mm_cvtpd_ps(_mm_div_pd(hi, wv));
+            _mm_storeu_ps(x.as_mut_ptr().add(i), _mm_movelh_ps(lo, hi));
+            i += 4;
+        }
+        scalar::div_f64(&mut x[n..], w);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::*;
+    use core::arch::x86_64::*;
+
+    /// 32 symbols per iteration: two 32-bit movemask planes interleaved
+    /// into 8 packed bytes.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn pack_2bit(q: &[i8], out: &mut Vec<u8>) -> Result<()> {
+        let vec_n = q.len() & !31;
+        out.reserve(q.len().div_ceil(4));
+        let one = _mm256_set1_epi8(1);
+        let neg = _mm256_set1_epi8(-1);
+        let zero = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i < vec_n {
+            let v = _mm256_loadu_si256(q.as_ptr().add(i) as *const __m256i);
+            let m_pos = _mm256_cmpeq_epi8(v, one);
+            let m_neg = _mm256_cmpeq_epi8(v, neg);
+            let m_zero = _mm256_cmpeq_epi8(v, zero);
+            let valid = _mm256_or_si256(_mm256_or_si256(m_pos, m_neg), m_zero);
+            if _mm256_movemask_epi8(valid) != -1i32 {
+                return scalar::pack_2bit(&q[i..], out);
+            }
+            let bits0 = _mm256_movemask_epi8(m_pos) as u32;
+            let bits1 = _mm256_movemask_epi8(m_neg) as u32;
+            let packed = spread_u32(bits0) | (spread_u32(bits1) << 1);
+            out.extend_from_slice(&packed.to_le_bytes());
+            i += 32;
+        }
+        scalar::pack_2bit(&q[vec_n..], out)
+    }
+
+    /// 16 symbols per 32-bit load: broadcast the word, variable-shift
+    /// each lane to its 2-bit field, map `0b01→+1, 0b10→−1, 0b00→0`
+    /// arithmetically and multiply by the chunk scale.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack_2bit_f32(
+        packed: &[u8],
+        n: usize,
+        alpha: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let sh_lo = _mm256_setr_epi32(0, 2, 4, 6, 8, 10, 12, 14);
+        let sh_hi = _mm256_setr_epi32(16, 18, 20, 22, 24, 26, 28, 30);
+        let three = _mm256_set1_epi32(3);
+        let one = _mm256_set1_epi32(1);
+        let av = _mm256_set1_ps(alpha);
+        let vec_n = n & !15;
+        let mut bad = 0i32;
+        let mut i = 0usize;
+        while i < vec_n {
+            let w = u32::from_le_bytes(packed[i / 4..i / 4 + 4].try_into().unwrap());
+            let v = _mm256_set1_epi32(w as i32);
+            for (sh, off) in [(sh_lo, 0usize), (sh_hi, 8usize)] {
+                let code = _mm256_and_si256(_mm256_srlv_epi32(v, sh), three);
+                bad |= _mm256_movemask_epi8(_mm256_cmpeq_epi32(code, three));
+                let plus = _mm256_cvtepi32_ps(_mm256_and_si256(code, one));
+                let minus = _mm256_cvtepi32_ps(_mm256_srli_epi32(code, 1));
+                let f = _mm256_mul_ps(_mm256_sub_ps(plus, minus), av);
+                _mm256_storeu_ps(out.as_mut_ptr().add(i + off), f);
+            }
+            i += 16;
+        }
+        if bad != 0 {
+            return Err(bad_code());
+        }
+        scalar::unpack_2bit_f32_from(packed, vec_n, n, alpha, out)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn decode_varints(
+        bytes: &[u8],
+        pos: &mut usize,
+        out: &mut [u32],
+    ) -> Result<()> {
+        let mut i = 0usize;
+        while i + 8 <= out.len() && *pos + 8 <= bytes.len() {
+            let w = u64::from_le_bytes(bytes[*pos..*pos + 8].try_into().unwrap());
+            if w & 0x8080_8080_8080_8080 != 0 {
+                out[i] = read_varint(bytes, pos)?;
+                i += 1;
+                continue;
+            }
+            let v = _mm_loadl_epi64(bytes.as_ptr().add(*pos) as *const __m128i);
+            let x = _mm256_cvtepu8_epi32(v);
+            _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, x);
+            *pos += 8;
+            i += 8;
+        }
+        scalar::decode_varints(bytes, pos, &mut out[i..])
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign(acc: &mut [f32], x: &[f32]) {
+        let n = acc.len() & !7;
+        let mut i = 0usize;
+        while i < n {
+            let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+            let b = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(a, b));
+            i += 8;
+        }
+        scalar::add_assign(&mut acc[n..], &x[n..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_f64(x: &mut [f32], w: f64) {
+        let wv = _mm256_set1_pd(w);
+        let n = x.len() & !7;
+        let mut i = 0usize;
+        while i < n {
+            let lo = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(i)));
+            let hi = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(i + 4)));
+            let lo = _mm256_cvtpd_ps(_mm256_mul_pd(lo, wv));
+            let hi = _mm256_cvtpd_ps(_mm256_mul_pd(hi, wv));
+            _mm_storeu_ps(x.as_mut_ptr().add(i), lo);
+            _mm_storeu_ps(x.as_mut_ptr().add(i + 4), hi);
+            i += 8;
+        }
+        scalar::scale_f64(&mut x[n..], w);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn div_f64(x: &mut [f32], w: f64) {
+        let wv = _mm256_set1_pd(w);
+        let n = x.len() & !7;
+        let mut i = 0usize;
+        while i < n {
+            let lo = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(i)));
+            let hi = _mm256_cvtps_pd(_mm_loadu_ps(x.as_ptr().add(i + 4)));
+            let lo = _mm256_cvtpd_ps(_mm256_div_pd(lo, wv));
+            let hi = _mm256_cvtpd_ps(_mm256_div_pd(hi, wv));
+            _mm_storeu_ps(x.as_mut_ptr().add(i), lo);
+            _mm_storeu_ps(x.as_mut_ptr().add(i + 4), hi);
+            i += 8;
+        }
+        scalar::div_f64(&mut x[n..], w);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_q(rng: &mut Rng, n: usize) -> Vec<i8> {
+        (0..n)
+            .map(|_| match rng.below(3) {
+                0 => 0i8,
+                1 => 1,
+                _ => -1,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dispatch_level_is_stable() {
+        assert_eq!(level(), level());
+        // the label round-trips for every tier
+        for l in [Level::Scalar, Level::Sse2, Level::Avx2] {
+            assert!(!l.label().is_empty());
+        }
+    }
+
+    #[test]
+    fn pack_matches_scalar_reference() {
+        let mut rng = Rng::new(3);
+        for n in [0usize, 1, 3, 4, 15, 16, 17, 31, 32, 33, 63, 64, 1024, 1027] {
+            let q = random_q(&mut rng, n);
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            pack_2bit(&q, &mut a).unwrap();
+            scalar::pack_2bit(&q, &mut b).unwrap();
+            assert_eq!(a, b, "n={n}");
+            assert_eq!(a.len(), n.div_ceil(4));
+        }
+    }
+
+    #[test]
+    fn pack_rejects_invalid_symbols_on_every_tier() {
+        for n in [1usize, 16, 33, 64] {
+            let mut q = vec![0i8; n];
+            *q.last_mut().unwrap() = 2;
+            let mut out = Vec::new();
+            assert!(pack_2bit(&q, &mut out).is_err(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn unpack_roundtrips_and_rejects_0b11() {
+        let mut rng = Rng::new(4);
+        for n in [1usize, 7, 15, 16, 17, 48, 63, 64, 2048, 2051] {
+            let q = random_q(&mut rng, n);
+            let mut packed = Vec::new();
+            pack_2bit(&q, &mut packed).unwrap();
+            let alpha = 0.375f32;
+            let mut out = vec![f32::NAN; n];
+            unpack_2bit_f32(&packed, n, alpha, &mut out).unwrap();
+            for (o, &sym) in out.iter().zip(&q) {
+                assert_eq!(o.to_bits(), (sym as f32 * alpha).to_bits());
+            }
+            // corrupt one symbol to 0b11
+            let mut broken = packed.clone();
+            broken[0] |= 0b11;
+            assert!(unpack_2bit_f32(&broken, n, alpha, &mut out).is_err());
+        }
+    }
+
+    #[test]
+    fn varint_hardening() {
+        // max u32
+        let max = [0xFF, 0xFF, 0xFF, 0xFF, 0x0F];
+        let mut pos = 0;
+        assert_eq!(read_varint(&max, &mut pos).unwrap(), u32::MAX);
+        assert_eq!(pos, 5);
+        // truncated
+        let mut pos = 0;
+        assert!(read_varint(&[0x80], &mut pos).is_err());
+        // 5-byte overflow (bits past u32)
+        let mut pos = 0;
+        assert!(read_varint(&[0xFF, 0xFF, 0xFF, 0xFF, 0x10], &mut pos).is_err());
+        // 6-byte continuation
+        let mut pos = 0;
+        assert!(read_varint(&[0xFF, 0xFF, 0xFF, 0xFF, 0x8F, 0x00], &mut pos).is_err());
+        // overlong zero
+        let mut pos = 0;
+        assert!(read_varint(&[0x80, 0x00], &mut pos).is_err());
+        // canonical single zero is fine
+        let mut pos = 0;
+        assert_eq!(read_varint(&[0x00], &mut pos).unwrap(), 0);
+    }
+
+    #[test]
+    fn fold_kernels_match_scalar_bits() {
+        let mut rng = Rng::new(5);
+        for n in [0usize, 1, 3, 4, 7, 8, 9, 31, 32, 33, 1000] {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            let mut a = x.clone();
+            let mut b = x.clone();
+            add_assign(&mut a, &y);
+            scalar::add_assign(&mut b, &y);
+            assert_eq!(bits(&a), bits(&b), "add n={n}");
+            let w = 0.123456789f64;
+            let mut a = x.clone();
+            let mut b = x.clone();
+            scale_f64(&mut a, w);
+            scalar::scale_f64(&mut b, w);
+            assert_eq!(bits(&a), bits(&b), "scale n={n}");
+            let mut a = x.clone();
+            let mut b = x;
+            div_f64(&mut a, w);
+            scalar::div_f64(&mut b, w);
+            assert_eq!(bits(&a), bits(&b), "div n={n}");
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+}

@@ -16,7 +16,8 @@
 use std::collections::BTreeMap;
 
 use crate::compression::{
-    plan_batches, CompressedUpdate, Compressor, Payload, Scheme, TernaryChunk,
+    plan_batches, wire, CompressedUpdate, Compressor, Payload, Scheme, TernaryChunk,
+    WireScratch,
 };
 use crate::error::{HcflError, Result};
 use crate::runtime::Engine;
@@ -183,6 +184,17 @@ impl Compressor for TernaryCompressor {
             }
         };
         Self::decode_chunks(chunks, d)
+    }
+
+    fn unpack_into(
+        &self,
+        bytes: &[u8],
+        d: usize,
+        _worker: usize,
+        _scratch: &mut WireScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        wire::unpack_ternary_into(bytes, d, self.chunk, out)
     }
 }
 

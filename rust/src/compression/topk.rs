@@ -7,7 +7,9 @@
 //! ~3.3x wire reduction.  Pure Rust — no kernel needed, the hot loop is a
 //! partial selection.
 
-use crate::compression::{CompressedUpdate, Compressor, Payload, Scheme};
+use crate::compression::{
+    wire, CompressedUpdate, Compressor, Payload, Scheme, WireScratch,
+};
 use crate::error::{HcflError, Result};
 
 /// Keep the `keep` fraction of weights with largest magnitude.
@@ -79,6 +81,17 @@ impl Compressor for TopKCompressor {
                 "topk decompress got wrong payload".into(),
             )),
         }
+    }
+
+    fn unpack_into(
+        &self,
+        bytes: &[u8],
+        d: usize,
+        _worker: usize,
+        scratch: &mut WireScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        wire::unpack_sparse_into_scratch(bytes, d, scratch, out)
     }
 }
 

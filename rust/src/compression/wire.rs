@@ -22,26 +22,70 @@
 //!   packed size *beats* its old `8·k` formula — delta varints make the
 //!   index stream sublinear for dense keeps.
 //!
+//! The hot loops dispatch to [`super::simd`]: symbol packing, 2-bit
+//! dequantization, varint batches, and f32 bulk moves all run on the
+//! widest kernel tier the host supports, with the scalar reference as
+//! the mandatory fallback — outputs are bit-identical by contract.
+//!
 //! Packing is allocation-free in steady state: callers thread a
-//! [`WireScratch`] (one per pool worker, see `coordinator/pool.rs`)
-//! whose internal buffer is reused across rounds.  Unpacking needs the
-//! receiver's static knowledge of the layout — the model geometry the
-//! server already owns — via [`HcflWireLayout`] / the `(d, chunk)` pair,
-//! mirroring how a real deployment would parse a headerless payload.
+//! [`WireScratch`] (one per pool worker, see `coordinator/pool.rs`).
+//! Beyond the legacy single pack buffer, the scratch is a small arena —
+//! it recycles owned wire buffers ([`WireScratch::pack_update`] /
+//! [`WireScratch::put_bytes`]) and decoded leaf vectors
+//! ([`WireScratch::take_f32`] / [`WireScratch::put_f32`]) across
+//! clients and rounds, so the decode → fold path allocates nothing once
+//! warm.  Unpacking needs the receiver's static knowledge of the layout
+//! — the model geometry the server already owns — via
+//! [`HcflWireLayout`] / the `(d, chunk)` pair, mirroring how a real
+//! deployment would parse a headerless payload.
+//!
+//! Each scheme has two decode paths with pinned-equal results: the
+//! structured one (`unpack_raw`/`unpack_ternary`/…, materializing the
+//! [`Payload`]) kept as the reference, and the zero-copy
+//! `unpack_*_into` one that writes dequantized f32s straight into a
+//! caller-provided leaf buffer without intermediate `Vec`s.
 
-use crate::compression::{ChunkCode, Payload, RangeCodes, TernaryChunk};
+use crate::compression::{simd, ChunkCode, Payload, RangeCodes, TernaryChunk};
 use crate::error::{HcflError, Result};
 
-/// A reusable packing buffer.  One lives in each pool worker's context
-/// so steady-state rounds measure wire sizes with zero allocation.
+/// Spare buffers kept per pool (bounds steady-state memory: with d=802
+/// f32 leaves this is ~0.8 MB per worker; larger models pay
+/// proportionally but never more than the cap).
+const POOL_CAP: usize = 256;
+
+/// An update as it travels: the packed wire image, nothing else.  The
+/// sender discards its structured [`Payload`] after packing; the
+/// receiver decodes with `unpack_*_into` straight into a leaf buffer.
+#[derive(Debug, Clone, Default)]
+pub struct WireUpdate {
+    pub bytes: Vec<u8>,
+}
+
+impl WireUpdate {
+    /// Measured wire size — what the clock layer charges the uplink.
+    pub fn wire_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+}
+
+/// A reusable packing buffer and recycle arena.  One lives in each pool
+/// worker's context so steady-state rounds pack, decode and fold with
+/// zero allocation.
 #[derive(Debug, Default)]
 pub struct WireScratch {
     buf: Vec<u8>,
+    bytes_pool: Vec<Vec<u8>>,
+    f32_pool: Vec<Vec<f32>>,
+    u32_buf: Vec<u32>,
 }
 
 impl WireScratch {
     pub fn new() -> WireScratch {
-        WireScratch { buf: Vec::new() }
+        WireScratch::default()
     }
 
     /// Pack `payload` into the internal buffer and return the packed
@@ -55,6 +99,37 @@ impl WireScratch {
     /// The bytes of the most recent [`WireScratch::pack`].
     pub fn bytes(&self) -> &[u8] {
         &self.buf
+    }
+
+    /// Pack `payload` into an owned [`WireUpdate`], reusing a recycled
+    /// buffer when one is pooled.
+    pub fn pack_update(&mut self, payload: &Payload) -> Result<WireUpdate> {
+        let mut bytes = self.bytes_pool.pop().unwrap_or_default();
+        bytes.clear();
+        pack_payload(payload, &mut bytes)?;
+        Ok(WireUpdate { bytes })
+    }
+
+    /// Return a spent wire buffer to the arena (dropped past the cap).
+    pub fn put_bytes(&mut self, mut bytes: Vec<u8>) {
+        if self.bytes_pool.len() < POOL_CAP {
+            bytes.clear();
+            self.bytes_pool.push(bytes);
+        }
+    }
+
+    /// Take a cleared f32 buffer (a pooled one when available) to
+    /// decode a leaf into.
+    pub fn take_f32(&mut self) -> Vec<f32> {
+        self.f32_pool.pop().unwrap_or_default()
+    }
+
+    /// Return a spent leaf buffer to the arena (dropped past the cap).
+    pub fn put_f32(&mut self, mut v: Vec<f32>) {
+        if self.f32_pool.len() < POOL_CAP {
+            v.clear();
+            self.f32_pool.push(v);
+        }
     }
 }
 
@@ -79,13 +154,10 @@ pub fn pack_payload(payload: &Payload, out: &mut Vec<u8>) -> Result<()> {
 // ---------------------------------------------------------------------------
 
 pub fn pack_raw(values: &[f32], out: &mut Vec<u8>) {
-    out.reserve(4 * values.len());
-    for v in values {
-        out.extend_from_slice(&v.to_le_bytes());
-    }
+    simd::pack_f32_le(values, out);
 }
 
-pub fn unpack_raw(bytes: &[u8], d: usize) -> Result<Vec<f32>> {
+fn check_raw_len(bytes: &[u8], d: usize) -> Result<()> {
     if bytes.len() != 4 * d {
         return Err(HcflError::Config(format!(
             "raw wire buffer is {} bytes, expected {}",
@@ -93,10 +165,24 @@ pub fn unpack_raw(bytes: &[u8], d: usize) -> Result<Vec<f32>> {
             4 * d
         )));
     }
-    Ok(bytes
-        .chunks_exact(4)
-        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-        .collect())
+    Ok(())
+}
+
+pub fn unpack_raw(bytes: &[u8], d: usize) -> Result<Vec<f32>> {
+    check_raw_len(bytes, d)?;
+    let mut out = vec![0.0f32; d];
+    simd::unpack_f32_le(bytes, &mut out);
+    Ok(out)
+}
+
+/// Zero-copy raw decode: write the `d` floats into `out` (resized to
+/// `d`) without an intermediate allocation.
+pub fn unpack_raw_into(bytes: &[u8], d: usize, out: &mut Vec<f32>) -> Result<()> {
+    check_raw_len(bytes, d)?;
+    out.clear();
+    out.resize(d, 0.0);
+    simd::unpack_f32_le(bytes, out);
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -132,9 +218,7 @@ impl HcflWireLayout {
 pub fn pack_hcfl(codes: &[RangeCodes], out: &mut Vec<u8>) {
     for rc in codes {
         for cc in &rc.chunks {
-            for v in &cc.code {
-                out.extend_from_slice(&v.to_le_bytes());
-            }
+            simd::pack_f32_le(&cc.code, out);
             out.extend_from_slice(&cc.lo.to_le_bytes());
             out.extend_from_slice(&cc.hi.to_le_bytes());
             out.extend_from_slice(&cc.mu.to_le_bytes());
@@ -152,25 +236,27 @@ pub fn unpack_hcfl(bytes: &[u8], layout: &HcflWireLayout) -> Result<Vec<RangeCod
         )));
     }
     let mut pos = 0usize;
-    let mut read_f32 = |bytes: &[u8]| -> f32 {
+    let mut read_f32 = |pos: &mut usize| -> f32 {
         let v = f32::from_le_bytes([
-            bytes[pos],
-            bytes[pos + 1],
-            bytes[pos + 2],
-            bytes[pos + 3],
+            bytes[*pos],
+            bytes[*pos + 1],
+            bytes[*pos + 2],
+            bytes[*pos + 3],
         ]);
-        pos += 4;
+        *pos += 4;
         v
     };
     let mut out = Vec::with_capacity(layout.ranges.len());
     for r in &layout.ranges {
         let mut chunks = Vec::with_capacity(r.n_chunks);
         for _ in 0..r.n_chunks {
-            let code: Vec<f32> = (0..r.code_len).map(|_| read_f32(bytes)).collect();
-            let lo = read_f32(bytes);
-            let hi = read_f32(bytes);
-            let mu = read_f32(bytes);
-            let sd = read_f32(bytes);
+            let mut code = vec![0.0f32; r.code_len];
+            simd::unpack_f32_le(&bytes[pos..pos + 4 * r.code_len], &mut code);
+            pos += 4 * r.code_len;
+            let lo = read_f32(&mut pos);
+            let hi = read_f32(&mut pos);
+            let mu = read_f32(&mut pos);
+            let sd = read_f32(&mut pos);
             chunks.push(ChunkCode {
                 code,
                 lo,
@@ -195,10 +281,20 @@ pub fn pack_ternary(chunks: &[TernaryChunk], out: &mut Vec<u8>) -> Result<()> {
     for c in chunks {
         out.extend_from_slice(&c.alpha.to_le_bytes());
     }
+    // The symbol stream is bit-continuous across chunks.  A chunk that
+    // starts byte-aligned (always, for the codec's multiple-of-4 chunk
+    // size) goes through the vector kernel; any straggling symbols are
+    // carried bitwise exactly like the original scalar packer.
     let mut byte = 0u8;
     let mut filled = 0u32;
     for c in chunks {
-        for &q in &c.q {
+        let mut rest: &[i8] = &c.q;
+        if filled == 0 {
+            let aligned = rest.len() & !3;
+            simd::pack_2bit(&rest[..aligned], out)?;
+            rest = &rest[aligned..];
+        }
+        for &q in rest {
             let bits: u8 = match q {
                 0 => 0b00,
                 1 => 0b01,
@@ -224,7 +320,7 @@ pub fn pack_ternary(chunks: &[TernaryChunk], out: &mut Vec<u8>) -> Result<()> {
     Ok(())
 }
 
-pub fn unpack_ternary(bytes: &[u8], d: usize, chunk: usize) -> Result<Vec<TernaryChunk>> {
+fn check_ternary_len(bytes: &[u8], d: usize, chunk: usize) -> Result<usize> {
     let n_chunks = d.div_ceil(chunk);
     let expect = 4 * n_chunks + d.div_ceil(4);
     if bytes.len() != expect {
@@ -233,6 +329,24 @@ pub fn unpack_ternary(bytes: &[u8], d: usize, chunk: usize) -> Result<Vec<Ternar
             bytes.len()
         )));
     }
+    Ok(n_chunks)
+}
+
+/// Padding bits past `d` must be zero for the buffer to be canonical.
+fn check_ternary_padding(packed: &[u8], d: usize) -> Result<()> {
+    if d % 4 != 0 {
+        let tail = packed[d / 4] >> (2 * (d % 4));
+        if tail != 0 {
+            return Err(HcflError::Config(
+                "ternary wire buffer has non-zero padding bits".into(),
+            ));
+        }
+    }
+    Ok(())
+}
+
+pub fn unpack_ternary(bytes: &[u8], d: usize, chunk: usize) -> Result<Vec<TernaryChunk>> {
+    let n_chunks = check_ternary_len(bytes, d, chunk)?;
     let alphas: Vec<f32> = bytes[..4 * n_chunks]
         .chunks_exact(4)
         .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
@@ -252,15 +366,7 @@ pub fn unpack_ternary(bytes: &[u8], d: usize, chunk: usize) -> Result<Vec<Ternar
             }
         });
     }
-    // padding bits past d must be zero for the buffer to be canonical
-    if d % 4 != 0 {
-        let tail = packed[d / 4] >> (2 * (d % 4));
-        if tail != 0 {
-            return Err(HcflError::Config(
-                "ternary wire buffer has non-zero padding bits".into(),
-            ));
-        }
-    }
+    check_ternary_padding(packed, d)?;
     let mut out = Vec::with_capacity(n_chunks);
     for (i, alpha) in alphas.into_iter().enumerate() {
         let start = i * chunk;
@@ -271,6 +377,54 @@ pub fn unpack_ternary(bytes: &[u8], d: usize, chunk: usize) -> Result<Vec<Ternar
         });
     }
     Ok(out)
+}
+
+/// Zero-copy ternary decode: dequantize the whole update straight into
+/// `out` (resized to `d`) — no `Vec<TernaryChunk>`, no `Vec<i8>`.  Same
+/// validation as [`unpack_ternary`]: exact length, no `0b11` symbols,
+/// zero padding bits.
+pub fn unpack_ternary_into(
+    bytes: &[u8],
+    d: usize,
+    chunk: usize,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let n_chunks = check_ternary_len(bytes, d, chunk)?;
+    out.clear();
+    out.resize(d, 0.0);
+    let packed = &bytes[4 * n_chunks..];
+    for i in 0..n_chunks {
+        let alpha = f32::from_le_bytes([
+            bytes[4 * i],
+            bytes[4 * i + 1],
+            bytes[4 * i + 2],
+            bytes[4 * i + 3],
+        ]);
+        let start = i * chunk;
+        let end = ((i + 1) * chunk).min(d);
+        if start % 4 == 0 {
+            simd::unpack_2bit_f32(&packed[start / 4..], end - start, alpha, &mut out[start..end])?;
+        } else {
+            // chunk sizes that are not a multiple of 4 leave chunks
+            // bit-misaligned; decode those positions via the scalar
+            // reference on the global symbol index
+            for j in start..end {
+                let bits = (packed[j / 4] >> (2 * (j % 4))) & 0b11;
+                let q: f32 = match bits {
+                    0b00 => 0.0,
+                    0b01 => 1.0,
+                    0b10 => -1.0,
+                    _ => {
+                        return Err(HcflError::Config(
+                            "ternary wire buffer has an invalid 0b11 symbol".into(),
+                        ))
+                    }
+                };
+                out[j] = q * alpha;
+            }
+        }
+    }
+    check_ternary_padding(packed, d)
 }
 
 // ---------------------------------------------------------------------------
@@ -289,23 +443,10 @@ fn push_varint(mut v: u32, out: &mut Vec<u8>) {
     }
 }
 
-fn read_varint(bytes: &[u8], pos: &mut usize) -> Result<u32> {
-    let mut v = 0u32;
-    let mut shift = 0u32;
-    loop {
-        let byte = *bytes
-            .get(*pos)
-            .ok_or_else(|| HcflError::Config("sparse wire buffer truncated".into()))?;
-        *pos += 1;
-        if shift >= 32 {
-            return Err(HcflError::Config("sparse varint overflows u32".into()));
-        }
-        v |= ((byte & 0x7F) as u32) << shift;
-        if byte & 0x80 == 0 {
-            return Ok(v);
-        }
-        shift += 7;
-    }
+/// One hardened LEB128 read (see [`simd::read_varint`] for the exact
+/// rejection rules: truncation, u32 overflow, overlong encodings).
+pub fn read_varint(bytes: &[u8], pos: &mut usize) -> Result<u32> {
+    simd::read_varint(bytes, pos)
 }
 
 pub fn pack_sparse(d: usize, idx: &[u32], val: &[f32], out: &mut Vec<u8>) -> Result<()> {
@@ -333,39 +474,111 @@ pub fn pack_sparse(d: usize, idx: &[u32], val: &[f32], out: &mut Vec<u8>) -> Res
         }
         prev = Some(i);
     }
-    for v in val {
-        out.extend_from_slice(&v.to_le_bytes());
-    }
+    simd::pack_f32_le(val, out);
     Ok(())
 }
 
-pub fn unpack_sparse(bytes: &[u8]) -> Result<Payload> {
+/// Decode the sparse header + delta-varint index stream shared by both
+/// sparse decode paths.  On return `idx` holds the absolute indices
+/// (validated in-bounds and non-wrapping) and `*pos` points at the
+/// value block.
+fn unpack_sparse_indices(
+    bytes: &[u8],
+    idx: &mut Vec<u32>,
+    pos: &mut usize,
+) -> Result<(usize, usize)> {
     if bytes.len() < 8 {
         return Err(HcflError::Config("sparse wire buffer truncated".into()));
     }
     let d = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
     let k = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
-    let mut pos = 8usize;
-    let mut idx = Vec::with_capacity(k);
+    // each index costs at least one varint byte plus four value bytes:
+    // reject forged headers before allocating k slots
+    if bytes.len() < 8 + 5 * k {
+        return Err(HcflError::Config(format!(
+            "sparse wire buffer is {} bytes, too short for k={k}",
+            bytes.len()
+        )));
+    }
+    *pos = 8;
+    idx.clear();
+    idx.resize(k, 0);
+    simd::decode_varints(bytes, pos, idx)?;
+    // delta → absolute, rejecting wrap-around and out-of-range indices
     let mut prev = 0u32;
-    for i in 0..k {
-        let delta = read_varint(bytes, &mut pos)?;
-        let v = if i == 0 { delta } else { prev + delta };
-        idx.push(v);
+    for (i, slot) in idx.iter_mut().enumerate() {
+        let v = if i == 0 {
+            *slot
+        } else {
+            prev.checked_add(*slot).ok_or_else(|| {
+                HcflError::Config("sparse index stream overflows u32".into())
+            })?
+        };
+        if v as usize >= d {
+            return Err(HcflError::Config(format!(
+                "sparse index {v} out of range for d={d}"
+            )));
+        }
+        *slot = v;
         prev = v;
     }
-    if bytes.len() != pos + 4 * k {
+    if bytes.len() != *pos + 4 * k {
         return Err(HcflError::Config(format!(
             "sparse wire buffer is {} bytes, expected {}",
             bytes.len(),
-            pos + 4 * k
+            *pos + 4 * k
         )));
     }
-    let val: Vec<f32> = bytes[pos..]
-        .chunks_exact(4)
-        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-        .collect();
+    Ok((d, k))
+}
+
+pub fn unpack_sparse(bytes: &[u8]) -> Result<Payload> {
+    let mut idx = Vec::new();
+    let mut pos = 0usize;
+    let (d, k) = unpack_sparse_indices(bytes, &mut idx, &mut pos)?;
+    let mut val = vec![0.0f32; k];
+    simd::unpack_f32_le(&bytes[pos..], &mut val);
     Ok(Payload::Sparse { d, idx, val })
+}
+
+/// Zero-copy sparse decode: zero-fill `out` (resized to `d`) and
+/// scatter the kept values into it directly, with the index stream
+/// decoded into the caller's reusable `idx_scratch` — no `Payload`
+/// materialized.  The wire header's `d` must match the expected one.
+pub fn unpack_sparse_into(
+    bytes: &[u8],
+    d: usize,
+    idx_scratch: &mut Vec<u32>,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let mut pos = 0usize;
+    let (wire_d, k) = unpack_sparse_indices(bytes, idx_scratch, &mut pos)?;
+    if wire_d != d {
+        return Err(HcflError::Config(format!(
+            "sparse wire buffer is for d={wire_d}, expected d={d}"
+        )));
+    }
+    out.clear();
+    out.resize(d, 0.0);
+    for (&i, b) in idx_scratch.iter().zip(bytes[pos..].chunks_exact(4)) {
+        out[i as usize] = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    }
+    debug_assert_eq!(idx_scratch.len(), k);
+    Ok(())
+}
+
+/// Decode a sparse wire buffer into `out` using the scratch arena's
+/// internal index buffer (the form the codec trait calls).
+pub fn unpack_sparse_into_scratch(
+    bytes: &[u8],
+    d: usize,
+    scratch: &mut WireScratch,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    let mut idx = std::mem::take(&mut scratch.u32_buf);
+    let res = unpack_sparse_into(bytes, d, &mut idx, out);
+    scratch.u32_buf = idx;
+    res
 }
 
 #[cfg(test)]
@@ -380,6 +593,9 @@ mod tests {
         assert_eq!(out.len(), 16);
         assert_eq!(unpack_raw(&out, 4).unwrap(), v);
         assert!(unpack_raw(&out, 3).is_err());
+        let mut into = Vec::new();
+        unpack_raw_into(&out, 4, &mut into).unwrap();
+        assert_eq!(into, v);
     }
 
     #[test]
@@ -405,6 +621,17 @@ mod tests {
         assert_eq!(back[1].q, chunks[1].q);
         assert_eq!(back[0].alpha, 0.5);
         assert_eq!(back[1].alpha, 0.25);
+        // the zero-copy path agrees bit-for-bit with decode-the-chunks
+        let mut direct = Vec::new();
+        unpack_ternary_into(&out, 7, 5, &mut direct).unwrap();
+        let expect: Vec<f32> = back
+            .iter()
+            .flat_map(|c| c.q.iter().map(|&q| q as f32 * c.alpha))
+            .collect();
+        assert_eq!(
+            direct.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            expect.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]
@@ -415,6 +642,30 @@ mod tests {
             alpha: 1.0,
         }];
         assert!(pack_ternary(&bad, &mut out).is_err());
+        // and in bulk, where the vector kernel screens the block
+        let mut q = vec![0i8; 64];
+        q[40] = 3;
+        let bad = vec![TernaryChunk { q, alpha: 1.0 }];
+        let mut out = Vec::new();
+        assert!(pack_ternary(&bad, &mut out).is_err());
+    }
+
+    #[test]
+    fn ternary_rejects_nonzero_padding() {
+        // d=5 leaves 3 padding symbols in the last byte
+        let chunks = vec![TernaryChunk {
+            q: vec![1, -1, 0, 1, 1],
+            alpha: 1.0,
+        }];
+        let mut out = Vec::new();
+        pack_ternary(&chunks, &mut out).unwrap();
+        let mut corrupt = out.clone();
+        let last = corrupt.len() - 1;
+        corrupt[last] |= 0b01 << 2; // garbage in an unused symbol slot
+        assert!(unpack_ternary(&out, 5, 8).is_ok());
+        assert!(unpack_ternary(&corrupt, 5, 8).is_err());
+        let mut buf = Vec::new();
+        assert!(unpack_ternary_into(&corrupt, 5, 8, &mut buf).is_err());
     }
 
     #[test]
@@ -433,9 +684,33 @@ mod tests {
             }
             _ => unreachable!(),
         }
+        // the scatter path produces the same dense vector
+        let mut dense = Vec::new();
+        let mut iscratch = Vec::new();
+        unpack_sparse_into(&out, 100_000, &mut iscratch, &mut dense).unwrap();
+        assert_eq!(dense.len(), 100_000);
+        for (i, v) in idx.iter().zip(&val) {
+            assert_eq!(dense[*i as usize], *v);
+        }
+        // header d mismatch is rejected
+        assert!(unpack_sparse_into(&out, 99_999, &mut iscratch, &mut dense).is_err());
         // non-ascending indices are a packing bug, not a wire format
         let mut junk = Vec::new();
         assert!(pack_sparse(10, &[3, 3], &[1.0, 2.0], &mut junk).is_err());
+    }
+
+    #[test]
+    fn sparse_rejects_out_of_range_index() {
+        // hand-build a buffer whose only index is >= d
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&10u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        push_varint(10, &mut bytes); // index 10 with d=10: out of range
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(unpack_sparse(&bytes).is_err());
+        let mut dense = Vec::new();
+        let mut iscratch = Vec::new();
+        assert!(unpack_sparse_into(&bytes, 10, &mut iscratch, &mut dense).is_err());
     }
 
     #[test]
@@ -451,5 +726,26 @@ mod tests {
         }
         assert_eq!(scratch.buf.capacity(), cap);
         assert_eq!(scratch.buf.as_ptr(), ptr);
+    }
+
+    #[test]
+    fn arena_recycles_buffers() {
+        let mut scratch = WireScratch::new();
+        let p = Payload::Raw(vec![0.5f32; 64]);
+        let upd = scratch.pack_update(&p).unwrap();
+        assert_eq!(upd.wire_bytes(), 256);
+        let ptr = upd.bytes.as_ptr();
+        scratch.put_bytes(upd.into_bytes());
+        // the next pack reuses the recycled allocation
+        let upd2 = scratch.pack_update(&p).unwrap();
+        assert_eq!(upd2.bytes.as_ptr(), ptr);
+        // same story for leaf buffers
+        let mut leaf = scratch.take_f32();
+        leaf.resize(100, 1.0);
+        let lptr = leaf.as_ptr();
+        scratch.put_f32(leaf);
+        let leaf2 = scratch.take_f32();
+        assert!(leaf2.is_empty());
+        assert_eq!(leaf2.as_ptr(), lptr);
     }
 }

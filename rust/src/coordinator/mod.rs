@@ -276,7 +276,7 @@ impl Simulation {
         for (slot, &k) in selected.iter().enumerate() {
             let up = msgs[slot]
                 .as_ref()
-                .map(|msg| msg.update.wire_bytes)
+                .map(|msg| msg.update.wire_bytes())
                 .unwrap_or(0);
             let timing: ClientTiming = client_timing(
                 &self.cfg.link,

@@ -26,10 +26,10 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::compression::{CompressedUpdate, Compressor, WireScratch};
+use crate::compression::{Compressor, WireScratch, WireUpdate};
 use crate::data::FlData;
 use crate::error::{HcflError, Result};
-use crate::fl::{combine_leaves, LocalTrainer, WeightedLeaf};
+use crate::fl::{combine_leaves_recycled, LocalTrainer, WeightedLeaf};
 use crate::util::rng::Rng;
 
 /// Per-thread state a pool worker hands to every task it runs.
@@ -149,8 +149,8 @@ impl Drop for WorkerPool {
 /// by level, each level's nodes computed in parallel on the pool.
 /// Returns `None` for an empty leaf set.  Bit-identical for any pool
 /// size: group boundaries are `fan_in`-sized arrival-order slices and
-/// [`combine_leaves`] folds each group left-to-right, so no arithmetic
-/// depends on scheduling.
+/// [`combine_leaves_recycled`] folds each group left-to-right, so no
+/// arithmetic depends on scheduling.
 pub fn reduce_tree(
     pool: &WorkerPool,
     mut nodes: Vec<WeightedLeaf>,
@@ -170,7 +170,18 @@ pub fn reduce_tree(
         }
         let jobs: Vec<_> = groups
             .into_iter()
-            .map(|group| move |_ctx: &mut WorkerCtx| combine_leaves(group))
+            .map(|group| {
+                move |ctx: &mut WorkerCtx| {
+                    // fold the group, then hand the spent child buffers
+                    // back to this worker's arena for the next decode
+                    let mut spent = Vec::new();
+                    let node = combine_leaves_recycled(group, &mut spent);
+                    for buf in spent {
+                        ctx.scratch.put_f32(buf);
+                    }
+                    node
+                }
+            })
             .collect();
         nodes = pool.scatter(jobs)?.into_iter().collect::<Result<Vec<_>>>()?;
     }
@@ -181,7 +192,10 @@ pub fn reduce_tree(
 pub struct ClientMsg {
     /// Selection slot of the sender (index into the round's selection).
     pub slot: usize,
-    pub update: CompressedUpdate,
+    /// The packed wire buffer — what actually travels.  The structured
+    /// payload is discarded client-side after packing; the server
+    /// decodes with `Compressor::unpack_into`.
+    pub update: WireUpdate,
     /// Exact post-training parameters (simulation-only side channel used
     /// to measure reconstruction error at the server).
     pub exact: Vec<f32>,
@@ -318,11 +332,10 @@ impl ClientRunner for TrainEncodeRunner {
         let payload = self
             .compressor
             .encode_payload(&out.params, &round.global, round.encode_deltas);
-        let mut update = self.compressor.compress(&payload, ctx.engine_worker)?;
-        update.wire_bytes = ctx.scratch.pack(&update.payload)?;
+        let update = self.compressor.compress(&payload, ctx.engine_worker)?;
         Ok(ClientMsg {
             slot: spec.slot,
-            update,
+            update: ctx.scratch.pack_update(&update.payload)?,
             exact: out.params,
             n_samples: shard.n,
             train_s: started.elapsed().as_secs_f64(),
@@ -366,11 +379,10 @@ impl ClientRunner for FakeTrainRunner {
         let payload = self
             .compressor
             .encode_payload(&params, &round.global, round.encode_deltas);
-        let mut update = self.compressor.compress(&payload, ctx.engine_worker)?;
-        update.wire_bytes = ctx.scratch.pack(&update.payload)?;
+        let update = self.compressor.compress(&payload, ctx.engine_worker)?;
         Ok(ClientMsg {
             slot: spec.slot,
-            update,
+            update: ctx.scratch.pack_update(&update.payload)?,
             exact: params,
             n_samples: self.data.shard_rows(spec.client),
             train_s: started.elapsed().as_secs_f64(),

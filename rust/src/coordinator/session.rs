@@ -53,8 +53,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::compression::{
-    CompressedUpdate, Compressor, HcflCompressor, Identity, Scheme, TernaryCompressor,
-    TopKCompressor, WireScratch,
+    Compressor, HcflCompressor, Identity, Scheme, TernaryCompressor, TopKCompressor,
+    WireScratch, WireUpdate,
 };
 use crate::config::ExperimentConfig;
 use crate::coordinator::clock::{resolve, ClientTiming, RoundOutcome, RoundPolicy};
@@ -102,8 +102,8 @@ impl CarryPolicy {
 /// One arrival at the server: the encoded wire payload plus everything
 /// the clock layer modelled about its journey.
 pub struct ClientUpdate {
-    /// The encoded payload as it came off the wire.
-    pub payload: CompressedUpdate,
+    /// The packed wire buffer as it came off the air.
+    pub payload: WireUpdate,
     /// Samples on the sender's shard (FedAvg `n_k`).
     pub n_samples: usize,
     /// The sender's modelled round timeline (carries the arrival time
@@ -267,7 +267,7 @@ impl FlSession {
 
 /// The payload half of a submitted arrival (timing lives in `timings`).
 struct ArrivalData {
-    payload: CompressedUpdate,
+    payload: WireUpdate,
     n_samples: usize,
     exact: Vec<f32>,
 }
@@ -500,7 +500,7 @@ impl RoundSession<'_, Resolved> {
         let up_bytes: u64 = arrivals
             .iter()
             .flatten()
-            .map(|a| a.payload.wire_bytes as u64)
+            .map(|a| a.payload.wire_bytes() as u64)
             .sum();
         let reference_compute_s = stats::mean(&train_s);
         // The freshness reference: the first surviving arrival, as
@@ -536,8 +536,18 @@ impl RoundSession<'_, Resolved> {
             jobs.push(
                 move |ctx: &mut WorkerCtx| -> Result<(WeightedLeaf, f64, f64)> {
                     let t0 = Instant::now();
-                    let mut decoded =
-                        compressor.decompress(arr.payload, d, ctx.engine_worker)?;
+                    // zero-copy decode: the packed bytes dequantize
+                    // straight into a pooled leaf buffer, and the spent
+                    // wire buffer goes back to this worker's arena
+                    let mut decoded = ctx.scratch.take_f32();
+                    compressor.unpack_into(
+                        &arr.payload.bytes,
+                        d,
+                        ctx.engine_worker,
+                        &mut ctx.scratch,
+                        &mut decoded,
+                    )?;
+                    ctx.scratch.put_bytes(arr.payload.into_bytes());
                     compressor.decode_payload(&mut decoded, &global, encode_deltas);
                     let mut decode_s = t0.elapsed().as_secs_f64();
                     let recon = if arr.exact.is_empty() {
@@ -586,8 +596,15 @@ impl RoundSession<'_, Resolved> {
                 let kind = kind.clone();
                 jobs.push(move |ctx: &mut WorkerCtx| -> Result<(CarriedUpdate, f64)> {
                     let t0 = Instant::now();
-                    let mut decoded =
-                        compressor.decompress(arr.payload, d, ctx.engine_worker)?;
+                    let mut decoded = ctx.scratch.take_f32();
+                    compressor.unpack_into(
+                        &arr.payload.bytes,
+                        d,
+                        ctx.engine_worker,
+                        &mut ctx.scratch,
+                        &mut decoded,
+                    )?;
+                    ctx.scratch.put_bytes(arr.payload.into_bytes());
                     compressor.decode_payload(&mut decoded, &global, encode_deltas);
                     let base_weight = kind.weight(&meta, t0_arrival)?;
                     let decode_s = t0.elapsed().as_secs_f64();

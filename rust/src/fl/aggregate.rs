@@ -24,6 +24,7 @@
 //!   (`tests/pool_determinism.rs`).  The parallel driver lives in
 //!   [`crate::coordinator::pool::reduce_tree`].
 
+use crate::compression::simd;
 use crate::error::{HcflError, Result};
 use crate::fl::RunningAverage;
 
@@ -116,9 +117,7 @@ impl WeightedLeaf {
     /// mean) leaves the bits untouched.
     pub fn new(weight: f64, mut x: Vec<f32>) -> WeightedLeaf {
         if weight != 1.0 {
-            for v in &mut x {
-                *v = (*v as f64 * weight) as f32;
-            }
+            simd::scale_f64(&mut x, weight);
         }
         WeightedLeaf { weight, sum: x }
     }
@@ -129,6 +128,18 @@ impl WeightedLeaf {
 /// The group is always a contiguous arrival-order slice, so the
 /// summation order is fixed by the leaf order alone.
 pub fn combine_leaves(group: Vec<WeightedLeaf>) -> Result<WeightedLeaf> {
+    let mut spent = Vec::new();
+    combine_leaves_recycled(group, &mut spent)
+}
+
+/// [`combine_leaves`], handing the spent child buffers back to the
+/// caller instead of dropping them — the pool's reduce jobs return them
+/// to the per-worker arena so folds allocate nothing in steady state.
+/// The arithmetic is exactly `combine_leaves`'s.
+pub fn combine_leaves_recycled(
+    group: Vec<WeightedLeaf>,
+    spent: &mut Vec<Vec<f32>>,
+) -> Result<WeightedLeaf> {
     let mut iter = group.into_iter();
     let mut acc = iter
         .next()
@@ -142,15 +153,15 @@ pub fn combine_leaves(group: Vec<WeightedLeaf>) -> Result<WeightedLeaf> {
             )));
         }
         acc.weight += leaf.weight;
-        for (a, x) in acc.sum.iter_mut().zip(&leaf.sum) {
-            *a += x;
-        }
+        simd::add_assign(&mut acc.sum, &leaf.sum);
+        spent.push(leaf.sum);
     }
     Ok(acc)
 }
 
 /// Normalize the root node into the aggregated model:
-/// `out = (Σ wᵢ·xᵢ) / Σ wᵢ`, dividing in f64 per element.
+/// `out = (Σ wᵢ·xᵢ) / Σ wᵢ`, dividing in f64 per element — in place,
+/// the root's own buffer becomes the model.
 pub fn finish_tree(root: WeightedLeaf) -> Result<Vec<f32>> {
     if root.weight <= 0.0 || !root.weight.is_finite() {
         return Err(HcflError::Config(format!(
@@ -158,12 +169,9 @@ pub fn finish_tree(root: WeightedLeaf) -> Result<Vec<f32>> {
             root.weight
         )));
     }
-    let w = root.weight;
-    Ok(root
-        .sum
-        .into_iter()
-        .map(|s| (s as f64 / w) as f32)
-        .collect())
+    let mut out = root.sum;
+    simd::div_f64(&mut out, root.weight);
+    Ok(out)
 }
 
 /// Streaming fold of decoded updates (pushed in modelled arrival order).

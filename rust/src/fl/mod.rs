@@ -6,7 +6,8 @@ mod client;
 mod server;
 
 pub use aggregate::{
-    combine_leaves, finish_tree, Aggregator, AggregatorKind, UpdateMeta, WeightedLeaf,
+    combine_leaves, combine_leaves_recycled, finish_tree, Aggregator, AggregatorKind,
+    UpdateMeta, WeightedLeaf,
     TREE_FAN_IN,
 };
 pub use client::{LocalOutcome, LocalTrainer};

@@ -206,14 +206,15 @@ impl ClientRunner for FailOnSlot {
         &self,
         spec: &WorkSpec,
         _round: &RoundInputs,
-        _ctx: &mut WorkerCtx,
+        ctx: &mut WorkerCtx,
     ) -> Result<ClientMsg> {
         if spec.slot == self.0 {
             return Err(HcflError::Engine("injected client failure".into()));
         }
+        let upd = Identity.compress(&[1.0, 2.0], 0)?;
         Ok(ClientMsg {
             slot: spec.slot,
-            update: Identity.compress(&[1.0, 2.0], 0)?,
+            update: ctx.scratch.pack_update(&upd.payload)?,
             exact: vec![1.0, 2.0],
             n_samples: 1,
             train_s: 0.0,

@@ -1,0 +1,72 @@
+//! The very-large-scale acceptance pin: one full K=10 000 fake-train
+//! round through the session pipeline — selection, the worker-pool
+//! client stage, wire packing, the zero-copy arena decode and the
+//! reduction tree — must produce a bit-identical global model and
+//! identical deterministic round-record fields for any
+//! `client_threads`.  This is the scale the SIMD + zero-copy hot path
+//! exists for; `pool_determinism.rs` pins the same property at m=40
+//! with stragglers and a deadline, this pins it at the paper's
+//! "very large scale IoT" population.
+//!
+//! Engine-free (fake train on the synthetic manifest), so it always
+//! runs in CI — including the `HCFL_FORCE_SCALAR=1` leg, which pins the
+//! scalar tier to the same bits the vector tiers produce on the
+//! default leg.
+
+use hcfl::compression::Scheme;
+use hcfl::data::Partition;
+use hcfl::metrics::RoundRecord;
+use hcfl::prelude::*;
+
+fn k10_cfg(client_threads: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::mnist(Scheme::TopK { keep: 0.1 }, 1);
+    cfg.model = "fake".into();
+    cfg.fake_train = true;
+    cfg.n_clients = 10_000;
+    cfg.data.n_clients = 10_000;
+    cfg.participation = 1.0;
+    cfg.batch = 16;
+    cfg.data.per_client = 64;
+    cfg.data.test_n = 16;
+    cfg.data.server_n = 8;
+    // a 10k fleet must stay lazy: the fake runner reads shard row
+    // counts, never pixels
+    cfg.data.lazy_shards = true;
+    // order-sensitive configuration on purpose: unequal shards +
+    // sample-weighted aggregation would expose any thread-dependent
+    // fold or decode order
+    cfg.data.partition = Partition::Dirichlet { alpha: 0.3 };
+    cfg.data.size_skew = 0.25;
+    cfg.client_threads = client_threads;
+    cfg.engine_workers = 2;
+    cfg.scenario.aggregator = AggregatorKind::SampleWeighted;
+    cfg
+}
+
+fn run_one_round(client_threads: usize) -> (Vec<f32>, RoundRecord) {
+    let engine = Engine::with_manifest(Manifest::synthetic(), 2).unwrap();
+    let mut sim = Simulation::new(&engine, k10_cfg(client_threads)).unwrap();
+    let rec = sim.run_round(1).unwrap();
+    assert_eq!(rec.selected, 10_000);
+    (sim.global().to_vec(), rec)
+}
+
+#[test]
+fn k10000_round_is_bit_identical_across_pool_sizes() {
+    let (g1, r1) = run_one_round(1);
+    assert!(g1.iter().all(|v| v.is_finite()));
+    for client_threads in [4usize, 16] {
+        let (g, r) = run_one_round(client_threads);
+        assert_eq!(
+            g1, g,
+            "global model diverged at client_threads={client_threads}"
+        );
+        assert_eq!(r1.up_bytes, r.up_bytes);
+        assert_eq!(r1.down_bytes, r.down_bytes);
+        assert_eq!(r1.selected, r.selected);
+        assert_eq!(r1.completed, r.completed);
+        assert_eq!(r1.dropped, r.dropped);
+        assert_eq!(r1.stragglers, r.stragglers);
+        assert_eq!(r1.recon_mse, r.recon_mse);
+    }
+}

@@ -14,7 +14,7 @@
 
 use std::sync::Arc;
 
-use hcfl::compression::{Compressor, Identity, Scheme, TopKCompressor};
+use hcfl::compression::{Compressor, Identity, Scheme, TopKCompressor, WireScratch};
 use hcfl::config::{ExperimentConfig, ScenarioConfig};
 use hcfl::coordinator::clock::{ClientTiming, RoundPolicy};
 use hcfl::coordinator::pool::{
@@ -53,7 +53,8 @@ fn mk_update(client: usize, slot: usize, arrival_s: f64, global: &[f32], seed: u
     let mut rng = Rng::new(seed);
     let params: Vec<f32> = global.iter().map(|g| g + 0.1 * rng.normal()).collect();
     let delta = Identity.encode_payload(&params, global, true);
-    let payload = Identity.compress(&delta, 0).unwrap();
+    let upd = Identity.compress(&delta, 0).unwrap();
+    let payload = WireScratch::new().pack_update(&upd.payload).unwrap();
     ClientUpdate {
         payload,
         n_samples: 50 + client,
@@ -393,12 +394,17 @@ fn carry_off_matches_prerefactor_round_output() {
             msgs[slot] = Some(msg);
         }
         // homogeneous synchronous round: everyone survives, equal
-        // arrivals tie on the selection slot — selection order
+        // arrivals tie on the selection slot — selection order.  The
+        // reference decodes straight off the wire bytes through
+        // `unpack_into`, pinning the zero-copy decode path against the
+        // session output bit for bit.
+        let mut scratch = WireScratch::new();
         let mut leaves = Vec::with_capacity(selected.len());
         for slot_msg in &mut msgs {
             let msg = slot_msg.take().unwrap();
-            let mut dec = compressor
-                .decompress(msg.update, model.d, 0)
+            let mut dec = Vec::new();
+            compressor
+                .unpack_into(&msg.update.bytes, model.d, 0, &mut scratch, &mut dec)
                 .unwrap();
             compressor.decode_payload(&mut dec, &global, cfg.encode_deltas);
             leaves.push(WeightedLeaf::new(1.0, dec));

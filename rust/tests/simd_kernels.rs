@@ -1,0 +1,186 @@
+//! Property tests of the SIMD kernel layer (`compression/simd`): for
+//! every kernel, the runtime-dispatched path must be byte-/bit-identical
+//! to the portable scalar reference on randomized inputs covering every
+//! remainder tail 1..=63 plus larger vector-dominated lengths.
+//!
+//! On a scalar-only host (or under `HCFL_FORCE_SCALAR=1`) the dispatched
+//! path *is* the scalar path and the tests degenerate to self-identity —
+//! still worth running, since CI's forced-scalar leg uses exactly that
+//! to pin the reference tier.
+
+use hcfl::compression::simd;
+use hcfl::util::rng::Rng;
+
+/// Every tail 1..=63 (covers all SSE2 16-lane and AVX2 32-lane remainder
+/// classes), 0, plus lengths where the vector body dominates.
+fn probe_lengths(rng: &mut Rng) -> Vec<usize> {
+    let mut lens: Vec<usize> = (0..=63).collect();
+    lens.extend([64, 100, 127, 128, 255, 256, 1000, 1024, 4096 + 17]);
+    for _ in 0..8 {
+        lens.push(1 + rng.below(20_000));
+    }
+    lens
+}
+
+fn random_symbols(rng: &mut Rng, n: usize) -> Vec<i8> {
+    (0..n).map(|_| [0i8, 1, -1][rng.below(3)]).collect()
+}
+
+fn random_f32(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn pack_2bit_matches_scalar_on_all_tails() {
+    let mut rng = Rng::new(0x51);
+    for n in probe_lengths(&mut rng) {
+        let q = random_symbols(&mut rng, n);
+        let mut fast = vec![0xAAu8; 3]; // non-empty: both paths append
+        let mut refr = vec![0xAAu8; 3];
+        simd::pack_2bit(&q, &mut fast).unwrap();
+        simd::scalar::pack_2bit(&q, &mut refr).unwrap();
+        assert_eq!(fast, refr, "pack_2bit diverged at n={n} ({})", simd::level().label());
+    }
+}
+
+#[test]
+fn unpack_2bit_f32_matches_scalar_on_all_tails() {
+    let mut rng = Rng::new(0x52);
+    for n in probe_lengths(&mut rng) {
+        let q = random_symbols(&mut rng, n);
+        let mut packed = Vec::new();
+        simd::scalar::pack_2bit(&q, &mut packed).unwrap();
+        let alpha = 0.25 + rng.normal().abs();
+        let mut fast = vec![0.0f32; n];
+        let mut refr = vec![0.0f32; n];
+        simd::unpack_2bit_f32(&packed, n, alpha, &mut fast).unwrap();
+        simd::scalar::unpack_2bit_f32(&packed, n, alpha, &mut refr).unwrap();
+        assert_eq!(bits(&fast), bits(&refr), "unpack_2bit_f32 diverged at n={n}");
+    }
+}
+
+#[test]
+fn f32_le_moves_match_scalar_on_all_tails() {
+    let mut rng = Rng::new(0x53);
+    for n in probe_lengths(&mut rng) {
+        let v = random_f32(&mut rng, n, 3.0);
+        let mut fast = Vec::new();
+        let mut refr = Vec::new();
+        simd::pack_f32_le(&v, &mut fast);
+        simd::scalar::pack_f32_le(&v, &mut refr);
+        assert_eq!(fast, refr, "pack_f32_le diverged at n={n}");
+        let mut back_fast = vec![0.0f32; n];
+        let mut back_ref = vec![0.0f32; n];
+        simd::unpack_f32_le(&fast, &mut back_fast);
+        simd::scalar::unpack_f32_le(&refr, &mut back_ref);
+        assert_eq!(bits(&back_fast), bits(&back_ref), "unpack_f32_le diverged at n={n}");
+        assert_eq!(bits(&back_fast), bits(&v));
+    }
+}
+
+/// Canonical LEB128 encoder (what `wire::push_varint` emits), used to
+/// build inputs the hardened decoder must accept.
+fn push_varint(mut v: u32, out: &mut Vec<u8>) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+#[test]
+fn decode_varints_matches_scalar_on_mixed_widths() {
+    let mut rng = Rng::new(0x54);
+    for n in probe_lengths(&mut rng) {
+        // mix of single-byte values (the batched fast path) and wide
+        // values that break each 8-run differently
+        let vals: Vec<u32> = (0..n)
+            .map(|i| {
+                if rng.below(4) == 0 {
+                    rng.below(u32::MAX as usize) as u32
+                } else {
+                    (i % 128) as u32
+                }
+            })
+            .collect();
+        let mut bytes = vec![0x7Fu8; 3]; // leading garbage skipped via pos
+        for &v in &vals {
+            push_varint(v, &mut bytes);
+        }
+        let mut fast = vec![0u32; n];
+        let mut refr = vec![0u32; n];
+        let mut pos_fast = 3usize;
+        let mut pos_ref = 3usize;
+        simd::decode_varints(&bytes, &mut pos_fast, &mut fast).unwrap();
+        simd::scalar::decode_varints(&bytes, &mut pos_ref, &mut refr).unwrap();
+        assert_eq!(fast, refr, "decode_varints diverged at n={n}");
+        assert_eq!(fast, vals);
+        assert_eq!(pos_fast, pos_ref, "cursor diverged at n={n}");
+        assert_eq!(pos_fast, bytes.len());
+    }
+}
+
+#[test]
+fn fold_kernels_match_scalar_on_all_tails() {
+    let mut rng = Rng::new(0x55);
+    for n in probe_lengths(&mut rng) {
+        let x = random_f32(&mut rng, n, 1.5);
+        let y = random_f32(&mut rng, n, 0.7);
+        let w = 0.1 + rng.normal().abs() as f64 * 100.0;
+
+        let mut fast = x.clone();
+        let mut refr = x.clone();
+        simd::add_assign(&mut fast, &y);
+        simd::scalar::add_assign(&mut refr, &y);
+        assert_eq!(bits(&fast), bits(&refr), "add_assign diverged at n={n}");
+
+        let mut fast = x.clone();
+        let mut refr = x.clone();
+        simd::scale_f64(&mut fast, w);
+        simd::scalar::scale_f64(&mut refr, w);
+        assert_eq!(bits(&fast), bits(&refr), "scale_f64 diverged at n={n} w={w}");
+
+        let mut fast = x.clone();
+        let mut refr = x.clone();
+        simd::div_f64(&mut fast, w);
+        simd::scalar::div_f64(&mut refr, w);
+        assert_eq!(bits(&fast), bits(&refr), "div_f64 diverged at n={n} w={w}");
+    }
+}
+
+#[test]
+fn invalid_symbols_rejected_at_every_position() {
+    let mut rng = Rng::new(0x56);
+    // an invalid symbol must be caught wherever it falls relative to the
+    // vector block boundary — probe every lane of one 32-symbol block
+    // plus a scalar tail
+    for bad_at in (0..40).chain([63, 64, 100]) {
+        let n = 101;
+        let mut q = random_symbols(&mut rng, n);
+        q[bad_at] = 2;
+        let mut out = Vec::new();
+        let err = simd::pack_2bit(&q, &mut out).unwrap_err();
+        assert!(
+            err.to_string().contains("is not in {-1, 0, 1}"),
+            "bad_at={bad_at}: {err}"
+        );
+        // the 0b11 code on the unpack side, same positions
+        let good = random_symbols(&mut rng, n);
+        let mut packed = Vec::new();
+        simd::scalar::pack_2bit(&good, &mut packed).unwrap();
+        packed[bad_at / 4] |= 0b11 << (2 * (bad_at % 4));
+        let mut dst = vec![0.0f32; n];
+        assert!(
+            simd::unpack_2bit_f32(&packed, n, 1.0, &mut dst).is_err(),
+            "corrupt code at {bad_at} accepted"
+        );
+    }
+}

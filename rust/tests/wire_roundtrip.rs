@@ -10,8 +10,8 @@ use hcfl::compression::wire::{
     self, HcflWireLayout, RangeLayout, WireScratch,
 };
 use hcfl::compression::{
-    ChunkCode, Compressor, Payload, RangeCodes, TernaryChunk, TernaryCompressor,
-    TopKCompressor,
+    ChunkCode, Compressor, Identity, Payload, RangeCodes, TernaryChunk,
+    TernaryCompressor, TopKCompressor,
 };
 use hcfl::model::SegmentRange;
 use hcfl::util::rng::Rng;
@@ -181,4 +181,164 @@ fn sparse_pack_unpack_is_bit_identical_and_beats_formula() {
             v1.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
         );
     }
+}
+
+// ---------------------------------------------------------------------------
+// Hardened varint decoding (the sparse index stream's parser)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn varint_accepts_every_canonical_boundary() {
+    // (encoding, value) pairs at each width boundary, u32::MAX included
+    let cases: &[(&[u8], u32)] = &[
+        (&[0x00], 0),
+        (&[0x7F], 127),
+        (&[0x80, 0x01], 128),
+        (&[0xAC, 0x02], 300),
+        (&[0xFF, 0x7F], 16_383),
+        (&[0x80, 0x80, 0x01], 16_384),
+        (&[0xFF, 0xFF, 0xFF, 0xFF, 0x0F], u32::MAX),
+    ];
+    for (bytes, want) in cases {
+        let mut pos = 0usize;
+        assert_eq!(wire::read_varint(bytes, &mut pos).unwrap(), *want);
+        assert_eq!(pos, bytes.len(), "cursor must land past {want}");
+    }
+}
+
+#[test]
+fn varint_rejects_truncated_overlong_and_overflowing_encodings() {
+    let bad: &[(&[u8], &str)] = &[
+        (&[], "truncated"),
+        (&[0x80], "truncated"),
+        (&[0x80, 0x80, 0x80, 0x80], "truncated"),
+        // 5th byte carries bits 32+ of the value
+        (&[0xFF, 0xFF, 0xFF, 0xFF, 0x10], "overflows"),
+        (&[0xFF, 0xFF, 0xFF, 0xFF, 0x7F], "overflows"),
+        // continuation past the 5th byte
+        (&[0x80, 0x80, 0x80, 0x80, 0x80, 0x01], "overflows"),
+        // overlong: trailing zero payload bytes encode the value
+        // non-minimally (our packer never emits these)
+        (&[0x80, 0x00], "overlong"),
+        (&[0xFF, 0x80, 0x00], "overlong"),
+    ];
+    for (bytes, needle) in bad {
+        let mut pos = 0usize;
+        let err = wire::read_varint(bytes, &mut pos).unwrap_err();
+        assert!(
+            err.to_string().contains(needle),
+            "{bytes:02X?}: expected {needle}, got {err}"
+        );
+    }
+}
+
+#[test]
+fn sparse_unpack_rejects_forged_headers_without_allocating() {
+    // a forged k near u32::MAX must be rejected by the length guard
+    // before any index buffer is sized from it
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&(1_000u32).to_le_bytes()); // d
+    bytes.extend_from_slice(&(u32::MAX).to_le_bytes()); // k
+    bytes.extend_from_slice(&[0x01; 32]);
+    let err = wire::unpack_sparse(&bytes).unwrap_err();
+    assert!(err.to_string().contains("too short for k="), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Zero-copy decode (`unpack_into`) vs the structured reference path
+// ---------------------------------------------------------------------------
+//
+// HCFL's `unpack_into` shares this contract but needs the AE engine to
+// decode; its engine-backed twin lives in `compression_pipeline.rs`,
+// while its wire parse is pinned bit-exactly above.
+
+#[test]
+fn identity_unpack_into_is_bit_identical_to_decompress() {
+    let mut rng = Rng::new(7);
+    let mut scratch = WireScratch::new();
+    for _ in 0..10 {
+        let d = 1 + rng.below(5000);
+        let v = random_vec(&mut rng, d, 0.8);
+        let upd = Identity.compress(&v, 0).unwrap();
+        let wire_upd = scratch.pack_update(&upd.payload).unwrap();
+        let reference = Identity.decompress(upd, d, 0).unwrap();
+        let mut out = Vec::new();
+        Identity
+            .unpack_into(&wire_upd.bytes, d, 0, &mut scratch, &mut out)
+            .unwrap();
+        assert_eq!(
+            out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            reference.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn topk_unpack_into_is_bit_identical_to_decompress() {
+    let mut rng = Rng::new(8);
+    let mut scratch = WireScratch::new();
+    for _ in 0..10 {
+        let d = 50 + rng.below(20_000);
+        let c = TopKCompressor::new(0.05 + rng.next_f64() * 0.3).unwrap();
+        let v = random_vec(&mut rng, d, 1.0);
+        let upd = c.compress(&v, 0).unwrap();
+        let wire_upd = scratch.pack_update(&upd.payload).unwrap();
+        let reference = c.decompress(upd, d, 0).unwrap();
+        let mut out = Vec::new();
+        c.unpack_into(&wire_upd.bytes, d, 0, &mut scratch, &mut out)
+            .unwrap();
+        assert_eq!(
+            out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            reference.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn ternary_unpack_into_is_bit_identical_to_structured_decode() {
+    let chunk = 1024;
+    let mut rng = Rng::new(9);
+    for _ in 0..10 {
+        // deliberately not chunk-aligned: the final chunk exercises the
+        // scalar bit-offset tail of `unpack_ternary_into`
+        let d = 1 + rng.below(10_000);
+        let v = random_vec(&mut rng, d, 0.4);
+        let chunks: Vec<TernaryChunk> = v
+            .chunks(chunk)
+            .map(TernaryCompressor::quantize_ref)
+            .collect();
+        let mut scratch = WireScratch::new();
+        scratch.pack(&Payload::TernaryChunks(chunks.clone())).unwrap();
+        // structured reference: parse chunks, then dequantize per Vec
+        let parsed = wire::unpack_ternary(scratch.bytes(), d, chunk).unwrap();
+        let reference = TernaryCompressor::decode_chunks(&parsed, d).unwrap();
+        // zero-copy: straight into the flat output
+        let mut out = Vec::new();
+        wire::unpack_ternary_into(scratch.bytes(), d, chunk, &mut out).unwrap();
+        assert_eq!(
+            out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            reference.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn ternary_unpack_rejects_nonzero_tail_padding() {
+    // d % 4 != 0 leaves padding bits in the final byte; a forger setting
+    // them must be caught (zero-copy and structured paths agree)
+    let d = 1027;
+    let chunk = 1024;
+    let v: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+    let chunks: Vec<TernaryChunk> = v
+        .chunks(chunk)
+        .map(TernaryCompressor::quantize_ref)
+        .collect();
+    let mut scratch = WireScratch::new();
+    let len = scratch.pack(&Payload::TernaryChunks(chunks)).unwrap();
+    let mut bytes = scratch.bytes().to_vec();
+    assert_eq!(bytes.len(), len);
+    *bytes.last_mut().unwrap() |= 0b11 << 6; // poison the padding lanes
+    let mut out = Vec::new();
+    assert!(wire::unpack_ternary_into(&bytes, d, chunk, &mut out).is_err());
+    assert!(wire::unpack_ternary(&bytes, d, chunk).is_err());
 }
