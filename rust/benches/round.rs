@@ -2,9 +2,11 @@
 //! (pool vs the old spawn-per-client pattern), the K≥1000 aggregation
 //! fold (single-threaded streaming baseline vs the deterministic
 //! reduction tree), the session-driven deadline round with cross-round
-//! carry-over on vs off, then one full FedAvg communication round per
-//! compression scheme (the system-level numbers behind the paper's
-//! Tables I-III) plus the eq.-13 modelled air-time comparison.
+//! carry-over on vs off, the K=10k round served over real TCP through
+//! the `transport` layer (server + swarm loopback), then one full
+//! FedAvg communication round per compression scheme (the system-level
+//! numbers behind the paper's Tables I-III) plus the eq.-13 modelled
+//! air-time comparison.
 //!
 //! The client-stage, aggregation and session sections are engine-free
 //! (fake training / pure folds) and always run; the per-scheme rounds
@@ -386,6 +388,43 @@ fn k10_round_bench(budget: f64, results: &mut Vec<BenchResult>) {
     ));
 }
 
+/// The transport acceptance number: the same K=10k synchronous round as
+/// [`k10_round_bench`], but served over real TCP — a `RoundServer`
+/// owning the session on one side, 4 swarm worker connections
+/// replaying the fleet on the other (`transport`, DESIGN.md §8).  The
+/// server, its listener and its session persist across iterations; each
+/// iteration reconnects a fresh swarm, so the measured cost includes
+/// accept + handshake, the RoundOpen broadcast, 10k framed uploads and
+/// the server-side decode/fold — the full serving path.
+fn loopback_bench(budget: f64, results: &mut Vec<BenchResult>) {
+    let m = 10_000;
+    let workers = 4;
+    println!("\n== K=10k loopback round over real TCP ({workers} swarm connections) ==");
+    let mut cfg = hcfl::transport::demo_config(Scheme::TopK { keep: 0.1 }, m, 1, 42);
+    cfg.client_threads = 8;
+    let manifest = Manifest::synthetic();
+    let mut server = RoundServer::new(&manifest, cfg.clone()).expect("round server");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    results.push(bench_items(
+        &format!("loopback round m={m} [K=10k tcp]"),
+        budget,
+        10,
+        m,
+        || {
+            let swarm_cfg = cfg.clone();
+            let swarm_addr = addr.clone();
+            let swarm = std::thread::spawn(move || {
+                hcfl::transport::run_swarm(&swarm_addr, &swarm_cfg, workers, 0.0)
+                    .expect("swarm session")
+            });
+            let recs = server.serve(&listener, workers, 1).expect("loopback round");
+            assert_eq!(recs[0].selected, m);
+            swarm.join().expect("swarm thread");
+        },
+    ));
+}
+
 fn bench_cfg(scheme: Scheme, workers: usize) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::quickstart();
     cfg.scheme = scheme;
@@ -425,6 +464,7 @@ fn main() {
     aggregation_bench(budget, &mut results);
     session_round_bench(budget, &mut results);
     k10_round_bench(budget, &mut results);
+    loopback_bench(budget, &mut results);
 
     // `--gate-speedup X` enforces the kernel floor (the ISSUE's >=4x
     // ternary pack/unpack target) after the report is written.  Only

@@ -1,0 +1,70 @@
+//! `hcfl-server`: the round server end of the wire transport
+//! (DESIGN.md §8).  Owns an `FlSession`, accepts swarm connections and
+//! pumps `begin_round → submit/mark_dropped → resolve → finalize` from
+//! real sockets, carrying stragglers across rounds.
+//!
+//! Pair it with `hcfl-swarm` started with the same scheme/clients/seed:
+//!
+//! ```text
+//! hcfl-server --addr 127.0.0.1:7878 --clients 1000 --rounds 3 \
+//!             --conns 4 --scheme topk --keep 0.1 --seed 42
+//! ```
+
+use std::net::TcpListener;
+
+use hcfl::compression::Scheme;
+use hcfl::error::{HcflError, Result};
+use hcfl::runtime::Manifest;
+use hcfl::transport::{demo_config, RoundServer};
+use hcfl::util::cli::Args;
+
+fn parse_scheme(args: &Args) -> Result<Scheme> {
+    match args.str_or("scheme", "topk") {
+        "fedavg" => Ok(Scheme::Fedavg),
+        "topk" => Ok(Scheme::TopK {
+            keep: args.f64_or("keep", 0.1)?,
+        }),
+        other => Err(HcflError::Config(format!(
+            "--scheme must be fedavg or topk (engine-free), got '{other}'"
+        ))),
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let addr = args.str_or("addr", "127.0.0.1:7878").to_string();
+    let clients = args.usize_or("clients", 1000)?;
+    let rounds = args.usize_or("rounds", 3)?;
+    let conns = args.usize_or("conns", 4)?;
+    let seed = args.u64_or("seed", 42)?;
+    let scheme = parse_scheme(&args)?;
+
+    let cfg = demo_config(scheme, clients, rounds, seed);
+    let manifest = Manifest::synthetic();
+    let mut server = RoundServer::new(&manifest, cfg)?;
+    let listener = TcpListener::bind(&addr)?;
+    eprintln!("hcfl-server: listening on {addr}, waiting for {conns} swarm connection(s)");
+    let records = server.serve(&listener, conns, rounds)?;
+    for rec in &records {
+        println!(
+            "round {:>3}: {}/{} aggregated, {} dropped, {} cut, {}+ carried, up {:.1} KB, \
+             makespan {:.3}s",
+            rec.round,
+            rec.completed,
+            rec.selected,
+            rec.dropped,
+            rec.stragglers,
+            rec.carried_in,
+            rec.up_bytes as f64 / 1e3,
+            rec.makespan_s,
+        );
+    }
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("hcfl-server: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,62 @@
+//! `hcfl-swarm`: the client end of the wire transport (DESIGN.md §8).
+//! Dials a running `hcfl-server` with a pool of worker connections and
+//! replays the simulated device fleet: seeded fake training, codec
+//! encode, and (optionally) the modelled per-device delays in real
+//! time.
+//!
+//! The scheme/clients/seed flags must match the server's exactly — both
+//! ends rebuild the fleet and shard sizes from the shared seed so only
+//! seeds and slots cross the wire:
+//!
+//! ```text
+//! hcfl-swarm --addr 127.0.0.1:7878 --clients 1000 --workers 4 \
+//!            --scheme topk --keep 0.1 --seed 42 --time-scale 0
+//! ```
+
+use hcfl::compression::Scheme;
+use hcfl::error::{HcflError, Result};
+use hcfl::runtime::Manifest;
+use hcfl::transport::demo_config;
+use hcfl::transport::swarm::validated_swarm;
+use hcfl::util::cli::Args;
+
+fn parse_scheme(args: &Args) -> Result<Scheme> {
+    match args.str_or("scheme", "topk") {
+        "fedavg" => Ok(Scheme::Fedavg),
+        "topk" => Ok(Scheme::TopK {
+            keep: args.f64_or("keep", 0.1)?,
+        }),
+        other => Err(HcflError::Config(format!(
+            "--scheme must be fedavg or topk (engine-free), got '{other}'"
+        ))),
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let addr = args.str_or("addr", "127.0.0.1:7878").to_string();
+    let clients = args.usize_or("clients", 1000)?;
+    let workers = args.usize_or("workers", 4)?;
+    let seed = args.u64_or("seed", 42)?;
+    let time_scale = args.f64_or("time-scale", 0.0)?;
+    let scheme = parse_scheme(&args)?;
+
+    // `rounds` is server-paced; the swarm serves until Shutdown.
+    let cfg = demo_config(scheme, clients, 1, seed);
+    let manifest = Manifest::synthetic();
+    let stats = validated_swarm(&manifest, &addr, &cfg, workers, time_scale)?;
+    println!(
+        "swarm done: {} rounds, {} updates, {:.1} KB sent",
+        stats.rounds,
+        stats.updates_sent,
+        stats.bytes_sent as f64 / 1e3,
+    );
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("hcfl-swarm: {e}");
+        std::process::exit(1);
+    }
+}

@@ -11,6 +11,11 @@
 //!
 //! Every scheme reports its exact wire size so the experiment harness can
 //! reproduce the paper's communication-cost tables.
+//!
+//! The packed byte layouts live in [`wire`], together with the frame
+//! envelope ([`wire::FrameHeader`]) that carries them over real
+//! connections; [`Scheme::codec_tag`] is the envelope's single-byte
+//! codec identifier.  DESIGN.md §8 is the normative byte-level spec.
 
 pub mod hcfl;
 pub mod simd;
@@ -45,6 +50,22 @@ impl Scheme {
             Scheme::Hcfl { ratio } => format!("HCFL 1:{ratio}"),
             Scheme::Ternary => "T-FedAvg".to_string(),
             Scheme::TopK { keep } => format!("TopK {keep:.2}"),
+        }
+    }
+
+    /// The single-byte codec identifier carried in every frame
+    /// envelope ([`wire::FrameHeader::codec`]).  Both endpoints derive
+    /// it from their own configuration and reject a mismatch, so a
+    /// server and a swarm started with different schemes fail fast
+    /// instead of mis-decoding payloads.  The values are wire protocol
+    /// and must never be reused: 0 = raw, 1 = HCFL, 2 = ternary,
+    /// 3 = sparse Top-K.
+    pub fn codec_tag(&self) -> u8 {
+        match self {
+            Scheme::Fedavg => 0,
+            Scheme::Hcfl { .. } => 1,
+            Scheme::Ternary => 2,
+            Scheme::TopK { .. } => 3,
         }
     }
 }
@@ -124,6 +145,21 @@ pub trait Compressor: Send + Sync {
     /// supplies reusable internal buffers (e.g. the sparse index
     /// stream).  This is the round pipeline's decode path; the
     /// structured [`Compressor::decompress`] remains the reference.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use hcfl::compression::{Compressor, Identity, WireScratch};
+    ///
+    /// let codec = Identity;
+    /// let upd = codec.compress(&[1.0, -2.0], 0).unwrap();
+    /// let mut scratch = WireScratch::new();
+    /// let wire = scratch.pack_update(&upd.payload).unwrap();
+    ///
+    /// let mut out = Vec::new();
+    /// codec.unpack_into(&wire.bytes, 2, 0, &mut scratch, &mut out).unwrap();
+    /// assert_eq!(out, vec![1.0, -2.0]);
+    /// ```
     fn unpack_into(
         &self,
         bytes: &[u8],
@@ -138,6 +174,18 @@ pub trait Compressor: Send + Sync {
     /// `Δ = w_local − w_broadcast`, or the raw weights of the paper's
     /// Algorithm 1.  Scheme-independent framing shared by every codec
     /// (provided method), applied *before* [`Compressor::compress`].
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use hcfl::compression::{Compressor, Identity};
+    ///
+    /// let codec = Identity;
+    /// let delta = codec.encode_payload(&[1.5, 2.0], &[1.0, 1.0], true);
+    /// assert_eq!(delta, vec![0.5, 1.0]);
+    /// let raw = codec.encode_payload(&[1.5, 2.0], &[1.0, 1.0], false);
+    /// assert_eq!(raw, vec![1.5, 2.0]);
+    /// ```
     fn encode_payload(&self, params: &[f32], global: &[f32], encode_deltas: bool) -> Vec<f32> {
         if encode_deltas {
             params.iter().zip(global).map(|(w, g)| w - g).collect()

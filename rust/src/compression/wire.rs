@@ -44,6 +44,12 @@
 //! [`Payload`]) kept as the reference, and the zero-copy
 //! `unpack_*_into` one that writes dequantized f32s straight into a
 //! caller-provided leaf buffer without intermediate `Vec`s.
+//!
+//! On a real connection every payload travels inside the fixed 24-byte
+//! [`FrameHeader`] envelope (magic, version, message type, codec tag,
+//! flags, round id, client id, payload length, CRC-32) defined at the
+//! bottom of this module and specified byte-for-byte in DESIGN.md §8;
+//! the blocking frame I/O lives in [`crate::transport`].
 
 use crate::compression::{simd, ChunkCode, Payload, RangeCodes, TernaryChunk};
 use crate::error::{HcflError, Result};
@@ -581,6 +587,198 @@ pub fn unpack_sparse_into_scratch(
     res
 }
 
+// ---------------------------------------------------------------------------
+// Frame envelope (transport layer)
+// ---------------------------------------------------------------------------
+
+/// Frame magic: the ASCII bytes `HCFL` read as a little-endian u32
+/// (`0x4C464348`), i.e. the literal bytes `48 43 46 4C` on the wire.
+pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"HCFL");
+
+/// The only protocol version this build speaks; anything else is
+/// rejected at parse time.
+pub const FRAME_VERSION: u8 = 1;
+
+/// Packed envelope size on the wire, always exactly this many bytes.
+pub const FRAME_HEADER_LEN: usize = 24;
+
+/// Frame flag bit 0: an `Update` payload carries a trailing
+/// exact-params block (uncompressed f32s for server-side
+/// reconstruction-MSE instrumentation).
+pub const FLAG_EXACT_PARAMS: u8 = 0b0000_0001;
+
+/// The message types of the round protocol (DESIGN.md §8).  The
+/// numeric values are the wire encoding and must never be reused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum MsgType {
+    /// Client → server, first frame on a connection: announces a swarm
+    /// worker (worker index in the `client` field, empty payload).
+    Hello = 1,
+    /// Server → client: round parameters, this connection's work
+    /// assignments and the broadcast global model.
+    RoundOpen = 2,
+    /// Client → server: one finished assignment — the packed wire
+    /// update plus its metadata.
+    Update = 3,
+    /// Server → client: the round resolved and finalized (empty
+    /// payload).
+    RoundDone = 4,
+    /// Server → client: the session is over, close the connection
+    /// (empty payload).
+    Shutdown = 5,
+}
+
+impl MsgType {
+    /// Decode a wire byte, rejecting unknown message types.
+    pub fn from_u8(v: u8) -> Result<MsgType> {
+        match v {
+            1 => Ok(MsgType::Hello),
+            2 => Ok(MsgType::RoundOpen),
+            3 => Ok(MsgType::Update),
+            4 => Ok(MsgType::RoundDone),
+            5 => Ok(MsgType::Shutdown),
+            other => Err(HcflError::Config(format!(
+                "frame has unknown message type {other}"
+            ))),
+        }
+    }
+}
+
+/// The fixed 24-byte envelope in front of every payload on a real
+/// connection.  All fields little-endian; byte offsets:
+///
+/// | off | size | field                                   |
+/// |-----|------|-----------------------------------------|
+/// | 0   | 4    | magic [`FRAME_MAGIC`] (`48 43 46 4C`)   |
+/// | 4   | 1    | version [`FRAME_VERSION`]               |
+/// | 5   | 1    | message type ([`MsgType`])              |
+/// | 6   | 1    | codec tag ([`super::Scheme::codec_tag`])|
+/// | 7   | 1    | flags ([`FLAG_EXACT_PARAMS`])           |
+/// | 8   | 4    | round id                                |
+/// | 12  | 4    | client id (worker index on `Hello`)     |
+/// | 16  | 4    | payload length in bytes                 |
+/// | 20  | 4    | CRC-32 of the payload ([`crc32`])       |
+///
+/// The header itself is not covered by the CRC — a corrupted header is
+/// caught by the magic/version/type checks or by the payload checksum
+/// failing against the wrong length.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// What kind of message the payload is.
+    pub msg_type: MsgType,
+    /// The session's codec tag; receivers reject a mismatch against
+    /// their configured scheme before touching the payload.
+    pub codec: u8,
+    /// Per-message flag bits (currently only [`FLAG_EXACT_PARAMS`]).
+    pub flags: u8,
+    /// Round the message belongs to (0 on `Hello`).
+    pub round: u32,
+    /// Simulated client id, or the worker index on `Hello`.
+    pub client: u32,
+    /// Payload length in bytes (may be 0).
+    pub len: u32,
+    /// CRC-32 (IEEE, reflected) of the payload bytes; 0 for an empty
+    /// payload.
+    pub crc: u32,
+}
+
+impl FrameHeader {
+    /// Build a header for `payload`, computing its length and CRC.
+    pub fn for_payload(
+        msg_type: MsgType,
+        codec: u8,
+        flags: u8,
+        round: u32,
+        client: u32,
+        payload: &[u8],
+    ) -> FrameHeader {
+        FrameHeader {
+            msg_type,
+            codec,
+            flags,
+            round,
+            client,
+            len: payload.len() as u32,
+            crc: crc32(payload),
+        }
+    }
+
+    /// Serialize to the 24 wire bytes.
+    pub fn pack(&self) -> [u8; FRAME_HEADER_LEN] {
+        let mut b = [0u8; FRAME_HEADER_LEN];
+        b[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+        b[4] = FRAME_VERSION;
+        b[5] = self.msg_type as u8;
+        b[6] = self.codec;
+        b[7] = self.flags;
+        b[8..12].copy_from_slice(&self.round.to_le_bytes());
+        b[12..16].copy_from_slice(&self.client.to_le_bytes());
+        b[16..20].copy_from_slice(&self.len.to_le_bytes());
+        b[20..24].copy_from_slice(&self.crc.to_le_bytes());
+        b
+    }
+
+    /// Parse 24 wire bytes, rejecting bad magic, unknown versions and
+    /// unknown message types.  Length and CRC are validated by the
+    /// frame reader once the payload is in hand.
+    pub fn parse(bytes: &[u8; FRAME_HEADER_LEN]) -> Result<FrameHeader> {
+        let magic = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+        if magic != FRAME_MAGIC {
+            return Err(HcflError::Config(format!(
+                "frame has bad magic {magic:#010x} (expected {FRAME_MAGIC:#010x})"
+            )));
+        }
+        if bytes[4] != FRAME_VERSION {
+            return Err(HcflError::Config(format!(
+                "frame has unsupported protocol version {} (expected {FRAME_VERSION})",
+                bytes[4]
+            )));
+        }
+        Ok(FrameHeader {
+            msg_type: MsgType::from_u8(bytes[5])?,
+            codec: bytes[6],
+            flags: bytes[7],
+            round: u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]),
+            client: u32::from_le_bytes([bytes[12], bytes[13], bytes[14], bytes[15]]),
+            len: u32::from_le_bytes([bytes[16], bytes[17], bytes[18], bytes[19]]),
+            crc: u32::from_le_bytes([bytes[20], bytes[21], bytes[22], bytes[23]]),
+        })
+    }
+}
+
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32/IEEE (reflected, polynomial `0xEDB88320`, init and final
+/// XOR `0xFFFFFFFF`) — the same variant as zlib/Ethernet, hand-rolled
+/// over a const table to keep the crate dependency-free.  An empty
+/// input hashes to 0.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -747,5 +945,41 @@ mod tests {
         let leaf2 = scratch.take_f32();
         assert!(leaf2.is_empty());
         assert_eq!(leaf2.as_ptr(), lptr);
+    }
+
+    #[test]
+    fn crc32_matches_reference_vectors() {
+        // zlib/IEEE reference values
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn frame_header_round_trips() {
+        let h = FrameHeader::for_payload(MsgType::Update, 3, FLAG_EXACT_PARAMS, 7, 42, b"abc");
+        assert_eq!(h.len, 3);
+        assert_eq!(h.crc, crc32(b"abc"));
+        let packed = h.pack();
+        assert_eq!(&packed[0..4], b"HCFL");
+        assert_eq!(packed[4], FRAME_VERSION);
+        let back = FrameHeader::parse(&packed).unwrap();
+        assert_eq!(back, h);
+    }
+
+    #[test]
+    fn frame_header_rejects_garbage() {
+        let good = FrameHeader::for_payload(MsgType::Hello, 0, 0, 0, 1, b"").pack();
+        let mut bad_magic = good;
+        bad_magic[0] ^= 0xFF;
+        assert!(FrameHeader::parse(&bad_magic).is_err());
+        let mut bad_version = good;
+        bad_version[4] = 99;
+        assert!(FrameHeader::parse(&bad_version).is_err());
+        let mut bad_type = good;
+        bad_type[5] = 0;
+        assert!(FrameHeader::parse(&bad_type).is_err());
+        bad_type[5] = 6;
+        assert!(FrameHeader::parse(&bad_type).is_err());
     }
 }

@@ -224,6 +224,48 @@ impl FlSession {
     /// downlink rule, see `ExperimentConfig::compress_downlink`) and
     /// ingest the previous round's carry-over, expiring updates older
     /// than the carry policy allows.
+    ///
+    /// # Examples
+    ///
+    /// A minimal driver: open a round against an identity codec, observe
+    /// the broadcast, and resolve it with no arrivals (every selected
+    /// device vanished this round).
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    ///
+    /// use hcfl::compression::Identity;
+    /// use hcfl::coordinator::clock::RoundPolicy;
+    /// use hcfl::coordinator::pool::WorkerPool;
+    /// use hcfl::coordinator::session::{CarryOver, CarryPolicy, FlSession};
+    /// use hcfl::fl::{AggregatorKind, Server};
+    /// use hcfl::runtime::Manifest;
+    /// use hcfl::util::rng::Rng;
+    ///
+    /// # fn main() -> hcfl::error::Result<()> {
+    /// let model = Manifest::synthetic().model("fake")?.clone();
+    /// let server = Server::new(&model, &mut Rng::new(5));
+    /// let mut fl = FlSession::new(
+    ///     server,
+    ///     Arc::new(Identity),
+    ///     AggregatorKind::UniformMean,
+    ///     CarryPolicy::Discard,
+    ///     true,  // encode_deltas
+    ///     false, // compress_downlink: account the raw 4*d broadcast
+    /// );
+    ///
+    /// let round = fl.begin_round(1, CarryOver::empty())?;
+    /// assert_eq!(round.down_bytes(), 4 * round.global().len());
+    ///
+    /// // No submit()/mark_dropped() calls: the round still resolves and
+    /// // finalizes cleanly, leaving the global model untouched.
+    /// let pool = WorkerPool::new(1, 1)?;
+    /// let (record, carry) = round.resolve(&RoundPolicy::Synchronous).finalize(&pool)?;
+    /// assert_eq!(record.completed, 0);
+    /// assert!(carry.is_empty());
+    /// # Ok(())
+    /// # }
+    /// ```
     pub fn begin_round(&mut self, t: usize, carry: CarryOver) -> Result<RoundSession<'_, Open>> {
         let wall0 = Instant::now();
         let down_bytes = if self.compress_downlink {

@@ -4,10 +4,11 @@
 //! Algorithm 1 of the paper is the uniform streaming mean over arrivals
 //! ([`UniformMean`], bit-identical to [`super::RunningAverage`]).  The
 //! semi-synchronous policies of the clock layer motivate two more:
-//! [`SampleWeighted`] (classic FedAvg `n_k / n` weighting, which matters
-//! once deadline cuts make the surviving set biased) and
-//! [`StalenessDiscounted`] (exponentially down-weights late arrivals
-//! relative to the fastest, as in adaptive/asynchronous FL for IoT).
+//! [`AggregatorKind::SampleWeighted`] (classic FedAvg `n_k / n`
+//! weighting, which matters once deadline cuts make the surviving set
+//! biased) and [`AggregatorKind::StalenessDiscounted`] (exponentially
+//! down-weights late arrivals relative to the fastest, as in
+//! adaptive/asynchronous FL for IoT).
 //!
 //! Two folds implement those rules:
 //!

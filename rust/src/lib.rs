@@ -35,6 +35,7 @@ pub mod network;
 pub mod runtime;
 pub mod tensor;
 pub mod theory;
+pub mod transport;
 pub mod util;
 
 /// Convenient re-exports for examples and binaries.
@@ -52,4 +53,5 @@ pub mod prelude {
     pub use crate::network::{DeviceFleet, DevicePreset, DeviceProfile};
     pub use crate::runtime::{Engine, Manifest};
     pub use crate::tensor::TensorValue;
+    pub use crate::transport::{run_loopback, run_swarm, RoundServer};
 }

@@ -9,6 +9,7 @@
 //! with its own seeded RNG stream so device assignment never perturbs
 //! client selection or training randomness.
 
+use super::LinkModel;
 use crate::util::rng::Rng;
 
 /// One client's hardware/connectivity profile, relative to the reference
@@ -36,6 +37,28 @@ impl DeviceProfile {
             compute_mult: 1.0,
             dropout_p: 0.0,
         }
+    }
+
+    /// The wall-clock delay a live transport client replays for this
+    /// device: modelled broadcast receive + local compute + upload air
+    /// time, exactly the arrival formula of
+    /// [`crate::coordinator::clock::client_timing`] so a swarm worker
+    /// sleeping this long reproduces the simulator's round timeline.
+    /// `base_compute_s` is the reference-device train+encode time the
+    /// replayer measured for itself; dropouts are not replayed (the
+    /// server's seeded dropout stream decides them).
+    pub fn replay_delay_s(
+        &self,
+        link: &LinkModel,
+        up_bytes: usize,
+        down_bytes: usize,
+        base_compute_s: f64,
+        selected: usize,
+        transmitting: usize,
+    ) -> f64 {
+        link.downlink_time(down_bytes, selected) / self.downlink_mult.max(1e-9)
+            + base_compute_s * self.compute_mult
+            + link.uplink_time(up_bytes, transmitting) / self.uplink_mult.max(1e-9)
     }
 }
 
@@ -163,6 +186,24 @@ mod tests {
             assert_eq!(a.profile(k), b.profile(k));
         }
         assert!((0..64).any(|k| a.profile(k) != c.profile(k)));
+    }
+
+    #[test]
+    fn replay_delay_matches_the_clock_formula() {
+        let link = LinkModel::default();
+        let slow = DeviceProfile {
+            uplink_mult: 0.125,
+            downlink_mult: 1.0,
+            compute_mult: 8.0,
+            dropout_p: 0.0,
+        };
+        let got = slow.replay_delay_s(&link, 1000, 4000, 0.01, 10, 8);
+        let want = link.downlink_time(4000, 10) + 0.01 * 8.0 + link.uplink_time(1000, 8) / 0.125;
+        assert!((got - want).abs() < 1e-12, "got {got}, want {want}");
+        // the reference device replays the unscaled sum
+        let r = DeviceProfile::reference().replay_delay_s(&link, 1000, 4000, 0.01, 10, 8);
+        let base = link.downlink_time(4000, 10) + 0.01 + link.uplink_time(1000, 8);
+        assert!((r - base).abs() < 1e-12);
     }
 
     #[test]

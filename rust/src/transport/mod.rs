@@ -1,0 +1,621 @@
+//! Real wire transport: blocking length-prefixed TCP framing for the
+//! round protocol, plus the message payload codecs shared by the
+//! [`server`] and [`swarm`] endpoints.
+//!
+//! Every message is one *frame*: the fixed 24-byte
+//! [`FrameHeader`](crate::compression::wire::FrameHeader) envelope
+//! (magic, version, message type, codec tag, flags, round id, client
+//! id, payload length, CRC-32) followed by exactly `len` payload
+//! bytes.  The envelope and every payload layout are specified
+//! byte-for-byte in DESIGN.md §8; this module is the executable form
+//! of that spec.  Everything is hand-rolled little-endian over
+//! `std::net` — no serde, no async runtime, zero dependencies,
+//! matching the rest of the crate.
+//!
+//! The protocol is a strict request/response round pump:
+//!
+//! ```text
+//! swarm worker                      round server
+//!   Hello(worker idx)       ──>       (validates codec tag)
+//!                           <──     RoundOpen(params, assignments, global)
+//!   Update(slot, wire, …)*  ──>       submit / mark_dropped
+//!                           <──     RoundDone            (per round)
+//!                           <──     Shutdown             (end of session)
+//! ```
+//!
+//! The **frame boundary is the hardened surface**: a malformed frame
+//! (bad magic/version/type, oversized declared length, checksum
+//! mismatch, truncation) or a malformed message payload is rejected
+//! without panicking, and the server merely retires that connection —
+//! the round stays open and unfulfilled assignments are accounted as
+//! device dropouts (`tests/transport_malformed.rs`).  Payload
+//! *contents* past that boundary (the packed codec buffers) are
+//! validated by the PR-6-hardened parsers in [`crate::compression`]
+//! at decode time; the swarm is a trusted load generator, not an
+//! adversary.
+
+#![deny(missing_docs)]
+
+pub mod server;
+pub mod swarm;
+
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::Arc;
+
+use crate::compression::wire::{crc32, FrameHeader, MsgType, FRAME_HEADER_LEN};
+use crate::compression::{Compressor, Identity, Scheme, TopKCompressor};
+use crate::config::ExperimentConfig;
+use crate::error::{HcflError, Result};
+use crate::metrics::RoundRecord;
+use crate::runtime::Manifest;
+
+pub use self::server::RoundServer;
+pub use self::swarm::{run_swarm, SwarmStats};
+
+/// Default cap on a declared payload length (64 MiB).  The reader
+/// rejects bigger declarations *before* allocating, so a forged header
+/// cannot force an out-of-memory allocation.
+pub const DEFAULT_MAX_FRAME: usize = 64 << 20;
+
+/// One decoded frame: the parsed envelope plus its verified payload.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    /// The parsed 24-byte envelope.
+    pub header: FrameHeader,
+    /// Payload bytes; length and CRC already verified against the
+    /// header.
+    pub payload: Vec<u8>,
+}
+
+/// Write one frame: the packed envelope (with computed length and
+/// CRC-32) followed by the payload bytes.
+pub fn write_frame<W: Write>(
+    w: &mut W,
+    msg_type: MsgType,
+    codec: u8,
+    flags: u8,
+    round: u32,
+    client: u32,
+    payload: &[u8],
+) -> Result<()> {
+    let header = FrameHeader::for_payload(msg_type, codec, flags, round, client, payload);
+    w.write_all(&header.pack())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame, enforcing every envelope rule: exactly 24 header
+/// bytes (a short read is an I/O error), valid magic/version/type, a
+/// declared length within `max_frame` (checked before any allocation),
+/// exactly `len` payload bytes, and a matching payload CRC-32.
+pub fn read_frame<R: Read>(r: &mut R, max_frame: usize) -> Result<Frame> {
+    let mut head = [0u8; FRAME_HEADER_LEN];
+    r.read_exact(&mut head)?;
+    let header = FrameHeader::parse(&head)?;
+    let len = header.len as usize;
+    if len > max_frame {
+        return Err(HcflError::Config(format!(
+            "frame declares a {len}-byte payload, cap is {max_frame}"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    let crc = crc32(&payload);
+    if crc != header.crc {
+        return Err(HcflError::Config(format!(
+            "frame checksum mismatch: payload hashes to {crc:#010x}, header says {:#010x}",
+            header.crc
+        )));
+    }
+    Ok(Frame { header, payload })
+}
+
+// ---------------------------------------------------------------------------
+// Payload cursor
+// ---------------------------------------------------------------------------
+
+/// Little-endian byte cursor over a message payload; every read is
+/// bounds-checked so a truncated or overlong payload becomes a typed
+/// error, never a panic or a silent misparse.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(HcflError::Config(format!(
+                "message payload truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// `count` little-endian f32s, length-checked before allocating.
+    fn f32_vec(&mut self, count: usize) -> Result<Vec<f32>> {
+        let bytes = self.take(4 * count)?;
+        let mut out = Vec::with_capacity(count);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(out)
+    }
+
+    /// Reject trailing garbage: a valid message consumes its payload
+    /// exactly.
+    fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(HcflError::Config(format!(
+                "message payload has {} trailing bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    for v in vs {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RoundOpen
+// ---------------------------------------------------------------------------
+
+/// One unit of client work inside a [`RoundOpenMsg`]: which selection
+/// slot it fills, which simulated client it impersonates, and the
+/// client's private RNG seed for the round — the same triple as
+/// [`crate::coordinator::pool::WorkSpec`], so socket and in-process
+/// rounds compute identical updates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    /// Selection slot within the round.
+    pub slot: u32,
+    /// Global client id.
+    pub client: u32,
+    /// The client's private RNG seed (`round_seed ^ (client << 1)`).
+    pub seed: u64,
+}
+
+/// The `RoundOpen` payload: round hyperparameters, this connection's
+/// work assignments, the round's cell population, and the broadcast
+/// global model (layout in DESIGN.md §8.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundOpenMsg {
+    /// Local epochs E.
+    pub epochs: u32,
+    /// Local mini-batch size B.
+    pub batch: u32,
+    /// Learning rate.
+    pub lr: f32,
+    /// Encode `Δ = w_local − w_broadcast` instead of raw weights.
+    pub encode_deltas: bool,
+    /// Clients must append their exact post-training parameters to each
+    /// `Update` (server-side reconstruction-MSE instrumentation).
+    pub send_exact: bool,
+    /// Selected clients this round (m) — the downlink cell population.
+    pub selected: u32,
+    /// Clients that will transmit this round (m minus dropouts) — the
+    /// uplink cell population for timing replay.
+    pub transmitting: u32,
+    /// This connection's share of the round's work.
+    pub assignments: Vec<Assignment>,
+    /// The broadcast global model, all `d` parameters.
+    pub global: Vec<f32>,
+}
+
+impl RoundOpenMsg {
+    /// Serialize to the §8.3 payload layout.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(32 + 16 * self.assignments.len() + 4 * self.global.len());
+        put_u32(&mut out, self.epochs);
+        put_u32(&mut out, self.batch);
+        out.extend_from_slice(&self.lr.to_bits().to_le_bytes());
+        out.push(self.encode_deltas as u8);
+        out.push(self.send_exact as u8);
+        out.extend_from_slice(&0u16.to_le_bytes()); // reserved
+        put_u32(&mut out, self.selected);
+        put_u32(&mut out, self.transmitting);
+        put_u32(&mut out, self.assignments.len() as u32);
+        for a in &self.assignments {
+            put_u32(&mut out, a.slot);
+            put_u32(&mut out, a.client);
+            out.extend_from_slice(&a.seed.to_le_bytes());
+        }
+        put_u32(&mut out, self.global.len() as u32);
+        put_f32s(&mut out, &self.global);
+        out
+    }
+
+    /// Parse a §8.3 payload, rejecting truncation, nonzero reserved
+    /// bytes, non-boolean flag bytes and trailing garbage; counted
+    /// sections are length-checked before any count-sized allocation.
+    pub fn decode(payload: &[u8]) -> Result<RoundOpenMsg> {
+        let mut r = Reader::new(payload);
+        let epochs = r.u32()?;
+        let batch = r.u32()?;
+        let lr = r.f32()?;
+        let encode_deltas = decode_bool(r.u8()?, "encode_deltas")?;
+        let send_exact = decode_bool(r.u8()?, "send_exact")?;
+        let reserved = r.u16()?;
+        if reserved != 0 {
+            return Err(HcflError::Config(format!(
+                "RoundOpen reserved field must be 0, got {reserved}"
+            )));
+        }
+        let selected = r.u32()?;
+        let transmitting = r.u32()?;
+        let n_assign = r.u32()? as usize;
+        if r.remaining() < 16 * n_assign {
+            return Err(HcflError::Config(format!(
+                "RoundOpen declares {n_assign} assignments but only {} bytes follow",
+                r.remaining()
+            )));
+        }
+        let mut assignments = Vec::with_capacity(n_assign);
+        for _ in 0..n_assign {
+            assignments.push(Assignment {
+                slot: r.u32()?,
+                client: r.u32()?,
+                seed: r.u64()?,
+            });
+        }
+        let d = r.u32()? as usize;
+        let global = r.f32_vec(d)?;
+        r.finish()?;
+        Ok(RoundOpenMsg {
+            epochs,
+            batch,
+            lr,
+            encode_deltas,
+            send_exact,
+            selected,
+            transmitting,
+            assignments,
+            global,
+        })
+    }
+}
+
+fn decode_bool(b: u8, field: &str) -> Result<bool> {
+    match b {
+        0 => Ok(false),
+        1 => Ok(true),
+        other => Err(HcflError::Config(format!(
+            "{field} must be 0 or 1, got {other}"
+        ))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Update
+// ---------------------------------------------------------------------------
+
+/// The `Update` payload: one finished assignment — the packed codec
+/// wire buffer plus the metadata the session layer needs (layout in
+/// DESIGN.md §8.4).  The trailing exact-params block is present iff
+/// the frame carries
+/// [`FLAG_EXACT_PARAMS`](crate::compression::wire::FLAG_EXACT_PARAMS).
+#[derive(Debug, Clone, PartialEq)]
+pub struct UpdateMsg {
+    /// Selection slot this update fulfils.
+    pub slot: u32,
+    /// Global client id of the (simulated) sender.
+    pub client: u32,
+    /// Samples on the sender's shard (FedAvg `n_k`).
+    pub n_samples: u32,
+    /// Measured train + encode wall time, seconds.
+    pub train_s: f64,
+    /// The packed codec wire buffer (`compression/wire.rs` layouts).
+    pub wire: Vec<u8>,
+    /// Exact post-training parameters (empty unless the frame's
+    /// exact-params flag is set).
+    pub exact: Vec<f32>,
+}
+
+impl UpdateMsg {
+    /// Serialize to the §8.4 payload layout; the exact block is
+    /// appended only when `self.exact` is non-empty (the frame's flag
+    /// byte must agree).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(24 + self.wire.len() + 4 * self.exact.len());
+        put_u32(&mut out, self.slot);
+        put_u32(&mut out, self.client);
+        put_u32(&mut out, self.n_samples);
+        out.extend_from_slice(&self.train_s.to_bits().to_le_bytes());
+        put_u32(&mut out, self.wire.len() as u32);
+        out.extend_from_slice(&self.wire);
+        if !self.exact.is_empty() {
+            put_u32(&mut out, self.exact.len() as u32);
+            put_f32s(&mut out, &self.exact);
+        }
+        out
+    }
+
+    /// Parse a §8.4 payload.  `has_exact` is the frame's
+    /// exact-params flag: when set, a trailing exact block is
+    /// mandatory; when clear, its presence is trailing garbage.
+    pub fn decode(payload: &[u8], has_exact: bool) -> Result<UpdateMsg> {
+        let mut r = Reader::new(payload);
+        let slot = r.u32()?;
+        let client = r.u32()?;
+        let n_samples = r.u32()?;
+        let train_s = r.f64()?;
+        let wire_len = r.u32()? as usize;
+        let wire = r.take(wire_len)?.to_vec();
+        let exact = if has_exact {
+            let n = r.u32()? as usize;
+            r.f32_vec(n)?
+        } else {
+            Vec::new()
+        };
+        r.finish()?;
+        Ok(UpdateMsg {
+            slot,
+            client,
+            n_samples,
+            train_s,
+            wire,
+            exact,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared endpoint helpers
+// ---------------------------------------------------------------------------
+
+/// Build the codec both endpoints run.  The transport layer is
+/// engine-free (no PJRT artifacts on either side of the socket), so
+/// only the engine-free schemes serve; HCFL/ternary need the engine
+/// and go through the in-process [`crate::coordinator::Simulation`].
+pub fn engine_free_compressor(scheme: &Scheme) -> Result<Arc<dyn Compressor>> {
+    match scheme {
+        Scheme::Fedavg => Ok(Arc::new(Identity)),
+        Scheme::TopK { keep } => Ok(Arc::new(TopKCompressor::new(*keep)?)),
+        other => Err(HcflError::Config(format!(
+            "transport serving supports engine-free schemes (fedavg/topk), got {}",
+            other.label()
+        ))),
+    }
+}
+
+/// The shared server/swarm demo configuration: the engine-free
+/// fake-train setup both binaries must agree on byte-for-byte (same
+/// seed → same selection, fleet, shard sizes and work seeds on both
+/// ends of the socket).  Mirrors the K=10k acceptance configuration of
+/// `tests/round10k.rs`, scaled by `n_clients`.
+pub fn demo_config(scheme: Scheme, n_clients: usize, rounds: usize, seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::mnist(scheme, rounds);
+    cfg.model = "fake".into();
+    cfg.fake_train = true;
+    cfg.n_clients = n_clients;
+    cfg.data.n_clients = n_clients;
+    cfg.participation = 1.0;
+    cfg.batch = 16;
+    cfg.data.per_client = 64;
+    cfg.data.test_n = 16;
+    cfg.data.server_n = 8;
+    cfg.data.lazy_shards = true;
+    cfg.client_threads = 4;
+    cfg.engine_workers = 2;
+    cfg.seed = seed;
+    cfg
+}
+
+/// Everything a loopback session produced: the per-round records and
+/// final global model from the server side, and the swarm's traffic
+/// stats from the client side.
+#[derive(Debug)]
+pub struct LoopbackRun {
+    /// One record per completed round, server-side.
+    pub records: Vec<RoundRecord>,
+    /// The final global model after the last round.
+    pub global: Vec<f32>,
+    /// Aggregated swarm-side traffic counters.
+    pub swarm: SwarmStats,
+}
+
+/// Run a full server + swarm session over real TCP connections on
+/// localhost: bind an ephemeral port, serve `cfg.rounds` rounds to
+/// `workers` swarm connections, and return both sides' outputs.  With
+/// `time_scale` 0 the swarm skips its timing-replay sleeps (tests and
+/// benches); 1.0 replays the modelled device delays in real time.
+pub fn run_loopback(
+    manifest: &Manifest,
+    cfg: &ExperimentConfig,
+    workers: usize,
+    time_scale: f64,
+) -> Result<LoopbackRun> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let mut server = RoundServer::new(manifest, cfg.clone())?;
+    let rounds = cfg.rounds;
+    let swarm_cfg = cfg.clone();
+    let swarm = std::thread::Builder::new()
+        .name("hcfl-swarm".into())
+        .spawn(move || run_swarm(&addr, &swarm_cfg, workers, time_scale))
+        .map_err(|e| HcflError::Engine(format!("swarm spawn failed: {e}")))?;
+    let served = server.serve(&listener, workers, rounds);
+    let stats = swarm
+        .join()
+        .map_err(|_| HcflError::Engine("swarm thread panicked".into()))?;
+    Ok(LoopbackRun {
+        records: served?,
+        global: server.into_global(),
+        swarm: stats?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip_over_a_cursor() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, MsgType::Update, 3, 1, 7, 42, b"payload").unwrap();
+        assert_eq!(buf.len(), FRAME_HEADER_LEN + 7);
+        let frame = read_frame(&mut Cursor::new(&buf), DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(frame.header.msg_type, MsgType::Update);
+        assert_eq!(frame.header.codec, 3);
+        assert_eq!(frame.header.flags, 1);
+        assert_eq!(frame.header.round, 7);
+        assert_eq!(frame.header.client, 42);
+        assert_eq!(frame.payload, b"payload");
+    }
+
+    #[test]
+    fn round_open_roundtrip() {
+        let msg = RoundOpenMsg {
+            epochs: 5,
+            batch: 16,
+            lr: 0.05,
+            encode_deltas: true,
+            send_exact: true,
+            selected: 10,
+            transmitting: 9,
+            assignments: vec![
+                Assignment {
+                    slot: 0,
+                    client: 3,
+                    seed: 0xDEAD_BEEF_0BAD_F00D,
+                },
+                Assignment {
+                    slot: 4,
+                    client: 7,
+                    seed: 1,
+                },
+            ],
+            global: vec![1.0, -2.5, 0.0],
+        };
+        let bytes = msg.encode();
+        assert_eq!(bytes.len(), 32 + 2 * 16 + 3 * 4);
+        assert_eq!(RoundOpenMsg::decode(&bytes).unwrap(), msg);
+    }
+
+    #[test]
+    fn update_roundtrip_with_and_without_exact() {
+        let with = UpdateMsg {
+            slot: 2,
+            client: 9,
+            n_samples: 64,
+            train_s: 0.125,
+            wire: vec![1, 2, 3, 4, 5],
+            exact: vec![0.5, -0.5],
+        };
+        let bytes = with.encode();
+        assert_eq!(UpdateMsg::decode(&bytes, true).unwrap(), with);
+        let without = UpdateMsg {
+            exact: Vec::new(),
+            ..with.clone()
+        };
+        let bytes = without.encode();
+        assert_eq!(UpdateMsg::decode(&bytes, false).unwrap(), without);
+        // flag says exact but the block is missing -> truncation error
+        assert!(UpdateMsg::decode(&bytes, true).is_err());
+        // no flag but an exact block present -> trailing garbage
+        assert!(UpdateMsg::decode(&with.encode(), false).is_err());
+    }
+
+    #[test]
+    fn decoders_reject_malformed_payloads() {
+        let msg = RoundOpenMsg {
+            epochs: 1,
+            batch: 16,
+            lr: 0.1,
+            encode_deltas: false,
+            send_exact: false,
+            selected: 2,
+            transmitting: 2,
+            assignments: vec![Assignment {
+                slot: 0,
+                client: 0,
+                seed: 0,
+            }],
+            global: vec![1.0, 2.0],
+        };
+        let good = msg.encode();
+        // truncation at every prefix must error, never panic
+        for cut in 0..good.len() {
+            assert!(RoundOpenMsg::decode(&good[..cut]).is_err(), "cut={cut}");
+        }
+        // trailing garbage
+        let mut long = good.clone();
+        long.push(0);
+        assert!(RoundOpenMsg::decode(&long).is_err());
+        // forged assignment count with no bytes behind it
+        let mut forged = good.clone();
+        forged[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(RoundOpenMsg::decode(&forged).is_err());
+        // non-boolean flag byte
+        let mut flag = good.clone();
+        flag[12] = 2;
+        assert!(RoundOpenMsg::decode(&flag).is_err());
+        // nonzero reserved bytes
+        let mut reserved = good;
+        reserved[14] = 1;
+        assert!(RoundOpenMsg::decode(&reserved).is_err());
+    }
+
+    #[test]
+    fn engine_free_compressor_gates_schemes() {
+        assert!(engine_free_compressor(&Scheme::Fedavg).is_ok());
+        assert!(engine_free_compressor(&Scheme::TopK { keep: 0.1 }).is_ok());
+        assert!(engine_free_compressor(&Scheme::Ternary).is_err());
+        assert!(engine_free_compressor(&Scheme::Hcfl { ratio: 8 }).is_err());
+    }
+}

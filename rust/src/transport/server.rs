@@ -1,0 +1,438 @@
+//! The round server: owns an [`FlSession`] and pumps its
+//! `begin_round → submit/mark_dropped → resolve → finalize` lifecycle
+//! from real TCP connections instead of the in-process pool channel.
+//!
+//! The server is the deterministic side of the wire: it runs the exact
+//! driver recipe of [`crate::coordinator::Simulation::run_round`] —
+//! same selection stream, same per-round dropout stream, same work
+//! seeds, same timing model — so a loopback round is bit-identical to
+//! the in-process path (modulo measured wall-clock fields).  The swarm
+//! on the other side of the socket is untrusted at the frame boundary:
+//! any malformed frame or protocol violation retires that connection
+//! (its unfulfilled assignments become device losses) and the round
+//! still completes.
+
+use std::io::Read;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use super::{
+    engine_free_compressor, read_frame, write_frame, Assignment, Frame, RoundOpenMsg, UpdateMsg,
+    DEFAULT_MAX_FRAME,
+};
+use crate::compression::wire::{MsgType, FLAG_EXACT_PARAMS};
+use crate::compression::WireUpdate;
+use crate::config::ExperimentConfig;
+use crate::coordinator::clock::client_timing;
+use crate::coordinator::pool::{WorkSpec, WorkerPool};
+use crate::coordinator::session::ClientUpdate;
+use crate::coordinator::{round_seed, CarryOver, FlSession};
+use crate::error::{HcflError, Result};
+use crate::fl::{select_clients, Server};
+use crate::metrics::RoundRecord;
+use crate::network::DeviceFleet;
+use crate::runtime::Manifest;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// One accepted swarm connection.
+struct Conn {
+    stream: TcpStream,
+    alive: bool,
+    /// Assignments sent this round and not yet fulfilled.
+    pending: usize,
+}
+
+impl Conn {
+    /// Retire the connection: half of the socket teardown is enough to
+    /// unblock its reader thread; repeated kills are idempotent.
+    fn kill(&mut self) {
+        if self.alive {
+            self.alive = false;
+            let _ = self.stream.shutdown(Shutdown::Both);
+        }
+        self.pending = 0;
+    }
+}
+
+/// A socket-driven FL round server, bit-identical to the in-process
+/// [`crate::coordinator::Simulation`] driver for the engine-free
+/// schemes.
+pub struct RoundServer {
+    cfg: ExperimentConfig,
+    session: FlSession,
+    carry: CarryOver,
+    fleet: DeviceFleet,
+    pool: WorkerPool,
+    rng: Rng,
+}
+
+impl RoundServer {
+    /// Build the server side: validate the config, initialize the
+    /// global model from the config seed (the same stream order as
+    /// `Simulation::new`), sample the device fleet, and spin up the
+    /// aggregation worker pool.  Requires `fake_train` (the transport
+    /// layer ships no engine) and an engine-free scheme.
+    pub fn new(manifest: &Manifest, cfg: ExperimentConfig) -> Result<RoundServer> {
+        cfg.validate(manifest)?;
+        if !cfg.fake_train {
+            return Err(HcflError::Config(
+                "transport serving requires fake_train (no engine crosses the socket)".into(),
+            ));
+        }
+        let model = manifest.model(&cfg.model)?.clone();
+        let mut rng = Rng::new(cfg.seed);
+        let server = Server::new(&model, &mut rng);
+        let fleet = DeviceFleet::sample(cfg.n_clients, &cfg.scenario.devices, cfg.seed);
+        let compressor = engine_free_compressor(&cfg.scheme)?;
+        let session = FlSession::new(
+            server,
+            compressor,
+            cfg.scenario.aggregator.clone(),
+            cfg.scenario.carry.clone(),
+            cfg.encode_deltas,
+            cfg.compress_downlink,
+        );
+        let pool = WorkerPool::new(cfg.client_threads, cfg.engine_workers)?;
+        Ok(RoundServer {
+            cfg,
+            session,
+            carry: CarryOver::empty(),
+            fleet,
+            pool,
+            rng,
+        })
+    }
+
+    /// Current global model.
+    pub fn global(&self) -> &[f32] {
+        self.session.global()
+    }
+
+    /// Consume the server and take the final global model.
+    pub fn into_global(self) -> Vec<f32> {
+        self.session.global().to_vec()
+    }
+
+    /// Late updates currently carried toward a future round.
+    pub fn carry_pending(&self) -> usize {
+        self.carry.len()
+    }
+
+    /// Accept `n_conns` swarm connections on `listener`, serve `rounds`
+    /// rounds over them, and return one [`RoundRecord`] per round.
+    ///
+    /// The listener is borrowed so a caller (benches) can serve several
+    /// sessions on one port.  Each connection must open with a `Hello`
+    /// frame carrying the session's codec tag; a connection that fails
+    /// the handshake, sends a malformed frame, or violates the protocol
+    /// mid-round is retired — its outstanding assignments are accounted
+    /// as device losses and every round still completes, even with zero
+    /// live connections left.
+    pub fn serve(
+        &mut self,
+        listener: &TcpListener,
+        n_conns: usize,
+        rounds: usize,
+    ) -> Result<Vec<RoundRecord>> {
+        let codec = self.cfg.scheme.codec_tag();
+        let (tx, rx) = mpsc::channel::<(usize, Result<Frame>)>();
+        let mut conns: Vec<Conn> = Vec::with_capacity(n_conns);
+        let mut readers: Vec<JoinHandle<()>> = Vec::with_capacity(n_conns);
+        for idx in 0..n_conns {
+            let (stream, _) = listener.accept()?;
+            let _ = stream.set_nodelay(true);
+            let mut conn = Conn {
+                stream,
+                alive: true,
+                pending: 0,
+            };
+            // Handshake: exactly one well-formed Hello with our codec.
+            match read_frame(&mut conn.stream, DEFAULT_MAX_FRAME) {
+                Ok(f) if f.header.msg_type == MsgType::Hello && f.header.codec == codec => {}
+                _ => conn.kill(),
+            }
+            if conn.alive {
+                let mut reader = conn.stream.try_clone()?;
+                let tx = tx.clone();
+                let join = std::thread::Builder::new()
+                    .name(format!("hcfl-conn-{idx}"))
+                    .spawn(move || reader_loop(idx, &mut reader, &tx))
+                    .map_err(|e| HcflError::Engine(format!("reader spawn failed: {e}")))?;
+                readers.push(join);
+            }
+            conns.push(conn);
+        }
+        drop(tx);
+
+        let mut records = Vec::with_capacity(rounds);
+        for t in 1..=rounds {
+            records.push(self.run_round(t, &mut conns, &rx)?);
+        }
+
+        // Session over: say goodbye, then tear every socket down so the
+        // reader threads unblock and can be joined.
+        for conn in conns.iter_mut() {
+            if conn.alive {
+                let _ = write_frame(
+                    &mut conn.stream,
+                    MsgType::Shutdown,
+                    codec,
+                    0,
+                    rounds as u32,
+                    0,
+                    &[],
+                );
+            }
+            let _ = conn.stream.shutdown(Shutdown::Both);
+        }
+        for join in readers {
+            let _ = join.join();
+        }
+        Ok(records)
+    }
+
+    /// One socket-driven round: the `Simulation::run_round` recipe with
+    /// the client stage running on the far side of the wire.
+    fn run_round(
+        &mut self,
+        t: usize,
+        conns: &mut [Conn],
+        rx: &mpsc::Receiver<(usize, Result<Frame>)>,
+    ) -> Result<RoundRecord> {
+        let codec = self.cfg.scheme.codec_tag();
+        let selected = select_clients(self.cfg.n_clients, self.cfg.participation, &mut self.rng);
+        let m = selected.len();
+
+        self.session.set_scenario(
+            self.cfg.scenario.aggregator.clone(),
+            self.cfg.scenario.carry.clone(),
+        );
+        let carry = std::mem::take(&mut self.carry);
+        let mut round = self.session.begin_round(t, carry)?;
+
+        // Device layer: the same per-round dropout stream as the
+        // in-process driver.  Dropped clients are simply never
+        // assigned; the swarm does not replay dropouts itself.
+        let seed = round_seed(self.cfg.seed, t);
+        let mut drop_rng = Rng::new(seed ^ 0x0D10_D0A7_5EED_0001);
+        let dropped: Vec<bool> = selected
+            .iter()
+            .map(|&k| drop_rng.next_f64() < self.fleet.profile(k).dropout_p)
+            .collect();
+        let specs: Vec<WorkSpec> = selected
+            .iter()
+            .enumerate()
+            .filter(|&(slot, _)| !dropped[slot])
+            .map(|(slot, &k)| WorkSpec {
+                slot,
+                client: k,
+                seed: seed ^ ((k as u64) << 1),
+            })
+            .collect();
+        let transmitting = specs.len();
+
+        // Round-robin the work over live connections, then open the
+        // round on each of them.
+        let mut slot_conn: Vec<Option<usize>> = vec![None; m];
+        let mut slot_client: Vec<u32> = vec![0; m];
+        let live: Vec<usize> = (0..conns.len()).filter(|&i| conns[i].alive).collect();
+        let mut shares: Vec<Vec<Assignment>> = vec![Vec::new(); conns.len()];
+        if !live.is_empty() {
+            for (i, spec) in specs.iter().enumerate() {
+                let c = live[i % live.len()];
+                slot_conn[spec.slot] = Some(c);
+                slot_client[spec.slot] = spec.client as u32;
+                shares[c].push(Assignment {
+                    slot: spec.slot as u32,
+                    client: spec.client as u32,
+                    seed: spec.seed,
+                });
+            }
+        }
+        let global: Vec<f32> = round.global().as_ref().clone();
+        let mut total_pending = 0usize;
+        for (idx, conn) in conns.iter_mut().enumerate() {
+            if !conn.alive {
+                continue;
+            }
+            let share = std::mem::take(&mut shares[idx]);
+            conn.pending = share.len();
+            let msg = RoundOpenMsg {
+                epochs: self.cfg.local_epochs as u32,
+                batch: self.cfg.batch as u32,
+                lr: self.cfg.lr,
+                encode_deltas: self.cfg.encode_deltas,
+                send_exact: true,
+                selected: m as u32,
+                transmitting: transmitting as u32,
+                assignments: share,
+                global: global.clone(),
+            };
+            let sent = write_frame(
+                &mut conn.stream,
+                MsgType::RoundOpen,
+                codec,
+                0,
+                t as u32,
+                idx as u32,
+                &msg.encode(),
+            );
+            if sent.is_err() {
+                conn.kill();
+                continue;
+            }
+            total_pending += conn.pending;
+        }
+
+        // Collect updates until every live assignment is fulfilled or
+        // its connection died.  A protocol violation retires the
+        // offending connection, never the round.
+        let mut results: Vec<Option<UpdateMsg>> = Vec::with_capacity(m);
+        results.resize_with(m, || None);
+        while total_pending > 0 {
+            let (idx, event) = match rx.recv() {
+                Ok(ev) => ev,
+                Err(_) => break, // every reader gone
+            };
+            if !conns[idx].alive {
+                continue;
+            }
+            let frame = match event {
+                Ok(f) => f,
+                Err(_) => {
+                    total_pending -= conns[idx].pending;
+                    conns[idx].kill();
+                    continue;
+                }
+            };
+            match self.accept_update(frame, t, codec, idx, &slot_conn, &slot_client, &mut results)
+            {
+                Ok(()) => {
+                    conns[idx].pending -= 1;
+                    total_pending -= 1;
+                }
+                Err(_) => {
+                    total_pending -= conns[idx].pending;
+                    conns[idx].kill();
+                }
+            }
+        }
+
+        // Timing + session pump: identical to the in-process driver.
+        // `dropped` here means "nothing arrived" — the rng dropout
+        // stream and dead-connection losses land in the same bucket.
+        let measured: Vec<f64> = results
+            .iter()
+            .flatten()
+            .map(|msg| msg.train_s)
+            .collect();
+        let reference_compute_s = stats::mean(&measured);
+        let down_bytes = round.down_bytes();
+        for (slot, &k) in selected.iter().enumerate() {
+            let up = results[slot]
+                .as_ref()
+                .map(|msg| msg.wire.len())
+                .unwrap_or(0);
+            let timing = client_timing(
+                &self.cfg.link,
+                self.fleet.profile(k),
+                k,
+                slot,
+                up,
+                down_bytes,
+                reference_compute_s,
+                m,
+                transmitting,
+                results[slot].is_none(),
+            );
+            match results[slot].take() {
+                Some(msg) => round.submit(ClientUpdate {
+                    payload: WireUpdate { bytes: msg.wire },
+                    n_samples: msg.n_samples as usize,
+                    timing,
+                    exact: msg.exact,
+                    train_s: msg.train_s,
+                }),
+                None => round.mark_dropped(timing),
+            }
+        }
+
+        let resolved = round.resolve(&self.cfg.scenario.policy);
+        let (rec, carry) = resolved.finalize(&self.pool)?;
+        self.carry = carry;
+
+        for (idx, conn) in conns.iter_mut().enumerate() {
+            if !conn.alive {
+                continue;
+            }
+            let done = write_frame(
+                &mut conn.stream,
+                MsgType::RoundDone,
+                codec,
+                0,
+                t as u32,
+                idx as u32,
+                &[],
+            );
+            if done.is_err() {
+                conn.kill();
+            }
+        }
+        Ok(rec)
+    }
+
+    /// Validate one incoming frame as this round's next update.  Any
+    /// error verdict retires the sending connection.
+    #[allow(clippy::too_many_arguments)]
+    fn accept_update(
+        &self,
+        frame: Frame,
+        t: usize,
+        codec: u8,
+        idx: usize,
+        slot_conn: &[Option<usize>],
+        slot_client: &[u32],
+        results: &mut [Option<UpdateMsg>],
+    ) -> Result<()> {
+        let h = &frame.header;
+        if h.msg_type != MsgType::Update {
+            return Err(HcflError::Config(format!(
+                "expected Update, got {:?}",
+                h.msg_type
+            )));
+        }
+        if h.round != t as u32 || h.codec != codec || h.flags != FLAG_EXACT_PARAMS {
+            return Err(HcflError::Config(format!(
+                "update envelope mismatch: round {} codec {} flags {:#04x}",
+                h.round, h.codec, h.flags
+            )));
+        }
+        let msg = UpdateMsg::decode(&frame.payload, true)?;
+        let slot = msg.slot as usize;
+        if slot >= slot_conn.len()
+            || slot_conn[slot] != Some(idx)
+            || slot_client[slot] != msg.client
+            || results[slot].is_some()
+        {
+            return Err(HcflError::Config(format!(
+                "update for slot {slot} is unassigned, duplicated or misattributed"
+            )));
+        }
+        results[slot] = Some(msg);
+        Ok(())
+    }
+}
+
+/// Per-connection reader: pump frames (or the first error) into the
+/// server's event channel until the socket dies or the server hangs up.
+fn reader_loop(idx: usize, stream: &mut impl Read, tx: &mpsc::Sender<(usize, Result<Frame>)>) {
+    loop {
+        let event = read_frame(stream, DEFAULT_MAX_FRAME);
+        let failed = event.is_err();
+        if tx.send((idx, event)).is_err() || failed {
+            return;
+        }
+    }
+}

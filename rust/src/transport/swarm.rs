@@ -1,0 +1,236 @@
+//! The swarm client: a worker pool of real TCP connections that
+//! impersonates a device fleet against a [`super::RoundServer`].
+//!
+//! Each worker owns one connection and executes every assignment the
+//! server hands it: seeded fake training (the exact
+//! [`crate::coordinator::pool::FakeTrainRunner`] computation, so the
+//! server aggregates bit-identical updates), codec encode + wire pack,
+//! and optionally a real-time replay of the device's modelled delay
+//! ([`crate::network::DeviceProfile::replay_delay_s`] scaled by
+//! `time_scale`).  Dropouts are *not* replayed here — the server's
+//! seeded dropout stream decides them and simply never assigns the
+//! dropped slots, keeping the swarm stateless across rounds.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::{engine_free_compressor, read_frame, write_frame, RoundOpenMsg, UpdateMsg};
+use crate::compression::wire::{MsgType, FLAG_EXACT_PARAMS, FRAME_HEADER_LEN};
+use crate::compression::{Compressor, WireScratch};
+use crate::config::ExperimentConfig;
+use crate::data::{synthetic, FlData};
+use crate::error::{HcflError, Result};
+use crate::network::{DeviceFleet, LinkModel};
+use crate::runtime::Manifest;
+use crate::util::rng::Rng;
+
+/// Swarm-side traffic counters, merged across workers.
+#[derive(Debug, Clone, Default)]
+pub struct SwarmStats {
+    /// Rounds this swarm saw complete (`RoundDone` frames).
+    pub rounds: usize,
+    /// Update frames sent.
+    pub updates_sent: usize,
+    /// Total bytes written to the wire (frame headers included).
+    pub bytes_sent: usize,
+}
+
+impl SwarmStats {
+    fn merge(&mut self, other: &SwarmStats) {
+        self.rounds = self.rounds.max(other.rounds);
+        self.updates_sent += other.updates_sent;
+        self.bytes_sent += other.bytes_sent;
+    }
+}
+
+/// Read-only state every worker shares.
+struct SwarmShared {
+    fleet: DeviceFleet,
+    data: Arc<FlData>,
+    compressor: Arc<dyn Compressor>,
+    link: LinkModel,
+    codec: u8,
+    time_scale: f64,
+}
+
+/// Connect `workers` swarm connections to the server at `addr` and
+/// replay the fleet described by `cfg` until the server says
+/// `Shutdown`.
+///
+/// `cfg` must be byte-identical to the server's configuration: the
+/// fleet sample, shard sizes and codec are all rebuilt here from the
+/// same seed, which is what lets the wire carry only seeds and slots.
+/// `time_scale` scales the modelled device delays replayed before each
+/// upload — 0 disables the sleeps (tests, benches, throughput runs),
+/// 1.0 replays stragglers in real time.  Note the replay is
+/// per-connection sequential: a worker serving several assignments
+/// sleeps them back to back, so small swarms compress a round's wall
+/// clock relative to K independent radios.
+pub fn run_swarm(
+    addr: &str,
+    cfg: &ExperimentConfig,
+    workers: usize,
+    time_scale: f64,
+) -> Result<SwarmStats> {
+    let mut data_spec = cfg.data.clone();
+    data_spec.n_clients = cfg.n_clients;
+    let shared = Arc::new(SwarmShared {
+        fleet: DeviceFleet::sample(cfg.n_clients, &cfg.scenario.devices, cfg.seed),
+        data: Arc::new(synthetic(&data_spec, cfg.seed)),
+        compressor: engine_free_compressor(&cfg.scheme)?,
+        link: cfg.link.clone(),
+        codec: cfg.scheme.codec_tag(),
+        time_scale,
+    });
+    let workers = workers.max(1);
+    let mut joins = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let shared = Arc::clone(&shared);
+        let addr = addr.to_string();
+        let join = std::thread::Builder::new()
+            .name(format!("hcfl-swarm-{w}"))
+            .spawn(move || worker_loop(&addr, w, &shared))
+            .map_err(|e| HcflError::Engine(format!("swarm worker spawn failed: {e}")))?;
+        joins.push(join);
+    }
+    let mut stats = SwarmStats::default();
+    let mut first_err = None;
+    for join in joins {
+        match join
+            .join()
+            .map_err(|_| HcflError::Engine("swarm worker panicked".into()))?
+        {
+            Ok(s) => stats.merge(&s),
+            Err(e) => first_err = first_err.or(Some(e)),
+        }
+    }
+    match first_err {
+        Some(e) => Err(e),
+        None => Ok(stats),
+    }
+}
+
+/// One worker connection: handshake, then serve assignments until
+/// `Shutdown`.
+fn worker_loop(addr: &str, w: usize, shared: &SwarmShared) -> Result<SwarmStats> {
+    let mut stream = TcpStream::connect(addr)?;
+    let _ = stream.set_nodelay(true);
+    write_frame(
+        &mut stream,
+        MsgType::Hello,
+        shared.codec,
+        0,
+        0,
+        w as u32,
+        &[],
+    )?;
+    let mut stats = SwarmStats {
+        bytes_sent: FRAME_HEADER_LEN,
+        ..SwarmStats::default()
+    };
+    let mut scratch = WireScratch::new();
+    loop {
+        let frame = read_frame(&mut stream, super::DEFAULT_MAX_FRAME)?;
+        match frame.header.msg_type {
+            MsgType::RoundOpen => {
+                let round = frame.header.round;
+                let open = RoundOpenMsg::decode(&frame.payload)?;
+                run_assignments(&mut stream, &open, round, w, shared, &mut scratch, &mut stats)?;
+            }
+            MsgType::RoundDone => stats.rounds += 1,
+            MsgType::Shutdown => return Ok(stats),
+            other => {
+                return Err(HcflError::Config(format!(
+                    "swarm expected RoundOpen/RoundDone/Shutdown, got {other:?}"
+                )))
+            }
+        }
+    }
+}
+
+/// Execute one `RoundOpen`'s assignments in order: fake-train, encode,
+/// optionally replay the modelled delay, upload.
+fn run_assignments(
+    stream: &mut TcpStream,
+    open: &RoundOpenMsg,
+    round: u32,
+    w: usize,
+    shared: &SwarmShared,
+    scratch: &mut WireScratch,
+    stats: &mut SwarmStats,
+) -> Result<()> {
+    let down_bytes = 4 * open.global.len();
+    for a in &open.assignments {
+        // The exact FakeTrainRunner computation, seeded by the wire.
+        let mut crng = Rng::new(a.seed);
+        let started = Instant::now();
+        let scale = open.lr * (open.epochs.max(1) as f32).sqrt() * 0.1;
+        let params: Vec<f32> = open
+            .global
+            .iter()
+            .map(|g| g + scale * crng.normal())
+            .collect();
+        let payload =
+            shared
+                .compressor
+                .encode_payload(&params, &open.global, open.encode_deltas);
+        let update = shared.compressor.compress(&payload, 0)?;
+        let wire = scratch.pack_update(&update.payload)?;
+        let train_s = started.elapsed().as_secs_f64();
+
+        if shared.time_scale > 0.0 {
+            let client = a.client as usize;
+            let delay_s = shared.time_scale
+                * shared.fleet.profile(client).replay_delay_s(
+                    &shared.link,
+                    wire.bytes.len(),
+                    down_bytes,
+                    train_s,
+                    open.selected as usize,
+                    open.transmitting as usize,
+                );
+            if delay_s > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(delay_s));
+            }
+        }
+
+        let msg = UpdateMsg {
+            slot: a.slot,
+            client: a.client,
+            n_samples: shared.data.shard_rows(a.client as usize) as u32,
+            train_s,
+            wire: wire.bytes,
+            exact: if open.send_exact { params } else { Vec::new() },
+        };
+        let flags = if open.send_exact { FLAG_EXACT_PARAMS } else { 0 };
+        let body = msg.encode();
+        write_frame(
+            stream,
+            MsgType::Update,
+            shared.codec,
+            flags,
+            round,
+            w as u32,
+            &body,
+        )?;
+        stats.updates_sent += 1;
+        stats.bytes_sent += FRAME_HEADER_LEN + body.len();
+        scratch.put_bytes(msg.wire);
+    }
+    Ok(())
+}
+
+/// Convenience used by the `hcfl-swarm` binary: validate the config
+/// against a manifest before dialing out (the server does the same, so
+/// mismatches fail fast on both ends).
+pub fn validated_swarm(
+    manifest: &Manifest,
+    addr: &str,
+    cfg: &ExperimentConfig,
+    workers: usize,
+    time_scale: f64,
+) -> Result<SwarmStats> {
+    cfg.validate(manifest)?;
+    run_swarm(addr, cfg, workers, time_scale)
+}

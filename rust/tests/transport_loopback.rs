@@ -1,0 +1,136 @@
+//! Transport acceptance: a real TCP loopback session (RoundServer +
+//! swarm workers) must be bit-identical to the in-process `Simulation`
+//! driver — same global model bits, same deterministic `RoundRecord`
+//! fields — because both sides derive everything from the shared config
+//! seed and only seeds, slots and packed wire buffers cross the socket.
+//!
+//! Measured wall-clock fields (makespan, client/server/comm/wall time)
+//! are excluded: they depend on host timing on both paths.  The
+//! scenarios are chosen so every *decision* made from measured time has
+//! a deterministic margin (see each arm's comment): survivor ordering
+//! and carry decisions ride on modelled byte air-times (milliseconds)
+//! while run-to-run measurement jitter is microseconds.
+
+use hcfl::compression::Scheme;
+use hcfl::data::Partition;
+use hcfl::metrics::RoundRecord;
+use hcfl::prelude::*;
+use hcfl::transport::{demo_config, run_loopback, LoopbackRun};
+
+/// Drive the classic in-process path for `cfg.rounds` rounds.
+fn run_inprocess(cfg: &ExperimentConfig) -> (Vec<f32>, Vec<RoundRecord>) {
+    let engine = Engine::with_manifest(Manifest::synthetic(), cfg.engine_workers).unwrap();
+    let mut sim = Simulation::new(&engine, cfg.clone()).unwrap();
+    let mut recs = Vec::with_capacity(cfg.rounds);
+    for t in 1..=cfg.rounds {
+        recs.push(sim.run_round(t).unwrap());
+    }
+    (sim.global().to_vec(), recs)
+}
+
+/// Drive the same config over real localhost sockets.
+fn run_over_tcp(cfg: &ExperimentConfig, workers: usize) -> LoopbackRun {
+    run_loopback(&Manifest::synthetic(), cfg, workers, 0.0).unwrap()
+}
+
+/// Every deterministic RoundRecord field must agree between the two
+/// paths; timing fields are measured and excluded by design.
+fn assert_records_match(inproc: &[RoundRecord], tcp: &[RoundRecord]) {
+    assert_eq!(inproc.len(), tcp.len());
+    for (a, b) in inproc.iter().zip(tcp) {
+        let t = a.round;
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.up_bytes, b.up_bytes, "up_bytes diverged in round {t}");
+        assert_eq!(a.down_bytes, b.down_bytes, "down_bytes diverged in round {t}");
+        assert_eq!(a.selected, b.selected, "selected diverged in round {t}");
+        assert_eq!(a.completed, b.completed, "completed diverged in round {t}");
+        assert_eq!(a.dropped, b.dropped, "dropped diverged in round {t}");
+        assert_eq!(a.stragglers, b.stragglers, "stragglers diverged in round {t}");
+        assert_eq!(a.carried_in, b.carried_in, "carried_in diverged in round {t}");
+        assert_eq!(a.carried_out, b.carried_out, "carried_out diverged in round {t}");
+        assert_eq!(
+            a.carried_expired, b.carried_expired,
+            "carried_expired diverged in round {t}"
+        );
+        assert_eq!(a.recon_mse, b.recon_mse, "recon_mse diverged in round {t}");
+    }
+}
+
+/// FastestM + stragglers + carry-over across 4 rounds: the carried-leaf
+/// path (weights, fold order, re-carry, expiry) must survive the wire.
+/// m=16 of K=32 with 25% stragglers at 8x guarantees the cut boundary
+/// falls inside the non-straggler group (its ordering is decided by
+/// deterministic per-client wire bytes, not measured time), and cut
+/// non-stragglers rebase to near-zero arrivals that fold next round —
+/// so carried_in is structurally nonzero.
+#[test]
+fn loopback_carryover_session_is_bit_identical() {
+    let mut cfg = demo_config(Scheme::TopK { keep: 0.2 }, 32, 4, 42);
+    cfg.data.size_skew = 0.25;
+    cfg.scenario.policy = RoundPolicy::FastestM { m: 16 };
+    cfg.scenario.devices = DevicePreset::Stragglers {
+        frac: 0.25,
+        slowdown: 8.0,
+    };
+    cfg.scenario.carry = CarryPolicy::CarryDiscounted {
+        lambda: 0.5,
+        max_age_rounds: 3,
+    };
+    cfg.scenario.aggregator = AggregatorKind::SampleWeighted;
+
+    let (global, recs) = run_inprocess(&cfg);
+    let tcp = run_over_tcp(&cfg, 3);
+
+    assert_eq!(global, tcp.global, "global model bits diverged");
+    assert_records_match(&recs, &tcp.records);
+    let carried: usize = recs.iter().map(|r| r.carried_in).sum();
+    assert!(carried > 0, "the carry arm never exercised carry-over");
+    assert_eq!(tcp.swarm.rounds, 4);
+    assert_eq!(
+        tcp.swarm.updates_sent,
+        recs.iter().map(|r| r.selected - r.dropped).sum::<usize>()
+    );
+}
+
+/// Seeded per-round dropouts over the wire: dropped devices are never
+/// assigned, the swarm replays nothing for them, and both paths account
+/// the same losses.  sigma=0 keeps every rate multiplier at exactly 1,
+/// so arrival order is decided by wire bytes + slot only and the arm is
+/// immune to measured-time jitter even with real dropouts.
+#[test]
+fn loopback_dropouts_are_bit_identical() {
+    let mut cfg = demo_config(Scheme::TopK { keep: 0.1 }, 48, 2, 42);
+    cfg.scenario.devices = DevicePreset::Iot {
+        sigma: 0.0,
+        dropout_p: 0.2,
+    };
+
+    let (global, recs) = run_inprocess(&cfg);
+    let tcp = run_over_tcp(&cfg, 2);
+
+    assert_eq!(global, tcp.global, "global model bits diverged");
+    assert_records_match(&recs, &tcp.records);
+    let dropped: usize = recs.iter().map(|r| r.dropped).sum();
+    assert!(dropped > 0, "the dropout arm never dropped a device");
+}
+
+/// The issue's acceptance bar: one K=10 000 round over real sockets,
+/// bit-identical to the in-process K=10k pin (`tests/round10k.rs`
+/// configuration: non-IID Dirichlet shards, skewed sizes,
+/// sample-weighted aggregation).
+#[test]
+fn loopback_k10000_round_is_bit_identical() {
+    let mut cfg = demo_config(Scheme::TopK { keep: 0.1 }, 10_000, 1, 42);
+    cfg.data.partition = Partition::Dirichlet { alpha: 0.3 };
+    cfg.data.size_skew = 0.25;
+    cfg.scenario.aggregator = AggregatorKind::SampleWeighted;
+
+    let (global, recs) = run_inprocess(&cfg);
+    let tcp = run_over_tcp(&cfg, 4);
+
+    assert_eq!(recs[0].selected, 10_000);
+    assert!(tcp.global.iter().all(|v| v.is_finite()));
+    assert_eq!(global, tcp.global, "global model bits diverged at K=10k");
+    assert_records_match(&recs, &tcp.records);
+    assert_eq!(tcp.swarm.updates_sent, 10_000 - recs[0].dropped);
+}

@@ -1,0 +1,174 @@
+//! Hardening pins for the transport boundary (DESIGN.md §8.6): every
+//! malformed-frame class must surface as a typed error — never a panic,
+//! never an oversized allocation — and a live server must retire the
+//! offending connection while keeping the round open and completing it
+//! with the honest connections.
+
+use std::io::{Cursor, Write};
+use std::net::{TcpListener, TcpStream};
+
+use hcfl::compression::wire::{FrameHeader, MsgType, FLAG_EXACT_PARAMS, FRAME_HEADER_LEN};
+use hcfl::compression::Scheme;
+use hcfl::error::HcflError;
+use hcfl::prelude::*;
+use hcfl::transport::{
+    demo_config, read_frame, write_frame, RoundOpenMsg, UpdateMsg, DEFAULT_MAX_FRAME,
+};
+
+fn packed_frame(payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    write_frame(
+        &mut buf,
+        MsgType::Update,
+        3,
+        FLAG_EXACT_PARAMS,
+        2,
+        7,
+        payload,
+    )
+    .unwrap();
+    buf
+}
+
+#[test]
+fn truncated_header_is_an_io_error() {
+    let buf = packed_frame(b"abc");
+    for cut in 0..FRAME_HEADER_LEN {
+        let err = read_frame(&mut Cursor::new(&buf[..cut]), DEFAULT_MAX_FRAME).unwrap_err();
+        assert!(matches!(err, HcflError::Io(_)), "cut={cut}: {err}");
+    }
+}
+
+#[test]
+fn bad_magic_and_bad_version_are_rejected() {
+    let mut bad_magic = packed_frame(b"abc");
+    bad_magic[0] ^= 0xFF;
+    assert!(read_frame(&mut Cursor::new(&bad_magic), DEFAULT_MAX_FRAME).is_err());
+
+    let mut bad_version = packed_frame(b"abc");
+    bad_version[4] = 99;
+    assert!(read_frame(&mut Cursor::new(&bad_version), DEFAULT_MAX_FRAME).is_err());
+
+    let mut bad_type = packed_frame(b"abc");
+    bad_type[5] = 0; // no MsgType is 0
+    assert!(read_frame(&mut Cursor::new(&bad_type), DEFAULT_MAX_FRAME).is_err());
+}
+
+#[test]
+fn checksum_mismatch_is_rejected() {
+    let mut buf = packed_frame(b"checksummed payload");
+    let last = buf.len() - 1;
+    buf[last] ^= 0x01;
+    let err = read_frame(&mut Cursor::new(&buf), DEFAULT_MAX_FRAME).unwrap_err();
+    assert!(
+        matches!(&err, HcflError::Config(msg) if msg.contains("checksum")),
+        "{err}"
+    );
+}
+
+#[test]
+fn oversized_declared_length_is_rejected_before_reading() {
+    // A forged header declaring a payload beyond the cap: rejected from
+    // the header alone, so no payload bytes (and no allocation of the
+    // declared size) are ever consumed.
+    let header = FrameHeader {
+        msg_type: MsgType::Update,
+        codec: 0,
+        flags: 0,
+        round: 1,
+        client: 0,
+        len: u32::MAX,
+        crc: 0,
+    };
+    let err = read_frame(&mut Cursor::new(header.pack().to_vec()), DEFAULT_MAX_FRAME).unwrap_err();
+    assert!(
+        matches!(&err, HcflError::Config(msg) if msg.contains("cap")),
+        "{err}"
+    );
+}
+
+#[test]
+fn mid_frame_disconnect_is_an_io_error() {
+    let buf = packed_frame(&[0xAB; 100]);
+    // the peer vanished 40 payload bytes in
+    let err =
+        read_frame(&mut Cursor::new(&buf[..FRAME_HEADER_LEN + 40]), DEFAULT_MAX_FRAME).unwrap_err();
+    assert!(matches!(err, HcflError::Io(_)), "{err}");
+}
+
+#[test]
+fn update_payload_truncations_are_rejected() {
+    let msg = UpdateMsg {
+        slot: 1,
+        client: 5,
+        n_samples: 64,
+        train_s: 0.25,
+        wire: vec![9, 8, 7, 6],
+        exact: vec![1.0, -1.0],
+    };
+    let good = msg.encode();
+    assert_eq!(UpdateMsg::decode(&good, true).unwrap(), msg);
+    for cut in 0..good.len() {
+        assert!(UpdateMsg::decode(&good[..cut], true).is_err(), "cut={cut}");
+    }
+    let mut trailing = good;
+    trailing.push(0);
+    assert!(UpdateMsg::decode(&trailing, true).is_err());
+}
+
+/// A server with one honest swarm connection and one misbehaving
+/// connection: the garbage sender is retired mid-round, its share of
+/// the round is accounted as device losses, the round completes, and
+/// the next round reassigns everything to the surviving connection.
+#[test]
+fn server_survives_a_garbage_connection_and_keeps_rounds_open() {
+    let cfg = demo_config(Scheme::Fedavg, 8, 2, 42);
+    let manifest = Manifest::synthetic();
+    let mut server = RoundServer::new(&manifest, cfg.clone()).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let server_thread = std::thread::spawn(move || {
+        let records = server.serve(&listener, 2, 2).unwrap();
+        (records, server.into_global())
+    });
+
+    // Honest connection: a 1-worker swarm replaying the same config.
+    let swarm_cfg = cfg.clone();
+    let swarm_addr = addr.clone();
+    let honest = std::thread::spawn(move || run_swarm(&swarm_addr, &swarm_cfg, 1, 0.0).unwrap());
+
+    // Misbehaving connection: a correct Hello, then garbage mid-round.
+    let mut evil = TcpStream::connect(&addr).unwrap();
+    write_frame(
+        &mut evil,
+        MsgType::Hello,
+        cfg.scheme.codec_tag(),
+        0,
+        0,
+        1,
+        &[],
+    )
+    .unwrap();
+    let open = read_frame(&mut evil, DEFAULT_MAX_FRAME).unwrap();
+    assert_eq!(open.header.msg_type, MsgType::RoundOpen);
+    let assigned = RoundOpenMsg::decode(&open.payload).unwrap().assignments.len();
+    assert_eq!(assigned, 4, "round-robin should hand each conn half of m=8");
+    evil.write_all(&[0xFF; 64]).unwrap(); // not a frame
+    let _ = evil.flush();
+    drop(evil);
+
+    let (records, global) = server_thread.join().unwrap();
+    let stats = honest.join().unwrap();
+
+    // Round 1: the honest half aggregated, the garbage half lost.
+    assert_eq!(records[0].selected, 8);
+    assert_eq!(records[0].completed, 4);
+    assert_eq!(records[0].dropped, 4);
+    // Round 2: the dead connection is gone; everything reroutes.
+    assert_eq!(records[1].completed, 8);
+    assert_eq!(records[1].dropped, 0);
+    assert!(global.iter().all(|v| v.is_finite()));
+    assert_eq!(stats.rounds, 2);
+    assert_eq!(stats.updates_sent, 4 + 8);
+}
