@@ -11,6 +11,7 @@
 //! ```
 
 use std::net::TcpListener;
+use std::time::Duration;
 
 use hcfl::compression::Scheme;
 use hcfl::error::{HcflError, Result};
@@ -42,6 +43,14 @@ fn run() -> Result<()> {
     let cfg = demo_config(scheme, clients, rounds, seed);
     let manifest = Manifest::synthetic();
     let mut server = RoundServer::new(&manifest, cfg)?;
+    // Liveness guards: a client that connects and stalls before Hello
+    // is retired after the handshake timeout; a connection that owes
+    // updates past the round deadline is retired like a malformed one.
+    // 0 means "wait forever".
+    let handshake_ms = args.u64_or("handshake-timeout-ms", 30_000)?;
+    server.set_handshake_timeout((handshake_ms > 0).then_some(Duration::from_millis(handshake_ms)));
+    let round_ms = args.u64_or("round-deadline-ms", 0)?;
+    server.set_round_deadline((round_ms > 0).then_some(Duration::from_millis(round_ms)));
     let listener = TcpListener::bind(&addr)?;
     eprintln!("hcfl-server: listening on {addr}, waiting for {conns} swarm connection(s)");
     let records = server.serve(&listener, conns, rounds)?;

@@ -13,11 +13,14 @@
 //!            --scheme topk --keep 0.1 --seed 42 --time-scale 0
 //! ```
 
+use std::time::Duration;
+
 use hcfl::compression::Scheme;
 use hcfl::error::{HcflError, Result};
 use hcfl::runtime::Manifest;
 use hcfl::transport::demo_config;
-use hcfl::transport::swarm::validated_swarm;
+use hcfl::transport::swarm::validated_swarm_with;
+use hcfl::transport::SwarmOptions;
 use hcfl::util::cli::Args;
 
 fn parse_scheme(args: &Args) -> Result<Scheme> {
@@ -40,11 +43,17 @@ fn run() -> Result<()> {
     let seed = args.u64_or("seed", 42)?;
     let time_scale = args.f64_or("time-scale", 0.0)?;
     let scheme = parse_scheme(&args)?;
+    // Re-dial budget: lets the swarm survive a campaign-daemon restart
+    // (`hcfl-daemon`, DESIGN.md §9).  0 keeps the fail-fast default.
+    let opts = SwarmOptions {
+        redial_attempts: args.usize_or("redial", 0)?,
+        redial_wait: Duration::from_millis(args.u64_or("redial-wait-ms", 20)?),
+    };
 
     // `rounds` is server-paced; the swarm serves until Shutdown.
     let cfg = demo_config(scheme, clients, 1, seed);
     let manifest = Manifest::synthetic();
-    let stats = validated_swarm(&manifest, &addr, &cfg, workers, time_scale)?;
+    let stats = validated_swarm_with(&manifest, &addr, &cfg, workers, time_scale, &opts)?;
     println!(
         "swarm done: {} rounds, {} updates, {:.1} KB sent",
         stats.rounds,

@@ -192,6 +192,20 @@ pub struct ExperimentConfig {
     /// reported convergence achievable.  `false` reproduces Algorithm 1
     /// literally (ablation).  See DESIGN.md §4.
     pub encode_deltas: bool,
+    /// Ship each client's exact post-training parameters to the server
+    /// next to the compressed payload, enabling the reconstruction-MSE
+    /// instrumentation (`RoundRecord::recon_mse`).
+    ///
+    /// In the in-process `Simulation` the side channel is free: the
+    /// exact params never touch a wire and are *not* counted in
+    /// `up_bytes`.  Over the real transport (DESIGN.md §8) the sidecar
+    /// genuinely crosses the socket — a raw `4 + 4·d`-byte block per
+    /// update that defeats the compression being measured — so the
+    /// round server only requests it when this is set, and then counts
+    /// its bytes in `up_bytes` and in the modelled uplink time.  The
+    /// experiment presets keep it on (the paper's tables report
+    /// reconstruction error); `transport::demo_config` turns it off.
+    pub send_exact: bool,
     pub link: LinkModel,
     /// Round-execution scenario (devices, round policy, aggregation).
     pub scenario: ScenarioConfig,
@@ -219,6 +233,7 @@ impl ExperimentConfig {
             use_ae_cache: true,
             compress_downlink: false,
             encode_deltas: true,
+            send_exact: true,
             link: LinkModel::default(),
             scenario: ScenarioConfig::default(),
         }
@@ -245,6 +260,7 @@ impl ExperimentConfig {
             use_ae_cache: true,
             compress_downlink: false,
             encode_deltas: true,
+            send_exact: true,
             link: LinkModel::default(),
             scenario: ScenarioConfig::default(),
         }
@@ -271,6 +287,7 @@ impl ExperimentConfig {
             use_ae_cache: true,
             compress_downlink: false,
             encode_deltas: true,
+            send_exact: true,
             link: LinkModel::default(),
             scenario: ScenarioConfig::default(),
         }

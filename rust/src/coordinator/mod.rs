@@ -174,6 +174,35 @@ impl Simulation {
         self.carry.len()
     }
 
+    /// The in-flight carry-over, for snapshotting between rounds.
+    pub fn carry(&self) -> &CarryOver {
+        &self.carry
+    }
+
+    /// The selection-RNG cursor — with the global model and the
+    /// carry-over, the only state that crosses rounds
+    /// (`crate::daemon::snapshot`).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Rewind onto a snapshot taken after some round's `finalize`:
+    /// overwrite the three pieces of cross-round state so the next
+    /// `run_round(t)` continues the interrupted campaign bit-identically
+    /// — everything else a round touches is a pure function of
+    /// `(cfg.seed, t)` (DESIGN.md §9).
+    pub fn restore(
+        &mut self,
+        global: Vec<f32>,
+        carry: CarryOver,
+        rng_state: [u64; 4],
+    ) -> Result<()> {
+        self.session.restore_global(global)?;
+        self.carry = carry;
+        self.rng = Rng::from_state(rng_state);
+        Ok(())
+    }
+
     /// Run all configured rounds.
     pub fn run(&mut self) -> Result<RunReport> {
         let mut rounds = Vec::with_capacity(self.cfg.rounds);
@@ -295,7 +324,14 @@ impl Simulation {
                     payload: msg.update,
                     n_samples: msg.n_samples,
                     timing,
-                    exact: msg.exact,
+                    exact: if self.cfg.send_exact {
+                        msg.exact
+                    } else {
+                        Vec::new()
+                    },
+                    // In-process the exact side channel is free: only the
+                    // packed payload is modelled on the air.
+                    extra_up_bytes: 0,
                     train_s: msg.train_s,
                 }),
                 None => round.mark_dropped(timing),

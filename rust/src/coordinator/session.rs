@@ -109,9 +109,16 @@ pub struct ClientUpdate {
     /// The sender's modelled round timeline (carries the arrival time
     /// and the selection-slot tie-break).
     pub timing: ClientTiming,
-    /// Simulation-only side channel: exact post-training parameters for
-    /// reconstruction-error instrumentation (empty disables).
+    /// Exact post-training parameters for reconstruction-error
+    /// instrumentation (empty disables).  In-process drivers pass them
+    /// as a free side channel; the transport ships them only when
+    /// `ExperimentConfig::send_exact` asks for them.
     pub exact: Vec<f32>,
+    /// Uplink bytes this arrival cost beyond its packed payload — the
+    /// transport's exact-params sidecar when enabled (DESIGN.md §8.4).
+    /// Counted into `RoundRecord::up_bytes`; 0 on the in-process path,
+    /// where nothing but the payload is modelled on the air.
+    pub extra_up_bytes: usize,
     /// Measured client train+encode wall time, seconds.
     pub train_s: f64,
 }
@@ -208,6 +215,15 @@ impl FlSession {
 
     pub fn carry_policy(&self) -> &CarryPolicy {
         &self.carry
+    }
+
+    /// Overwrite the global model from a campaign snapshot
+    /// (`daemon::snapshot`, DESIGN.md §9).  Dimension-checked by
+    /// `Server::install`; the session holds no other cross-round state,
+    /// so this plus the driver's carry-over and RNG cursor is a full
+    /// rewind.
+    pub fn restore_global(&mut self, params: Vec<f32>) -> Result<()> {
+        self.server.install(params)
     }
 
     /// Re-sync the scenario knobs a driver may tune between rounds.
@@ -312,6 +328,7 @@ struct ArrivalData {
     payload: WireUpdate,
     n_samples: usize,
     exact: Vec<f32>,
+    extra_up_bytes: usize,
 }
 
 /// State of a round that is accepting arrivals.
@@ -392,6 +409,7 @@ impl<'s> RoundSession<'s, Open> {
             payload: u.payload,
             n_samples: u.n_samples,
             exact: u.exact,
+            extra_up_bytes: u.extra_up_bytes,
         }));
     }
 
@@ -539,10 +557,12 @@ impl RoundSession<'_, Resolved> {
 
         // Uplink accounting covers every transmitting client: cut and
         // carried uploads hit the air whether or not they fold here.
+        // `extra_up_bytes` is the transport's exact-params sidecar
+        // (zero in-process).
         let up_bytes: u64 = arrivals
             .iter()
             .flatten()
-            .map(|a| a.payload.wire_bytes() as u64)
+            .map(|a| (a.payload.wire_bytes() + a.extra_up_bytes) as u64)
             .sum();
         let reference_compute_s = stats::mean(&train_s);
         // The freshness reference: the first surviving arrival, as

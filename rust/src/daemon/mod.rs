@@ -1,0 +1,509 @@
+//! The campaign daemon: a resident scheduler that owns a queue of
+//! experiment jobs and drives each campaign round by round, writing an
+//! atomic [`snapshot::CampaignSnapshot`] after every `finalize` so a
+//! crash — up to and including `SIGKILL` — loses at most the round in
+//! flight (DESIGN.md §9).
+//!
+//! The shape is a classic two-actor daemon: the **scheduler**
+//! ([`Daemon::run_queue`]) pops jobs off the queue and persists final
+//! outputs, while a per-job **worker** thread owns the campaign state
+//! (an in-process [`Simulation`] or a socket-driven
+//! [`RoundServer`]) and reports progress over an event bus of
+//! [`DaemonEvent`]s.  On restart the scheduler skips jobs whose
+//! `<name>.model` output already exists and workers resume interrupted
+//! campaigns from their `<name>.snap` file — fingerprint-checked, then
+//! restored through the `Simulation::restore` / `RoundServer::restore`
+//! seam — continuing at round `rounds_done + 1` bit-identically to a
+//! run that was never interrupted (`tests/daemon_resume.rs`).
+//!
+//! State directory layout (all paths under the daemon's `dir`):
+//!
+//! | file            | meaning                                        |
+//! |-----------------|------------------------------------------------|
+//! | `<name>.snap`   | latest between-round snapshot (crash cursor)   |
+//! | `<name>.model`  | final global model, raw little-endian f32 bits |
+//! | `<name>.csv`    | per-round records seen by the finishing process|
+//!
+//! A resumed job's CSV covers the rounds the finishing process drove
+//! (earlier rounds died with the killed process's memory); the model
+//! file and snapshot chain are the bit-exact artifacts.
+
+pub mod snapshot;
+
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use self::snapshot::CampaignSnapshot;
+use crate::compression::Scheme;
+use crate::config::ExperimentConfig;
+use crate::coordinator::{CarryOver, Simulation};
+use crate::error::{HcflError, Result};
+use crate::metrics::{RoundRecord, RunReport};
+use crate::runtime::{Engine, Manifest};
+use crate::transport::{demo_config, RoundServer};
+
+/// How a job's rounds are driven.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobDriver {
+    /// The in-process [`Simulation`] driver (no sockets).
+    InProcess,
+    /// A [`RoundServer`] bound to `addr`, serving `conns` swarm
+    /// connections.  The swarm dials in from outside the daemon (give
+    /// it a re-dial budget so it survives a daemon restart —
+    /// [`crate::transport::SwarmOptions`]).
+    Tcp {
+        /// Listen address, e.g. `127.0.0.1:7700`.  Fixed per job so a
+        /// resumed daemon rebinds the same port the swarm re-dials.
+        addr: String,
+        /// Swarm connections to accept before round 1 (and again after
+        /// every resume).
+        conns: usize,
+    },
+}
+
+/// One queued experiment: a named, seeded, engine-free campaign.
+/// The name keys every state file, so it must be unique in a queue.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Unique job name (state file stem).
+    pub name: String,
+    /// Compression scheme (engine-free: FedAvg or Top-K).
+    pub scheme: Scheme,
+    /// Fleet size (K).
+    pub n_clients: usize,
+    /// Campaign length in rounds.
+    pub rounds: usize,
+    /// Experiment seed.
+    pub seed: u64,
+    /// In-process or socket-driven.
+    pub driver: JobDriver,
+}
+
+impl JobSpec {
+    /// The job's full experiment configuration: the shared server/swarm
+    /// demo recipe ([`demo_config`]), which both the worker and any
+    /// external swarm rebuild from the same four values.
+    pub fn config(&self) -> ExperimentConfig {
+        demo_config(self.scheme, self.n_clients, self.rounds, self.seed)
+    }
+}
+
+/// What a worker reports onto the scheduler's event bus.
+#[derive(Debug)]
+pub enum DaemonEvent {
+    /// A round finalized; its snapshot is already on disk.
+    RoundDone {
+        /// Job name.
+        job: String,
+        /// The finalized round's record.
+        record: RoundRecord,
+    },
+    /// The campaign completed; final state rides along for the
+    /// scheduler to persist.
+    JobDone {
+        /// Job name.
+        job: String,
+        /// Records of every round this process drove.
+        records: Vec<RoundRecord>,
+        /// The final global model.
+        global: Vec<f32>,
+    },
+    /// The worker gave up; the snapshot stays on disk for a later
+    /// resume.
+    JobFailed {
+        /// Job name.
+        job: String,
+        /// Rendered error.
+        error: String,
+    },
+}
+
+/// Parse a queue file: one job per line,
+/// `name scheme clients rounds seed driver [addr conns]`, where
+/// `scheme` is `fedavg` or `topk@<keep>` and `driver` is `inproc` or
+/// `tcp <addr> <conns>`.  `#` starts a comment; blank lines are
+/// skipped.
+pub fn parse_queue(text: &str) -> Result<Vec<JobSpec>> {
+    let mut jobs: Vec<JobSpec> = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let n = i + 1;
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() < 6 {
+            return Err(HcflError::Config(format!(
+                "queue line {n}: expected `name scheme clients rounds seed driver [addr conns]`, got `{line}`"
+            )));
+        }
+        let scheme = parse_job_scheme(f[1])
+            .map_err(|e| HcflError::Config(format!("queue line {n}: {e}")))?;
+        let n_clients: usize = f[2]
+            .parse()
+            .map_err(|_| HcflError::Config(format!("queue line {n}: bad clients `{}`", f[2])))?;
+        let rounds: usize = f[3]
+            .parse()
+            .map_err(|_| HcflError::Config(format!("queue line {n}: bad rounds `{}`", f[3])))?;
+        let seed: u64 = f[4]
+            .parse()
+            .map_err(|_| HcflError::Config(format!("queue line {n}: bad seed `{}`", f[4])))?;
+        let driver = match (f[5], f.len()) {
+            ("inproc", 6) => JobDriver::InProcess,
+            ("tcp", 8) => JobDriver::Tcp {
+                addr: f[6].to_string(),
+                conns: f[7].parse().map_err(|_| {
+                    HcflError::Config(format!("queue line {n}: bad conns `{}`", f[7]))
+                })?,
+            },
+            _ => {
+                return Err(HcflError::Config(format!(
+                    "queue line {n}: driver must be `inproc` or `tcp <addr> <conns>`"
+                )))
+            }
+        };
+        if jobs.iter().any(|j| j.name == f[0]) {
+            return Err(HcflError::Config(format!(
+                "queue line {n}: duplicate job name `{}` (names key the state files)",
+                f[0]
+            )));
+        }
+        jobs.push(JobSpec {
+            name: f[0].to_string(),
+            scheme,
+            n_clients,
+            rounds,
+            seed,
+            driver,
+        });
+    }
+    Ok(jobs)
+}
+
+fn parse_job_scheme(tok: &str) -> std::result::Result<Scheme, String> {
+    if tok == "fedavg" {
+        return Ok(Scheme::Fedavg);
+    }
+    if let Some(keep) = tok.strip_prefix("topk@") {
+        let keep: f64 = keep
+            .parse()
+            .map_err(|_| format!("bad topk keep `{keep}`"))?;
+        if !(keep > 0.0 && keep <= 1.0) {
+            return Err(format!("topk keep must be in (0, 1], got {keep}"));
+        }
+        return Ok(Scheme::TopK { keep });
+    }
+    Err(format!(
+        "scheme `{tok}` must be `fedavg` or `topk@<keep>` (the daemon is engine-free)"
+    ))
+}
+
+/// The resident scheduler: owns the state directory and drives queued
+/// jobs one at a time, each on its own worker thread.
+pub struct Daemon {
+    dir: PathBuf,
+    round_hold: Duration,
+    /// Print one line per event to stderr.
+    pub verbose: bool,
+}
+
+impl Daemon {
+    /// A daemon rooted at state directory `dir` (created on first run).
+    pub fn new(dir: impl Into<PathBuf>) -> Daemon {
+        Daemon {
+            dir: dir.into(),
+            round_hold: Duration::ZERO,
+            verbose: false,
+        }
+    }
+
+    /// Pause this long after each snapshot before opening the next
+    /// round.  Zero (the default) runs flat out; CI's kill-and-resume
+    /// smoke widens the between-round window with this so `SIGKILL`
+    /// reliably lands between rounds.
+    pub fn set_round_hold(&mut self, hold: Duration) {
+        self.round_hold = hold;
+    }
+
+    /// The state directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn snap_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.snap"))
+    }
+
+    fn model_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.model"))
+    }
+
+    fn csv_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.csv"))
+    }
+
+    /// Drive every queued job to completion, in order.  Jobs whose
+    /// model output already exists are skipped; jobs with a snapshot on
+    /// disk resume from it.  The first failing job aborts the queue
+    /// (its snapshot stays for the next invocation).
+    pub fn run_queue(&self, jobs: &[JobSpec]) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)?;
+        for job in jobs {
+            self.run_job(job)?;
+        }
+        Ok(())
+    }
+
+    /// Run (or resume, or skip) one job to completion.
+    pub fn run_job(&self, job: &JobSpec) -> Result<()> {
+        let model_path = self.model_path(&job.name);
+        if model_path.exists() {
+            if self.verbose {
+                eprintln!("[daemon] {}: output exists, skipping", job.name);
+            }
+            return Ok(());
+        }
+        std::fs::create_dir_all(&self.dir)?;
+        let (tx, rx) = mpsc::channel::<DaemonEvent>();
+        let worker_job = job.clone();
+        let snap_path = self.snap_path(&job.name);
+        let hold = self.round_hold;
+        let worker = std::thread::Builder::new()
+            .name(format!("hcfl-job-{}", job.name))
+            .spawn(move || {
+                let res = job_worker(&worker_job, &snap_path, hold, &tx);
+                if let Err(e) = &res {
+                    let _ = tx.send(DaemonEvent::JobFailed {
+                        job: worker_job.name.clone(),
+                        error: e.to_string(),
+                    });
+                }
+                res
+            })
+            .map_err(|e| HcflError::Engine(format!("job worker spawn failed: {e}")))?;
+
+        let mut done: Option<(Vec<RoundRecord>, Vec<f32>)> = None;
+        for ev in rx {
+            match ev {
+                DaemonEvent::RoundDone { job, record } => {
+                    if self.verbose {
+                        eprintln!(
+                            "[daemon] {job}: round {} done ({}/{} agg, up {} B)",
+                            record.round, record.completed, record.selected, record.up_bytes
+                        );
+                    }
+                }
+                DaemonEvent::JobDone {
+                    job,
+                    records,
+                    global,
+                } => {
+                    if self.verbose {
+                        eprintln!("[daemon] {job}: campaign complete ({} rounds)", records.len());
+                    }
+                    done = Some((records, global));
+                }
+                DaemonEvent::JobFailed { job, error } => {
+                    if self.verbose {
+                        eprintln!("[daemon] {job}: failed: {error}");
+                    }
+                }
+            }
+        }
+        worker
+            .join()
+            .map_err(|_| HcflError::Engine("job worker panicked".into()))??;
+        let (records, global) = done.ok_or_else(|| {
+            HcflError::Engine("job worker exited without reporting JobDone".into())
+        })?;
+
+        // Persist outputs, then drop the snapshot: once the model file
+        // exists the job is complete and restarts skip it.
+        let report = RunReport {
+            scheme: job.scheme.label(),
+            model: "fake".into(),
+            rounds: records,
+        };
+        report.write_csv(self.csv_path(&job.name))?;
+        write_model_atomic(&model_path, &global)?;
+        let _ = std::fs::remove_file(self.snap_path(&job.name));
+        Ok(())
+    }
+}
+
+/// Final-model file: raw little-endian f32 bit patterns, written with
+/// the same tmp + rename rule as snapshots (its existence marks the
+/// job complete, so it must never be observed torn).
+fn write_model_atomic(path: &Path, global: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(4 * global.len());
+    for v in global {
+        bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+    let mut tmp_name = path.as_os_str().to_owned();
+    tmp_name.push(".tmp");
+    let tmp = PathBuf::from(tmp_name);
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Freeze a campaign's cross-round state after round `rounds_done`.
+fn freeze(
+    cfg: &ExperimentConfig,
+    rounds_done: usize,
+    rng: [u64; 4],
+    global: &[f32],
+    carry: &CarryOver,
+) -> CampaignSnapshot {
+    CampaignSnapshot {
+        seed: cfg.seed,
+        codec: cfg.scheme.codec_tag(),
+        n_clients: cfg.n_clients as u64,
+        d: global.len() as u64,
+        rounds_done: rounds_done as u64,
+        rng,
+        global: global.to_vec(),
+        carry: carry.clone(),
+    }
+}
+
+/// The worker half of the bus: drive one campaign round by round,
+/// snapshotting after every `finalize`.
+fn job_worker(
+    job: &JobSpec,
+    snap_path: &Path,
+    hold: Duration,
+    tx: &mpsc::Sender<DaemonEvent>,
+) -> Result<()> {
+    let cfg = job.config();
+    match &job.driver {
+        JobDriver::InProcess => {
+            let engine = Engine::with_manifest(Manifest::synthetic(), cfg.engine_workers)?;
+            let mut sim = Simulation::new(&engine, cfg.clone())?;
+            let mut start = 1usize;
+            if snap_path.exists() {
+                let snap = CampaignSnapshot::load(snap_path)?;
+                snap.check(&cfg, sim.global().len())?;
+                if snap.rounds_done > cfg.rounds as u64 {
+                    return Err(HcflError::Snapshot(format!(
+                        "snapshot is {} rounds into a {}-round campaign",
+                        snap.rounds_done, cfg.rounds
+                    )));
+                }
+                start = snap.rounds_done as usize + 1;
+                sim.restore(snap.global, snap.carry, snap.rng)?;
+            }
+            let mut records = Vec::with_capacity(cfg.rounds + 1 - start);
+            for t in start..=cfg.rounds {
+                let rec = sim.run_round(t)?;
+                freeze(&cfg, t, sim.rng_state(), sim.global(), sim.carry())
+                    .write_atomic(snap_path)?;
+                let _ = tx.send(DaemonEvent::RoundDone {
+                    job: job.name.clone(),
+                    record: rec.clone(),
+                });
+                records.push(rec);
+                if t < cfg.rounds && !hold.is_zero() {
+                    std::thread::sleep(hold);
+                }
+            }
+            let _ = tx.send(DaemonEvent::JobDone {
+                job: job.name.clone(),
+                records,
+                global: sim.global().to_vec(),
+            });
+            Ok(())
+        }
+        JobDriver::Tcp { addr, conns } => {
+            let manifest = Manifest::synthetic();
+            let mut server = RoundServer::new(&manifest, cfg.clone())?;
+            let mut start = 1usize;
+            if snap_path.exists() {
+                let snap = CampaignSnapshot::load(snap_path)?;
+                snap.check(&cfg, server.global().len())?;
+                if snap.rounds_done > cfg.rounds as u64 {
+                    return Err(HcflError::Snapshot(format!(
+                        "snapshot is {} rounds into a {}-round campaign",
+                        snap.rounds_done, cfg.rounds
+                    )));
+                }
+                start = snap.rounds_done as usize + 1;
+                server.restore(snap.global, snap.carry, snap.rng)?;
+            }
+            let listener = TcpListener::bind(addr.as_str())?;
+            let mut link = server.accept_swarm(&listener, *conns)?;
+            let mut records = Vec::with_capacity(cfg.rounds + 1 - start);
+            for t in start..=cfg.rounds {
+                let rec = server.serve_round(&mut link, t)?;
+                freeze(&cfg, t, server.rng_state(), server.global(), server.carry())
+                    .write_atomic(snap_path)?;
+                let _ = tx.send(DaemonEvent::RoundDone {
+                    job: job.name.clone(),
+                    record: rec.clone(),
+                });
+                records.push(rec);
+                if t < cfg.rounds && !hold.is_zero() {
+                    std::thread::sleep(hold);
+                }
+            }
+            server.finish(link, cfg.rounds);
+            let _ = tx.send(DaemonEvent::JobDone {
+                job: job.name.clone(),
+                records,
+                global: server.global().to_vec(),
+            });
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_parses_both_drivers_and_comments() {
+        let text = "\
+# campaign queue
+alpha fedavg 32 4 7 inproc
+beta topk@0.1 64 3 11 tcp 127.0.0.1:7700 4  # socket job
+";
+        let jobs = parse_queue(text).unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].name, "alpha");
+        assert_eq!(jobs[0].scheme, Scheme::Fedavg);
+        assert_eq!(jobs[0].driver, JobDriver::InProcess);
+        assert_eq!(jobs[1].scheme, Scheme::TopK { keep: 0.1 });
+        assert_eq!(
+            jobs[1].driver,
+            JobDriver::Tcp {
+                addr: "127.0.0.1:7700".into(),
+                conns: 4
+            }
+        );
+        assert_eq!(jobs[1].rounds, 3);
+        assert_eq!(jobs[1].seed, 11);
+    }
+
+    #[test]
+    fn queue_rejects_malformed_lines() {
+        for bad in [
+            "x fedavg 32 4",                       // too few fields
+            "x hcfl@8 32 4 7 inproc",              // engine-bound scheme
+            "x topk@0 32 4 7 inproc",              // keep out of range
+            "x fedavg 32 4 7 warp",                // unknown driver
+            "x fedavg 32 4 7 tcp 127.0.0.1:7700",  // tcp missing conns
+            "x fedavg 32 4 7 inproc extra",        // trailing field
+            "a fedavg 32 4 7 inproc\na fedavg 8 2 9 inproc", // dup name
+        ] {
+            assert!(parse_queue(bad).is_err(), "accepted: {bad}");
+        }
+    }
+}

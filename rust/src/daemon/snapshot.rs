@@ -1,0 +1,370 @@
+//! Atomic campaign snapshots: the crash-tolerance substrate of the
+//! daemon (DESIGN.md §9).
+//!
+//! A snapshot captures, after some round's `finalize`, the complete
+//! cross-round state of a campaign — everything a resumed driver needs
+//! to continue bit-identically:
+//!
+//! * the global model's f32 bit patterns,
+//! * the in-flight [`CarryOver`] entries,
+//! * the index of the last finalized round,
+//! * the selection-RNG cursor ([`crate::util::rng::Rng::state`]).
+//!
+//! Everything else a round touches (dropout streams, work seeds, the
+//! timing model) is a pure function of `(cfg.seed, t)` and needs no
+//! persistence.  The byte layout is hand-rolled little-endian
+//! plain-struct serialization — no serde, per the crate's zero-dep
+//! rule — with a leading magic/version/fingerprint and a trailing
+//! CRC-32 ([`crate::compression::wire::crc32`]).  Decoding is
+//! all-or-nothing: any truncation, corruption or fingerprint mismatch
+//! yields [`HcflError::Snapshot`] and no state is touched.
+//!
+//! Writes are atomic on POSIX filesystems: the encoding is written and
+//! fsynced to a sibling `<path>.tmp`, then `rename(2)`d over the real
+//! path, so a reader (including a resumed daemon) only ever observes
+//! either the previous complete snapshot or the new one — never a
+//! torn write.
+
+use std::path::{Path, PathBuf};
+
+use crate::compression::wire::crc32;
+use crate::config::ExperimentConfig;
+use crate::coordinator::session::CarriedUpdate;
+use crate::coordinator::CarryOver;
+use crate::error::{HcflError, Result};
+
+/// A campaign's complete cross-round state, frozen between rounds.
+///
+/// `seed`, `codec`, `n_clients` and `d` are the config fingerprint: a
+/// snapshot only restores into a campaign whose configuration derives
+/// the very same per-round streams (see [`CampaignSnapshot::check`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignSnapshot {
+    /// The experiment seed every stream derives from.
+    pub seed: u64,
+    /// The scheme's wire codec tag (`Scheme::codec_tag`).
+    pub codec: u8,
+    /// Fleet size (K).
+    pub n_clients: u64,
+    /// Model dimensionality.
+    pub d: u64,
+    /// Rounds finalized before this snapshot; the resume point is
+    /// `rounds_done + 1`.
+    pub rounds_done: u64,
+    /// The selection-RNG cursor after `rounds_done` rounds.
+    pub rng: [u64; 4],
+    /// The global model after `rounds_done` rounds.
+    pub global: Vec<f32>,
+    /// Late updates in flight toward round `rounds_done + 1`.
+    pub carry: CarryOver,
+}
+
+/// Leading magic: "HSNP" (Hcfl SNaPshot).
+pub const SNAPSHOT_MAGIC: [u8; 4] = *b"HSNP";
+/// Format version; bumped on any layout change.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// Fixed-size prefix: magic, version, fingerprint, round index, RNG
+/// cursor, global length — the minimum a well-formed snapshot can be
+/// (plus the carry count and trailing CRC).
+const FIXED_LEN: usize = 4 + 4 + 8 + 1 + 8 + 8 + 8 + 32 + 8 + 8 + 4;
+
+fn snap_err(what: &str) -> HcflError {
+    HcflError::Snapshot(what.to_string())
+}
+
+/// Little-endian cursor over a CRC-verified body.
+struct Reader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.off < n {
+            return Err(snap_err("snapshot body shorter than its own counts"));
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    fn f64_bits(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.off != self.buf.len() {
+            return Err(snap_err("trailing bytes after snapshot payload"));
+        }
+        Ok(())
+    }
+}
+
+impl CampaignSnapshot {
+    /// Serialize to the normative §9 byte layout (CRC included).
+    pub fn encode(&self) -> Vec<u8> {
+        let carry_f32s: usize = self.carry.updates.iter().map(|u| u.decoded.len()).sum();
+        let mut out = Vec::with_capacity(
+            FIXED_LEN + 4 * self.global.len() + 48 * self.carry.updates.len() + 4 * carry_f32s,
+        );
+        out.extend_from_slice(&SNAPSHOT_MAGIC);
+        out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.push(self.codec);
+        out.extend_from_slice(&self.n_clients.to_le_bytes());
+        out.extend_from_slice(&self.d.to_le_bytes());
+        out.extend_from_slice(&self.rounds_done.to_le_bytes());
+        for w in self.rng {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.global.len() as u64).to_le_bytes());
+        for v in &self.global {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        out.extend_from_slice(&(self.carry.updates.len() as u64).to_le_bytes());
+        for u in &self.carry.updates {
+            out.extend_from_slice(&(u.client as u64).to_le_bytes());
+            out.extend_from_slice(&(u.n_samples as u64).to_le_bytes());
+            out.extend_from_slice(&(u.born_round as u64).to_le_bytes());
+            out.extend_from_slice(&u.base_weight.to_bits().to_le_bytes());
+            out.extend_from_slice(&u.arrival_s.to_bits().to_le_bytes());
+            out.extend_from_slice(&(u.decoded.len() as u64).to_le_bytes());
+            for v in &u.decoded {
+                out.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse and verify a snapshot.  All-or-nothing: short input, bad
+    /// magic, unknown version, CRC mismatch and trailing garbage all
+    /// return [`HcflError::Snapshot`] without producing a value.
+    pub fn decode(bytes: &[u8]) -> Result<CampaignSnapshot> {
+        if bytes.len() < FIXED_LEN {
+            return Err(snap_err("snapshot truncated"));
+        }
+        if bytes[..4] != SNAPSHOT_MAGIC {
+            return Err(snap_err("bad snapshot magic"));
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != SNAPSHOT_VERSION {
+            return Err(HcflError::Snapshot(format!(
+                "unsupported snapshot version {version} (want {SNAPSHOT_VERSION})"
+            )));
+        }
+        // Verify the checksum before trusting any embedded count, so a
+        // corrupt length can never drive a bogus allocation or a
+        // partial parse.
+        let (body, tail) = bytes.split_at(bytes.len() - 4);
+        let want = u32::from_le_bytes(tail.try_into().unwrap());
+        if crc32(body) != want {
+            return Err(snap_err("snapshot checksum mismatch"));
+        }
+        let mut r = Reader { buf: body, off: 8 };
+        let seed = r.u64()?;
+        let codec = r.u8()?;
+        let n_clients = r.u64()?;
+        let d = r.u64()?;
+        let rounds_done = r.u64()?;
+        let rng = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+        let n_global = r.u64()? as usize;
+        let global = r.f32s(n_global)?;
+        let n_carry = r.u64()? as usize;
+        let mut updates = Vec::with_capacity(n_carry.min(1 << 20));
+        for _ in 0..n_carry {
+            let client = r.u64()? as usize;
+            let n_samples = r.u64()? as usize;
+            let born_round = r.u64()? as usize;
+            let base_weight = r.f64_bits()?;
+            let arrival_s = r.f64_bits()?;
+            let n_decoded = r.u64()? as usize;
+            let decoded = r.f32s(n_decoded)?;
+            updates.push(CarriedUpdate {
+                client,
+                n_samples,
+                born_round,
+                base_weight,
+                arrival_s,
+                decoded,
+            });
+        }
+        r.finish()?;
+        Ok(CampaignSnapshot {
+            seed,
+            codec,
+            n_clients,
+            d,
+            rounds_done,
+            rng,
+            global,
+            carry: CarryOver { updates },
+        })
+    }
+
+    /// Verify the fingerprint against the campaign about to resume: the
+    /// seed, codec, fleet size and model dimensionality must all match,
+    /// or the restored streams would silently diverge from the
+    /// interrupted run.
+    pub fn check(&self, cfg: &ExperimentConfig, d: usize) -> Result<()> {
+        if self.seed != cfg.seed
+            || self.codec != cfg.scheme.codec_tag()
+            || self.n_clients != cfg.n_clients as u64
+            || self.d != d as u64
+        {
+            return Err(HcflError::Snapshot(format!(
+                "snapshot fingerprint mismatch: snapshot (seed {}, codec {}, K {}, d {}) \
+                 vs campaign (seed {}, codec {}, K {}, d {})",
+                self.seed,
+                self.codec,
+                self.n_clients,
+                self.d,
+                cfg.seed,
+                cfg.scheme.codec_tag(),
+                cfg.n_clients,
+                d
+            )));
+        }
+        if self.global.len() as u64 != self.d {
+            return Err(snap_err("snapshot global length disagrees with its own d"));
+        }
+        Ok(())
+    }
+
+    /// Write the snapshot atomically: encode, write + fsync a sibling
+    /// `<path>.tmp`, then rename over `path`.  A crash at any point
+    /// leaves either the previous snapshot or this one — never a torn
+    /// file.
+    pub fn write_atomic(&self, path: &Path) -> Result<()> {
+        let bytes = self.encode();
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        let tmp = PathBuf::from(tmp_name);
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Read and decode a snapshot file.
+    pub fn load(path: &Path) -> Result<CampaignSnapshot> {
+        let bytes = std::fs::read(path)?;
+        CampaignSnapshot::decode(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CampaignSnapshot {
+        CampaignSnapshot {
+            seed: 42,
+            codec: 1,
+            n_clients: 64,
+            d: 4,
+            rounds_done: 3,
+            rng: [1, 2, 3, 4],
+            global: vec![0.5, -1.25, f32::from_bits(0x7F80_0001), 0.0],
+            carry: CarryOver {
+                updates: vec![CarriedUpdate {
+                    client: 9,
+                    n_samples: 57,
+                    born_round: 2,
+                    base_weight: 0.75,
+                    arrival_s: -1.5,
+                    decoded: vec![1.0, 2.0, 3.0, 4.0],
+                }],
+            },
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trips_bit_exact() {
+        let snap = sample();
+        let bytes = snap.encode();
+        let back = CampaignSnapshot::decode(&bytes).unwrap();
+        // PartialEq on f32 vecs compares values; the NaN payload above
+        // needs a bit-level check too.
+        assert_eq!(back.rng, snap.rng);
+        assert_eq!(back.rounds_done, snap.rounds_done);
+        assert_eq!(
+            back.global.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            snap.global.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        );
+        assert_eq!(back.carry.updates.len(), 1);
+        assert_eq!(back.carry.updates[0].decoded, snap.carry.updates[0].decoded);
+        assert_eq!(back.carry.updates[0].base_weight, 0.75);
+    }
+
+    #[test]
+    fn truncation_and_corruption_are_typed_errors() {
+        let bytes = sample().encode();
+        // every possible truncation point
+        for cut in 0..bytes.len() {
+            let err = CampaignSnapshot::decode(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, HcflError::Snapshot(_)),
+                "cut {cut}: {err}"
+            );
+        }
+        // every single-byte corruption (skip none: magic, version,
+        // counts, payload and CRC must all be caught)
+        for i in 0..bytes.len() {
+            let mut evil = bytes.clone();
+            evil[i] ^= 0xFF;
+            let err = CampaignSnapshot::decode(&evil).unwrap_err();
+            assert!(matches!(err, HcflError::Snapshot(_)), "byte {i}: {err}");
+        }
+        // trailing garbage
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(matches!(
+            CampaignSnapshot::decode(&long).unwrap_err(),
+            HcflError::Snapshot(_)
+        ));
+    }
+
+    #[test]
+    fn atomic_write_then_load() {
+        let dir = std::env::temp_dir().join(format!("hcfl-snap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("job.snap");
+        let snap = sample();
+        snap.write_atomic(&path).unwrap();
+        // overwrite with a later snapshot: rename replaces in place
+        let mut later = snap.clone();
+        later.rounds_done = 4;
+        later.write_atomic(&path).unwrap();
+        let back = CampaignSnapshot::load(&path).unwrap();
+        assert_eq!(back.rounds_done, 4);
+        assert!(!path.with_extension("snap.tmp").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -32,6 +32,11 @@ pub enum HcflError {
     /// Dataset / shard construction problems.
     Data(String),
 
+    /// A campaign snapshot file is corrupt, truncated, or belongs to a
+    /// different experiment (`daemon::snapshot`).  Restore is
+    /// all-or-nothing: this error means no state was touched.
+    Snapshot(String),
+
     /// I/O wrapper.
     Io(std::io::Error),
 }
@@ -51,6 +56,7 @@ impl fmt::Display for HcflError {
             HcflError::WorkerGone => write!(f, "engine worker disconnected"),
             HcflError::Config(s) => write!(f, "config error: {s}"),
             HcflError::Data(s) => write!(f, "data error: {s}"),
+            HcflError::Snapshot(s) => write!(f, "snapshot error: {s}"),
             HcflError::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -24,6 +24,7 @@
 pub mod compression;
 pub mod config;
 pub mod coordinator;
+pub mod daemon;
 pub mod data;
 pub mod error;
 pub mod experiments;
@@ -45,6 +46,7 @@ pub mod prelude {
     pub use crate::coordinator::clock::RoundPolicy;
     pub use crate::coordinator::session::{CarryOver, CarryPolicy, FlSession};
     pub use crate::coordinator::Simulation;
+    pub use crate::daemon::{snapshot::CampaignSnapshot, Daemon, JobDriver, JobSpec};
     pub use crate::data::Dataset;
     pub use crate::error::HcflError;
     pub use crate::fl::{AggregatorKind, Server};

@@ -50,8 +50,8 @@ use crate::error::{HcflError, Result};
 use crate::metrics::RoundRecord;
 use crate::runtime::Manifest;
 
-pub use self::server::RoundServer;
-pub use self::swarm::{run_swarm, SwarmStats};
+pub use self::server::{RoundServer, SwarmLink};
+pub use self::swarm::{run_swarm, run_swarm_with, SwarmOptions, SwarmStats};
 
 /// Default cap on a declared payload length (64 MiB).  The reader
 /// rejects bigger declarations *before* allocating, so a forged header
@@ -452,6 +452,10 @@ pub fn demo_config(scheme: Scheme, n_clients: usize, rounds: usize, seed: u64) -
     cfg.client_threads = 4;
     cfg.engine_workers = 2;
     cfg.seed = seed;
+    // Over a real wire the exact-params sidecar defeats the codec (it
+    // ships the raw f32s next to every compressed payload), so the demo
+    // transport path leaves reconstruction-MSE instrumentation off.
+    cfg.send_exact = false;
     cfg
 }
 

@@ -16,6 +16,7 @@ use std::io::Read;
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use super::{
     engine_free_compressor, read_frame, write_frame, Assignment, Frame, RoundOpenMsg, UpdateMsg,
@@ -56,6 +57,39 @@ impl Conn {
     }
 }
 
+/// An accepted swarm: the connections, their reader threads, and the
+/// event channel the readers pump.  Produced by
+/// [`RoundServer::accept_swarm`], driven round by round through
+/// [`RoundServer::serve_round`], closed by [`RoundServer::finish`].
+/// Dropping a link without `finish` abandons the sockets mid-session —
+/// exactly the crash a resumed daemon recovers from (DESIGN.md §9).
+pub struct SwarmLink {
+    conns: Vec<Conn>,
+    readers: Vec<JoinHandle<()>>,
+    rx: mpsc::Receiver<(usize, Result<Frame>)>,
+}
+
+impl SwarmLink {
+    /// Connections still in the round-robin rotation.
+    pub fn live(&self) -> usize {
+        self.conns.iter().filter(|c| c.alive).count()
+    }
+
+    /// Tear every socket down with no goodbye frame — the in-process
+    /// stand-in for the owning process being killed (a real `SIGKILL`
+    /// closes the descriptors exactly like this).  The far end observes
+    /// a bare EOF mid-session, which is what sends a re-dialing swarm
+    /// worker back to `connect` (`crate::transport::SwarmOptions`).
+    pub fn sever(mut self) {
+        for conn in self.conns.iter_mut() {
+            conn.kill();
+        }
+        for join in self.readers.drain(..) {
+            let _ = join.join();
+        }
+    }
+}
+
 /// A socket-driven FL round server, bit-identical to the in-process
 /// [`crate::coordinator::Simulation`] driver for the engine-free
 /// schemes.
@@ -66,6 +100,14 @@ pub struct RoundServer {
     fleet: DeviceFleet,
     pool: WorkerPool,
     rng: Rng,
+    /// How long [`Self::accept_swarm`] waits for a connection's `Hello`
+    /// before retiring it; `None` waits forever (the pre-deadline
+    /// behavior, vulnerable to a stalled client).
+    handshake_timeout: Option<Duration>,
+    /// Wall-clock budget for one round's collection phase; on expiry
+    /// every connection still owing updates is retired and the round
+    /// closes with what arrived.  `None` waits forever.
+    round_deadline: Option<Duration>,
 }
 
 impl RoundServer {
@@ -102,7 +144,23 @@ impl RoundServer {
             fleet,
             pool,
             rng,
+            handshake_timeout: Some(Duration::from_secs(30)),
+            round_deadline: None,
         })
+    }
+
+    /// Bound the wait for each connection's `Hello` in
+    /// [`Self::accept_swarm`] (`None` waits forever).  Default: 30 s.
+    pub fn set_handshake_timeout(&mut self, timeout: Option<Duration>) {
+        self.handshake_timeout = timeout;
+    }
+
+    /// Bound one round's collection phase (`None` waits forever, the
+    /// default).  Enforced on the server's event channel, so a healthy
+    /// connection idling *between* rounds is never at risk — only one
+    /// that owes updates past the deadline is retired.
+    pub fn set_round_deadline(&mut self, deadline: Option<Duration>) {
+        self.round_deadline = deadline;
     }
 
     /// Current global model.
@@ -118,6 +176,34 @@ impl RoundServer {
     /// Late updates currently carried toward a future round.
     pub fn carry_pending(&self) -> usize {
         self.carry.len()
+    }
+
+    /// The in-flight carry-over, for snapshotting between rounds.
+    pub fn carry(&self) -> &CarryOver {
+        &self.carry
+    }
+
+    /// The selection-RNG cursor — with the global model and the
+    /// carry-over, the only state that crosses rounds
+    /// (`crate::daemon::snapshot`).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Rewind onto a snapshot taken after some round's `finalize`, so
+    /// the next [`Self::serve_round`] continues the interrupted campaign
+    /// bit-identically — the socket-path twin of
+    /// `Simulation::restore` (DESIGN.md §9).
+    pub fn restore(
+        &mut self,
+        global: Vec<f32>,
+        carry: CarryOver,
+        rng_state: [u64; 4],
+    ) -> Result<()> {
+        self.session.restore_global(global)?;
+        self.carry = carry;
+        self.rng = Rng::from_state(rng_state);
+        Ok(())
     }
 
     /// Accept `n_conns` swarm connections on `listener`, serve `rounds`
@@ -136,6 +222,21 @@ impl RoundServer {
         n_conns: usize,
         rounds: usize,
     ) -> Result<Vec<RoundRecord>> {
+        let mut link = self.accept_swarm(listener, n_conns)?;
+        let mut records = Vec::with_capacity(rounds);
+        for t in 1..=rounds {
+            records.push(self.serve_round(&mut link, t)?);
+        }
+        self.finish(link, rounds);
+        Ok(records)
+    }
+
+    /// Accept `n_conns` swarm connections and run their handshakes,
+    /// returning the live [`SwarmLink`].  A connection that fails the
+    /// handshake — or stalls past the handshake timeout before sending
+    /// `Hello` — is retired on the spot; it can never wedge the accept
+    /// loop for the swarm queued behind it.
+    pub fn accept_swarm(&self, listener: &TcpListener, n_conns: usize) -> Result<SwarmLink> {
         let codec = self.cfg.scheme.codec_tag();
         let (tx, rx) = mpsc::channel::<(usize, Result<Frame>)>();
         let mut conns: Vec<Conn> = Vec::with_capacity(n_conns);
@@ -148,11 +249,18 @@ impl RoundServer {
                 alive: true,
                 pending: 0,
             };
-            // Handshake: exactly one well-formed Hello with our codec.
+            // Handshake: exactly one well-formed Hello with our codec,
+            // inside the handshake deadline.
+            let _ = conn.stream.set_read_timeout(self.handshake_timeout);
             match read_frame(&mut conn.stream, DEFAULT_MAX_FRAME) {
                 Ok(f) if f.header.msg_type == MsgType::Hello && f.header.codec == codec => {}
                 _ => conn.kill(),
             }
+            // The reader clone shares the socket's timeout option —
+            // clear it so a healthy connection idling between rounds is
+            // never retired; the per-round deadline is enforced on the
+            // event channel in `serve_round` instead.
+            let _ = conn.stream.set_read_timeout(None);
             if conn.alive {
                 let mut reader = conn.stream.try_clone()?;
                 let tx = tx.clone();
@@ -165,14 +273,21 @@ impl RoundServer {
             conns.push(conn);
         }
         drop(tx);
+        Ok(SwarmLink { conns, readers, rx })
+    }
 
-        let mut records = Vec::with_capacity(rounds);
-        for t in 1..=rounds {
-            records.push(self.run_round(t, &mut conns, &rx)?);
-        }
-
-        // Session over: say goodbye, then tear every socket down so the
-        // reader threads unblock and can be joined.
+    /// Close the session: `Shutdown` every live connection, tear the
+    /// sockets down, and join the reader threads.  `rounds` is echoed in
+    /// the goodbye frame's round field so the swarm can report how far
+    /// the session got.
+    pub fn finish(&mut self, link: SwarmLink, rounds: usize) {
+        let codec = self.cfg.scheme.codec_tag();
+        let SwarmLink {
+            mut conns,
+            readers,
+            rx,
+        } = link;
+        drop(rx);
         for conn in conns.iter_mut() {
             if conn.alive {
                 let _ = write_frame(
@@ -190,17 +305,16 @@ impl RoundServer {
         for join in readers {
             let _ = join.join();
         }
-        Ok(records)
     }
 
     /// One socket-driven round: the `Simulation::run_round` recipe with
-    /// the client stage running on the far side of the wire.
-    fn run_round(
-        &mut self,
-        t: usize,
-        conns: &mut [Conn],
-        rx: &mpsc::Receiver<(usize, Result<Frame>)>,
-    ) -> Result<RoundRecord> {
+    /// the client stage running on the far side of the wire.  Public so
+    /// a resident driver (`crate::daemon`) can snapshot between rounds;
+    /// rounds must be served in order starting from `t = 1` (or from
+    /// `rounds_done + 1` after [`Self::restore`]).
+    pub fn serve_round(&mut self, link: &mut SwarmLink, t: usize) -> Result<RoundRecord> {
+        let conns: &mut [Conn] = &mut link.conns;
+        let rx = &link.rx;
         let codec = self.cfg.scheme.codec_tag();
         let selected = select_clients(self.cfg.n_clients, self.cfg.participation, &mut self.rng);
         let m = selected.len();
@@ -231,7 +345,12 @@ impl RoundServer {
                 seed: seed ^ ((k as u64) << 1),
             })
             .collect();
-        let transmitting = specs.len();
+        // The pacing forecast broadcast in `RoundOpenMsg`: how many
+        // uploads hit the air if every connection survives the round.
+        // It is sent before collection, so it cannot know about
+        // connection deaths — the *timing* model below uses the realized
+        // arrival count instead (DESIGN.md §8.6).
+        let forecast = specs.len();
 
         // Round-robin the work over live connections, then open the
         // round on each of them.
@@ -264,9 +383,9 @@ impl RoundServer {
                 batch: self.cfg.batch as u32,
                 lr: self.cfg.lr,
                 encode_deltas: self.cfg.encode_deltas,
-                send_exact: true,
+                send_exact: self.cfg.send_exact,
                 selected: m as u32,
-                transmitting: transmitting as u32,
+                transmitting: forecast as u32,
                 assignments: share,
                 global: global.clone(),
             };
@@ -286,15 +405,37 @@ impl RoundServer {
             total_pending += conn.pending;
         }
 
-        // Collect updates until every live assignment is fulfilled or
-        // its connection died.  A protocol violation retires the
-        // offending connection, never the round.
+        // Collect updates until every live assignment is fulfilled, its
+        // connection died, or the round deadline expired.  A protocol
+        // violation retires the offending connection, never the round.
+        let deadline = self.round_deadline.map(|d| Instant::now() + d);
         let mut results: Vec<Option<UpdateMsg>> = Vec::with_capacity(m);
         results.resize_with(m, || None);
         while total_pending > 0 {
-            let (idx, event) = match rx.recv() {
-                Ok(ev) => ev,
-                Err(_) => break, // every reader gone
+            let next = match deadline {
+                None => rx.recv().ok(),
+                Some(dl) => {
+                    match rx.recv_timeout(dl.saturating_duration_since(Instant::now())) {
+                        Ok(ev) => Some(ev),
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            // Deadline expired: retire every connection
+                            // still owing updates — exactly like a
+                            // malformed frame — and close the round with
+                            // what arrived.
+                            for conn in conns.iter_mut() {
+                                if conn.alive && conn.pending > 0 {
+                                    conn.kill();
+                                }
+                            }
+                            break;
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => None,
+                    }
+                }
+            };
+            let (idx, event) = match next {
+                Some(ev) => ev,
+                None => break, // every reader gone
             };
             if !conns[idx].alive {
                 continue;
@@ -323,18 +464,32 @@ impl RoundServer {
         // Timing + session pump: identical to the in-process driver.
         // `dropped` here means "nothing arrived" — the rng dropout
         // stream and dead-connection losses land in the same bucket.
+        // `transmitting` is therefore the count of *realized* arrivals,
+        // exactly what the in-process driver feeds `client_timing`: an
+        // assignment lost to a dead connection never occupied the
+        // shared uplink, and counting it would mistime every survivor.
+        let send_exact = self.cfg.send_exact;
         let measured: Vec<f64> = results
             .iter()
             .flatten()
             .map(|msg| msg.train_s)
             .collect();
         let reference_compute_s = stats::mean(&measured);
+        let transmitting = measured.len();
         let down_bytes = round.down_bytes();
         for (slot, &k) in selected.iter().enumerate() {
+            // The exact-params sidecar rides the same uplink as the
+            // payload when enabled: a 4-byte length plus raw f32s
+            // (DESIGN.md §8.4).
+            let extra = results[slot]
+                .as_ref()
+                .map(|msg| if send_exact { 4 + 4 * msg.exact.len() } else { 0 })
+                .unwrap_or(0);
             let up = results[slot]
                 .as_ref()
                 .map(|msg| msg.wire.len())
-                .unwrap_or(0);
+                .unwrap_or(0)
+                + extra;
             let timing = client_timing(
                 &self.cfg.link,
                 self.fleet.profile(k),
@@ -353,6 +508,7 @@ impl RoundServer {
                     n_samples: msg.n_samples as usize,
                     timing,
                     exact: msg.exact,
+                    extra_up_bytes: extra,
                     train_s: msg.train_s,
                 }),
                 None => round.mark_dropped(timing),
@@ -403,13 +559,18 @@ impl RoundServer {
                 h.msg_type
             )));
         }
-        if h.round != t as u32 || h.codec != codec || h.flags != FLAG_EXACT_PARAMS {
+        let want_flags = if self.cfg.send_exact {
+            FLAG_EXACT_PARAMS
+        } else {
+            0
+        };
+        if h.round != t as u32 || h.codec != codec || h.flags != want_flags {
             return Err(HcflError::Config(format!(
                 "update envelope mismatch: round {} codec {} flags {:#04x}",
                 h.round, h.codec, h.flags
             )));
         }
-        let msg = UpdateMsg::decode(&frame.payload, true)?;
+        let msg = UpdateMsg::decode(&frame.payload, self.cfg.send_exact)?;
         let slot = msg.slot as usize;
         if slot >= slot_conn.len()
             || slot_conn[slot] != Some(idx)

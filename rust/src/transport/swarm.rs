@@ -54,6 +54,29 @@ struct SwarmShared {
     time_scale: f64,
 }
 
+/// Swarm resilience knobs.  A crash-tolerant campaign restarts its
+/// server between rounds (DESIGN.md §9); workers given a re-dial
+/// budget survive the gap and resume serving assignments against the
+/// resumed session.
+#[derive(Debug, Clone)]
+pub struct SwarmOptions {
+    /// How many times a worker re-dials after a failed connect or a
+    /// dropped connection before giving up.  0 (the default)
+    /// reproduces the fail-fast single-session behavior.
+    pub redial_attempts: usize,
+    /// Pause between re-dial attempts.
+    pub redial_wait: Duration,
+}
+
+impl Default for SwarmOptions {
+    fn default() -> SwarmOptions {
+        SwarmOptions {
+            redial_attempts: 0,
+            redial_wait: Duration::from_millis(20),
+        }
+    }
+}
+
 /// Connect `workers` swarm connections to the server at `addr` and
 /// replay the fleet described by `cfg` until the server says
 /// `Shutdown`.
@@ -73,6 +96,19 @@ pub fn run_swarm(
     workers: usize,
     time_scale: f64,
 ) -> Result<SwarmStats> {
+    run_swarm_with(addr, cfg, workers, time_scale, &SwarmOptions::default())
+}
+
+/// [`run_swarm`] with explicit [`SwarmOptions`] — the entry point for
+/// crash-tolerant campaigns whose workers must re-dial a restarted
+/// server.
+pub fn run_swarm_with(
+    addr: &str,
+    cfg: &ExperimentConfig,
+    workers: usize,
+    time_scale: f64,
+    opts: &SwarmOptions,
+) -> Result<SwarmStats> {
     let mut data_spec = cfg.data.clone();
     data_spec.n_clients = cfg.n_clients;
     let shared = Arc::new(SwarmShared {
@@ -88,9 +124,10 @@ pub fn run_swarm(
     for w in 0..workers {
         let shared = Arc::clone(&shared);
         let addr = addr.to_string();
+        let opts = opts.clone();
         let join = std::thread::Builder::new()
             .name(format!("hcfl-swarm-{w}"))
-            .spawn(move || worker_loop(&addr, w, &shared))
+            .spawn(move || worker_loop(&addr, w, &shared, &opts))
             .map_err(|e| HcflError::Engine(format!("swarm worker spawn failed: {e}")))?;
         joins.push(join);
     }
@@ -111,9 +148,34 @@ pub fn run_swarm(
     }
 }
 
-/// One worker connection: handshake, then serve assignments until
-/// `Shutdown`.
-fn worker_loop(addr: &str, w: usize, shared: &SwarmShared) -> Result<SwarmStats> {
+/// One worker: serve sessions until a clean `Shutdown`, re-dialing
+/// through `opts.redial_attempts` connection failures along the way.
+fn worker_loop(addr: &str, w: usize, shared: &SwarmShared, opts: &SwarmOptions) -> Result<SwarmStats> {
+    let mut stats = SwarmStats::default();
+    let mut attempts_left = opts.redial_attempts;
+    loop {
+        match worker_session(addr, w, shared, &mut stats) {
+            Ok(()) => return Ok(stats),
+            Err(e) => {
+                if attempts_left == 0 {
+                    return Err(e);
+                }
+                attempts_left -= 1;
+                std::thread::sleep(opts.redial_wait);
+            }
+        }
+    }
+}
+
+/// One connected session: handshake, then serve assignments until
+/// `Shutdown`.  Counters accumulate into `stats`, so a re-dialing
+/// worker's totals span every session it survived.
+fn worker_session(
+    addr: &str,
+    w: usize,
+    shared: &SwarmShared,
+    stats: &mut SwarmStats,
+) -> Result<()> {
     let mut stream = TcpStream::connect(addr)?;
     let _ = stream.set_nodelay(true);
     write_frame(
@@ -125,10 +187,7 @@ fn worker_loop(addr: &str, w: usize, shared: &SwarmShared) -> Result<SwarmStats>
         w as u32,
         &[],
     )?;
-    let mut stats = SwarmStats {
-        bytes_sent: FRAME_HEADER_LEN,
-        ..SwarmStats::default()
-    };
+    stats.bytes_sent += FRAME_HEADER_LEN;
     let mut scratch = WireScratch::new();
     loop {
         let frame = read_frame(&mut stream, super::DEFAULT_MAX_FRAME)?;
@@ -136,10 +195,10 @@ fn worker_loop(addr: &str, w: usize, shared: &SwarmShared) -> Result<SwarmStats>
             MsgType::RoundOpen => {
                 let round = frame.header.round;
                 let open = RoundOpenMsg::decode(&frame.payload)?;
-                run_assignments(&mut stream, &open, round, w, shared, &mut scratch, &mut stats)?;
+                run_assignments(&mut stream, &open, round, w, shared, &mut scratch, stats)?;
             }
             MsgType::RoundDone => stats.rounds += 1,
-            MsgType::Shutdown => return Ok(stats),
+            MsgType::Shutdown => return Ok(()),
             other => {
                 return Err(HcflError::Config(format!(
                     "swarm expected RoundOpen/RoundDone/Shutdown, got {other:?}"
@@ -231,6 +290,26 @@ pub fn validated_swarm(
     workers: usize,
     time_scale: f64,
 ) -> Result<SwarmStats> {
+    validated_swarm_with(
+        manifest,
+        addr,
+        cfg,
+        workers,
+        time_scale,
+        &SwarmOptions::default(),
+    )
+}
+
+/// [`validated_swarm`] with explicit [`SwarmOptions`] (re-dial budget
+/// for crash-tolerant campaigns).
+pub fn validated_swarm_with(
+    manifest: &Manifest,
+    addr: &str,
+    cfg: &ExperimentConfig,
+    workers: usize,
+    time_scale: f64,
+    opts: &SwarmOptions,
+) -> Result<SwarmStats> {
     cfg.validate(manifest)?;
-    run_swarm(addr, cfg, workers, time_scale)
+    run_swarm_with(addr, cfg, workers, time_scale, opts)
 }

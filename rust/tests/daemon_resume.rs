@@ -1,0 +1,324 @@
+//! Crash-tolerance acceptance (DESIGN.md §9): a campaign interrupted
+//! after any round's snapshot and resumed by a fresh process-equivalent
+//! (new driver, restored state) must finish bit-identical to a run
+//! that was never interrupted — same remaining `RoundRecord`s, same
+//! final global model bits.  Covered here for both drivers:
+//!
+//! * the in-process `Simulation` path, through the serialized snapshot
+//!   (encode → atomic file → load → restore);
+//! * the TCP path, where the server is severed mid-campaign (no
+//!   `Shutdown` frames — the library stand-in for `SIGKILL`), rebinds
+//!   the same port, restores, and the swarm's re-dial budget carries
+//!   its workers across the gap;
+//! * the `Daemon` scheduler end-to-end: resuming a half-done job from
+//!   its `.snap`, skipping completed jobs, and refusing corrupt
+//!   snapshots with a typed error.
+//!
+//! The carry-heavy scenario (FastestM + stragglers + discounted carry)
+//! is deliberate: the snapshot must round-trip non-trivial `CarryOver`
+//! entries, not just the model vector.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use hcfl::compression::Scheme;
+use hcfl::coordinator::session::CarryPolicy;
+use hcfl::error::HcflError;
+use hcfl::metrics::RoundRecord;
+use hcfl::prelude::*;
+use hcfl::transport::{demo_config, run_loopback, run_swarm_with, SwarmOptions};
+
+/// The deterministic RoundRecord fields; measured timing fields are
+/// excluded by design (see `tests/transport_loopback.rs`).
+fn assert_record_eq(a: &RoundRecord, b: &RoundRecord) {
+    let t = a.round;
+    assert_eq!(a.round, b.round);
+    assert_eq!(a.up_bytes, b.up_bytes, "up_bytes diverged in round {t}");
+    assert_eq!(a.down_bytes, b.down_bytes, "down_bytes diverged in round {t}");
+    assert_eq!(a.selected, b.selected, "selected diverged in round {t}");
+    assert_eq!(a.completed, b.completed, "completed diverged in round {t}");
+    assert_eq!(a.dropped, b.dropped, "dropped diverged in round {t}");
+    assert_eq!(a.stragglers, b.stragglers, "stragglers diverged in round {t}");
+    assert_eq!(a.carried_in, b.carried_in, "carried_in diverged in round {t}");
+    assert_eq!(a.carried_out, b.carried_out, "carried_out diverged in round {t}");
+    assert_eq!(
+        a.carried_expired, b.carried_expired,
+        "carried_expired diverged in round {t}"
+    );
+    assert_eq!(a.recon_mse, b.recon_mse, "recon_mse diverged in round {t}");
+}
+
+/// The carry-heavy campaign both resume arms replay: FastestM cuts half
+/// the fleet every round, so the snapshot taken mid-campaign must carry
+/// live `CarryOver` entries across the crash.
+fn carry_campaign(rounds: usize) -> ExperimentConfig {
+    let mut cfg = demo_config(Scheme::TopK { keep: 0.2 }, 32, rounds, 42);
+    cfg.data.size_skew = 0.25;
+    cfg.scenario.policy = RoundPolicy::FastestM { m: 16 };
+    cfg.scenario.devices = DevicePreset::Stragglers {
+        frac: 0.25,
+        slowdown: 8.0,
+    };
+    cfg.scenario.carry = CarryPolicy::CarryDiscounted {
+        lambda: 0.5,
+        max_age_rounds: 3,
+    };
+    cfg.scenario.aggregator = AggregatorKind::SampleWeighted;
+    cfg
+}
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hcfl-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// In-process kill-and-resume: freeze after round 3 of 6, push the
+/// state through the full serialization path (encode → atomic write →
+/// load), rebuild the driver from scratch and finish — every remaining
+/// record and the final model bits must match the uninterrupted run.
+#[test]
+fn inprocess_resume_is_bit_identical() {
+    let cfg = carry_campaign(6);
+    let engine = Engine::with_manifest(Manifest::synthetic(), cfg.engine_workers).unwrap();
+
+    // The uninterrupted reference.
+    let mut reference = Simulation::new(&engine, cfg.clone()).unwrap();
+    let ref_records: Vec<RoundRecord> =
+        (1..=6).map(|t| reference.run_round(t).unwrap()).collect();
+    let ref_global = reference.global().to_vec();
+
+    // The interrupted run: three rounds, then freeze and "die".
+    let mut victim = Simulation::new(&engine, cfg.clone()).unwrap();
+    for t in 1..=3 {
+        victim.run_round(t).unwrap();
+    }
+    let snap = CampaignSnapshot {
+        seed: cfg.seed,
+        codec: cfg.scheme.codec_tag(),
+        n_clients: cfg.n_clients as u64,
+        d: victim.global().len() as u64,
+        rounds_done: 3,
+        rng: victim.rng_state(),
+        global: victim.global().to_vec(),
+        carry: victim.carry().clone(),
+    };
+    assert!(
+        !snap.carry.is_empty(),
+        "the carry campaign must snapshot live carry-over entries"
+    );
+    let dir = scratch_dir("resume-inproc");
+    let path = dir.join("campaign.snap");
+    snap.write_atomic(&path).unwrap();
+    drop(victim);
+
+    // A fresh process-equivalent: reload, fingerprint-check, restore.
+    let snap = CampaignSnapshot::load(&path).unwrap();
+    let mut resumed = Simulation::new(&engine, cfg.clone()).unwrap();
+    snap.check(&cfg, resumed.global().len()).unwrap();
+    assert_eq!(snap.rounds_done, 3);
+    resumed.restore(snap.global, snap.carry, snap.rng).unwrap();
+    for t in 4..=6 {
+        let rec = resumed.run_round(t).unwrap();
+        assert_record_eq(&ref_records[t - 1], &rec);
+    }
+    assert_eq!(
+        resumed.global(),
+        &ref_global[..],
+        "resumed final model bits diverged"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// TCP kill-and-resume: the server is severed after round 2 of 4 with
+/// no goodbye (the `SIGKILL` stand-in), a fresh server rebinds the same
+/// port and restores the snapshot, and the swarm's re-dial budget
+/// carries its connections across the restart.  Remaining records and
+/// the final global model must match an uninterrupted loopback run.
+#[test]
+fn tcp_resume_with_redialing_swarm_is_bit_identical() {
+    let cfg = carry_campaign(4);
+    let manifest = Manifest::synthetic();
+    let reference = run_loopback(&manifest, &cfg, 2, 0.0).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = SwarmOptions {
+        redial_attempts: 600,
+        redial_wait: Duration::from_millis(20),
+    };
+    let swarm_cfg = cfg.clone();
+    let swarm_addr = addr.clone();
+    let swarm = std::thread::spawn(move || {
+        run_swarm_with(&swarm_addr, &swarm_cfg, 2, 0.0, &opts).unwrap()
+    });
+
+    // Rounds 1–2, snapshot, then the "crash": listener gone, sockets
+    // severed mid-session, server dropped without `finish`.
+    let mut server = RoundServer::new(&manifest, cfg.clone()).unwrap();
+    let mut link = server.accept_swarm(&listener, 2).unwrap();
+    let mut records = Vec::new();
+    for t in 1..=2 {
+        records.push(server.serve_round(&mut link, t).unwrap());
+    }
+    let snap = CampaignSnapshot {
+        seed: cfg.seed,
+        codec: cfg.scheme.codec_tag(),
+        n_clients: cfg.n_clients as u64,
+        d: server.global().len() as u64,
+        rounds_done: 2,
+        rng: server.rng_state(),
+        global: server.global().to_vec(),
+        carry: server.carry().clone(),
+    };
+    assert!(!snap.carry.is_empty(), "snapshot must carry live entries");
+    let frozen = snap.encode();
+    drop(listener);
+    link.sever();
+    drop(server);
+
+    // The restarted daemon: same port, fresh server, restored state.
+    let snap = CampaignSnapshot::decode(&frozen).unwrap();
+    let listener = TcpListener::bind(&addr).unwrap();
+    let mut server = RoundServer::new(&manifest, cfg.clone()).unwrap();
+    snap.check(&cfg, server.global().len()).unwrap();
+    server.restore(snap.global, snap.carry, snap.rng).unwrap();
+    let mut link = server.accept_swarm(&listener, 2).unwrap();
+    for t in 3..=4 {
+        records.push(server.serve_round(&mut link, t).unwrap());
+    }
+    server.finish(link, 4);
+    let stats = swarm.join().unwrap();
+
+    assert_eq!(reference.records.len(), records.len());
+    for (a, b) in reference.records.iter().zip(&records) {
+        assert_record_eq(a, b);
+    }
+    assert_eq!(
+        server.global(),
+        &reference.global[..],
+        "final model bits diverged across the crash"
+    );
+    assert_eq!(stats.rounds, 4, "the swarm must see every round complete");
+    let carried: usize = records.iter().map(|r| r.carried_in).sum();
+    assert!(carried > 0, "the campaign never exercised carry-over");
+}
+
+/// The scheduler end-to-end: a half-done job (snapshot on disk, no
+/// model) resumes through `Daemon::run_job` and produces the exact
+/// final model of an uninterrupted run; a finished job is skipped
+/// idempotently.
+#[test]
+fn daemon_resumes_a_half_done_job_to_the_exact_model() {
+    let job = JobSpec {
+        name: "resume-e2e".into(),
+        scheme: Scheme::TopK { keep: 0.2 },
+        n_clients: 16,
+        rounds: 5,
+        seed: 9,
+        driver: JobDriver::InProcess,
+    };
+    let cfg = job.config();
+    let engine = Engine::with_manifest(Manifest::synthetic(), cfg.engine_workers).unwrap();
+
+    // The uninterrupted reference model.
+    let mut reference = Simulation::new(&engine, cfg.clone()).unwrap();
+    for t in 1..=5 {
+        reference.run_round(t).unwrap();
+    }
+    let ref_global = reference.global().to_vec();
+
+    // A victim drives three rounds and leaves only its snapshot behind.
+    let dir = scratch_dir("daemon-resume");
+    let mut victim = Simulation::new(&engine, cfg.clone()).unwrap();
+    for t in 1..=3 {
+        victim.run_round(t).unwrap();
+    }
+    let snap = CampaignSnapshot {
+        seed: cfg.seed,
+        codec: cfg.scheme.codec_tag(),
+        n_clients: cfg.n_clients as u64,
+        d: victim.global().len() as u64,
+        rounds_done: 3,
+        rng: victim.rng_state(),
+        global: victim.global().to_vec(),
+        carry: victim.carry().clone(),
+    };
+    snap.write_atomic(&dir.join("resume-e2e.snap")).unwrap();
+    drop(victim);
+
+    // The daemon picks the job up mid-campaign and completes it.
+    let daemon = Daemon::new(&dir);
+    daemon.run_job(&job).unwrap();
+    let model_path = dir.join("resume-e2e.model");
+    let bytes = std::fs::read(&model_path).unwrap();
+    let model: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+        .collect();
+    assert_eq!(
+        model.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        ref_global.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "daemon-resumed model must be bit-identical to the uninterrupted run"
+    );
+    assert!(
+        !dir.join("resume-e2e.snap").exists(),
+        "a completed job's snapshot is retired"
+    );
+    assert!(dir.join("resume-e2e.csv").exists());
+
+    // Idempotent restart: the model exists, so the job is skipped and
+    // the output is untouched.
+    daemon.run_job(&job).unwrap();
+    assert_eq!(std::fs::read(&model_path).unwrap(), bytes);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A corrupt snapshot must fail the resume with a typed error and stay
+/// on disk for inspection — never silently restart the campaign from
+/// round 1.
+#[test]
+fn daemon_refuses_a_corrupt_snapshot() {
+    let job = JobSpec {
+        name: "corrupt".into(),
+        scheme: Scheme::Fedavg,
+        n_clients: 8,
+        rounds: 3,
+        seed: 5,
+        driver: JobDriver::InProcess,
+    };
+    let cfg = job.config();
+    let engine = Engine::with_manifest(Manifest::synthetic(), cfg.engine_workers).unwrap();
+    let mut victim = Simulation::new(&engine, cfg.clone()).unwrap();
+    victim.run_round(1).unwrap();
+    let snap = CampaignSnapshot {
+        seed: cfg.seed,
+        codec: cfg.scheme.codec_tag(),
+        n_clients: cfg.n_clients as u64,
+        d: victim.global().len() as u64,
+        rounds_done: 1,
+        rng: victim.rng_state(),
+        global: victim.global().to_vec(),
+        carry: victim.carry().clone(),
+    };
+    let mut bytes = snap.encode();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    let dir = scratch_dir("daemon-corrupt");
+    let snap_path = dir.join("corrupt.snap");
+    std::fs::write(&snap_path, &bytes).unwrap();
+
+    let daemon = Daemon::new(&dir);
+    let err = daemon.run_job(&job).unwrap_err();
+    assert!(
+        matches!(err, HcflError::Snapshot(_)),
+        "wanted a typed snapshot error, got: {err}"
+    );
+    assert!(
+        snap_path.exists(),
+        "the corrupt snapshot must survive for inspection"
+    );
+    assert!(!dir.join("corrupt.model").exists());
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -67,6 +67,7 @@ fn mk_update(client: usize, slot: usize, arrival_s: f64, global: &[f32], seed: u
             dropped: false,
         },
         exact: params,
+        extra_up_bytes: 0,
         train_s: 0.01,
     }
 }

@@ -1,0 +1,392 @@
+//! Liveness + accounting regressions for the transport layer
+//! (DESIGN.md §8.6):
+//!
+//! 1. A connection that dies mid-round must leave the *timing* model
+//!    untouched for the survivors: `transmitting` is the count of
+//!    realized arrivals, not the pre-collection forecast.  The arm
+//!    pins this with a `Deadline` whose `t_max_s` sits between the
+//!    correct arrival time (uplink shared by the 4 realized uploads)
+//!    and the inflated one a forecast of 8 would produce — counting
+//!    the dead connection's uploads would halve every survivor's
+//!    modelled rate and cut all of them.  The loopback records are
+//!    checked field-by-field against an in-process replica of the
+//!    server recipe suffering the same losses.
+//! 2. A client that connects and never sends `Hello` is retired by the
+//!    handshake timeout instead of wedging `accept_swarm` forever.
+//! 3. A connection that accepts assignments and then goes silent is
+//!    retired by the per-round deadline; its share becomes device
+//!    losses, the round closes, and the next round reroutes.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use hcfl::compression::wire::MsgType;
+use hcfl::compression::{Compressor, Scheme, WireScratch, WireUpdate};
+use hcfl::config::ExperimentConfig;
+use hcfl::coordinator::clock::client_timing;
+use hcfl::coordinator::pool::WorkerPool;
+use hcfl::coordinator::session::ClientUpdate;
+use hcfl::coordinator::{round_seed, CarryOver, FlSession};
+use hcfl::data::{synthetic, FlData};
+use hcfl::fl::{select_clients, Server};
+use hcfl::metrics::RoundRecord;
+use hcfl::network::{DeviceFleet, LinkModel};
+use hcfl::prelude::*;
+use hcfl::transport::{
+    demo_config, engine_free_compressor, read_frame, run_swarm, write_frame, RoundOpenMsg,
+    DEFAULT_MAX_FRAME,
+};
+use hcfl::util::rng::Rng;
+
+/// The deterministic RoundRecord fields (timing fields are measured on
+/// both paths and excluded by design — see `tests/transport_loopback.rs`).
+fn assert_record_eq(a: &RoundRecord, b: &RoundRecord) {
+    let t = a.round;
+    assert_eq!(a.round, b.round);
+    assert_eq!(a.up_bytes, b.up_bytes, "up_bytes diverged in round {t}");
+    assert_eq!(a.down_bytes, b.down_bytes, "down_bytes diverged in round {t}");
+    assert_eq!(a.selected, b.selected, "selected diverged in round {t}");
+    assert_eq!(a.completed, b.completed, "completed diverged in round {t}");
+    assert_eq!(a.dropped, b.dropped, "dropped diverged in round {t}");
+    assert_eq!(a.stragglers, b.stragglers, "stragglers diverged in round {t}");
+    assert_eq!(a.carried_in, b.carried_in, "carried_in diverged in round {t}");
+    assert_eq!(a.carried_out, b.carried_out, "carried_out diverged in round {t}");
+    assert_eq!(
+        a.carried_expired, b.carried_expired,
+        "carried_expired diverged in round {t}"
+    );
+    assert_eq!(a.recon_mse, b.recon_mse, "recon_mse diverged in round {t}");
+}
+
+/// An in-process replica of the `RoundServer` recipe that can lose an
+/// arbitrary subset of each round's assignments, standing in for a
+/// connection that died mid-round.  Everything else — selection,
+/// dropout stream, fake-train math, codec, timing pump — is the shared
+/// deterministic recipe, so its records are the ground truth a lossy
+/// loopback round must reproduce.
+struct LossyReplica {
+    cfg: ExperimentConfig,
+    session: FlSession,
+    carry: CarryOver,
+    fleet: DeviceFleet,
+    pool: WorkerPool,
+    rng: Rng,
+    compressor: std::sync::Arc<dyn Compressor>,
+    data: FlData,
+}
+
+impl LossyReplica {
+    fn new(manifest: &Manifest, cfg: ExperimentConfig) -> LossyReplica {
+        let model = manifest.model(&cfg.model).unwrap().clone();
+        let mut rng = Rng::new(cfg.seed);
+        let server = Server::new(&model, &mut rng);
+        let fleet = DeviceFleet::sample(cfg.n_clients, &cfg.scenario.devices, cfg.seed);
+        let compressor = engine_free_compressor(&cfg.scheme).unwrap();
+        let session = FlSession::new(
+            server,
+            compressor.clone(),
+            cfg.scenario.aggregator.clone(),
+            cfg.scenario.carry.clone(),
+            cfg.encode_deltas,
+            cfg.compress_downlink,
+        );
+        let pool = WorkerPool::new(cfg.client_threads, cfg.engine_workers).unwrap();
+        let data = synthetic(&cfg.data, cfg.seed);
+        LossyReplica {
+            cfg,
+            session,
+            carry: CarryOver::empty(),
+            fleet,
+            pool,
+            rng,
+            compressor,
+            data,
+        }
+    }
+
+    /// Run round `t`, losing every assignment whose index satisfies
+    /// `lost` (the loopback analogue: assignment i rides connection
+    /// `live[i % live.len()]`, so a dead connection loses a residue
+    /// class).
+    fn run_round(&mut self, t: usize, lost: impl Fn(usize) -> bool) -> RoundRecord {
+        let selected = select_clients(self.cfg.n_clients, self.cfg.participation, &mut self.rng);
+        let m = selected.len();
+        self.session.set_scenario(
+            self.cfg.scenario.aggregator.clone(),
+            self.cfg.scenario.carry.clone(),
+        );
+        let carry = std::mem::take(&mut self.carry);
+        let mut round = self.session.begin_round(t, carry).unwrap();
+
+        let seed = round_seed(self.cfg.seed, t);
+        let mut drop_rng = Rng::new(seed ^ 0x0D10_D0A7_5EED_0001);
+        let dropped: Vec<bool> = selected
+            .iter()
+            .map(|&k| drop_rng.next_f64() < self.fleet.profile(k).dropout_p)
+            .collect();
+        let specs: Vec<(usize, usize, u64)> = selected
+            .iter()
+            .enumerate()
+            .filter(|&(slot, _)| !dropped[slot])
+            .map(|(slot, &k)| (slot, k, seed ^ ((k as u64) << 1)))
+            .collect();
+
+        // Fake-train + encode the assignments that "arrived" — the
+        // exact swarm-worker computation, seeded identically.
+        let global: Vec<f32> = round.global().as_ref().clone();
+        let mut scratch = WireScratch::new();
+        let mut results: Vec<Option<(Vec<u8>, usize, f64)>> = vec![None; m];
+        for (i, &(slot, k, wseed)) in specs.iter().enumerate() {
+            if lost(i) {
+                continue;
+            }
+            let mut crng = Rng::new(wseed);
+            let started = Instant::now();
+            let scale = self.cfg.lr * (self.cfg.local_epochs.max(1) as f32).sqrt() * 0.1;
+            let params: Vec<f32> = global.iter().map(|g| g + scale * crng.normal()).collect();
+            let payload = self
+                .compressor
+                .encode_payload(&params, &global, self.cfg.encode_deltas);
+            let update = self.compressor.compress(&payload, 0).unwrap();
+            let wire = scratch.pack_update(&update.payload).unwrap();
+            let train_s = started.elapsed().as_secs_f64();
+            results[slot] = Some((wire.bytes, self.data.shard_rows(k), train_s));
+        }
+
+        // Timing pump: transmitting = realized arrivals, exactly the
+        // rule the loopback server must follow when connections die.
+        let measured: Vec<f64> = results
+            .iter()
+            .flatten()
+            .map(|&(_, _, train_s)| train_s)
+            .collect();
+        let reference_compute_s = if measured.is_empty() {
+            0.0
+        } else {
+            measured.iter().sum::<f64>() / measured.len() as f64
+        };
+        let transmitting = measured.len();
+        let down_bytes = round.down_bytes();
+        for (slot, &k) in selected.iter().enumerate() {
+            let up = results[slot].as_ref().map(|(w, _, _)| w.len()).unwrap_or(0);
+            let timing = client_timing(
+                &self.cfg.link,
+                self.fleet.profile(k),
+                k,
+                slot,
+                up,
+                down_bytes,
+                reference_compute_s,
+                m,
+                transmitting,
+                results[slot].is_none(),
+            );
+            match results[slot].take() {
+                Some((wire, n_samples, train_s)) => round.submit(ClientUpdate {
+                    payload: WireUpdate { bytes: wire },
+                    n_samples,
+                    timing,
+                    exact: Vec::new(),
+                    extra_up_bytes: 0,
+                    train_s,
+                }),
+                None => round.mark_dropped(timing),
+            }
+        }
+
+        let resolved = round.resolve(&self.cfg.scenario.policy);
+        let (rec, carry) = resolved.finalize(&self.pool).unwrap();
+        self.carry = carry;
+        rec
+    }
+}
+
+/// The byte length of one Fedavg (identity-codec) update on the wire —
+/// content-independent, so one probe encode prices every client.
+fn fedavg_wire_len(cfg: &ExperimentConfig, d: usize) -> usize {
+    let comp = engine_free_compressor(&cfg.scheme).unwrap();
+    let zeros = vec![0.0f32; d];
+    let payload = comp.encode_payload(&zeros, &zeros, cfg.encode_deltas);
+    let update = comp.compress(&payload, 0).unwrap();
+    WireScratch::new()
+        .pack_update(&update.payload)
+        .unwrap()
+        .bytes
+        .len()
+}
+
+/// Regression pin for the `transmitting` fix: a connection dying
+/// mid-round must not inflate the survivors' modelled uplink share.
+/// The deadline is placed halfway between the correct arrival (cell
+/// shared by the 4 realized uploads) and the arrival a stale forecast
+/// of 8 would model — under the old accounting every survivor misses
+/// the deadline and the round collapses to zero completions.
+#[test]
+fn dead_connection_keeps_survivor_timing_honest() {
+    let mut cfg = demo_config(Scheme::Fedavg, 8, 2, 42);
+    let manifest = Manifest::synthetic();
+    let d = RoundServer::new(&manifest, cfg.clone()).unwrap().global().len();
+    let wire_len = fedavg_wire_len(&cfg, d);
+
+    // Price the link so 4 transmitters put one update on the air in
+    // exactly 1 s (and a stale forecast of 8 would model 2 s), then
+    // split the difference with the deadline: the margin on either
+    // side is ~0.5 s of modelled air time against microseconds of
+    // measured-compute jitter.
+    cfg.link = LinkModel {
+        uplink_bps: (wire_len * 8 * 4) as f64,
+        downlink_bps: cfg.link.downlink_bps,
+    };
+    let fleet = DeviceFleet::sample(cfg.n_clients, &cfg.scenario.devices, cfg.seed);
+    let down_bytes = 4 * d; // compress_downlink is off in demo_config
+    let arrive = |tx: usize| {
+        client_timing(
+            &cfg.link,
+            fleet.profile(0),
+            0,
+            0,
+            wire_len,
+            down_bytes,
+            0.0,
+            8,
+            tx,
+            false,
+        )
+        .arrival_s()
+    };
+    cfg.scenario.policy = RoundPolicy::Deadline {
+        t_max_s: 0.5 * (arrive(4) + arrive(8)),
+    };
+
+    // TCP path: the evil connection handshakes first (so it is conn 0,
+    // owning assignment indices i % 2 == 0), then garbles mid-round 1.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut server = RoundServer::new(&manifest, cfg.clone()).unwrap();
+    let mut evil = TcpStream::connect(&addr).unwrap();
+    write_frame(
+        &mut evil,
+        MsgType::Hello,
+        cfg.scheme.codec_tag(),
+        0,
+        0,
+        0,
+        &[],
+    )
+    .unwrap();
+    let evil_thread = std::thread::spawn(move || {
+        use std::io::Write;
+        let open = read_frame(&mut evil, DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(open.header.msg_type, MsgType::RoundOpen);
+        let assigned = RoundOpenMsg::decode(&open.payload).unwrap().assignments.len();
+        evil.write_all(&[0xFF; 64]).unwrap(); // not a frame
+        let _ = evil.flush();
+        assigned
+    });
+    let swarm_cfg = cfg.clone();
+    let swarm_addr = addr.clone();
+    let honest = std::thread::spawn(move || run_swarm(&swarm_addr, &swarm_cfg, 1, 0.0).unwrap());
+    let records = server.serve(&listener, 2, 2).unwrap();
+    assert_eq!(evil_thread.join().unwrap(), 4);
+    let stats = honest.join().unwrap();
+
+    // Round 1: the honest half beats the honest deadline.  Under the
+    // stale-forecast bug their modelled uplink takes 2x longer and all
+    // four are cut as stragglers instead.
+    assert_eq!(records[0].selected, 8);
+    assert_eq!(records[0].dropped, 4, "dead connection's share is lost");
+    assert_eq!(records[0].completed, 4, "survivors must beat the deadline");
+    assert_eq!(records[0].stragglers, 0);
+    // Round 2: all 8 reroute to the live connection; with 8 realized
+    // transmitters the shared cell halves every rate and the same
+    // deadline now cuts everyone — the fix must price round 2 at 8.
+    assert_eq!(records[1].completed, 0);
+    assert_eq!(records[1].stragglers, 8);
+    assert_eq!(records[1].dropped, 0);
+    assert_eq!(stats.updates_sent, 4 + 8);
+
+    // Field-by-field against the in-process replica with the same
+    // losses: round 1 loses conn 0's residue class, round 2 nothing.
+    let mut replica = LossyReplica::new(&manifest, cfg.clone());
+    let r1 = replica.run_round(1, |i| i % 2 == 0);
+    let r2 = replica.run_round(2, |_| false);
+    assert_record_eq(&r1, &records[0]);
+    assert_record_eq(&r2, &records[1]);
+}
+
+/// A client that connects and never says `Hello` is retired by the
+/// handshake timeout; the swarm queued behind it is served normally.
+/// Before the timeout existed this wedged `accept_swarm` forever.
+#[test]
+fn stalled_pre_hello_client_cannot_wedge_the_server() {
+    let cfg = demo_config(Scheme::Fedavg, 8, 1, 42);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut server = RoundServer::new(&Manifest::synthetic(), cfg.clone()).unwrap();
+    server.set_handshake_timeout(Some(Duration::from_millis(250)));
+
+    // Connects first (so it is accepted first) and stays silent.
+    let stalled = TcpStream::connect(&addr).unwrap();
+    let swarm_cfg = cfg.clone();
+    let swarm_addr = addr.clone();
+    let honest = std::thread::spawn(move || run_swarm(&swarm_addr, &swarm_cfg, 1, 0.0).unwrap());
+
+    let records = server.serve(&listener, 2, 1).unwrap();
+    let stats = honest.join().unwrap();
+    drop(stalled);
+
+    assert_eq!(records.len(), 1);
+    assert_eq!(records[0].selected, 8);
+    assert_eq!(records[0].completed, 8, "all work reroutes past the stall");
+    assert_eq!(records[0].dropped, 0);
+    assert_eq!(stats.updates_sent, 8);
+}
+
+/// A connection that takes assignments and then goes silent mid-round
+/// is retired by the per-round deadline: its share becomes device
+/// losses, the round closes with what arrived, and the next round
+/// reroutes everything to the survivor.
+#[test]
+fn silent_mid_round_stall_is_cut_by_the_round_deadline() {
+    let cfg = demo_config(Scheme::Fedavg, 8, 2, 42);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut server = RoundServer::new(&Manifest::synthetic(), cfg.clone()).unwrap();
+    server.set_round_deadline(Some(Duration::from_millis(750)));
+
+    // Handshakes first (conn 0), accepts round 1's assignments, then
+    // never replies — the socket stays open, so only the deadline can
+    // retire it.
+    let mut mute = TcpStream::connect(&addr).unwrap();
+    write_frame(
+        &mut mute,
+        MsgType::Hello,
+        cfg.scheme.codec_tag(),
+        0,
+        0,
+        0,
+        &[],
+    )
+    .unwrap();
+    let mute_thread = std::thread::spawn(move || {
+        let open = read_frame(&mut mute, DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(open.header.msg_type, MsgType::RoundOpen);
+        // Hold the connection open and silent until the server tears it
+        // down at the deadline.
+        while read_frame(&mut mute, DEFAULT_MAX_FRAME).is_ok() {}
+    });
+    let swarm_cfg = cfg.clone();
+    let swarm_addr = addr.clone();
+    let honest = std::thread::spawn(move || run_swarm(&swarm_addr, &swarm_cfg, 1, 0.0).unwrap());
+
+    let records = server.serve(&listener, 2, 2).unwrap();
+    mute_thread.join().unwrap();
+    let stats = honest.join().unwrap();
+
+    assert_eq!(records[0].selected, 8);
+    assert_eq!(records[0].completed, 4, "the honest half arrived in time");
+    assert_eq!(records[0].dropped, 4, "the mute half expired at the deadline");
+    assert_eq!(records[1].completed, 8, "round 2 reroutes past the dead conn");
+    assert_eq!(records[1].dropped, 0);
+    assert_eq!(stats.updates_sent, 4 + 8);
+}

@@ -114,6 +114,50 @@ fn loopback_dropouts_are_bit_identical() {
     assert!(dropped > 0, "the dropout arm never dropped a device");
 }
 
+/// The exact-params sidecar is config-driven and accounted: with
+/// `send_exact = true` the wire path ships the raw f32s next to every
+/// compressed payload and bills them into `up_bytes` (4-byte count +
+/// 4·d payload per arrival), while the in-process path measures the
+/// codec wire alone — so the two paths differ by exactly the sidecar
+/// bytes and agree on everything else, including a nonzero
+/// reconstruction MSE computed from the very same sidecar.
+/// Synchronous policy + homogeneous devices: every selected client
+/// arrives and aggregation ignores arrival order, so the constant
+/// per-update byte shift cannot change any decision.
+#[test]
+fn loopback_exact_sidecar_is_accounted_in_up_bytes() {
+    let mut cfg = demo_config(Scheme::TopK { keep: 0.2 }, 24, 2, 42);
+    cfg.send_exact = true;
+
+    let (global, recs) = run_inprocess(&cfg);
+    let tcp = run_over_tcp(&cfg, 2);
+
+    assert_eq!(global, tcp.global, "global model bits diverged");
+    let d = tcp.global.len() as u64;
+    assert_eq!(recs.len(), tcp.records.len());
+    for (a, b) in recs.iter().zip(&tcp.records) {
+        let t = a.round;
+        assert_eq!(a.dropped, 0, "homogeneous arm must not drop");
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.stragglers, b.stragglers);
+        assert_eq!(a.down_bytes, b.down_bytes);
+        assert_eq!(a.recon_mse, b.recon_mse, "recon_mse diverged in round {t}");
+        assert!(
+            a.recon_mse > 0.0,
+            "TopK keep<1 must reconstruct with loss, round {t}"
+        );
+        let arrivals = (a.selected - a.dropped) as u64;
+        assert_eq!(
+            b.up_bytes,
+            a.up_bytes + arrivals * (4 + 4 * d),
+            "round {t}: wire up_bytes must equal codec bytes plus the \
+             accounted sidecar (4-byte count + 4·d per arrival)"
+        );
+    }
+}
+
 /// The issue's acceptance bar: one K=10 000 round over real sockets,
 /// bit-identical to the in-process K=10k pin (`tests/round10k.rs`
 /// configuration: non-IID Dirichlet shards, skewed sizes,
