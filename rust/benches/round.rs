@@ -388,6 +388,56 @@ fn k10_round_bench(budget: f64, results: &mut Vec<BenchResult>) {
     ));
 }
 
+/// Flat vs hierarchical fold at K=10k and K=100k (DESIGN.md §10): the
+/// same fake-train synchronous round as [`k10_round_bench`], folded by
+/// the single root session and by a 16-shard edge tier.  The two arms
+/// compute bit-identical global models (pinned in
+/// `tests/edge_sharding.rs`), so the delta is pure fold scheduling:
+/// per-shard arenas and pools against one contended arena and a single
+/// `reduce_tree` over all K leaves.
+fn sharded_round_bench(budget: f64, results: &mut Vec<BenchResult>) {
+    for m in [10_000usize, 100_000] {
+        let k_label = if m == 10_000 { "K=10k" } else { "K=100k" };
+        println!("\n== {k_label} round makespan: flat fold vs 16 edge shards ==");
+        for edge in [0usize, 16] {
+            let mut cfg = ExperimentConfig::mnist(Scheme::TopK { keep: 0.1 }, 1_000_000);
+            cfg.model = "fake".into();
+            cfg.fake_train = true;
+            cfg.n_clients = m;
+            cfg.data.n_clients = m;
+            cfg.participation = 1.0;
+            cfg.batch = 16;
+            cfg.data.per_client = 64;
+            cfg.data.test_n = 16;
+            cfg.data.server_n = 8;
+            cfg.data.lazy_shards = true;
+            cfg.send_exact = false;
+            cfg.client_threads = 8;
+            cfg.engine_workers = 2;
+            cfg.edge_shards = edge;
+            let engine = Engine::with_manifest(Manifest::synthetic(), 2).unwrap();
+            let mut sim = Simulation::new(&engine, cfg).unwrap();
+            let mut t = 0usize;
+            let arm = if edge == 0 {
+                "flat".to_string()
+            } else {
+                format!("E={edge}")
+            };
+            results.push(bench_items(
+                &format!("sharded round {k_label} [{arm}]"),
+                budget,
+                10,
+                m,
+                || {
+                    t += 1;
+                    let rec = sim.run_round(t).expect("sharded round");
+                    assert_eq!(rec.selected, m);
+                },
+            ));
+        }
+    }
+}
+
 /// The transport acceptance number: the same K=10k synchronous round as
 /// [`k10_round_bench`], but served over real TCP — a `RoundServer`
 /// owning the session on one side, 4 swarm worker connections
@@ -464,6 +514,7 @@ fn main() {
     aggregation_bench(budget, &mut results);
     session_round_bench(budget, &mut results);
     k10_round_bench(budget, &mut results);
+    sharded_round_bench(budget, &mut results);
     loopback_bench(budget, &mut results);
 
     // `--gate-speedup X` enforces the kernel floor (the ISSUE's >=4x

@@ -3,6 +3,7 @@
 //! throughput regressions.
 //!
 //!   bench_check <baseline.json> <fresh.json> [--tolerance 0.25]
+//!               [--require-armed]
 //!
 //! Baseline entries with a numeric `throughput_per_s` are enforced: the
 //! fresh run must reach at least `(1 - tolerance)` of the recorded
@@ -11,10 +12,14 @@
 //! record-only — they pin the case *names* so renames/disappearances
 //! are caught, but carry no number to regress against (the bootstrap
 //! state: refresh with `cargo bench --bench round` on a quiet machine,
-//! then `cp BENCH_round.json BENCH_baseline.json` and commit).
+//! then `cp BENCH_round.json BENCH_baseline.json` and commit).  Ungated
+//! cases are counted and warned about explicitly, so a baseline that
+//! silently enforces nothing is visible in the CI log;
+//! `--require-armed` hardens that warning into a failure (for repos
+//! past the bootstrap state that must never regress to record-only).
 //!
-//! Exit codes: 0 ok, 1 regression/missing case, 2 usage or unreadable
-//! input.
+//! Exit codes: 0 ok, 1 regression/missing case (or ungated cases under
+//! `--require-armed`), 2 usage or unreadable input.
 
 use std::process::exit;
 
@@ -47,6 +52,7 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let mut paths = Vec::new();
     let mut tolerance = 0.25f64;
+    let mut require_armed = false;
     let mut i = 0;
     while i < argv.len() {
         if argv[i] == "--tolerance" {
@@ -56,13 +62,18 @@ fn main() {
             };
             tolerance = t;
             i += 2;
+        } else if argv[i] == "--require-armed" {
+            require_armed = true;
+            i += 1;
         } else {
             paths.push(argv[i].clone());
             i += 1;
         }
     }
     if paths.len() != 2 || !(0.0..1.0).contains(&tolerance) {
-        eprintln!("usage: bench_check <baseline.json> <fresh.json> [--tolerance 0.25]");
+        eprintln!(
+            "usage: bench_check <baseline.json> <fresh.json> [--tolerance 0.25] [--require-armed]"
+        );
         exit(2);
     }
     let baseline = match load(&paths[0]) {
@@ -83,6 +94,7 @@ fn main() {
 
     let mut failures = 0usize;
     let mut enforced = 0usize;
+    let mut ungated = 0usize;
     for (name, base_tput) in &baseline {
         let Some((_, fresh_tput)) = fresh.iter().find(|(n, _)| n == name) else {
             eprintln!("FAIL {name}: case missing from the fresh report");
@@ -91,6 +103,7 @@ fn main() {
         };
         let Some(base) = base_tput else {
             println!("  ok {name}: record-only baseline (no throughput pinned)");
+            ungated += 1;
             continue;
         };
         enforced += 1;
@@ -116,6 +129,17 @@ fn main() {
         "bench_check: {} baseline cases, {enforced} enforced, {failures} failures",
         baseline.len()
     );
+    if ungated > 0 {
+        eprintln!(
+            "WARN: {ungated} cases ungated (null baseline throughput — the regression gate \
+             enforces nothing for them; arm with `cargo bench --bench round` on a quiet \
+             machine, then `cp BENCH_round.json BENCH_baseline.json`)"
+        );
+        if require_armed {
+            eprintln!("FAIL: --require-armed set and {ungated} cases are still record-only");
+            exit(1);
+        }
+    }
     if failures > 0 {
         exit(1);
     }

@@ -10,12 +10,14 @@
 //! ```
 //!
 //! Queue file: one job per line,
-//! `name scheme clients rounds seed driver [addr conns]` — scheme is
-//! `fedavg` or `topk@<keep>`, driver is `inproc` or
+//! `name scheme clients rounds seed driver [addr conns] [edge=<E>]` —
+//! scheme is `fedavg` or `topk@<keep>`, driver is `inproc` or
 //! `tcp <addr> <conns>` (the swarm dials in separately, e.g.
-//! `hcfl-swarm --redial 600`).  Completed jobs (their `<name>.model`
-//! exists in `--dir`) are skipped, so re-running the daemon over the
-//! same queue is idempotent.
+//! `hcfl-swarm --redial 600`), and the optional `edge=<E>` folds the
+//! round through `E` edge-aggregation shards (DESIGN.md §10; same bits,
+//! so snapshots resume across any `E`).  Completed jobs (their
+//! `<name>.model` exists in `--dir`) are skipped, so re-running the
+//! daemon over the same queue is idempotent.
 //!
 //! A single job can also be given inline instead of `--queue`:
 //!
@@ -32,7 +34,7 @@ use hcfl::util::cli::Args;
 
 fn inline_job(args: &Args) -> Result<Vec<JobSpec>> {
     let text = format!(
-        "{} {} {} {} {} {}",
+        "{} {} {} {} {} {}{}",
         args.str_or("name", "job"),
         args.str_or("scheme", "fedavg"),
         args.usize_or("clients", 64)?,
@@ -41,6 +43,10 @@ fn inline_job(args: &Args) -> Result<Vec<JobSpec>> {
         match args.str_or("addr", "") {
             "" => "inproc".to_string(),
             addr => format!("tcp {addr} {}", args.usize_or("conns", 4)?),
+        },
+        match args.usize_or("edge", 0)? {
+            0 => String::new(),
+            e => format!(" edge={e}"),
         }
     );
     parse_queue(&text)
@@ -64,10 +70,13 @@ fn run() -> Result<()> {
     daemon.set_round_hold(Duration::from_millis(args.u64_or("round-hold-ms", 0)?));
     if daemon.verbose {
         for job in &jobs {
-            let driver = match &job.driver {
+            let mut driver = match &job.driver {
                 JobDriver::InProcess => "inproc".to_string(),
                 JobDriver::Tcp { addr, conns } => format!("tcp {addr} x{conns}"),
             };
+            if job.edge_shards > 0 {
+                driver.push_str(&format!(", {} edge shards", job.edge_shards));
+            }
             eprintln!(
                 "hcfl-daemon: queued {} ({}, K={}, {} rounds, seed {}, {driver})",
                 job.name,

@@ -30,8 +30,7 @@ use std::sync::Arc;
 
 use crate::compression::wire::{self, HcflWireLayout, RangeLayout};
 use crate::compression::{
-    plan_batches, ChunkCode, CompressedUpdate, Compressor, Payload, RangeCodes, Scheme,
-    WireScratch,
+    plan_batches, CompressedUpdate, Compressor, Payload, RangeCodes, Scheme, WireScratch,
 };
 use crate::error::{HcflError, Result};
 use crate::model::{chunk_count, extract_chunk, write_chunk, SegmentRange};
@@ -136,7 +135,8 @@ impl HcflCompressor {
     }
 
     /// Encode `batch` chunks starting at chunk index `start` of a
-    /// segment slice in one engine call.
+    /// segment slice in one engine call, appending the rows and
+    /// side-info columns to `rc`.
     #[allow(clippy::too_many_arguments)]
     fn encode_batched(
         &self,
@@ -147,7 +147,7 @@ impl HcflCompressor {
         start: usize,
         batch: usize,
         chunk: usize,
-        chunks: &mut Vec<ChunkCode>,
+        rc: &mut RangeCodes,
     ) -> Result<()> {
         let code_len = chunk / self.ratio;
         let mut data = vec![0.0f32; batch * chunk];
@@ -185,19 +185,18 @@ impl HcflCompressor {
                 sd.len()
             )));
         }
-        for row in 0..batch {
-            chunks.push(ChunkCode {
-                code: codes[row * code_len..(row + 1) * code_len].to_vec(),
-                lo: lo[row],
-                hi: hi[row],
-                mu: mu[row],
-                sd: sd[row],
-            });
-        }
+        // The batched executable's outputs already ARE the SoA columns:
+        // one bulk append each, no per-row gathers.
+        rc.codes.extend_from_slice(codes);
+        rc.lo.extend_from_slice(lo);
+        rc.hi.extend_from_slice(hi);
+        rc.mu.extend_from_slice(mu);
+        rc.sd.extend_from_slice(sd);
         Ok(())
     }
 
-    /// Encode one chunk through the per-chunk executable.
+    /// Encode one chunk through the per-chunk executable, appending its
+    /// row and side-info scalars to `rc`.
     fn encode_single(
         &self,
         worker: usize,
@@ -205,10 +204,10 @@ impl HcflCompressor {
         values: &[f32],
         i: usize,
         chunk: usize,
-        chunks: &mut Vec<ChunkCode>,
+        rc: &mut RangeCodes,
     ) -> Result<()> {
         let data = extract_chunk(values, i, chunk);
-        let mut outs = self.engine.call_on(
+        let outs = self.engine.call_on(
             worker,
             &ae.meta.encode,
             vec![
@@ -216,64 +215,51 @@ impl HcflCompressor {
                 TensorValue::vec_f32(data),
             ],
         )?;
-        let lo = outs[1].scalar()?;
-        let hi = outs[2].scalar()?;
-        let mu = outs[3].scalar()?;
-        let sd = outs[4].scalar()?;
-        let code = outs.swap_remove(0).into_f32()?;
-        chunks.push(ChunkCode {
-            code,
-            lo,
-            hi,
-            mu,
-            sd,
-        });
+        let code = outs[0].as_f32()?;
+        if code.len() != rc.code_len {
+            return Err(HcflError::Engine(format!(
+                "encode '{}' returned a {}-float code, expected {}",
+                ae.meta.encode,
+                code.len(),
+                rc.code_len
+            )));
+        }
+        rc.codes.extend_from_slice(code);
+        rc.lo.push(outs[1].scalar()?);
+        rc.hi.push(outs[2].scalar()?);
+        rc.mu.push(outs[3].scalar()?);
+        rc.sd.push(outs[4].scalar()?);
         Ok(())
     }
 
-    /// Decode `group.len()` consecutive chunks in one engine call and
-    /// write them into `dst` starting at chunk index `start`.
+    /// Decode `batch` consecutive chunks of `rc` (from chunk index
+    /// `start`) in one engine call and write them into `dst`.  The SoA
+    /// layout makes the engine inputs straight sub-slice copies of the
+    /// stored columns — no per-chunk gather loop.
     #[allow(clippy::too_many_arguments)]
     fn decode_batched(
         &self,
         worker: usize,
         ae: &AeHandle,
         exec: &str,
-        group: &[ChunkCode],
+        rc: &RangeCodes,
         dst: &mut [f32],
         start: usize,
+        batch: usize,
         chunk: usize,
     ) -> Result<()> {
-        let batch = group.len();
-        let code_len = chunk / self.ratio;
-        let mut codes = Vec::with_capacity(batch * code_len);
-        let mut lo = Vec::with_capacity(batch);
-        let mut hi = Vec::with_capacity(batch);
-        let mut mu = Vec::with_capacity(batch);
-        let mut sd = Vec::with_capacity(batch);
-        for cc in group {
-            if cc.code.len() != code_len {
-                return Err(HcflError::Config(format!(
-                    "hcfl chunk code has {} floats, expected {code_len}",
-                    cc.code.len()
-                )));
-            }
-            codes.extend_from_slice(&cc.code);
-            lo.push(cc.lo);
-            hi.push(cc.hi);
-            mu.push(cc.mu);
-            sd.push(cc.sd);
-        }
+        let code_len = rc.code_len;
+        let codes = rc.codes[start * code_len..(start + batch) * code_len].to_vec();
         let outs = self.engine.call_on(
             worker,
             exec,
             vec![
                 TensorValue::shared_f32(Arc::clone(&ae.params)),
                 TensorValue::f32(codes, vec![batch, code_len])?,
-                TensorValue::vec_f32(lo),
-                TensorValue::vec_f32(hi),
-                TensorValue::vec_f32(mu),
-                TensorValue::vec_f32(sd),
+                TensorValue::vec_f32(rc.lo[start..start + batch].to_vec()),
+                TensorValue::vec_f32(rc.hi[start..start + batch].to_vec()),
+                TensorValue::vec_f32(rc.mu[start..start + batch].to_vec()),
+                TensorValue::vec_f32(rc.sd[start..start + batch].to_vec()),
             ],
         )?;
         let w_hat = outs[0].as_f32()?;
@@ -289,13 +275,12 @@ impl HcflCompressor {
         Ok(())
     }
 
-    /// Decode one chunk through the per-chunk executable (the code
-    /// vector is moved, not cloned — decompress owns the payload).
+    /// Decode chunk `i` of `rc` through the per-chunk executable.
     fn decode_single(
         &self,
         worker: usize,
         ae: &AeHandle,
-        cc: ChunkCode,
+        rc: &RangeCodes,
         dst: &mut [f32],
         i: usize,
     ) -> Result<()> {
@@ -304,11 +289,11 @@ impl HcflCompressor {
             &ae.meta.decode,
             vec![
                 TensorValue::shared_f32(Arc::clone(&ae.params)),
-                TensorValue::vec_f32(cc.code),
-                TensorValue::scalar_f32(cc.lo),
-                TensorValue::scalar_f32(cc.hi),
-                TensorValue::scalar_f32(cc.mu),
-                TensorValue::scalar_f32(cc.sd),
+                TensorValue::vec_f32(rc.code_row(i).to_vec()),
+                TensorValue::scalar_f32(rc.lo[i]),
+                TensorValue::scalar_f32(rc.hi[i]),
+                TensorValue::scalar_f32(rc.mu[i]),
+                TensorValue::scalar_f32(rc.sd[i]),
             ],
         )?;
         let w_hat = outs[0].as_f32()?;
@@ -331,20 +316,31 @@ impl HcflCompressor {
             })?;
             let chunk = self.chunk_size(&range.segment);
             let ae = &self.aes[&chunk];
+            let code_len = chunk / self.ratio;
+            let n = rc.n_chunks();
+            if rc.code_len != code_len
+                || rc.codes.len() != n * code_len
+                || rc.hi.len() != n
+                || rc.mu.len() != n
+                || rc.sd.len() != n
+            {
+                return Err(HcflError::Config(format!(
+                    "hcfl range {} carries {}-float code rows ({} floats for {n} \
+                     chunks), expected rows of {code_len}",
+                    rc.range_idx,
+                    rc.code_len,
+                    rc.codes.len()
+                )));
+            }
             let dst = &mut flat[range.offset..range.offset + range.len];
-            let n = rc.chunks.len();
             let sizes: Vec<usize> = ae.meta.decode_batch.keys().copied().collect();
-            let plan = plan_batches(n, &sizes);
-            let mut iter = rc.chunks.into_iter();
             let mut i = 0usize;
-            for batch in plan {
+            for batch in plan_batches(n, &sizes) {
                 if batch == 1 {
-                    let cc = iter.next().expect("plan covers the chunk count");
-                    self.decode_single(worker, ae, cc, dst, i)?;
+                    self.decode_single(worker, ae, &rc, dst, i)?;
                 } else {
-                    let group: Vec<ChunkCode> = iter.by_ref().take(batch).collect();
                     let exec = &ae.meta.decode_batch[&batch];
-                    self.decode_batched(worker, ae, exec, &group, dst, i, chunk)?;
+                    self.decode_batched(worker, ae, exec, &rc, dst, i, batch, chunk)?;
                 }
                 i += batch;
             }
@@ -366,25 +362,21 @@ impl Compressor for HcflCompressor {
             let ae = &self.aes[&chunk];
             let values = &flat[range.offset..range.offset + range.len];
             let n = chunk_count(range.len, chunk);
+            let code_len = chunk / self.ratio;
             let sizes: Vec<usize> = ae.meta.encode_batch.keys().copied().collect();
-            let mut chunks = Vec::with_capacity(n);
+            let mut rc = RangeCodes::with_capacity(ri, code_len, n);
             let mut i = 0usize;
             for batch in plan_batches(n, &sizes) {
                 if batch == 1 {
-                    self.encode_single(worker, ae, values, i, chunk, &mut chunks)?;
+                    self.encode_single(worker, ae, values, i, chunk, &mut rc)?;
                 } else {
                     let exec = &ae.meta.encode_batch[&batch];
-                    self.encode_batched(
-                        worker, ae, exec, values, i, batch, chunk, &mut chunks,
-                    )?;
+                    self.encode_batched(worker, ae, exec, values, i, batch, chunk, &mut rc)?;
                 }
                 i += batch;
             }
-            wire += chunks.iter().map(|cc| 4 * cc.code.len() + 16).sum::<usize>();
-            out.push(RangeCodes {
-                range_idx: ri,
-                chunks,
-            });
+            wire += rc.n_chunks() * (4 * code_len + 16);
+            out.push(rc);
         }
         Ok(CompressedUpdate {
             payload: Payload::HcflCodes(out),

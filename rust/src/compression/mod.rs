@@ -70,23 +70,55 @@ impl Scheme {
     }
 }
 
-/// One chunk's autoencoder code plus its side info: the affine scaling
-/// pair (lo, hi) and the scaled chunk's moments (mu, sd) used by the
-/// extractor's variance-preserving renormalization.
-#[derive(Debug, Clone)]
-pub struct ChunkCode {
-    pub code: Vec<f32>,
-    pub lo: f32,
-    pub hi: f32,
-    pub mu: f32,
-    pub sd: f32,
-}
-
-/// All chunk codes of one segment range.
+/// All chunk codes of one segment range, structure-of-arrays: the AE
+/// codes live row-major in one flat buffer and each per-chunk side-info
+/// field — the affine scaling pair (lo, hi) and the scaled chunk's
+/// moments (mu, sd) used by the extractor's variance-preserving
+/// renormalization — in its own column.  The batched codec executables
+/// take exactly these columns, so encode/decode feed the engine with
+/// bulk copies instead of per-chunk gathers, and the dequant loops run
+/// over contiguous f32 streams the compiler can vectorize.
+///
+/// The wire format is unchanged (per-chunk interleaved: `code_len`
+/// code floats then lo/hi/mu/sd, 16 bytes of side info per chunk) —
+/// `wire::pack_hcfl` / `wire::unpack_hcfl` transpose at the boundary,
+/// and `tests/wire_roundtrip.rs` pins the packed bytes.
 #[derive(Debug, Clone)]
 pub struct RangeCodes {
     pub range_idx: usize,
-    pub chunks: Vec<ChunkCode>,
+    /// Floats per chunk code — the row width of `codes`.
+    pub code_len: usize,
+    /// `n_chunks × code_len` code floats, row-major.
+    pub codes: Vec<f32>,
+    pub lo: Vec<f32>,
+    pub hi: Vec<f32>,
+    pub mu: Vec<f32>,
+    pub sd: Vec<f32>,
+}
+
+impl RangeCodes {
+    /// An empty range with rows of `code_len`, sized for `n_chunks`.
+    pub fn with_capacity(range_idx: usize, code_len: usize, n_chunks: usize) -> Self {
+        RangeCodes {
+            range_idx,
+            code_len,
+            codes: Vec::with_capacity(n_chunks * code_len),
+            lo: Vec::with_capacity(n_chunks),
+            hi: Vec::with_capacity(n_chunks),
+            mu: Vec::with_capacity(n_chunks),
+            sd: Vec::with_capacity(n_chunks),
+        }
+    }
+
+    /// Chunk count (every side-info column has one entry per chunk).
+    pub fn n_chunks(&self) -> usize {
+        self.lo.len()
+    }
+
+    /// The `i`-th chunk's code row.
+    pub fn code_row(&self, i: usize) -> &[f32] {
+        &self.codes[i * self.code_len..(i + 1) * self.code_len]
+    }
 }
 
 /// One ternary-quantized chunk.

@@ -194,6 +194,23 @@ pub fn read_varint(bytes: &[u8], pos: &mut usize) -> Result<u32> {
     }
 }
 
+/// Scatter `idx.len()` little-endian f32 values from `bytes` into
+/// `out[idx[j]]` — the Top-K sparse decode hot loop.  Requires
+/// `bytes.len() >= 4 * idx.len()` and every index in range (the wire
+/// layer validates both before calling; an out-of-range index panics).
+/// x86 has no f32 scatter instruction, so the vector tier batches the
+/// value loads 8 wide and issues the stores per lane — the store set
+/// and the stored bits are identical to the scalar reference by
+/// construction.
+pub fn scatter_f32_le(bytes: &[u8], idx: &[u32], out: &mut [f32]) {
+    debug_assert!(bytes.len() >= 4 * idx.len());
+    match level() {
+        #[cfg(target_arch = "x86_64")]
+        Level::Avx2 => unsafe { avx2::scatter_f32_le(bytes, idx, out) },
+        _ => scalar::scatter_f32_le(bytes, idx, out),
+    }
+}
+
 /// Elementwise `acc[i] += x[i]` (the reduction-tree node fold).
 pub fn add_assign(acc: &mut [f32], x: &[f32]) {
     debug_assert_eq!(acc.len(), x.len());
@@ -313,6 +330,12 @@ pub mod scalar {
             *slot = read_varint(bytes, pos)?;
         }
         Ok(())
+    }
+
+    pub fn scatter_f32_le(bytes: &[u8], idx: &[u32], out: &mut [f32]) {
+        for (&i, b) in idx.iter().zip(bytes.chunks_exact(4)) {
+            out[i as usize] = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+        }
     }
 
     pub fn add_assign(acc: &mut [f32], x: &[f32]) {
@@ -555,6 +578,26 @@ mod avx2 {
             i += 8;
         }
         scalar::decode_varints(bytes, pos, &mut out[i..])
+    }
+
+    /// 8 values per iteration: one 256-bit load of the LE value stream
+    /// (x86-64 is little-endian, so the wire bytes *are* the f32 lanes),
+    /// then one store per lane — AVX2 has gathers but no f32 scatter,
+    /// so the store side stays scalar by necessity.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scatter_f32_le(bytes: &[u8], idx: &[u32], out: &mut [f32]) {
+        let vec_k = idx.len() & !7;
+        let mut vals = [0f32; 8];
+        let mut j = 0usize;
+        while j < vec_k {
+            let v = _mm256_loadu_ps(bytes.as_ptr().add(4 * j) as *const f32);
+            _mm256_storeu_ps(vals.as_mut_ptr(), v);
+            for (lane, &val) in vals.iter().enumerate() {
+                out[idx[j + lane] as usize] = val;
+            }
+            j += 8;
+        }
+        scalar::scatter_f32_le(&bytes[4 * vec_k..], &idx[vec_k..], out);
     }
 
     #[target_feature(enable = "avx2")]

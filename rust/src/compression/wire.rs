@@ -51,7 +51,7 @@
 //! bottom of this module and specified byte-for-byte in DESIGN.md §8;
 //! the blocking frame I/O lives in [`crate::transport`].
 
-use crate::compression::{simd, ChunkCode, Payload, RangeCodes, TernaryChunk};
+use crate::compression::{simd, Payload, RangeCodes, TernaryChunk};
 use crate::error::{HcflError, Result};
 
 /// Spare buffers kept per pool (bounds steady-state memory: with d=802
@@ -221,14 +221,17 @@ impl HcflWireLayout {
     }
 }
 
+/// Pack SoA range codes into the per-chunk interleaved wire form
+/// (`code_len` code floats, then lo/hi/mu/sd) — byte-identical to the
+/// pre-SoA layout, pinned by `tests/wire_roundtrip.rs`.
 pub fn pack_hcfl(codes: &[RangeCodes], out: &mut Vec<u8>) {
     for rc in codes {
-        for cc in &rc.chunks {
-            simd::pack_f32_le(&cc.code, out);
-            out.extend_from_slice(&cc.lo.to_le_bytes());
-            out.extend_from_slice(&cc.hi.to_le_bytes());
-            out.extend_from_slice(&cc.mu.to_le_bytes());
-            out.extend_from_slice(&cc.sd.to_le_bytes());
+        for i in 0..rc.n_chunks() {
+            simd::pack_f32_le(rc.code_row(i), out);
+            out.extend_from_slice(&rc.lo[i].to_le_bytes());
+            out.extend_from_slice(&rc.hi[i].to_le_bytes());
+            out.extend_from_slice(&rc.mu[i].to_le_bytes());
+            out.extend_from_slice(&rc.sd[i].to_le_bytes());
         }
     }
 }
@@ -254,27 +257,21 @@ pub fn unpack_hcfl(bytes: &[u8], layout: &HcflWireLayout) -> Result<Vec<RangeCod
     };
     let mut out = Vec::with_capacity(layout.ranges.len());
     for r in &layout.ranges {
-        let mut chunks = Vec::with_capacity(r.n_chunks);
+        let mut rc = RangeCodes::with_capacity(r.range_idx, r.code_len, r.n_chunks);
         for _ in 0..r.n_chunks {
-            let mut code = vec![0.0f32; r.code_len];
-            simd::unpack_f32_le(&bytes[pos..pos + 4 * r.code_len], &mut code);
+            let row_start = rc.codes.len();
+            rc.codes.resize(row_start + r.code_len, 0.0);
+            simd::unpack_f32_le(
+                &bytes[pos..pos + 4 * r.code_len],
+                &mut rc.codes[row_start..],
+            );
             pos += 4 * r.code_len;
-            let lo = read_f32(&mut pos);
-            let hi = read_f32(&mut pos);
-            let mu = read_f32(&mut pos);
-            let sd = read_f32(&mut pos);
-            chunks.push(ChunkCode {
-                code,
-                lo,
-                hi,
-                mu,
-                sd,
-            });
+            rc.lo.push(read_f32(&mut pos));
+            rc.hi.push(read_f32(&mut pos));
+            rc.mu.push(read_f32(&mut pos));
+            rc.sd.push(read_f32(&mut pos));
         }
-        out.push(RangeCodes {
-            range_idx: r.range_idx,
-            chunks,
-        });
+        out.push(rc);
     }
     Ok(out)
 }
@@ -566,9 +563,7 @@ pub fn unpack_sparse_into(
     }
     out.clear();
     out.resize(d, 0.0);
-    for (&i, b) in idx_scratch.iter().zip(bytes[pos..].chunks_exact(4)) {
-        out[i as usize] = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
-    }
+    simd::scatter_f32_le(&bytes[pos..], idx_scratch, out);
     debug_assert_eq!(idx_scratch.len(), k);
     Ok(())
 }

@@ -161,6 +161,13 @@ pub struct ExperimentConfig {
     /// spawns).  Round results are bit-identical for any value; size it
     /// to the host's cores for throughput.
     pub client_threads: usize,
+    /// Edge-aggregation shards E (DESIGN.md §10).  0 (the default) folds
+    /// the round flat in one session; E >= 1 partitions the round's
+    /// decode + fold across E edge folders, each with its own worker
+    /// slice, then a root fold over the partials.  Bit-identical to the
+    /// flat fold for any value — size it so K/E leaves fit one shard's
+    /// wall-clock budget.
+    pub edge_shards: usize,
     /// Replace engine-backed local training with a deterministic
     /// pure-Rust fake update (global + seeded noise) and skip
     /// evaluation.  Lets the full round pipeline — pool, device layer,
@@ -227,6 +234,7 @@ impl ExperimentConfig {
             seed: 7,
             engine_workers: 2,
             client_threads: 2,
+            edge_shards: 0,
             fake_train: false,
             data: DataSpec::mnist(8),
             ae: AeTrainConfig::default(),
@@ -254,6 +262,7 @@ impl ExperimentConfig {
             seed: 42,
             engine_workers: 4,
             client_threads: 4,
+            edge_shards: 0,
             fake_train: false,
             data: DataSpec::mnist(100),
             ae: AeTrainConfig::default(),
@@ -281,6 +290,7 @@ impl ExperimentConfig {
             seed: 42,
             engine_workers: 4,
             client_threads: 4,
+            edge_shards: 0,
             fake_train: false,
             data: DataSpec::emnist(100),
             ae: AeTrainConfig::default(),
@@ -342,6 +352,12 @@ impl ExperimentConfig {
         }
         if self.client_threads == 0 {
             return Err(HcflError::Config("client_threads must be >= 1".into()));
+        }
+        if self.edge_shards > 4096 {
+            return Err(HcflError::Config(format!(
+                "edge_shards {} is past the 4096 cap (each shard owns a worker pool)",
+                self.edge_shards
+            )));
         }
         self.data.partition.validate(self.data.classes)?;
         let skew = self.data.size_skew;

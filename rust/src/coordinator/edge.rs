@@ -1,0 +1,441 @@
+//! The edge-aggregation tier: one round's decode + fold sharded across
+//! `E` independent edge folders (DESIGN.md §10).
+//!
+//! A flat round folds all `K` decoded leaves through one
+//! [`reduce_tree`] on one [`WorkerPool`].  That single session is the
+//! scaling ceiling near `K = 10k`: every decode job contends on one
+//! scratch arena and the fold is one thread-pool wide.  The
+//! [`EdgeAggregator`] splits the round's leaf sequence (carried leaves
+//! first, then fresh survivors in arrival order — exactly the flat
+//! order) into `E` contiguous shards.  Each shard decodes and folds on
+//! its **own** [`WorkerPool`] (own worker threads, own
+//! [`WireScratch`](crate::compression::WireScratch) arenas, so shards
+//! never contend on one arena lock), produces one partial
+//! [`WeightedLeaf`] per owned subtree, and the root folds the partials
+//! with the same [`TREE_FAN_IN`] rule.
+//!
+//! # The leaf-order invariant
+//!
+//! `f32` addition is not associative, so an arbitrary `E`-way split
+//! would change the sum.  The shard boundaries are therefore aligned to
+//! **fan-in subtrees**: [`ShardPlan`] picks the largest subtree size
+//! `8^l` that still leaves at least `E` subtrees, and each shard owns a
+//! contiguous run of subtrees.  A shard's local level-by-level fold of
+//! one subtree performs *exactly* the combines the flat
+//! [`reduce_tree`] performs inside that subtree (slice starts are
+//! `8^l`-aligned, so every group boundary coincides; the trailing
+//! partial subtree ends at the global tail, where the flat tree has the
+//! same partial groups).  Concatenating the per-subtree partials in
+//! subtree order reproduces the flat tree's level-`l` node list, and
+//! the root fold computes the remaining levels — the two-level result
+//! is bit-identical to the flat fold for any `E`.
+
+use std::time::Instant;
+
+use crate::coordinator::pool::{reduce_tree, WorkerCtx, WorkerPool};
+use crate::error::{HcflError, Result};
+use crate::fl::{WeightedLeaf, TREE_FAN_IN};
+
+/// A deferred survivor decode: runs on a shard worker and yields the
+/// weighted leaf plus its `(recon_contribution, decode_seconds)` stats.
+pub type DecodeJob = Box<dyn FnOnce(&mut WorkerCtx) -> Result<(WeightedLeaf, f64, f64)> + Send>;
+
+/// How one round's leaf sequence maps onto shards: the fan-in-aligned
+/// subtree size and which contiguous subtree run each shard owns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Total leaves in the round (carried + fresh survivors).
+    pub n_leaves: usize,
+    /// Subtree size: the largest power of the fan-in that still leaves
+    /// at least `n_shards` subtrees (1 when leaves are scarce).
+    pub subtree: usize,
+    /// Number of edge shards the plan distributes over.
+    pub n_shards: usize,
+    /// `ceil(n_leaves / subtree)` — one partial leaf per subtree.
+    pub n_subtrees: usize,
+}
+
+impl ShardPlan {
+    /// Plan `n_leaves` over `n_shards` shards with the given fan-in.
+    ///
+    /// Grows the subtree size by `fan_in` while (a) a full subtree still
+    /// fits in the leaf count and (b) at least `n_shards` subtrees
+    /// remain, so every shard can own work whenever `n_leaves >=
+    /// n_shards`.
+    pub fn new(n_leaves: usize, fan_in: usize, n_shards: usize) -> ShardPlan {
+        debug_assert!(fan_in >= 2 && n_shards >= 1);
+        let mut subtree = 1usize;
+        while subtree * fan_in <= n_leaves && n_leaves.div_ceil(subtree * fan_in) >= n_shards {
+            subtree *= fan_in;
+        }
+        ShardPlan {
+            n_leaves,
+            subtree,
+            n_shards,
+            n_subtrees: n_leaves.div_ceil(subtree),
+        }
+    }
+
+    /// The contiguous subtree run `[lo, hi)` owned by `shard`.
+    pub fn subtree_range(&self, shard: usize) -> (usize, usize) {
+        debug_assert!(shard < self.n_shards);
+        (
+            shard * self.n_subtrees / self.n_shards,
+            (shard + 1) * self.n_subtrees / self.n_shards,
+        )
+    }
+
+    /// The leaf index range `[lo, hi)` owned by `shard`.  `lo` is always
+    /// subtree-aligned; the final shard's `hi` clamps to `n_leaves`.
+    pub fn leaf_range(&self, shard: usize) -> (usize, usize) {
+        let (st_lo, st_hi) = self.subtree_range(shard);
+        (
+            st_lo * self.subtree,
+            (st_hi * self.subtree).min(self.n_leaves),
+        )
+    }
+}
+
+/// The outcome of one sharded round fold.
+pub struct EdgeFold {
+    /// The folded root (weights still summed — pass through
+    /// [`finish_tree`](crate::fl::finish_tree)), or `None` for an empty
+    /// round.
+    pub root: Option<WeightedLeaf>,
+    /// Per-survivor `(recon_contribution, decode_seconds)` in global
+    /// arrival order — shard slices are contiguous, so concatenating
+    /// them in shard order restores the flat order and the sequential
+    /// `f64` accumulation downstream stays bit-identical.
+    pub stats: Vec<(f64, f64)>,
+    /// Summed fold seconds across shards plus the root fold (total
+    /// server-side fold work, not overlapped wall time).
+    pub fold_s: f64,
+}
+
+/// `E` edge folders, each owning a private [`WorkerPool`] slice.
+///
+/// Construction splits the configured `client_threads` budget across
+/// shards (`ceil(client_threads / E)`, min 1 per shard), so the total
+/// worker count stays near the flat pipeline's while every shard keeps
+/// its own scratch arena.
+pub struct EdgeAggregator {
+    pools: Vec<WorkerPool>,
+}
+
+impl EdgeAggregator {
+    /// Build `n_shards` edge folders over a `client_threads` budget.
+    pub fn new(n_shards: usize, client_threads: usize, engine_workers: usize) -> Result<Self> {
+        if n_shards == 0 {
+            return Err(HcflError::Config(
+                "edge aggregation needs at least one shard".into(),
+            ));
+        }
+        let per_shard = client_threads.div_ceil(n_shards).max(1);
+        let mut pools = Vec::with_capacity(n_shards);
+        for _ in 0..n_shards {
+            pools.push(WorkerPool::new(per_shard, engine_workers)?);
+        }
+        Ok(EdgeAggregator { pools })
+    }
+
+    /// Number of edge shards.
+    pub fn n_shards(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// The pool the root session borrows for work outside the sharded
+    /// fold (late-arrival decode, snapshot restore).
+    pub fn root_pool(&self) -> &WorkerPool {
+        &self.pools[0]
+    }
+
+    /// Decode + fold one round: `carried` leaves (already weighted, in
+    /// carry order) followed by `jobs` (fresh survivors in arrival
+    /// order) — the same leaf sequence the flat pipeline folds.
+    ///
+    /// Shards run concurrently on their own pools; the root then folds
+    /// the per-subtree partials.  Bit-identical to decoding the jobs in
+    /// order and calling [`reduce_tree`] over the whole sequence.
+    pub fn fold_round(&self, carried: Vec<WeightedLeaf>, jobs: Vec<DecodeJob>) -> Result<EdgeFold> {
+        let n_carried = carried.len();
+        let n = n_carried + jobs.len();
+        if n == 0 {
+            return Ok(EdgeFold {
+                root: None,
+                stats: Vec::new(),
+                fold_s: 0.0,
+            });
+        }
+        let plan = ShardPlan::new(n, TREE_FAN_IN, self.pools.len());
+
+        // Slice the conceptual leaf sequence (carried ++ fresh) into the
+        // per-shard contiguous runs the plan dictates.
+        let mut carried = carried.into_iter();
+        let mut jobs = jobs.into_iter();
+        let mut shards: Vec<(Vec<WeightedLeaf>, Vec<DecodeJob>)> =
+            Vec::with_capacity(self.pools.len());
+        for k in 0..self.pools.len() {
+            let (lo, hi) = plan.leaf_range(k);
+            let n_car = hi.min(n_carried) - lo.min(n_carried);
+            let n_fresh = (hi - lo) - n_car;
+            shards.push((
+                carried.by_ref().take(n_car).collect(),
+                jobs.by_ref().take(n_fresh).collect(),
+            ));
+        }
+
+        // Drive every shard concurrently, each pinned to its own pool.
+        let subtree = plan.subtree;
+        let results: Vec<Result<ShardFold>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = shards
+                .into_iter()
+                .zip(&self.pools)
+                .map(|((car, work), pool)| scope.spawn(move || shard_fold(pool, car, work, subtree)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(HcflError::Engine("edge shard panicked".into())))
+                })
+                .collect()
+        });
+
+        // Partials concatenate in shard (= subtree) order; stats in
+        // shard order restore the global survivor order.
+        let mut partials = Vec::with_capacity(plan.n_subtrees);
+        let mut stats = Vec::with_capacity(n - n_carried);
+        let mut fold_s = 0.0f64;
+        for res in results {
+            let shard = res?;
+            partials.extend(shard.partials);
+            stats.extend(shard.stats);
+            fold_s += shard.fold_s;
+        }
+        let t_root = Instant::now();
+        let root = reduce_tree(&self.pools[0], partials, TREE_FAN_IN)?;
+        fold_s += t_root.elapsed().as_secs_f64();
+        Ok(EdgeFold {
+            root,
+            stats,
+            fold_s,
+        })
+    }
+}
+
+struct ShardFold {
+    /// One partial per owned subtree, in subtree order.
+    partials: Vec<WeightedLeaf>,
+    /// Per-job `(recon, decode_s)` in this shard's job order.
+    stats: Vec<(f64, f64)>,
+    fold_s: f64,
+}
+
+/// One shard's work: scatter the decode jobs on the shard pool, then
+/// fold each owned subtree to a single partial leaf.
+fn shard_fold(
+    pool: &WorkerPool,
+    carried: Vec<WeightedLeaf>,
+    jobs: Vec<DecodeJob>,
+    subtree: usize,
+) -> Result<ShardFold> {
+    let mut stats = Vec::with_capacity(jobs.len());
+    let mut leaves = carried;
+    leaves.reserve(jobs.len());
+    if !jobs.is_empty() {
+        for res in pool.scatter(jobs)? {
+            let (leaf, recon, decode_s) = res?;
+            stats.push((recon, decode_s));
+            leaves.push(leaf);
+        }
+    }
+    let t0 = Instant::now();
+    let mut partials = Vec::with_capacity(leaves.len().div_ceil(subtree.max(1)));
+    let mut iter = leaves.into_iter().peekable();
+    while iter.peek().is_some() {
+        let chunk: Vec<WeightedLeaf> = iter.by_ref().take(subtree).collect();
+        // `reduce_tree` on one subtree performs exactly the flat tree's
+        // in-subtree combines; a single-leaf chunk passes through
+        // untouched (no arithmetic).
+        if let Some(node) = reduce_tree(pool, chunk, TREE_FAN_IN)? {
+            partials.push(node);
+        }
+    }
+    Ok(ShardFold {
+        partials,
+        stats,
+        fold_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::{combine_leaves, finish_tree};
+    use crate::util::rng::Rng;
+
+    /// Sequential reference mirroring `reduce_tree`'s level-by-level
+    /// grouping, with no pools involved.
+    fn tree_fold_ref(mut nodes: Vec<WeightedLeaf>, fan_in: usize) -> Option<WeightedLeaf> {
+        while nodes.len() > 1 {
+            let mut next = Vec::new();
+            let mut iter = nodes.into_iter().peekable();
+            while iter.peek().is_some() {
+                let group: Vec<WeightedLeaf> = iter.by_ref().take(fan_in).collect();
+                next.push(combine_leaves(group).unwrap());
+            }
+            nodes = next;
+        }
+        nodes.pop()
+    }
+
+    fn make_inputs(n: usize, d: usize, seed: u64) -> Vec<(f64, Vec<f32>)> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let w = 1.0 + (i % 7) as f64 * 0.25;
+                let v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                (w, v)
+            })
+            .collect()
+    }
+
+    fn leaves_of(inputs: &[(f64, Vec<f32>)]) -> Vec<WeightedLeaf> {
+        inputs
+            .iter()
+            .map(|(w, v)| WeightedLeaf::new(*w, v.clone()))
+            .collect()
+    }
+
+    fn jobs_of(inputs: &[(f64, Vec<f32>)]) -> Vec<DecodeJob> {
+        inputs
+            .iter()
+            .map(|(w, v)| {
+                let (w, v) = (*w, v.clone());
+                let job: DecodeJob = Box::new(move |_ctx| Ok((WeightedLeaf::new(w, v), 0.0, 0.0)));
+                job
+            })
+            .collect()
+    }
+
+    fn assert_leaf_bits(a: &WeightedLeaf, b: &WeightedLeaf) {
+        assert_eq!(a.weight.to_bits(), b.weight.to_bits());
+        assert_eq!(a.sum.len(), b.sum.len());
+        for (x, y) in a.sum.iter().zip(&b.sum) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn shard_plan_partitions_leaves_exactly() {
+        for &(n, e) in &[
+            (0usize, 1usize),
+            (1, 1),
+            (1, 16),
+            (7, 4),
+            (8, 4),
+            (9, 2),
+            (10, 16),
+            (64, 4),
+            (65, 2),
+            (100, 16),
+            (1000, 2),
+            (100_000, 16),
+        ] {
+            let plan = ShardPlan::new(n, TREE_FAN_IN, e);
+            assert_eq!(plan.n_subtrees, n.div_ceil(plan.subtree));
+            let mut cursor = 0usize;
+            for k in 0..e {
+                let (lo, hi) = plan.leaf_range(k);
+                assert_eq!(lo, cursor, "n={n} e={e} shard {k}");
+                assert!(hi >= lo);
+                assert_eq!(lo % plan.subtree, 0, "shard start must be aligned");
+                cursor = hi;
+            }
+            assert_eq!(cursor, n, "ranges must cover all leaves (n={n} e={e})");
+        }
+    }
+
+    #[test]
+    fn shard_plan_keeps_all_shards_busy_when_leaves_suffice() {
+        // K=100k over 16 shards: the plan must not collapse to one
+        // giant subtree.
+        let plan = ShardPlan::new(100_000, TREE_FAN_IN, 16);
+        assert_eq!(plan.subtree, 4096);
+        assert_eq!(plan.n_subtrees, 25);
+        for k in 0..16 {
+            let (lo, hi) = plan.leaf_range(k);
+            assert!(hi > lo, "shard {k} owns no leaves");
+        }
+    }
+
+    #[test]
+    fn empty_round_folds_to_none() {
+        let edge = EdgeAggregator::new(4, 4, 1).unwrap();
+        let fold = edge.fold_round(Vec::new(), Vec::new()).unwrap();
+        assert!(fold.root.is_none());
+        assert!(fold.stats.is_empty());
+    }
+
+    #[test]
+    fn sharded_fold_is_bit_identical_to_flat_fold() {
+        let flat_pool = WorkerPool::new(4, 1).unwrap();
+        // Sweep leaf counts across the degenerate shapes the satellite
+        // calls out: E > leaves, single-leaf shards, empty shards, and
+        // partial trailing subtrees.
+        for &e in &[1usize, 3, 4, 16] {
+            let edge = EdgeAggregator::new(e, 4, 1).unwrap();
+            for &n in &[1usize, 2, 5, 8, 9, 10, 17, 64, 65, 100, 200] {
+                let inputs = make_inputs(n, 33, 0xED6E ^ ((n as u64) << 8) ^ (e as u64));
+                let flat = reduce_tree(&flat_pool, leaves_of(&inputs), TREE_FAN_IN)
+                    .unwrap()
+                    .unwrap();
+                let reference = tree_fold_ref(leaves_of(&inputs), TREE_FAN_IN).unwrap();
+                assert_leaf_bits(&flat, &reference);
+
+                let fold = edge.fold_round(Vec::new(), jobs_of(&inputs)).unwrap();
+                let root = fold.root.unwrap();
+                assert_leaf_bits(&root, &flat);
+                assert_eq!(fold.stats.len(), n);
+                // The folded model itself must match too.
+                let a = finish_tree(flat).unwrap();
+                let b = finish_tree(root).unwrap();
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn carried_leaves_enter_the_tree_before_fresh_survivors() {
+        let flat_pool = WorkerPool::new(2, 1).unwrap();
+        for &(n_car, n_fresh, e) in &[
+            (3usize, 7usize, 4usize),
+            (5, 0, 4),  // zero-survivor round, carried only
+            (0, 1, 16), // single survivor, E >> leaves
+            (2, 30, 3),
+            (12, 52, 16),
+        ] {
+            let car_inputs = make_inputs(n_car, 17, 0xCA44 + n_car as u64 + e as u64);
+            let fresh_inputs = make_inputs(n_fresh, 17, 0xF4E5 + n_fresh as u64 + e as u64);
+            let mut flat_leaves = leaves_of(&car_inputs);
+            flat_leaves.extend(leaves_of(&fresh_inputs));
+            let flat = reduce_tree(&flat_pool, flat_leaves, TREE_FAN_IN).unwrap();
+
+            let edge = EdgeAggregator::new(e, 4, 1).unwrap();
+            let fold = edge
+                .fold_round(leaves_of(&car_inputs), jobs_of(&fresh_inputs))
+                .unwrap();
+            match (flat, fold.root) {
+                (Some(a), Some(b)) => assert_leaf_bits(&a, &b),
+                (None, None) => {}
+                _ => panic!("flat and sharded disagree on emptiness"),
+            }
+            assert_eq!(fold.stats.len(), n_fresh);
+        }
+    }
+
+    #[test]
+    fn zero_shards_is_rejected() {
+        assert!(EdgeAggregator::new(0, 4, 1).is_err());
+    }
+}

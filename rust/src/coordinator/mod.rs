@@ -41,6 +41,7 @@
 //! [`DeviceProfile`]: crate::network::DeviceProfile
 
 pub mod clock;
+pub mod edge;
 pub mod pool;
 pub mod session;
 
@@ -51,6 +52,7 @@ use self::pool::{
     ClientMsg, ClientPool, ClientRunner, FakeTrainRunner, RoundInputs, TrainEncodeRunner,
     WorkSpec,
 };
+pub use self::edge::EdgeAggregator;
 pub use self::session::{CarryOver, CarryPolicy, FlSession};
 use crate::compression::Compressor;
 use crate::config::ExperimentConfig;
@@ -83,6 +85,8 @@ pub struct Simulation {
     carry: CarryOver,
     fleet: DeviceFleet,
     pool: ClientPool,
+    /// `Some` when `cfg.edge_shards > 0`: the two-level sharded fold.
+    edge: Option<EdgeAggregator>,
     rng: Rng,
     /// Print one line per round to stderr.
     pub verbose: bool,
@@ -125,6 +129,14 @@ impl Simulation {
             ))
         };
         let pool = ClientPool::new(runner, cfg.client_threads, engine.n_workers())?;
+        let edge = match cfg.edge_shards {
+            0 => None,
+            e => Some(EdgeAggregator::new(
+                e,
+                cfg.client_threads,
+                engine.n_workers(),
+            )?),
+        };
         Ok(Simulation {
             engine: engine.clone(),
             cfg,
@@ -134,6 +146,7 @@ impl Simulation {
             carry: CarryOver::empty(),
             fleet,
             pool,
+            edge,
             rng,
             verbose: false,
         })
@@ -167,6 +180,11 @@ impl Simulation {
     /// Client-stage pool size.
     pub fn client_threads(&self) -> usize {
         self.pool.n_threads()
+    }
+
+    /// Edge shard count (0 = flat single-session fold).
+    pub fn edge_shards(&self) -> usize {
+        self.edge.as_ref().map_or(0, EdgeAggregator::n_shards)
     }
 
     /// Late updates currently in flight toward a future round.
@@ -340,7 +358,10 @@ impl Simulation {
 
         // ---- resolve + finalize: policy, decode, tree fold, carry ------
         let resolved = round.resolve(&self.cfg.scenario.policy);
-        let (mut rec, carry) = resolved.finalize(self.pool.workers())?;
+        let (mut rec, carry) = match &self.edge {
+            Some(edge) => resolved.finalize_sharded(edge)?,
+            None => resolved.finalize(self.pool.workers())?,
+        };
         self.carry = carry;
 
         // ---- evaluation ------------------------------------------------

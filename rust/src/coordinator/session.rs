@@ -17,6 +17,7 @@
 //!   mark_dropped(ClientTiming)*              (one per vanished device)
 //!   resolve(&RoundPolicy)               ──> RoundSession<Resolved>
 //!   finalize(&WorkerPool)               ──> (RoundRecord, CarryOver)
+//!   (or finalize_sharded(&EdgeAggregator) for the two-level edge fold)
 //! ```
 //!
 //! The typestate makes illegal transitions unrepresentable: only an
@@ -58,6 +59,7 @@ use crate::compression::{
 };
 use crate::config::ExperimentConfig;
 use crate::coordinator::clock::{resolve, ClientTiming, RoundOutcome, RoundPolicy};
+use crate::coordinator::edge::{DecodeJob, EdgeAggregator};
 use crate::coordinator::pool::{reduce_tree, WorkerCtx, WorkerPool};
 use crate::data::FlData;
 use crate::error::Result;
@@ -358,6 +360,26 @@ pub struct Resolved {
     makespan_s: f64,
 }
 
+/// Which fold pipeline `finalize` drives: the flat single-pool path or
+/// the two-level edge-sharded path (`coordinator::edge`).  Both produce
+/// bit-identical results for the same leaf order.
+#[derive(Clone, Copy)]
+enum Folder<'a> {
+    Flat(&'a WorkerPool),
+    Sharded(&'a EdgeAggregator),
+}
+
+impl<'a> Folder<'a> {
+    /// The pool driving work outside the survivor fold (the late-arrival
+    /// decode batch).
+    fn late_pool(&self) -> &'a WorkerPool {
+        match self {
+            Folder::Flat(pool) => pool,
+            Folder::Sharded(edge) => edge.root_pool(),
+        }
+    }
+}
+
 /// One round of the session state machine; `S` is [`Open`] or
 /// [`Resolved`].
 pub struct RoundSession<'s, S> {
@@ -538,6 +560,19 @@ impl RoundSession<'_, Resolved> {
     /// the aggregated model, and hand back the round record plus the
     /// carry-over for the next round.
     pub fn finalize(self, pool: &WorkerPool) -> Result<(RoundRecord, CarryOver)> {
+        self.finalize_fold(Folder::Flat(pool))
+    }
+
+    /// Sharded variant of [`finalize`](Self::finalize): decode + fold
+    /// through an [`EdgeAggregator`]'s two-level pipeline (each shard on
+    /// its own pool, partials folded at the root).  Bit-identical to the
+    /// flat path for any shard count — the leaf order is the same and the
+    /// shard boundaries are fan-in-subtree aligned (`coordinator::edge`).
+    pub fn finalize_sharded(self, edge: &EdgeAggregator) -> Result<(RoundRecord, CarryOver)> {
+        self.finalize_fold(Folder::Sharded(edge))
+    }
+
+    fn finalize_fold(self, folder: Folder<'_>) -> Result<(RoundRecord, CarryOver)> {
         let Resolved {
             global,
             down_bytes,
@@ -584,7 +619,7 @@ impl RoundSession<'_, Resolved> {
         // stays outside the measured server time.
         let kind = fl.aggregator.clone();
         let encode_deltas = fl.encode_deltas;
-        let mut jobs = Vec::with_capacity(outcome.survivors.len());
+        let mut jobs: Vec<DecodeJob> = Vec::with_capacity(outcome.survivors.len());
         for &i in &outcome.survivors {
             let arr = arrivals[i].take().expect("survivor submitted an update");
             let meta = UpdateMeta {
@@ -595,7 +630,7 @@ impl RoundSession<'_, Resolved> {
             let compressor = Arc::clone(&fl.compressor);
             let global = Arc::clone(&global);
             let kind = kind.clone();
-            jobs.push(
+            jobs.push(Box::new(
                 move |ctx: &mut WorkerCtx| -> Result<(WeightedLeaf, f64, f64)> {
                     let t0 = Instant::now();
                     // zero-copy decode: the packed bytes dequantize
@@ -623,20 +658,13 @@ impl RoundSession<'_, Resolved> {
                     decode_s += t1.elapsed().as_secs_f64();
                     Ok((leaf, recon, decode_s))
                 },
-            );
+            ));
         }
-        let mut fresh = Vec::with_capacity(jobs.len());
+        let completed = jobs.len();
         let mut recon_sum = 0.0f64;
         // Summed per-survivor decode time: total server-side work, not
         // overlapped wall time (the pre-pool semantics).
         let mut server_time_s = 0.0f64;
-        for res in pool.scatter(jobs)? {
-            let (leaf, recon, decode_s) = res?;
-            recon_sum += recon;
-            server_time_s += decode_s;
-            fresh.push(leaf);
-        }
-        let completed = fresh.len();
 
         // ---- parallel decode: late arrivals become carry-over ---------
         // Decoded *now*, against this round's broadcast — a late delta
@@ -644,7 +672,7 @@ impl RoundSession<'_, Resolved> {
         // from.  Its base weight is this round's AggregatorKind::weight,
         // frozen before the update leaves its birth round.
         if fl.carry.carries() {
-            let mut jobs = Vec::with_capacity(outcome.late.len());
+            let mut late_jobs = Vec::with_capacity(outcome.late.len());
             for &i in &outcome.late {
                 let arr = arrivals[i].take().expect("late client submitted an update");
                 let meta = UpdateMeta {
@@ -656,7 +684,7 @@ impl RoundSession<'_, Resolved> {
                 let compressor = Arc::clone(&fl.compressor);
                 let global = Arc::clone(&global);
                 let kind = kind.clone();
-                jobs.push(move |ctx: &mut WorkerCtx| -> Result<(CarriedUpdate, f64)> {
+                late_jobs.push(move |ctx: &mut WorkerCtx| -> Result<(CarriedUpdate, f64)> {
                     let t0 = Instant::now();
                     let mut decoded = ctx.scratch.take_f32();
                     compressor.unpack_into(
@@ -683,7 +711,7 @@ impl RoundSession<'_, Resolved> {
                     ))
                 });
             }
-            for res in pool.scatter(jobs)? {
+            for res in folder.late_pool().scatter(late_jobs)? {
                 let (carried, decode_s) = res?;
                 server_time_s += decode_s;
                 carry_again.push(carried);
@@ -699,21 +727,44 @@ impl RoundSession<'_, Resolved> {
             CarryPolicy::Discard => 0.0,
         };
         let carried_in = fold_carried.len();
-        let mut leaves = Vec::with_capacity(carried_in + fresh.len());
+        let mut leaves = Vec::with_capacity(carried_in + completed);
         for u in fold_carried {
             let age = t.saturating_sub(u.born_round).max(1);
             let w = u.base_weight * (-lambda * age as f64).exp();
             leaves.push(WeightedLeaf::new(w, u.decoded));
         }
-        leaves.extend(fresh);
-        let t_fold = Instant::now();
-        if let Some(root) = reduce_tree(pool, leaves, TREE_FAN_IN)? {
-            fl.server.install(finish_tree(root)?)?;
+        // If no root comes back, every upload was lost to dropout/policy
+        // and nothing was carried in; the round is wasted air time and
+        // the global model carries over unchanged.
+        match folder {
+            Folder::Flat(pool) => {
+                for res in pool.scatter(jobs)? {
+                    let (leaf, recon, decode_s) = res?;
+                    recon_sum += recon;
+                    server_time_s += decode_s;
+                    leaves.push(leaf);
+                }
+                let t_fold = Instant::now();
+                if let Some(root) = reduce_tree(pool, leaves, TREE_FAN_IN)? {
+                    fl.server.install(finish_tree(root)?)?;
+                }
+                server_time_s += t_fold.elapsed().as_secs_f64();
+            }
+            Folder::Sharded(edge) => {
+                // Carried leaves enter the tree first, as in the flat
+                // arm; per-survivor stats come back in global arrival
+                // order, so the sequential f64 accumulations match too.
+                let fold = edge.fold_round(leaves, jobs)?;
+                for &(recon, decode_s) in &fold.stats {
+                    recon_sum += recon;
+                    server_time_s += decode_s;
+                }
+                if let Some(root) = fold.root {
+                    fl.server.install(finish_tree(root)?)?;
+                }
+                server_time_s += fold.fold_s;
+            }
         }
-        // else: every upload was lost to dropout/policy and nothing was
-        // carried in; the round is wasted air time and the global model
-        // carries over unchanged.
-        server_time_s += t_fold.elapsed().as_secs_f64();
 
         // Cost accounting (clock layer outputs, exact per-client bytes):
         // air time covers all alive clients — capped at the makespan,

@@ -79,14 +79,21 @@ pub struct JobSpec {
     pub seed: u64,
     /// In-process or socket-driven.
     pub driver: JobDriver,
+    /// Edge-aggregation shards E (0 = flat fold).  Bit-identical to the
+    /// flat fold, so a snapshot taken under any E resumes under any
+    /// other (DESIGN.md §10).
+    pub edge_shards: usize,
 }
 
 impl JobSpec {
     /// The job's full experiment configuration: the shared server/swarm
     /// demo recipe ([`demo_config`]), which both the worker and any
-    /// external swarm rebuild from the same four values.
+    /// external swarm rebuild from the same four values, plus the job's
+    /// edge shard count.
     pub fn config(&self) -> ExperimentConfig {
-        demo_config(self.scheme, self.n_clients, self.rounds, self.seed)
+        let mut cfg = demo_config(self.scheme, self.n_clients, self.rounds, self.seed);
+        cfg.edge_shards = self.edge_shards;
+        cfg
     }
 }
 
@@ -121,10 +128,11 @@ pub enum DaemonEvent {
 }
 
 /// Parse a queue file: one job per line,
-/// `name scheme clients rounds seed driver [addr conns]`, where
-/// `scheme` is `fedavg` or `topk@<keep>` and `driver` is `inproc` or
-/// `tcp <addr> <conns>`.  `#` starts a comment; blank lines are
-/// skipped.
+/// `name scheme clients rounds seed driver [addr conns] [edge=<E>]`,
+/// where `scheme` is `fedavg` or `topk@<keep>`, `driver` is `inproc` or
+/// `tcp <addr> <conns>`, and the optional trailing `edge=<E>` enables
+/// `E`-way edge-sharded aggregation.  `#` starts a comment; blank lines
+/// are skipped.
 pub fn parse_queue(text: &str) -> Result<Vec<JobSpec>> {
     let mut jobs: Vec<JobSpec> = Vec::new();
     for (i, raw) in text.lines().enumerate() {
@@ -133,10 +141,19 @@ pub fn parse_queue(text: &str) -> Result<Vec<JobSpec>> {
             continue;
         }
         let n = i + 1;
-        let f: Vec<&str> = line.split_whitespace().collect();
+        let mut f: Vec<&str> = line.split_whitespace().collect();
+        // The optional `edge=<E>` token rides at the end of any driver
+        // form; strip it before the positional match below.
+        let mut edge_shards = 0usize;
+        if let Some(e) = f.last().and_then(|tok| tok.strip_prefix("edge=")) {
+            edge_shards = e.parse().map_err(|_| {
+                HcflError::Config(format!("queue line {n}: bad edge shard count `{e}`"))
+            })?;
+            f.pop();
+        }
         if f.len() < 6 {
             return Err(HcflError::Config(format!(
-                "queue line {n}: expected `name scheme clients rounds seed driver [addr conns]`, got `{line}`"
+                "queue line {n}: expected `name scheme clients rounds seed driver [addr conns] [edge=<E>]`, got `{line}`"
             )));
         }
         let scheme = parse_job_scheme(f[1])
@@ -177,6 +194,7 @@ pub fn parse_queue(text: &str) -> Result<Vec<JobSpec>> {
             rounds,
             seed,
             driver,
+            edge_shards,
         });
     }
     Ok(jobs)
@@ -474,12 +492,15 @@ mod tests {
 # campaign queue
 alpha fedavg 32 4 7 inproc
 beta topk@0.1 64 3 11 tcp 127.0.0.1:7700 4  # socket job
+gamma topk@0.2 128 2 5 inproc edge=4
+delta fedavg 64 2 9 tcp 127.0.0.1:7701 2 edge=16
 ";
         let jobs = parse_queue(text).unwrap();
-        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs.len(), 4);
         assert_eq!(jobs[0].name, "alpha");
         assert_eq!(jobs[0].scheme, Scheme::Fedavg);
         assert_eq!(jobs[0].driver, JobDriver::InProcess);
+        assert_eq!(jobs[0].edge_shards, 0);
         assert_eq!(jobs[1].scheme, Scheme::TopK { keep: 0.1 });
         assert_eq!(
             jobs[1].driver,
@@ -490,6 +511,18 @@ beta topk@0.1 64 3 11 tcp 127.0.0.1:7700 4  # socket job
         );
         assert_eq!(jobs[1].rounds, 3);
         assert_eq!(jobs[1].seed, 11);
+        assert_eq!(jobs[1].edge_shards, 0);
+        assert_eq!(jobs[2].driver, JobDriver::InProcess);
+        assert_eq!(jobs[2].edge_shards, 4);
+        assert_eq!(jobs[2].config().edge_shards, 4);
+        assert_eq!(jobs[3].edge_shards, 16);
+        assert_eq!(
+            jobs[3].driver,
+            JobDriver::Tcp {
+                addr: "127.0.0.1:7701".into(),
+                conns: 2
+            }
+        );
     }
 
     #[test]
@@ -501,6 +534,8 @@ beta topk@0.1 64 3 11 tcp 127.0.0.1:7700 4  # socket job
             "x fedavg 32 4 7 warp",                // unknown driver
             "x fedavg 32 4 7 tcp 127.0.0.1:7700",  // tcp missing conns
             "x fedavg 32 4 7 inproc extra",        // trailing field
+            "x fedavg 32 4 7 inproc edge=zap",     // bad edge count
+            "x fedavg 32 4 7 edge=4",              // edge cannot replace driver
             "a fedavg 32 4 7 inproc\na fedavg 8 2 9 inproc", // dup name
         ] {
             assert!(parse_queue(bad).is_err(), "accepted: {bad}");

@@ -13,7 +13,14 @@
 //! `repro experiment --id scenarios [--clients K] [--client-threads N]
 //!  [--fracs-pct 10,30,50] [--slowdown 8] [--rounds N] [--ratio 32]
 //!  [--per-client N] [--alpha F] [--shards-per-client N] [--size-skew F]
-//!  [--iid-only] [--smoke]`
+//!  [--iid-only] [--smoke] [--sharded-100k]`
+//!
+//! `--sharded-100k` replaces the sweep with the hierarchical-aggregation
+//! arm (DESIGN.md §10): one engine-free fake-train round at K=100k
+//! (override with `--clients`), folded flat and through E ∈ {4, 16}
+//! edge shards — the run fails unless every arm lands on identical
+//! global model bits, and the makespan/server-time table shows the
+//! per-shard K/E scaling.
 //!
 //! `--clients` scales to the paper's K=10k regime (m=1000 at the preset
 //! C=0.1): shards generate lazily above K=512 so a 10k-client fleet
@@ -27,7 +34,7 @@ use crate::config::{ExperimentConfig, ScenarioConfig};
 use crate::coordinator::clock::{calibrated_deadline, RoundPolicy};
 use crate::coordinator::{CarryPolicy, Simulation};
 use crate::data::Partition;
-use crate::error::Result;
+use crate::error::{HcflError, Result};
 use crate::experiments::common::{slug, Scale};
 use crate::experiments::registry::ExperimentCtx;
 use crate::fl::AggregatorKind;
@@ -117,9 +124,79 @@ fn run_with_policy(
     Ok(report)
 }
 
+/// The `--sharded-100k` arm: one engine-free fake-train round at very
+/// large K, folded flat and through the two-level edge tier (DESIGN.md
+/// §10).  Every arm must land on identical global model bits — this is
+/// the CI-facing guard that hierarchical aggregation changes *where*
+/// the adds run, never *what* they compute.
+fn sharded_100k(ctx: &ExperimentCtx) -> Result<()> {
+    let args = &ctx.args;
+    let clients = args.usize_or("clients", 100_000)?;
+    let client_threads = args.usize_or("client-threads", 8)?;
+    let scheme = Scheme::TopK { keep: 0.1 };
+
+    let mut cfg = ExperimentConfig::mnist(scheme, 1);
+    cfg.model = "fake".into();
+    cfg.fake_train = true;
+    cfg.n_clients = clients;
+    cfg.data.n_clients = clients;
+    cfg.participation = 1.0;
+    cfg.local_epochs = 1;
+    cfg.batch = 16;
+    cfg.data.per_client = 64;
+    cfg.data.test_n = 64;
+    cfg.data.server_n = 16;
+    cfg.data.lazy_shards = true;
+    cfg.use_ae_cache = false;
+    // The exact sidecar clones K × d f32 — pointless at this scale.
+    cfg.send_exact = false;
+    cfg.client_threads = client_threads;
+    cfg.engine_workers = ctx.engine.n_workers();
+
+    println!(
+        "Hierarchical aggregation — K={clients}, fake-train {}, 1 round, flat vs sharded",
+        scheme.label()
+    );
+    let mut table = Table::new(&["Arm", "Folded", "Makespan (s)", "Server (s)", "Wall (s)"]);
+    let mut reference: Option<Vec<u32>> = None;
+    for edge in [0usize, 4, 16] {
+        let mut cfg = cfg.clone();
+        cfg.edge_shards = edge;
+        let mut sim = Simulation::new(&ctx.engine, cfg)?;
+        let rec = sim.run_round(1)?;
+        let bits: Vec<u32> = sim.global().iter().map(|v| v.to_bits()).collect();
+        match &reference {
+            None => reference = Some(bits),
+            Some(flat) if *flat == bits => {}
+            Some(_) => {
+                return Err(HcflError::Engine(format!(
+                    "E={edge} fold diverged from the flat global model bits"
+                )))
+            }
+        }
+        table.row(vec![
+            if edge == 0 {
+                "flat".into()
+            } else {
+                format!("E={edge}")
+            },
+            format!("{}", rec.completed),
+            format!("{:.3}", rec.makespan_s),
+            format!("{:.3}", rec.server_time_s),
+            format!("{:.3}", rec.wall_time_s),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("global model bits identical across all arms");
+    Ok(())
+}
+
 /// The `scenarios` experiment driver.
 pub fn scenarios(ctx: &ExperimentCtx) -> Result<()> {
     let args = &ctx.args;
+    if args.flag("sharded-100k") {
+        return sharded_100k(ctx);
+    }
     let smoke = args.flag("smoke");
     let scale = Scale::from_args(args, if smoke { 2 } else { 4 }, 1)?;
     let knobs = Knobs {

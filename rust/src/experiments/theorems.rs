@@ -130,9 +130,7 @@ pub fn thm2(ctx: &ExperimentCtx) -> Result<()> {
         // with the same convention via cfg.encode_deltas = false below)
         if let crate::compression::Payload::HcflCodes(rcs) = &upd.payload {
             for rc in rcs {
-                for cc in &rc.chunks {
-                    codes.extend_from_slice(&cc.code);
-                }
+                codes.extend_from_slice(&rc.codes);
             }
         }
         let recon = compressor.decompress(upd, model.d, 0)?;

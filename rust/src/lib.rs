@@ -45,7 +45,7 @@ pub mod prelude {
     pub use crate::config::{ExperimentConfig, ScenarioConfig};
     pub use crate::coordinator::clock::RoundPolicy;
     pub use crate::coordinator::session::{CarryOver, CarryPolicy, FlSession};
-    pub use crate::coordinator::Simulation;
+    pub use crate::coordinator::{EdgeAggregator, Simulation};
     pub use crate::daemon::{snapshot::CampaignSnapshot, Daemon, JobDriver, JobSpec};
     pub use crate::data::Dataset;
     pub use crate::error::HcflError;

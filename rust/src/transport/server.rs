@@ -28,7 +28,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::clock::client_timing;
 use crate::coordinator::pool::{WorkSpec, WorkerPool};
 use crate::coordinator::session::ClientUpdate;
-use crate::coordinator::{round_seed, CarryOver, FlSession};
+use crate::coordinator::{round_seed, CarryOver, EdgeAggregator, FlSession};
 use crate::error::{HcflError, Result};
 use crate::fl::{select_clients, Server};
 use crate::metrics::RoundRecord;
@@ -99,6 +99,9 @@ pub struct RoundServer {
     carry: CarryOver,
     fleet: DeviceFleet,
     pool: WorkerPool,
+    /// `Some` when `cfg.edge_shards > 0`: the in-process edge shards the
+    /// round's decode + fold partitions across (DESIGN.md §10).
+    edge: Option<EdgeAggregator>,
     rng: Rng,
     /// How long [`Self::accept_swarm`] waits for a connection's `Hello`
     /// before retiring it; `None` waits forever (the pre-deadline
@@ -137,12 +140,21 @@ impl RoundServer {
             cfg.compress_downlink,
         );
         let pool = WorkerPool::new(cfg.client_threads, cfg.engine_workers)?;
+        let edge = match cfg.edge_shards {
+            0 => None,
+            e => Some(EdgeAggregator::new(
+                e,
+                cfg.client_threads,
+                cfg.engine_workers,
+            )?),
+        };
         Ok(RoundServer {
             cfg,
             session,
             carry: CarryOver::empty(),
             fleet,
             pool,
+            edge,
             rng,
             handshake_timeout: Some(Duration::from_secs(30)),
             round_deadline: None,
@@ -516,7 +528,10 @@ impl RoundServer {
         }
 
         let resolved = round.resolve(&self.cfg.scenario.policy);
-        let (rec, carry) = resolved.finalize(&self.pool)?;
+        let (rec, carry) = match &self.edge {
+            Some(edge) => resolved.finalize_sharded(edge)?,
+            None => resolved.finalize(&self.pool)?,
+        };
         self.carry = carry;
 
         for (idx, conn) in conns.iter_mut().enumerate() {

@@ -218,6 +218,7 @@ fn daemon_resumes_a_half_done_job_to_the_exact_model() {
         rounds: 5,
         seed: 9,
         driver: JobDriver::InProcess,
+        edge_shards: 0,
     };
     let cfg = job.config();
     let engine = Engine::with_manifest(Manifest::synthetic(), cfg.engine_workers).unwrap();
@@ -287,6 +288,7 @@ fn daemon_refuses_a_corrupt_snapshot() {
         rounds: 3,
         seed: 5,
         driver: JobDriver::InProcess,
+        edge_shards: 0,
     };
     let cfg = job.config();
     let engine = Engine::with_manifest(Manifest::synthetic(), cfg.engine_workers).unwrap();

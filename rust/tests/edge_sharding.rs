@@ -1,0 +1,200 @@
+//! The hierarchical-aggregation acceptance pin (DESIGN.md §10): a round
+//! folded through `E` edge shards must be **bit-identical** to the flat
+//! single-session fold — same global model bits, same deterministic
+//! `RoundRecord` fields, same `CarryOver` entries — for E ∈ {1, 4, 16},
+//! across `client_threads`, and across a daemon-style kill-and-resume
+//! with sharding enabled.
+//!
+//! The campaign is deliberately carry-heavy (FastestM + stragglers +
+//! discounted carry + sample weighting): carried leaves enter the tree
+//! ahead of fresh survivors, so the shard partition must respect the
+//! full leaf order, not just the survivor slice.
+
+use hcfl::compression::Scheme;
+use hcfl::coordinator::session::CarryPolicy;
+use hcfl::metrics::RoundRecord;
+use hcfl::prelude::*;
+use hcfl::transport::demo_config;
+
+/// The deterministic RoundRecord fields; measured timing fields are
+/// excluded by design (see `tests/transport_loopback.rs`).
+fn assert_record_eq(a: &RoundRecord, b: &RoundRecord) {
+    let t = a.round;
+    assert_eq!(a.round, b.round);
+    assert_eq!(a.up_bytes, b.up_bytes, "up_bytes diverged in round {t}");
+    assert_eq!(a.down_bytes, b.down_bytes, "down_bytes diverged in round {t}");
+    assert_eq!(a.selected, b.selected, "selected diverged in round {t}");
+    assert_eq!(a.completed, b.completed, "completed diverged in round {t}");
+    assert_eq!(a.dropped, b.dropped, "dropped diverged in round {t}");
+    assert_eq!(a.stragglers, b.stragglers, "stragglers diverged in round {t}");
+    assert_eq!(a.carried_in, b.carried_in, "carried_in diverged in round {t}");
+    assert_eq!(a.carried_out, b.carried_out, "carried_out diverged in round {t}");
+    assert_eq!(
+        a.carried_expired, b.carried_expired,
+        "carried_expired diverged in round {t}"
+    );
+    assert_eq!(a.recon_mse, b.recon_mse, "recon_mse diverged in round {t}");
+}
+
+/// Carry-over entries are part of the round contract: compare them
+/// field-wise, decoded parameters at bit level.
+fn assert_carry_eq(a: &CarryOver, b: &CarryOver) {
+    assert_eq!(a.len(), b.len(), "carry-over length diverged");
+    for (x, y) in a.updates.iter().zip(&b.updates) {
+        assert_eq!(x.client, y.client);
+        assert_eq!(x.n_samples, y.n_samples);
+        assert_eq!(x.born_round, y.born_round);
+        assert_eq!(x.base_weight.to_bits(), y.base_weight.to_bits());
+        assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+        assert_eq!(
+            x.decoded.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            y.decoded.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "carried decoded bits diverged for client {}",
+            x.client
+        );
+    }
+}
+
+/// The carry-heavy campaign every arm replays.
+fn carry_campaign(rounds: usize, client_threads: usize, edge_shards: usize) -> ExperimentConfig {
+    let mut cfg = demo_config(Scheme::TopK { keep: 0.2 }, 40, rounds, 42);
+    cfg.client_threads = client_threads;
+    cfg.edge_shards = edge_shards;
+    cfg.data.size_skew = 0.25;
+    cfg.scenario.policy = RoundPolicy::FastestM { m: 16 };
+    cfg.scenario.devices = DevicePreset::Stragglers {
+        frac: 0.25,
+        slowdown: 8.0,
+    };
+    cfg.scenario.carry = CarryPolicy::CarryDiscounted {
+        lambda: 0.5,
+        max_age_rounds: 3,
+    };
+    cfg.scenario.aggregator = AggregatorKind::SampleWeighted;
+    cfg
+}
+
+fn run_campaign(cfg: &ExperimentConfig, rounds: usize) -> (Vec<RoundRecord>, Vec<f32>, CarryOver) {
+    let engine = Engine::with_manifest(Manifest::synthetic(), cfg.engine_workers).unwrap();
+    let mut sim = Simulation::new(&engine, cfg.clone()).unwrap();
+    let records = (1..=rounds).map(|t| sim.run_round(t).unwrap()).collect();
+    let global = sim.global().to_vec();
+    let carry = sim.carry().clone();
+    (records, global, carry)
+}
+
+/// The headline pin: flat vs sharded across E ∈ {1, 4, 16} and two pool
+/// widths — global bits, every deterministic record field, and the
+/// final in-flight carry-over must all match.
+#[test]
+fn sharded_rounds_are_bit_identical_to_flat() {
+    const ROUNDS: usize = 5;
+    let (flat_records, flat_global, flat_carry) =
+        run_campaign(&carry_campaign(ROUNDS, 4, 0), ROUNDS);
+    let carried: usize = flat_records.iter().map(|r| r.carried_in).sum();
+    assert!(carried > 0, "the campaign never exercised carry-over");
+
+    for client_threads in [1usize, 4] {
+        for edge in [1usize, 4, 16] {
+            let cfg = carry_campaign(ROUNDS, client_threads, edge);
+            let (records, global, carry) = run_campaign(&cfg, ROUNDS);
+            for (a, b) in flat_records.iter().zip(&records) {
+                assert_record_eq(a, b);
+            }
+            assert_eq!(
+                flat_global.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                global.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "global model bits diverged (threads={client_threads}, E={edge})"
+            );
+            assert_carry_eq(&flat_carry, &carry);
+        }
+    }
+}
+
+/// Kill-and-resume with sharding on: freeze a sharded campaign after
+/// round 3, round-trip the snapshot through the serialized form, and
+/// finish in a fresh sharded driver — bit-identical to the flat
+/// uninterrupted run.  Also proves snapshot E-compatibility: the same
+/// frozen state resumes under a *different* E (the fold is E-invariant,
+/// so the fingerprint deliberately excludes it).
+#[test]
+fn sharded_kill_and_resume_matches_flat_reference() {
+    const ROUNDS: usize = 6;
+    let (flat_records, flat_global, _) = run_campaign(&carry_campaign(ROUNDS, 4, 0), ROUNDS);
+
+    let cfg = carry_campaign(ROUNDS, 4, 4);
+    let engine = Engine::with_manifest(Manifest::synthetic(), cfg.engine_workers).unwrap();
+    let mut victim = Simulation::new(&engine, cfg.clone()).unwrap();
+    assert_eq!(victim.edge_shards(), 4);
+    for t in 1..=3 {
+        victim.run_round(t).unwrap();
+    }
+    let snap = CampaignSnapshot {
+        seed: cfg.seed,
+        codec: cfg.scheme.codec_tag(),
+        n_clients: cfg.n_clients as u64,
+        d: victim.global().len() as u64,
+        rounds_done: 3,
+        rng: victim.rng_state(),
+        global: victim.global().to_vec(),
+        carry: victim.carry().clone(),
+    };
+    assert!(
+        !snap.carry.is_empty(),
+        "the carry campaign must snapshot live carry-over entries"
+    );
+    // Full serialization path, as the daemon would take it.
+    let bytes = snap.encode();
+    drop(victim);
+
+    // Resume under E=4 (the crashed job's own shape) and under E=16
+    // (a re-provisioned edge tier): both must finish on the flat bits.
+    for resume_edge in [4usize, 16] {
+        let snap = CampaignSnapshot::decode(&bytes).unwrap();
+        let mut cfg = cfg.clone();
+        cfg.edge_shards = resume_edge;
+        let mut resumed = Simulation::new(&engine, cfg.clone()).unwrap();
+        snap.check(&cfg, resumed.global().len()).unwrap();
+        resumed.restore(snap.global, snap.carry, snap.rng).unwrap();
+        for t in 4..=ROUNDS {
+            let rec = resumed.run_round(t).unwrap();
+            assert_record_eq(&flat_records[t - 1], &rec);
+        }
+        assert_eq!(
+            resumed
+                .global()
+                .iter()
+                .map(|v| v.to_bits())
+                .collect::<Vec<_>>(),
+            flat_global.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "resumed sharded model diverged from the flat reference (E={resume_edge})"
+        );
+    }
+}
+
+/// Degenerate shard shapes at the driver level: a fleet so small that
+/// E exceeds every round's survivor count (single-leaf and empty
+/// shards), and a policy keeping exactly one survivor per round.
+#[test]
+fn oversharded_small_rounds_match_flat() {
+    for m in [1usize, 3] {
+        let mut flat_cfg = carry_campaign(4, 2, 0);
+        flat_cfg.n_clients = 8;
+        flat_cfg.data.n_clients = 8;
+        flat_cfg.scenario.policy = RoundPolicy::FastestM { m };
+        let (flat_records, flat_global, flat_carry) = run_campaign(&flat_cfg, 4);
+
+        let mut sharded_cfg = flat_cfg.clone();
+        sharded_cfg.edge_shards = 16;
+        let (records, global, carry) = run_campaign(&sharded_cfg, 4);
+        for (a, b) in flat_records.iter().zip(&records) {
+            assert_record_eq(a, b);
+        }
+        assert_eq!(
+            flat_global.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            global.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "global bits diverged with E=16 over m={m} survivors"
+        );
+        assert_carry_eq(&flat_carry, &carry);
+    }
+}

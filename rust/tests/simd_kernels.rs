@@ -129,6 +129,37 @@ fn decode_varints_matches_scalar_on_mixed_widths() {
 }
 
 #[test]
+fn scatter_f32_le_matches_scalar_on_all_tails() {
+    let mut rng = Rng::new(0x57);
+    for k in probe_lengths(&mut rng) {
+        // a sparse Top-K shape: k kept values scattered over d slots,
+        // strictly ascending indices as the wire layer guarantees
+        let d = 4 * k + 7;
+        let mut idx = Vec::with_capacity(k);
+        let mut next = 0u32;
+        for _ in 0..k {
+            next += 1 + rng.below(4) as u32;
+            idx.push(next.min(d as u32 - 1));
+        }
+        idx.dedup();
+        let vals = random_f32(&mut rng, idx.len(), 2.0);
+        let mut bytes = Vec::new();
+        simd::pack_f32_le(&vals, &mut bytes);
+        // extra trailing bytes must be ignored, exactly k values read
+        bytes.extend_from_slice(&[0xEE; 5]);
+
+        let mut fast = vec![0.125f32; d];
+        let mut refr = vec![0.125f32; d];
+        simd::scatter_f32_le(&bytes, &idx, &mut fast);
+        simd::scalar::scatter_f32_le(&bytes, &idx, &mut refr);
+        assert_eq!(bits(&fast), bits(&refr), "scatter_f32_le diverged at k={k}");
+        for (i, v) in idx.iter().zip(&vals) {
+            assert_eq!(fast[*i as usize].to_bits(), v.to_bits(), "k={k}");
+        }
+    }
+}
+
+#[test]
 fn fold_kernels_match_scalar_on_all_tails() {
     let mut rng = Rng::new(0x55);
     for n in probe_lengths(&mut rng) {

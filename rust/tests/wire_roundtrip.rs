@@ -10,8 +10,8 @@ use hcfl::compression::wire::{
     self, HcflWireLayout, RangeLayout, WireScratch,
 };
 use hcfl::compression::{
-    ChunkCode, Compressor, Identity, Payload, RangeCodes, TernaryChunk,
-    TernaryCompressor, TopKCompressor,
+    Compressor, Identity, Payload, RangeCodes, TernaryChunk, TernaryCompressor,
+    TopKCompressor,
 };
 use hcfl::model::SegmentRange;
 use hcfl::util::rng::Rng;
@@ -70,7 +70,10 @@ fn ternary_pack_unpack_matches_payload_and_formula() {
 }
 
 /// Build a synthetic HCFL payload with the exact geometry the codec
-/// produces (full-length codes, 16 B side info per chunk).
+/// produces (full-length codes, 16 B side info per chunk).  The random
+/// draws happen in per-chunk order — code row, then lo/hi/mu/sd — so
+/// the values (and therefore the packed bytes) are unchanged from the
+/// pre-SoA chunk-of-structs builder.
 fn fake_hcfl_payload(
     rng: &mut Rng,
     ranges: &[(usize, usize)], // (n_chunks, code_len) per range
@@ -78,19 +81,15 @@ fn fake_hcfl_payload(
     let mut codes = Vec::new();
     let mut layouts = Vec::new();
     for (ri, &(n_chunks, code_len)) in ranges.iter().enumerate() {
-        let chunks: Vec<ChunkCode> = (0..n_chunks)
-            .map(|_| ChunkCode {
-                code: random_vec(rng, code_len, 1.0),
-                lo: rng.normal(),
-                hi: rng.normal(),
-                mu: rng.normal(),
-                sd: rng.normal().abs(),
-            })
-            .collect();
-        codes.push(RangeCodes {
-            range_idx: ri,
-            chunks,
-        });
+        let mut rc = RangeCodes::with_capacity(ri, code_len, n_chunks);
+        for _ in 0..n_chunks {
+            rc.codes.extend(random_vec(rng, code_len, 1.0));
+            rc.lo.push(rng.normal());
+            rc.hi.push(rng.normal());
+            rc.mu.push(rng.normal());
+            rc.sd.push(rng.normal().abs());
+        }
+        codes.push(rc);
         layouts.push(RangeLayout {
             range_idx: ri,
             n_chunks,
@@ -138,16 +137,16 @@ fn hcfl_pack_unpack_matches_payload_and_formula() {
         unreachable!()
     };
     assert_eq!(back.len(), orig.len());
+    let f32_bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
     for (a, b) in orig.iter().zip(&back) {
         assert_eq!(a.range_idx, b.range_idx);
-        assert_eq!(a.chunks.len(), b.chunks.len());
-        for (ca, cb) in a.chunks.iter().zip(&b.chunks) {
-            assert_eq!(ca.code, cb.code);
-            assert_eq!(ca.lo.to_bits(), cb.lo.to_bits());
-            assert_eq!(ca.hi.to_bits(), cb.hi.to_bits());
-            assert_eq!(ca.mu.to_bits(), cb.mu.to_bits());
-            assert_eq!(ca.sd.to_bits(), cb.sd.to_bits());
-        }
+        assert_eq!(a.code_len, b.code_len);
+        assert_eq!(a.n_chunks(), b.n_chunks());
+        assert_eq!(f32_bits(&a.codes), f32_bits(&b.codes));
+        assert_eq!(f32_bits(&a.lo), f32_bits(&b.lo));
+        assert_eq!(f32_bits(&a.hi), f32_bits(&b.hi));
+        assert_eq!(f32_bits(&a.mu), f32_bits(&b.mu));
+        assert_eq!(f32_bits(&a.sd), f32_bits(&b.sd));
     }
 
     // truncated buffers are rejected
