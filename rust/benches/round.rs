@@ -174,6 +174,7 @@ fn client_stage_bench(budget: f64, results: &mut Vec<BenchResult>) {
             slot,
             client: slot,
             seed: 0x5EED ^ ((slot as u64) << 1),
+            codec: Scheme::Fedavg.codec_tag(), // the Identity entry of the single-codec bank
         })
         .collect();
     let round = |global: &Arc<Vec<f32>>| RoundInputs {

@@ -13,7 +13,8 @@
 //! are caught, but carry no number to regress against (the bootstrap
 //! state: refresh with `cargo bench --bench round` on a quiet machine,
 //! then `cp BENCH_round.json BENCH_baseline.json` and commit).  Ungated
-//! cases are counted and warned about explicitly, so a baseline that
+//! cases are listed by name — and appended to the job summary when
+//! `GITHUB_STEP_SUMMARY` is set — so a baseline that
 //! silently enforces nothing is visible in the CI log;
 //! `--require-armed` hardens that warning into a failure (for repos
 //! past the bootstrap state that must never regress to record-only).
@@ -94,7 +95,7 @@ fn main() {
 
     let mut failures = 0usize;
     let mut enforced = 0usize;
-    let mut ungated = 0usize;
+    let mut ungated: Vec<&str> = Vec::new();
     for (name, base_tput) in &baseline {
         let Some((_, fresh_tput)) = fresh.iter().find(|(n, _)| n == name) else {
             eprintln!("FAIL {name}: case missing from the fresh report");
@@ -103,7 +104,7 @@ fn main() {
         };
         let Some(base) = base_tput else {
             println!("  ok {name}: record-only baseline (no throughput pinned)");
-            ungated += 1;
+            ungated.push(name);
             continue;
         };
         enforced += 1;
@@ -129,18 +130,53 @@ fn main() {
         "bench_check: {} baseline cases, {enforced} enforced, {failures} failures",
         baseline.len()
     );
-    if ungated > 0 {
+    if !ungated.is_empty() {
         eprintln!(
-            "WARN: {ungated} cases ungated (null baseline throughput — the regression gate \
+            "WARN: {} cases ungated (null baseline throughput — the regression gate \
              enforces nothing for them; arm with `cargo bench --bench round` on a quiet \
-             machine, then `cp BENCH_round.json BENCH_baseline.json`)"
+             machine, then `cp BENCH_round.json BENCH_baseline.json`):",
+            ungated.len()
         );
+        for name in &ungated {
+            eprintln!("WARN:   {name}");
+        }
+        // Surface the still-null rows in the GitHub job summary so the
+        // bootstrap debt is visible without opening the log.
+        if let Ok(summary) = std::env::var("GITHUB_STEP_SUMMARY") {
+            let mut md = format!(
+                "### bench_check: {} record-only baseline case(s)\n\n",
+                ungated.len()
+            );
+            for name in &ungated {
+                md.push_str(&format!("- `{name}` — no throughput pinned\n"));
+            }
+            md.push_str(
+                "\nArm them with `cargo bench --bench round` on a quiet machine, then \
+                 `cp BENCH_round.json BENCH_baseline.json`.\n",
+            );
+            if let Err(e) = append_file(&summary, &md) {
+                eprintln!("WARN: cannot write job summary {summary}: {e}");
+            }
+        }
         if require_armed {
-            eprintln!("FAIL: --require-armed set and {ungated} cases are still record-only");
+            eprintln!(
+                "FAIL: --require-armed set and {} cases are still record-only",
+                ungated.len()
+            );
             exit(1);
         }
     }
     if failures > 0 {
         exit(1);
     }
+}
+
+/// Append to the `$GITHUB_STEP_SUMMARY` file (created if absent).
+fn append_file(path: &str, text: &str) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    f.write_all(text.as_bytes())
 }

@@ -10,12 +10,15 @@
 //! ```
 //!
 //! Queue file: one job per line,
-//! `name scheme clients rounds seed driver [addr conns] [edge=<E>]` —
-//! scheme is `fedavg` or `topk@<keep>`, driver is `inproc` or
-//! `tcp <addr> <conns>` (the swarm dials in separately, e.g.
-//! `hcfl-swarm --redial 600`), and the optional `edge=<E>` folds the
-//! round through `E` edge-aggregation shards (DESIGN.md §10; same bits,
-//! so snapshots resume across any `E`).  Completed jobs (their
+//! `name scheme clients rounds seed driver [addr conns] [edge=<E>]
+//! [policy=<p>] [opt=<o>]` — scheme is `fedavg`, `topk@<keep>` or
+//! `ternary`, driver is `inproc` or `tcp <addr> <conns>` (the swarm
+//! dials in separately, e.g. `hcfl-swarm --redial 600`), and the
+//! optional trailing tokens fold the round through `E` edge-aggregation
+//! shards (DESIGN.md §10; same bits, so snapshots resume across any
+//! `E`), pick a per-client codec policy (`policy=uplink@0.5`,
+//! `policy=makespan@0.4`) and a server optimizer (`opt=fedavgm`,
+//! `opt=fedadam`) — DESIGN.md §11.  Completed jobs (their
 //! `<name>.model` exists in `--dir`) are skipped, so re-running the
 //! daemon over the same queue is idempotent.
 //!
@@ -23,7 +26,7 @@
 //!
 //! ```text
 //! hcfl-daemon --name demo --scheme topk@0.2 --clients 64 --rounds 5 \
-//!             --seed 42 --dir state/
+//!             --seed 42 --policy uplink@0.5 --server-opt fedadam --dir state/
 //! ```
 
 use std::time::Duration;
@@ -34,7 +37,7 @@ use hcfl::util::cli::Args;
 
 fn inline_job(args: &Args) -> Result<Vec<JobSpec>> {
     let text = format!(
-        "{} {} {} {} {} {}{}",
+        "{} {} {} {} {} {}{}{}{}",
         args.str_or("name", "job"),
         args.str_or("scheme", "fedavg"),
         args.usize_or("clients", 64)?,
@@ -47,6 +50,14 @@ fn inline_job(args: &Args) -> Result<Vec<JobSpec>> {
         match args.usize_or("edge", 0)? {
             0 => String::new(),
             e => format!(" edge={e}"),
+        },
+        match args.str_or("policy", "") {
+            "" => String::new(),
+            p => format!(" policy={p}"),
+        },
+        match args.str_or("server-opt", "") {
+            "" => String::new(),
+            o => format!(" opt={o}"),
         }
     );
     parse_queue(&text)
@@ -76,6 +87,12 @@ fn run() -> Result<()> {
             };
             if job.edge_shards > 0 {
                 driver.push_str(&format!(", {} edge shards", job.edge_shards));
+            }
+            if job.policy != hcfl::control::CodecPolicy::Static {
+                driver.push_str(&format!(", policy {}", job.policy.label()));
+            }
+            if job.server_opt != hcfl::control::ServerOptKind::Sgd {
+                driver.push_str(&format!(", opt {}", job.server_opt.label()));
             }
             eprintln!(
                 "hcfl-daemon: queued {} ({}, K={}, {} rounds, seed {}, {driver})",

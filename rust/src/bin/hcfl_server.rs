@@ -14,6 +14,7 @@ use std::net::TcpListener;
 use std::time::Duration;
 
 use hcfl::compression::Scheme;
+use hcfl::control::{CodecPolicy, ServerOptKind};
 use hcfl::error::{HcflError, Result};
 use hcfl::runtime::Manifest;
 use hcfl::transport::{demo_config, RoundServer};
@@ -22,11 +23,12 @@ use hcfl::util::cli::Args;
 fn parse_scheme(args: &Args) -> Result<Scheme> {
     match args.str_or("scheme", "topk") {
         "fedavg" => Ok(Scheme::Fedavg),
+        "ternary" => Ok(Scheme::Ternary),
         "topk" => Ok(Scheme::TopK {
             keep: args.f64_or("keep", 0.1)?,
         }),
         other => Err(HcflError::Config(format!(
-            "--scheme must be fedavg or topk (engine-free), got '{other}'"
+            "--scheme must be fedavg, topk or ternary (engine-free), got '{other}'"
         ))),
     }
 }
@@ -40,7 +42,12 @@ fn run() -> Result<()> {
     let seed = args.u64_or("seed", 42)?;
     let scheme = parse_scheme(&args)?;
 
-    let cfg = demo_config(scheme, clients, rounds, seed);
+    let mut cfg = demo_config(scheme, clients, rounds, seed);
+    // Control plane (DESIGN.md §11): a per-client codec policy and a
+    // server optimizer.  The swarm must be started with the same
+    // --policy so its codec bank covers every assigned tag.
+    cfg.codec_policy = CodecPolicy::parse(args.str_or("policy", "static"))?;
+    cfg.server_opt = ServerOptKind::parse(args.str_or("server-opt", "sgd"))?;
     let manifest = Manifest::synthetic();
     let mut server = RoundServer::new(&manifest, cfg)?;
     // Liveness guards: a client that connects and stalls before Hello

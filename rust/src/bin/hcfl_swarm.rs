@@ -16,6 +16,7 @@
 use std::time::Duration;
 
 use hcfl::compression::Scheme;
+use hcfl::control::CodecPolicy;
 use hcfl::error::{HcflError, Result};
 use hcfl::runtime::Manifest;
 use hcfl::transport::demo_config;
@@ -26,11 +27,12 @@ use hcfl::util::cli::Args;
 fn parse_scheme(args: &Args) -> Result<Scheme> {
     match args.str_or("scheme", "topk") {
         "fedavg" => Ok(Scheme::Fedavg),
+        "ternary" => Ok(Scheme::Ternary),
         "topk" => Ok(Scheme::TopK {
             keep: args.f64_or("keep", 0.1)?,
         }),
         other => Err(HcflError::Config(format!(
-            "--scheme must be fedavg or topk (engine-free), got '{other}'"
+            "--scheme must be fedavg, topk or ternary (engine-free), got '{other}'"
         ))),
     }
 }
@@ -51,7 +53,11 @@ fn run() -> Result<()> {
     };
 
     // `rounds` is server-paced; the swarm serves until Shutdown.
-    let cfg = demo_config(scheme, clients, 1, seed);
+    let mut cfg = demo_config(scheme, clients, 1, seed);
+    // Must match the server's --policy so the local codec bank covers
+    // every tag the control plane can assign (--server-opt is
+    // server-side only and needs no mirroring here).
+    cfg.codec_policy = CodecPolicy::parse(args.str_or("policy", "static"))?;
     let manifest = Manifest::synthetic();
     let stats = validated_swarm_with(&manifest, &addr, &cfg, workers, time_scale, &opts)?;
     println!(

@@ -24,7 +24,7 @@ pub mod topk;
 pub mod wire;
 
 pub use hcfl::HcflCompressor;
-pub use ternary::TernaryCompressor;
+pub use ternary::{RefTernaryCompressor, TernaryCompressor, REF_TERNARY_CHUNK};
 pub use topk::TopKCompressor;
 pub use wire::{WireScratch, WireUpdate};
 

@@ -198,6 +198,77 @@ impl Compressor for TernaryCompressor {
     }
 }
 
+/// The chunk size every engine-free ternary path uses (and the only one
+/// the Pallas artifacts ship): the transport layer, the daemon and
+/// `fake_train` runs all quantize at this granularity, so the in-process
+/// and wire paths stay bit-identical.
+pub const REF_TERNARY_CHUNK: usize = 1024;
+
+/// Engine-free ternary codec: [`TernaryCompressor::quantize_ref`] — the
+/// exact TWN math the kernel executables are pinned against — applied
+/// per chunk in pure Rust.  Same scheme, same wire bytes, same decode as
+/// the engine-backed [`TernaryCompressor`]; it exists so ternary joins
+/// fedavg/top-k in the engine-free scheme set (`fake_train` and the
+/// transport layer, where no engine crosses the socket).
+pub struct RefTernaryCompressor {
+    chunk: usize,
+}
+
+impl RefTernaryCompressor {
+    /// A reference ternary codec at [`REF_TERNARY_CHUNK`].
+    pub fn new() -> RefTernaryCompressor {
+        RefTernaryCompressor {
+            chunk: REF_TERNARY_CHUNK,
+        }
+    }
+}
+
+impl Default for RefTernaryCompressor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor for RefTernaryCompressor {
+    fn scheme(&self) -> Scheme {
+        Scheme::Ternary
+    }
+
+    fn compress(&self, flat: &[f32], _worker: usize) -> Result<CompressedUpdate> {
+        let chunks: Vec<TernaryChunk> = flat
+            .chunks(self.chunk)
+            .map(TernaryCompressor::quantize_ref)
+            .collect();
+        Ok(CompressedUpdate {
+            wire_bytes: TernaryCompressor::wire_bytes_for(flat.len(), self.chunk),
+            payload: Payload::TernaryChunks(chunks),
+        })
+    }
+
+    fn decompress(&self, upd: CompressedUpdate, d: usize, _worker: usize) -> Result<Vec<f32>> {
+        let chunks = match &upd.payload {
+            Payload::TernaryChunks(c) => c,
+            _ => {
+                return Err(HcflError::Config(
+                    "ternary decompress got wrong payload".into(),
+                ))
+            }
+        };
+        TernaryCompressor::decode_chunks(chunks, d)
+    }
+
+    fn unpack_into(
+        &self,
+        bytes: &[u8],
+        d: usize,
+        _worker: usize,
+        _scratch: &mut WireScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        wire::unpack_ternary_into(bytes, d, self.chunk, out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -217,6 +288,31 @@ mod tests {
         let t = TernaryCompressor::quantize_ref(&[0.0; 16]);
         assert!(t.q.iter().all(|&q| q == 0));
         assert_eq!(t.alpha, 0.0);
+    }
+
+    #[test]
+    fn ref_compressor_matches_the_reference_math() {
+        let c = RefTernaryCompressor::new();
+        let flat: Vec<f32> = (0..2500)
+            .map(|i| ((i * 37) % 101) as f32 / 50.0 - 1.0)
+            .collect();
+        let upd = c.compress(&flat, 0).unwrap();
+        assert_eq!(
+            upd.wire_bytes,
+            TernaryCompressor::wire_bytes_for(2500, REF_TERNARY_CHUNK)
+        );
+        let want: Vec<f32> = flat
+            .chunks(REF_TERNARY_CHUNK)
+            .flat_map(|w| {
+                let t = TernaryCompressor::quantize_ref(w);
+                t.q.iter().map(|&q| q as f32 * t.alpha).collect::<Vec<_>>()
+            })
+            .collect();
+        let got = c.decompress(upd, 2500, 0).unwrap();
+        assert_eq!(
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! details": 100 clients, C = 0.1, E = 5, B = 64, lr = 0.01).
 
 use crate::compression::Scheme;
+use crate::control::{CodecPolicy, ServerOptKind};
 use crate::coordinator::clock::RoundPolicy;
 use crate::coordinator::session::CarryPolicy;
 use crate::data::DataSpec;
@@ -216,6 +217,14 @@ pub struct ExperimentConfig {
     pub link: LinkModel,
     /// Round-execution scenario (devices, round policy, aggregation).
     pub scenario: ScenarioConfig,
+    /// Per-round, per-client codec selection (`control::assign_codecs`).
+    /// `Static` reproduces the single-codec fleet; the adaptive policies
+    /// move slow-uplink clients onto a heavier codec.  `scheme` stays
+    /// the base codec (downlink, handshake, fast clients).
+    pub codec_policy: CodecPolicy,
+    /// Server-side optimizer applied between the aggregated round
+    /// result and the global-model install (`Sgd` = plain install).
+    pub server_opt: ServerOptKind,
 }
 
 impl ExperimentConfig {
@@ -244,6 +253,8 @@ impl ExperimentConfig {
             send_exact: true,
             link: LinkModel::default(),
             scenario: ScenarioConfig::default(),
+            codec_policy: CodecPolicy::Static,
+            server_opt: ServerOptKind::Sgd,
         }
     }
 
@@ -272,6 +283,8 @@ impl ExperimentConfig {
             send_exact: true,
             link: LinkModel::default(),
             scenario: ScenarioConfig::default(),
+            codec_policy: CodecPolicy::Static,
+            server_opt: ServerOptKind::Sgd,
         }
     }
 
@@ -300,6 +313,8 @@ impl ExperimentConfig {
             send_exact: true,
             link: LinkModel::default(),
             scenario: ScenarioConfig::default(),
+            codec_policy: CodecPolicy::Static,
+            server_opt: ServerOptKind::Sgd,
         }
     }
 
@@ -342,9 +357,33 @@ impl ExperimentConfig {
                 self.data.test_n, model.eval.batch
             )));
         }
-        if let Scheme::Hcfl { ratio } = self.scheme {
-            for chunk in manifest.chunks.values() {
-                manifest.autoencoder(*chunk, ratio)?;
+        if self.fake_train {
+            // Every client class the policy can produce must upload with
+            // an engine-free codec — an engine-backed scheme anywhere in
+            // the menu would need PJRT artifacts mid-round.
+            for (class, scheme) in self.codec_policy.classes(self.scheme) {
+                if !matches!(
+                    scheme,
+                    Scheme::Fedavg | Scheme::TopK { .. } | Scheme::Ternary
+                ) {
+                    return Err(HcflError::Config(format!(
+                        "fake_train supports only engine-free schemes \
+                         (fedavg/topk/ternary), but the `{class}` class of policy \
+                         `{}` uses {}",
+                        self.codec_policy.label(),
+                        scheme.label()
+                    )));
+                }
+            }
+        } else {
+            // Engine-backed runs: every HCFL entry anywhere in the
+            // policy's menu needs its autoencoders baked.
+            for scheme in self.codec_policy.menu(self.scheme) {
+                if let Scheme::Hcfl { ratio } = scheme {
+                    for chunk in manifest.chunks.values() {
+                        manifest.autoencoder(*chunk, ratio)?;
+                    }
+                }
             }
         }
         if self.dense_parts == 0 {
@@ -378,12 +417,8 @@ impl ExperimentConfig {
                 )));
             }
         }
-        if self.fake_train && !matches!(self.scheme, Scheme::Fedavg | Scheme::TopK { .. }) {
-            return Err(HcflError::Config(format!(
-                "fake_train supports only engine-free schemes (fedavg/topk), got {}",
-                self.scheme.label()
-            )));
-        }
+        self.codec_policy.validate()?;
+        self.server_opt.validate()?;
         self.scenario.validate()?;
         Ok(())
     }
@@ -474,6 +509,34 @@ mod tests {
         assert!(carrying.validate().is_ok());
         assert!(carrying.label().contains("carry"));
         assert!(!ScenarioConfig::default().label().contains("carry"));
+    }
+
+    #[test]
+    fn fake_train_gates_every_policy_class() {
+        let manifest = Manifest::synthetic();
+        let mut cfg = crate::transport::demo_config(Scheme::Fedavg, 8, 2, 1);
+        assert!(cfg.validate(&manifest).is_ok());
+        // an engine-free slow codec is fine...
+        cfg.codec_policy = CodecPolicy::ThresholdByUplink {
+            cutoff: 1.0,
+            slow: Scheme::Ternary,
+        };
+        cfg.server_opt = ServerOptKind::DEFAULT_ADAM;
+        assert!(cfg.validate(&manifest).is_ok());
+        // ...an engine-backed one is rejected, naming the class
+        cfg.codec_policy = CodecPolicy::ThresholdByUplink {
+            cutoff: 1.0,
+            slow: Scheme::Hcfl { ratio: 8 },
+        };
+        let err = cfg.validate(&manifest).unwrap_err().to_string();
+        assert!(err.contains("slow-uplink"), "error must name the class: {err}");
+        assert!(err.contains("HCFL"), "error must name the scheme: {err}");
+        // bad policy knobs are caught too
+        cfg.codec_policy = CodecPolicy::ThresholdByUplink {
+            cutoff: -1.0,
+            slow: Scheme::Ternary,
+        };
+        assert!(cfg.validate(&manifest).is_err());
     }
 
     #[test]

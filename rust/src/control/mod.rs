@@ -1,0 +1,708 @@
+//! The per-round adaptive control plane: per-client codec selection and
+//! the pluggable server-side optimizer (ROADMAP "adaptive control
+//! loop"; the resource-allocation problem of arXiv:2206.06976 paired
+//! with FedOpt-style server optimization, arXiv:2206.11448).
+//!
+//! Two independent decisions live here, both made on the driver thread
+//! once per round:
+//!
+//! * **Codec selection** ([`CodecPolicy`] / [`assign_codecs`]): given
+//!   each selected client's [`DeviceProfile`] and the model dimension,
+//!   pick the codec that client uploads with this round.  Slow uplinks
+//!   get a heavier codec; fast ones keep the base scheme.  The decision
+//!   is a **pure function** of `(policy, base scheme, fleet, selection,
+//!   d, link)` — no wall-clock input, no RNG — so every driver
+//!   (in-process, TCP, resumed-from-snapshot) and every `client_threads`
+//!   value derives the identical assignment vector.
+//! * **Server optimization** ([`ServerOptKind`] / [`ServerOptKind::apply`]):
+//!   between the aggregated round result and the global-model install,
+//!   treat `aggregated − global` as a pseudo-gradient and run it through
+//!   a server optimizer (`Sgd` = plain install, `FedAvgM` = server
+//!   momentum, `FedAdam` = server Adam with persistent m/v state).  The
+//!   state is part of the campaign snapshot (DESIGN.md §9.2 v2), so
+//!   kill-and-resume stays bit-identical.
+
+use std::sync::Arc;
+
+use crate::compression::{Compressor, Scheme, TernaryCompressor, REF_TERNARY_CHUNK};
+use crate::error::{HcflError, Result};
+use crate::network::{DeviceFleet, LinkModel};
+
+/// How the round's codecs are chosen across the selected clients.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CodecPolicy {
+    /// Every client uses the experiment's base scheme (today's behavior).
+    Static,
+    /// Clients whose `uplink_mult` is below `cutoff` upload with `slow`;
+    /// everyone else keeps the base scheme.
+    ThresholdByUplink {
+        /// Uplink-multiplier threshold (the reference device is 1.0).
+        cutoff: f64,
+        /// The codec handed to slow-uplink clients.
+        slow: Scheme,
+    },
+    /// Minimize the predicted round makespan under a fleet distortion
+    /// budget: clients are ranked by predicted upload time (slowest
+    /// first) and greedily moved to `heavy` while the fleet's mean
+    /// distortion proxy stays within `budget`.
+    MakespanUnderDistortion {
+        /// Ceiling on the mean per-client distortion proxy (0..=1).
+        budget: f64,
+        /// The codec assigned to the slowest clients.
+        heavy: Scheme,
+    },
+}
+
+impl CodecPolicy {
+    /// Parse a policy token (`static`, `uplink@<cutoff>`,
+    /// `makespan@<budget>`); the non-base codec defaults to ternary, the
+    /// heaviest engine-free scheme.
+    pub fn parse(tok: &str) -> Result<CodecPolicy> {
+        if tok == "static" {
+            return Ok(CodecPolicy::Static);
+        }
+        if let Some(c) = tok.strip_prefix("uplink@") {
+            let cutoff: f64 = c.parse().map_err(|_| {
+                HcflError::Config(format!("bad uplink policy cutoff `{c}`"))
+            })?;
+            return Ok(CodecPolicy::ThresholdByUplink {
+                cutoff,
+                slow: Scheme::Ternary,
+            });
+        }
+        if let Some(b) = tok.strip_prefix("makespan@") {
+            let budget: f64 = b.parse().map_err(|_| {
+                HcflError::Config(format!("bad makespan policy budget `{b}`"))
+            })?;
+            return Ok(CodecPolicy::MakespanUnderDistortion {
+                budget,
+                heavy: Scheme::Ternary,
+            });
+        }
+        Err(HcflError::Config(format!(
+            "codec policy `{tok}` must be `static`, `uplink@<cutoff>` or `makespan@<budget>`"
+        )))
+    }
+
+    /// Stable label for CSV columns and queue files.
+    pub fn label(&self) -> String {
+        match self {
+            CodecPolicy::Static => "static".into(),
+            CodecPolicy::ThresholdByUplink { cutoff, .. } => format!("uplink@{cutoff}"),
+            CodecPolicy::MakespanUnderDistortion { budget, .. } => format!("makespan@{budget}"),
+        }
+    }
+
+    /// Reject nonsensical knobs (config validation).
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            CodecPolicy::Static => Ok(()),
+            CodecPolicy::ThresholdByUplink { cutoff, .. } => {
+                if !cutoff.is_finite() || *cutoff <= 0.0 {
+                    return Err(HcflError::Config(format!(
+                        "uplink policy cutoff must be finite and > 0, got {cutoff}"
+                    )));
+                }
+                Ok(())
+            }
+            CodecPolicy::MakespanUnderDistortion { budget, .. } => {
+                if !budget.is_finite() || !(0.0..=1.0).contains(budget) {
+                    return Err(HcflError::Config(format!(
+                        "makespan policy distortion budget must be in [0, 1], got {budget}"
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The client classes this policy can produce and the scheme each
+    /// uploads with — the base class first.  Validation walks this to
+    /// gate engine-backed schemes out of engine-free runs with an error
+    /// naming the offending class.
+    pub fn classes(&self, base: Scheme) -> Vec<(&'static str, Scheme)> {
+        match self {
+            CodecPolicy::Static => vec![("all clients", base)],
+            CodecPolicy::ThresholdByUplink { slow, .. } => {
+                vec![("fast-uplink", base), ("slow-uplink", *slow)]
+            }
+            CodecPolicy::MakespanUnderDistortion { heavy, .. } => {
+                vec![("within-budget", base), ("slowest-upload", *heavy)]
+            }
+        }
+    }
+
+    /// The distinct schemes this policy can assign (deduplicated by
+    /// codec tag, base first) — what the compressor banks must cover.
+    pub fn menu(&self, base: Scheme) -> Vec<Scheme> {
+        let mut out: Vec<Scheme> = Vec::new();
+        for (_, s) in self.classes(base) {
+            if !out.iter().any(|o| o.codec_tag() == s.codec_tag()) {
+                out.push(s);
+            }
+        }
+        out
+    }
+}
+
+/// Predicted on-air upload size of one update under `scheme` — the
+/// closed forms of DESIGN.md §5, used only for *ranking* clients inside
+/// [`assign_codecs`] (the billed `up_bytes` are always measured buffer
+/// lengths).  Top-K assumes ~2 varint bytes per index.
+pub fn predicted_wire_bytes(scheme: &Scheme, d: usize) -> usize {
+    match scheme {
+        Scheme::Fedavg => 4 * d,
+        Scheme::Hcfl { ratio } => 4 * d.div_ceil((*ratio).max(1)) + 16,
+        Scheme::Ternary => TernaryCompressor::wire_bytes_for(d, REF_TERNARY_CHUNK),
+        Scheme::TopK { keep } => {
+            let k = ((keep * d as f64).ceil() as usize).clamp(1, d);
+            8 + 6 * k
+        }
+    }
+}
+
+/// A unitless per-client distortion proxy in [0, 1]: 0 = lossless, 1 =
+/// everything discarded.  Top-K drops a `1 − keep` fraction of the
+/// coordinates; ternary keeps signs plus one scale per chunk; HCFL's
+/// autoencoder reconstruction sits in between.  Only *differences* of
+/// these constants matter (the greedy budget walk), not their absolute
+/// calibration.
+pub fn distortion_proxy(scheme: &Scheme) -> f64 {
+    match scheme {
+        Scheme::Fedavg => 0.0,
+        Scheme::Hcfl { .. } => 0.5,
+        Scheme::Ternary => 0.75,
+        Scheme::TopK { keep } => (1.0 - keep).clamp(0.0, 1.0),
+    }
+}
+
+/// Assign one scheme per selection slot.  Pure in its arguments: no
+/// clock, no RNG — the same `(policy, base, fleet, selected, d, link)`
+/// always yields the same vector, which is what keeps the in-process,
+/// TCP and resumed drivers bit-identical.  Every selected slot gets an
+/// assignment (including devices the dropout stream will later kill),
+/// so the decision never depends on the dropout realization.
+pub fn assign_codecs(
+    policy: &CodecPolicy,
+    base: Scheme,
+    fleet: &DeviceFleet,
+    selected: &[usize],
+    d: usize,
+    link: &LinkModel,
+) -> Vec<Scheme> {
+    match policy {
+        CodecPolicy::Static => vec![base; selected.len()],
+        CodecPolicy::ThresholdByUplink { cutoff, slow } => selected
+            .iter()
+            .map(|&k| {
+                if fleet.profile(k).uplink_mult < *cutoff {
+                    *slow
+                } else {
+                    base
+                }
+            })
+            .collect(),
+        CodecPolicy::MakespanUnderDistortion { budget, heavy } => {
+            let n = selected.len();
+            let mut out = vec![base; n];
+            if n == 0 {
+                return out;
+            }
+            let base_bytes = predicted_wire_bytes(&base, d);
+            let heavy_bytes = predicted_wire_bytes(heavy, d);
+            if heavy_bytes >= base_bytes {
+                return out; // heavier codec buys nothing
+            }
+            let extra = distortion_proxy(heavy) - distortion_proxy(&base);
+            if extra <= 0.0 {
+                // No distortion cost: everyone takes the smaller codec.
+                for s in &mut out {
+                    *s = *heavy;
+                }
+                return out;
+            }
+            // Rank slots slowest predicted upload first.  All times are
+            // positive finite f64s, so their bit patterns order exactly
+            // like the values; slot index breaks exact ties.
+            let mut order: Vec<(u64, usize)> = selected
+                .iter()
+                .enumerate()
+                .map(|(slot, &k)| {
+                    let t = link.uplink_time(base_bytes, n)
+                        / fleet.profile(k).uplink_mult.max(1e-9);
+                    (t.to_bits(), slot)
+                })
+                .collect();
+            order.sort_unstable_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+            let mut distortion = distortion_proxy(&base) * n as f64;
+            let cap = *budget * n as f64;
+            for &(_, slot) in &order {
+                if distortion + extra > cap + 1e-12 {
+                    break;
+                }
+                out[slot] = *heavy;
+                distortion += extra;
+            }
+            out
+        }
+    }
+}
+
+/// A codec-tag-indexed table of compressors: the per-client replacement
+/// for the session's single `Arc<dyn Compressor>`.  Tags are the wire
+/// protocol's [`Scheme::codec_tag`] values (0–3).
+#[derive(Clone)]
+pub struct CodecBank {
+    base: u8,
+    slots: [Option<Arc<dyn Compressor>>; 4],
+}
+
+impl CodecBank {
+    /// A bank holding only the base compressor (the static install).
+    pub fn single(base: Arc<dyn Compressor>) -> CodecBank {
+        let tag = base.scheme().codec_tag();
+        let mut bank = CodecBank {
+            base: tag,
+            slots: [None, None, None, None],
+        };
+        bank.slots[tag as usize] = Some(base);
+        bank
+    }
+
+    /// Register a compressor under its own scheme's codec tag.
+    pub fn insert(&mut self, c: Arc<dyn Compressor>) {
+        let tag = c.scheme().codec_tag();
+        self.slots[tag as usize] = Some(c);
+    }
+
+    /// The base scheme's codec tag (the downlink / handshake codec).
+    pub fn base_tag(&self) -> u8 {
+        self.base
+    }
+
+    /// The base compressor.
+    pub fn base(&self) -> &Arc<dyn Compressor> {
+        self.slots[self.base as usize]
+            .as_ref()
+            .expect("the base compressor is registered at construction")
+    }
+
+    /// Look up the compressor for a codec tag; a tag outside the bank is
+    /// a typed error (a forged or mis-assigned update).
+    pub fn get(&self, tag: u8) -> Result<&Arc<dyn Compressor>> {
+        self.slots
+            .get(tag as usize)
+            .and_then(|s| s.as_ref())
+            .ok_or_else(|| {
+                HcflError::Config(format!("codec tag {tag} is not in this run's codec bank"))
+            })
+    }
+}
+
+/// The server-side optimizer applied between the aggregated round
+/// result and the global-model install.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServerOptKind {
+    /// Install the aggregate as-is (today's behavior).
+    Sgd,
+    /// Server momentum: `m ← β·m + Δ`, install `g + m`.
+    FedAvgM {
+        /// Momentum decay β in [0, 1).
+        beta: f64,
+    },
+    /// Server Adam on the pseudo-gradient `Δ = aggregate − g`:
+    /// `m ← β1·m + (1−β1)Δ`, `v ← β2·v + (1−β2)Δ²`, install
+    /// `g + η·m / (√v + ε)`.
+    FedAdam {
+        /// First-moment decay.
+        beta1: f64,
+        /// Second-moment decay.
+        beta2: f64,
+        /// Server learning rate.
+        eta: f64,
+        /// Denominator floor.
+        eps: f64,
+    },
+}
+
+impl ServerOptKind {
+    /// Default FedAvgM momentum.
+    pub const DEFAULT_BETA: f64 = 0.9;
+    /// Default FedAdam hyperparameters.
+    pub const DEFAULT_ADAM: ServerOptKind = ServerOptKind::FedAdam {
+        beta1: 0.9,
+        beta2: 0.99,
+        eta: 0.1,
+        eps: 1e-8,
+    };
+
+    /// Parse an optimizer token (`sgd`, `fedavgm`, `fedavgm@<beta>`,
+    /// `fedadam`, `fedadam@<eta>`).
+    pub fn parse(tok: &str) -> Result<ServerOptKind> {
+        if tok == "sgd" {
+            return Ok(ServerOptKind::Sgd);
+        }
+        if tok == "fedavgm" {
+            return Ok(ServerOptKind::FedAvgM {
+                beta: Self::DEFAULT_BETA,
+            });
+        }
+        if let Some(b) = tok.strip_prefix("fedavgm@") {
+            let beta: f64 = b
+                .parse()
+                .map_err(|_| HcflError::Config(format!("bad fedavgm beta `{b}`")))?;
+            return Ok(ServerOptKind::FedAvgM { beta });
+        }
+        if tok == "fedadam" {
+            return Ok(Self::DEFAULT_ADAM);
+        }
+        if let Some(e) = tok.strip_prefix("fedadam@") {
+            let eta: f64 = e
+                .parse()
+                .map_err(|_| HcflError::Config(format!("bad fedadam eta `{e}`")))?;
+            return Ok(ServerOptKind::FedAdam {
+                beta1: 0.9,
+                beta2: 0.99,
+                eta,
+                eps: 1e-8,
+            });
+        }
+        Err(HcflError::Config(format!(
+            "server optimizer `{tok}` must be `sgd`, `fedavgm[@beta]` or `fedadam[@eta]`"
+        )))
+    }
+
+    /// Stable label for CSV columns and queue files.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ServerOptKind::Sgd => "sgd",
+            ServerOptKind::FedAvgM { .. } => "fedavgm",
+            ServerOptKind::FedAdam { .. } => "fedadam",
+        }
+    }
+
+    /// The snapshot fingerprint tag (DESIGN.md §9.2): 0 sgd, 1 fedavgm,
+    /// 2 fedadam.  These values are on-disk format and must never be
+    /// reused.
+    pub fn tag(&self) -> u8 {
+        match self {
+            ServerOptKind::Sgd => 0,
+            ServerOptKind::FedAvgM { .. } => 1,
+            ServerOptKind::FedAdam { .. } => 2,
+        }
+    }
+
+    /// Reject nonsensical knobs (config validation).
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            ServerOptKind::Sgd => Ok(()),
+            ServerOptKind::FedAvgM { beta } => {
+                if !beta.is_finite() || !(0.0..1.0).contains(beta) {
+                    return Err(HcflError::Config(format!(
+                        "fedavgm beta must be in [0, 1), got {beta}"
+                    )));
+                }
+                Ok(())
+            }
+            ServerOptKind::FedAdam {
+                beta1,
+                beta2,
+                eta,
+                eps,
+            } => {
+                for (name, b) in [("beta1", beta1), ("beta2", beta2)] {
+                    if !b.is_finite() || !(0.0..1.0).contains(b) {
+                        return Err(HcflError::Config(format!(
+                            "fedadam {name} must be in [0, 1), got {b}"
+                        )));
+                    }
+                }
+                if !eta.is_finite() || *eta <= 0.0 {
+                    return Err(HcflError::Config(format!(
+                        "fedadam eta must be finite and > 0, got {eta}"
+                    )));
+                }
+                if !eps.is_finite() || *eps <= 0.0 {
+                    return Err(HcflError::Config(format!(
+                        "fedadam eps must be finite and > 0, got {eps}"
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Apply the optimizer to one round's aggregate.  `global` is the
+    /// pre-round model, `aggregated` the fold result; the return value
+    /// is what the server installs.  Sequential f64 arithmetic on the
+    /// driver thread, so the result is bit-identical for any
+    /// `client_threads` / edge-shard / driver combination.
+    pub fn apply(
+        &self,
+        state: &mut ServerOptState,
+        global: &[f32],
+        aggregated: Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        let d = global.len();
+        if aggregated.len() != d {
+            return Err(HcflError::Config(format!(
+                "server-opt aggregate has {} weights, global has {d}",
+                aggregated.len()
+            )));
+        }
+        match self {
+            ServerOptKind::Sgd => Ok(aggregated),
+            ServerOptKind::FedAvgM { beta } => {
+                state.ensure(d, false)?;
+                let mut out = aggregated;
+                for i in 0..d {
+                    let delta = out[i] as f64 - global[i] as f64;
+                    let m = beta * state.m[i] as f64 + delta;
+                    state.m[i] = m as f32;
+                    out[i] = (global[i] as f64 + m) as f32;
+                }
+                Ok(out)
+            }
+            ServerOptKind::FedAdam {
+                beta1,
+                beta2,
+                eta,
+                eps,
+            } => {
+                state.ensure(d, true)?;
+                let mut out = aggregated;
+                for i in 0..d {
+                    let delta = out[i] as f64 - global[i] as f64;
+                    let m = beta1 * state.m[i] as f64 + (1.0 - beta1) * delta;
+                    let v = beta2 * state.v[i] as f64 + (1.0 - beta2) * delta * delta;
+                    state.m[i] = m as f32;
+                    state.v[i] = v as f32;
+                    out[i] = (global[i] as f64 + eta * m / (v.sqrt() + eps)) as f32;
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// The server optimizer's persistent moment vectors (empty until the
+/// optimizer first runs; `Sgd` never populates them).  Snapshot v2
+/// carries both, so a killed FedAdam campaign resumes bit-identically.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ServerOptState {
+    /// First moment (momentum), one f32 per model weight.
+    pub m: Vec<f32>,
+    /// Second moment (FedAdam only), one f32 per model weight.
+    pub v: Vec<f32>,
+}
+
+impl ServerOptState {
+    /// An empty state (fresh campaign, or `Sgd`).
+    pub fn empty() -> ServerOptState {
+        ServerOptState::default()
+    }
+
+    /// True when the optimizer has not run yet.
+    pub fn is_empty(&self) -> bool {
+        self.m.is_empty() && self.v.is_empty()
+    }
+
+    fn ensure(&mut self, d: usize, need_v: bool) -> Result<()> {
+        Self::size("m", &mut self.m, d)?;
+        if need_v {
+            Self::size("v", &mut self.v, d)?;
+        }
+        Ok(())
+    }
+
+    fn size(name: &str, vec: &mut Vec<f32>, d: usize) -> Result<()> {
+        if vec.is_empty() {
+            vec.resize(d, 0.0);
+            return Ok(());
+        }
+        if vec.len() != d {
+            return Err(HcflError::Config(format!(
+                "server-opt {name} state has {} entries, model has {d}",
+                vec.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::DevicePreset;
+
+    fn iot_fleet(n: usize) -> DeviceFleet {
+        let preset = DevicePreset::Iot {
+            sigma: 0.8,
+            dropout_p: 0.0,
+        };
+        DeviceFleet::sample(n, &preset, 42)
+    }
+
+    #[test]
+    fn policy_parse_label_round_trips() {
+        for tok in ["static", "uplink@0.5", "makespan@0.25"] {
+            let p = CodecPolicy::parse(tok).unwrap();
+            assert_eq!(p.label(), tok);
+            p.validate().unwrap();
+        }
+        assert!(CodecPolicy::parse("bogus").is_err());
+        assert!(CodecPolicy::parse("uplink@x").is_err());
+        assert!(CodecPolicy::parse("uplink@0").unwrap().validate().is_err());
+        assert!(CodecPolicy::parse("makespan@2").unwrap().validate().is_err());
+    }
+
+    #[test]
+    fn opt_parse_label_and_tags() {
+        assert_eq!(ServerOptKind::parse("sgd").unwrap(), ServerOptKind::Sgd);
+        assert_eq!(
+            ServerOptKind::parse("fedavgm").unwrap(),
+            ServerOptKind::FedAvgM { beta: 0.9 }
+        );
+        assert_eq!(
+            ServerOptKind::parse("fedadam").unwrap(),
+            ServerOptKind::DEFAULT_ADAM
+        );
+        let custom = ServerOptKind::parse("fedadam@0.5").unwrap();
+        assert!(matches!(custom, ServerOptKind::FedAdam { eta, .. } if eta == 0.5));
+        assert!(ServerOptKind::parse("adamw").is_err());
+        assert!(ServerOptKind::parse("fedavgm@1.5").unwrap().validate().is_err());
+        let tags: Vec<u8> = [
+            ServerOptKind::Sgd,
+            ServerOptKind::FedAvgM { beta: 0.9 },
+            ServerOptKind::DEFAULT_ADAM,
+        ]
+        .iter()
+        .map(|k| k.tag())
+        .collect();
+        assert_eq!(tags, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn threshold_policy_splits_on_uplink_and_is_pure() {
+        let fleet = iot_fleet(64);
+        let selected: Vec<usize> = (0..64).collect();
+        let policy = CodecPolicy::ThresholdByUplink {
+            cutoff: 1.0,
+            slow: Scheme::Ternary,
+        };
+        let link = LinkModel::default();
+        let a = assign_codecs(&policy, Scheme::Fedavg, &fleet, &selected, 802, &link);
+        let b = assign_codecs(&policy, Scheme::Fedavg, &fleet, &selected, 802, &link);
+        assert_eq!(a, b, "assignment must be a pure function of its inputs");
+        let slow = a.iter().filter(|s| **s == Scheme::Ternary).count();
+        assert!(slow > 0 && slow < 64, "sigma-spread fleet must mix codecs");
+        for (slot, &k) in selected.iter().enumerate() {
+            let want = fleet.profile(k).uplink_mult < 1.0;
+            assert_eq!(a[slot] == Scheme::Ternary, want, "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn makespan_policy_moves_slowest_first_within_budget() {
+        let fleet = iot_fleet(40);
+        let selected: Vec<usize> = (0..40).collect();
+        let link = LinkModel::default();
+        let policy = CodecPolicy::MakespanUnderDistortion {
+            budget: 0.25,
+            heavy: Scheme::Ternary,
+        };
+        let got = assign_codecs(&policy, Scheme::Fedavg, &fleet, &selected, 802, &link);
+        let heavy: Vec<usize> = (0..40).filter(|&s| got[s] == Scheme::Ternary).collect();
+        // budget 0.25 over proxy 0.75 per heavy client => floor(40/3) = 13
+        assert_eq!(heavy.len(), 13);
+        // every heavy client's uplink is no faster than every light one's
+        let slowest_light = heavy
+            .iter()
+            .map(|&s| fleet.profile(selected[s]).uplink_mult)
+            .fold(f64::MIN, f64::max);
+        for s in 0..40 {
+            if got[s] == Scheme::Fedavg {
+                assert!(fleet.profile(selected[s]).uplink_mult >= slowest_light);
+            }
+        }
+        // a zero budget assigns nothing; a free heavy codec assigns all
+        let strict = CodecPolicy::MakespanUnderDistortion {
+            budget: 0.0,
+            heavy: Scheme::Ternary,
+        };
+        let none = assign_codecs(&strict, Scheme::Fedavg, &fleet, &selected, 802, &link);
+        assert!(none.iter().all(|s| *s == Scheme::Fedavg));
+    }
+
+    #[test]
+    fn bank_lookup_gates_unregistered_tags() {
+        use crate::compression::Identity;
+        let bank = CodecBank::single(Arc::new(Identity));
+        assert_eq!(bank.base_tag(), 0);
+        assert!(bank.get(0).is_ok());
+        assert!(bank.get(2).is_err());
+        assert!(bank.get(9).is_err());
+    }
+
+    #[test]
+    fn sgd_installs_the_aggregate_unchanged() {
+        let mut state = ServerOptState::empty();
+        let global = vec![1.0f32, 2.0];
+        let out = ServerOptKind::Sgd
+            .apply(&mut state, &global, vec![3.0, 4.0])
+            .unwrap();
+        assert_eq!(out, vec![3.0, 4.0]);
+        assert!(state.is_empty());
+    }
+
+    #[test]
+    fn fedavgm_accumulates_momentum() {
+        let kind = ServerOptKind::FedAvgM { beta: 0.5 };
+        let mut state = ServerOptState::empty();
+        let global = vec![0.0f32; 2];
+        // round 1: delta = 1 => m = 1, install 1
+        let g1 = kind.apply(&mut state, &global, vec![1.0, 1.0]).unwrap();
+        assert_eq!(g1, vec![1.0, 1.0]);
+        assert_eq!(state.m, vec![1.0, 1.0]);
+        assert!(state.v.is_empty());
+        // round 2 from g1: delta = 1 again => m = 1.5, install g1 + 1.5
+        let g2 = kind.apply(&mut state, &g1, vec![2.0, 2.0]).unwrap();
+        assert_eq!(g2, vec![2.5, 2.5]);
+        assert_eq!(state.m, vec![1.5, 1.5]);
+    }
+
+    #[test]
+    fn fedadam_fills_both_moments_and_is_resumable() {
+        let kind = ServerOptKind::DEFAULT_ADAM;
+        let mut state = ServerOptState::empty();
+        let global = vec![0.0f32; 3];
+        let g1 = kind
+            .apply(&mut state, &global, vec![0.1, -0.2, 0.3])
+            .unwrap();
+        assert_eq!(state.m.len(), 3);
+        assert_eq!(state.v.len(), 3);
+        assert!(g1.iter().all(|v| v.is_finite()));
+        // resuming from the stored f32 state reproduces the next step
+        let mut resumed = state.clone();
+        let a = kind.apply(&mut state, &g1, vec![0.2, 0.0, 0.1]).unwrap();
+        let b = kind.apply(&mut resumed, &g1, vec![0.2, 0.0, 0.1]).unwrap();
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(state, resumed);
+    }
+
+    #[test]
+    fn state_dimension_mismatch_is_rejected() {
+        let kind = ServerOptKind::FedAvgM { beta: 0.9 };
+        let mut state = ServerOptState {
+            m: vec![0.0; 2],
+            v: Vec::new(),
+        };
+        assert!(kind.apply(&mut state, &[0.0; 3], vec![0.0; 3]).is_err());
+        assert!(ServerOptKind::Sgd
+            .apply(&mut ServerOptState::empty(), &[0.0; 3], vec![0.0; 2])
+            .is_err());
+    }
+}

@@ -56,8 +56,9 @@ pub use self::edge::EdgeAggregator;
 pub use self::session::{CarryOver, CarryPolicy, FlSession};
 use crate::compression::Compressor;
 use crate::config::ExperimentConfig;
+use crate::control::{self, ServerOptState};
 use crate::coordinator::clock::{client_timing, ClientTiming};
-use crate::coordinator::session::{build_compressor, ClientUpdate};
+use crate::coordinator::session::{build_codec_bank, ClientUpdate};
 use crate::data::{synthetic, FlData};
 use crate::error::Result;
 use crate::fl::{select_clients, LocalTrainer, Server};
@@ -107,24 +108,24 @@ impl Simulation {
         let fleet = DeviceFleet::sample(cfg.n_clients, &cfg.scenario.devices, cfg.seed);
         // The HCFL pre-model must start from this run's actual init so
         // the compressor is trained on the trajectory it will compress.
-        let compressor = build_compressor(engine, &cfg, &data, &server.global.flat)?;
-        let session = FlSession::new(
+        // The bank holds every codec the policy can assign (base first).
+        let bank = build_codec_bank(engine, &cfg, &data, &server.global.flat)?;
+        let mut session = FlSession::new(
             server,
-            Arc::clone(&compressor),
+            Arc::clone(bank.base()),
             cfg.scenario.aggregator.clone(),
             cfg.scenario.carry.clone(),
             cfg.encode_deltas,
             cfg.compress_downlink,
         );
+        session.set_codec_bank(bank.clone());
+        session.set_server_opt(cfg.server_opt);
         let runner: Arc<dyn ClientRunner> = if cfg.fake_train {
-            Arc::new(FakeTrainRunner::new(
-                Arc::clone(&compressor),
-                Arc::clone(&data),
-            ))
+            Arc::new(FakeTrainRunner::with_bank(bank, Arc::clone(&data)))
         } else {
-            Arc::new(TrainEncodeRunner::new(
+            Arc::new(TrainEncodeRunner::with_bank(
                 trainer.clone(),
-                Arc::clone(&compressor),
+                bank,
                 Arc::clone(&data),
             ))
         };
@@ -214,11 +215,20 @@ impl Simulation {
         global: Vec<f32>,
         carry: CarryOver,
         rng_state: [u64; 4],
+        opt_state: ServerOptState,
     ) -> Result<()> {
         self.session.restore_global(global)?;
+        self.session.restore_opt_state(opt_state);
         self.carry = carry;
         self.rng = Rng::from_state(rng_state);
         Ok(())
+    }
+
+    /// The server optimizer's persistent moment state — with the global
+    /// model, carry-over and RNG cursor, the cross-round state a
+    /// campaign snapshot must capture (DESIGN.md §9.2 v2).
+    pub fn opt_state(&self) -> &ServerOptState {
+        self.session.opt_state()
     }
 
     /// Run all configured rounds.
@@ -262,6 +272,20 @@ impl Simulation {
         let selected = select_clients(self.cfg.n_clients, self.cfg.participation, &mut self.rng);
         let m = selected.len();
 
+        // ---- control plane: one codec per selected slot ----------------
+        // A pure function of (policy, base scheme, fleet, selection, d,
+        // link) — decided before the dropout stream runs, so assignments
+        // never depend on the dropout realization and every driver
+        // derives the identical vector.
+        let codecs = control::assign_codecs(
+            &self.cfg.codec_policy,
+            self.cfg.scheme,
+            &self.fleet,
+            &selected,
+            self.session.d(),
+            &self.cfg.link,
+        );
+
         // ---- the session opens the round: broadcast + carry ingest -----
         // Scenario knobs stay live-read from `cfg` (drivers calibrate
         // the policy — and may flip aggregation/carry — after a probe
@@ -295,6 +319,7 @@ impl Simulation {
                 slot,
                 client: k,
                 seed: round_seed ^ ((k as u64) << 1),
+                codec: codecs[slot].codec_tag(),
             })
             .collect();
         let round_inputs = RoundInputs {
@@ -351,6 +376,7 @@ impl Simulation {
                     // packed payload is modelled on the air.
                     extra_up_bytes: 0,
                     train_s: msg.train_s,
+                    codec: codecs[slot].codec_tag(),
                 }),
                 None => round.mark_dropped(timing),
             }

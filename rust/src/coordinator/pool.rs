@@ -27,6 +27,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::compression::{Compressor, WireScratch, WireUpdate};
+use crate::control::CodecBank;
 use crate::data::FlData;
 use crate::error::{HcflError, Result};
 use crate::fl::{combine_leaves_recycled, LocalTrainer, WeightedLeaf};
@@ -215,6 +216,11 @@ pub struct WorkSpec {
     pub client: usize,
     /// The client's private RNG seed for this round.
     pub seed: u64,
+    /// The codec tag this client was assigned for the round
+    /// ([`crate::compression::Scheme::codec_tag`]) — the control plane's
+    /// per-client decision, part of the work identity so results stay
+    /// scheduling-independent.
+    pub codec: u8,
 }
 
 /// Round-constant inputs shared by every work item of one round.
@@ -292,7 +298,7 @@ impl ClientPool {
 /// formula (see `compression/wire.rs`).
 pub struct TrainEncodeRunner {
     trainer: LocalTrainer,
-    compressor: Arc<dyn Compressor>,
+    bank: CodecBank,
     data: Arc<FlData>,
 }
 
@@ -302,9 +308,19 @@ impl TrainEncodeRunner {
         compressor: Arc<dyn Compressor>,
         data: Arc<FlData>,
     ) -> TrainEncodeRunner {
+        Self::with_bank(trainer, CodecBank::single(compressor), data)
+    }
+
+    /// A runner over a multi-codec bank (adaptive policies): each work
+    /// item encodes with the compressor its `codec` tag selects.
+    pub fn with_bank(
+        trainer: LocalTrainer,
+        bank: CodecBank,
+        data: Arc<FlData>,
+    ) -> TrainEncodeRunner {
         TrainEncodeRunner {
             trainer,
-            compressor,
+            bank,
             data,
         }
     }
@@ -317,6 +333,7 @@ impl ClientRunner for TrainEncodeRunner {
         round: &RoundInputs,
         ctx: &mut WorkerCtx,
     ) -> Result<ClientMsg> {
+        let compressor = self.bank.get(spec.codec)?;
         let shard = self.data.shard(spec.client);
         let mut crng = Rng::new(spec.seed);
         let started = Instant::now();
@@ -329,10 +346,9 @@ impl ClientRunner for TrainEncodeRunner {
             &mut crng,
             ctx.engine_worker,
         )?;
-        let payload = self
-            .compressor
-            .encode_payload(&out.params, &round.global, round.encode_deltas);
-        let update = self.compressor.compress(&payload, ctx.engine_worker)?;
+        let payload =
+            compressor.encode_payload(&out.params, &round.global, round.encode_deltas);
+        let update = compressor.compress(&payload, ctx.engine_worker)?;
         Ok(ClientMsg {
             slot: spec.slot,
             update: ctx.scratch.pack_update(&update.payload)?,
@@ -351,13 +367,19 @@ impl ClientRunner for TrainEncodeRunner {
 /// rendered — only the client's row count is read (FedAvg `n_k` for the
 /// aggregation layer), so a lazy K=10k fleet costs nothing here.
 pub struct FakeTrainRunner {
-    compressor: Arc<dyn Compressor>,
+    bank: CodecBank,
     data: Arc<FlData>,
 }
 
 impl FakeTrainRunner {
     pub fn new(compressor: Arc<dyn Compressor>, data: Arc<FlData>) -> FakeTrainRunner {
-        FakeTrainRunner { compressor, data }
+        Self::with_bank(CodecBank::single(compressor), data)
+    }
+
+    /// A runner over a multi-codec bank (adaptive policies): each work
+    /// item encodes with the compressor its `codec` tag selects.
+    pub fn with_bank(bank: CodecBank, data: Arc<FlData>) -> FakeTrainRunner {
+        FakeTrainRunner { bank, data }
     }
 }
 
@@ -368,6 +390,7 @@ impl ClientRunner for FakeTrainRunner {
         round: &RoundInputs,
         ctx: &mut WorkerCtx,
     ) -> Result<ClientMsg> {
+        let compressor = self.bank.get(spec.codec)?;
         let mut crng = Rng::new(spec.seed);
         let started = Instant::now();
         let scale = round.lr * (round.epochs.max(1) as f32).sqrt() * 0.1;
@@ -376,10 +399,9 @@ impl ClientRunner for FakeTrainRunner {
             .iter()
             .map(|g| g + scale * crng.normal())
             .collect();
-        let payload = self
-            .compressor
-            .encode_payload(&params, &round.global, round.encode_deltas);
-        let update = self.compressor.compress(&payload, ctx.engine_worker)?;
+        let payload =
+            compressor.encode_payload(&params, &round.global, round.encode_deltas);
+        let update = compressor.compress(&payload, ctx.engine_worker)?;
         Ok(ClientMsg {
             slot: spec.slot,
             update: ctx.scratch.pack_update(&update.payload)?,

@@ -54,10 +54,11 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::compression::{
-    Compressor, HcflCompressor, Identity, Scheme, TernaryCompressor, TopKCompressor,
-    WireScratch, WireUpdate,
+    Compressor, HcflCompressor, Identity, RefTernaryCompressor, Scheme, TernaryCompressor,
+    TopKCompressor, WireScratch, WireUpdate,
 };
 use crate::config::ExperimentConfig;
+use crate::control::{CodecBank, ServerOptKind, ServerOptState};
 use crate::coordinator::clock::{resolve, ClientTiming, RoundOutcome, RoundPolicy};
 use crate::coordinator::edge::{DecodeJob, EdgeAggregator};
 use crate::coordinator::pool::{reduce_tree, WorkerCtx, WorkerPool};
@@ -123,6 +124,10 @@ pub struct ClientUpdate {
     pub extra_up_bytes: usize,
     /// Measured client train+encode wall time, seconds.
     pub train_s: f64,
+    /// The codec tag this upload was encoded with — the control plane's
+    /// per-client assignment ([`crate::compression::Scheme::codec_tag`]).
+    /// The server decodes it with the matching bank entry.
+    pub codec: u8,
 }
 
 /// A decoded-but-late update in flight between rounds.
@@ -175,11 +180,13 @@ impl CarryOver {
 /// round; each round is a [`RoundSession`] borrowed from it.
 pub struct FlSession {
     server: Server,
-    compressor: Arc<dyn Compressor>,
+    bank: CodecBank,
     aggregator: AggregatorKind,
     carry: CarryPolicy,
     encode_deltas: bool,
     compress_downlink: bool,
+    opt: ServerOptKind,
+    opt_state: ServerOptState,
 }
 
 impl FlSession {
@@ -193,11 +200,13 @@ impl FlSession {
     ) -> FlSession {
         FlSession {
             server,
-            compressor,
+            bank: CodecBank::single(compressor),
             aggregator,
             carry,
             encode_deltas,
             compress_downlink,
+            opt: ServerOptKind::Sgd,
+            opt_state: ServerOptState::empty(),
         }
     }
 
@@ -211,8 +220,33 @@ impl FlSession {
         self.server.model.d
     }
 
+    /// The base scheme's compressor (downlink / handshake codec).
     pub fn compressor(&self) -> &Arc<dyn Compressor> {
-        &self.compressor
+        self.bank.base()
+    }
+
+    /// Replace the codec table with a multi-codec bank (adaptive
+    /// policies): each arrival decodes with the bank entry its codec tag
+    /// selects.  The bank's base stays the downlink codec.
+    pub fn set_codec_bank(&mut self, bank: CodecBank) {
+        self.bank = bank;
+    }
+
+    /// Install the server-side optimizer applied between the aggregated
+    /// round result and the global-model install (default `Sgd`).
+    pub fn set_server_opt(&mut self, opt: ServerOptKind) {
+        self.opt = opt;
+    }
+
+    /// The optimizer's persistent moment state (snapshotted by the
+    /// campaign daemon, DESIGN.md §9.2 v2).
+    pub fn opt_state(&self) -> &ServerOptState {
+        &self.opt_state
+    }
+
+    /// Overwrite the optimizer state from a campaign snapshot.
+    pub fn restore_opt_state(&mut self, state: ServerOptState) {
+        self.opt_state = state;
     }
 
     pub fn carry_policy(&self) -> &CarryPolicy {
@@ -287,7 +321,7 @@ impl FlSession {
     pub fn begin_round(&mut self, t: usize, carry: CarryOver) -> Result<RoundSession<'_, Open>> {
         let wall0 = Instant::now();
         let down_bytes = if self.compress_downlink {
-            let upd = self.compressor.compress(&self.server.global.flat, 0)?;
+            let upd = self.bank.base().compress(&self.server.global.flat, 0)?;
             WireScratch::new().pack(&upd.payload)?
         } else {
             4 * self.server.global.flat.len()
@@ -331,6 +365,7 @@ struct ArrivalData {
     n_samples: usize,
     exact: Vec<f32>,
     extra_up_bytes: usize,
+    codec: u8,
 }
 
 /// State of a round that is accepting arrivals.
@@ -432,6 +467,7 @@ impl<'s> RoundSession<'s, Open> {
             n_samples: u.n_samples,
             exact: u.exact,
             extra_up_bytes: u.extra_up_bytes,
+            codec: u.codec,
         }));
     }
 
@@ -627,7 +663,9 @@ impl RoundSession<'_, Resolved> {
                 n_samples: arr.n_samples,
                 arrival_s: timings[i].arrival_s(),
             };
-            let compressor = Arc::clone(&fl.compressor);
+            // Per-arrival codec: look the bank entry up on the driver
+            // thread so a forged tag fails before any job is scattered.
+            let compressor = Arc::clone(fl.bank.get(arr.codec)?);
             let global = Arc::clone(&global);
             let kind = kind.clone();
             jobs.push(Box::new(
@@ -681,7 +719,7 @@ impl RoundSession<'_, Resolved> {
                     arrival_s: timings[i].arrival_s(),
                 };
                 let rebased_arrival = timings[i].arrival_s() - makespan_s;
-                let compressor = Arc::clone(&fl.compressor);
+                let compressor = Arc::clone(fl.bank.get(arr.codec)?);
                 let global = Arc::clone(&global);
                 let kind = kind.clone();
                 late_jobs.push(move |ctx: &mut WorkerCtx| -> Result<(CarriedUpdate, f64)> {
@@ -746,7 +784,11 @@ impl RoundSession<'_, Resolved> {
                 }
                 let t_fold = Instant::now();
                 if let Some(root) = reduce_tree(pool, leaves, TREE_FAN_IN)? {
-                    fl.server.install(finish_tree(root)?)?;
+                    let aggregated = finish_tree(root)?;
+                    let next =
+                        fl.opt
+                            .apply(&mut fl.opt_state, &fl.server.global.flat, aggregated)?;
+                    fl.server.install(next)?;
                 }
                 server_time_s += t_fold.elapsed().as_secs_f64();
             }
@@ -760,7 +802,11 @@ impl RoundSession<'_, Resolved> {
                     server_time_s += decode_s;
                 }
                 if let Some(root) = fold.root {
-                    fl.server.install(finish_tree(root)?)?;
+                    let aggregated = finish_tree(root)?;
+                    let next =
+                        fl.opt
+                            .apply(&mut fl.opt_state, &fl.server.global.flat, aggregated)?;
+                    fl.server.install(next)?;
                 }
                 server_time_s += fold.fold_s;
             }
@@ -822,7 +868,7 @@ fn mse(a: &[f32], b: &[f32]) -> f64 {
         / a.len() as f64
 }
 
-/// Construct the configured compression scheme (training HCFL
+/// Construct the configured base compression scheme (training HCFL
 /// autoencoders on the server dataset when needed).
 pub fn build_compressor(
     engine: &Engine,
@@ -830,8 +876,45 @@ pub fn build_compressor(
     data: &FlData,
     init_params: &[f32],
 ) -> Result<Arc<dyn Compressor>> {
-    match cfg.scheme {
+    build_compressor_for(engine, cfg.scheme, cfg, data, init_params)
+}
+
+/// Every codec the configured policy can assign, as a tag-indexed bank
+/// (base scheme first; adaptive policies add their heavy codec).
+pub fn build_codec_bank(
+    engine: &Engine,
+    cfg: &ExperimentConfig,
+    data: &FlData,
+    init_params: &[f32],
+) -> Result<CodecBank> {
+    let mut bank = CodecBank::single(build_compressor_for(
+        engine,
+        cfg.scheme,
+        cfg,
+        data,
+        init_params,
+    )?);
+    for scheme in cfg.codec_policy.menu(cfg.scheme) {
+        if scheme.codec_tag() != cfg.scheme.codec_tag() {
+            bank.insert(build_compressor_for(engine, scheme, cfg, data, init_params)?);
+        }
+    }
+    Ok(bank)
+}
+
+/// Construct one scheme's compressor.  `fake_train` runs swap the
+/// engine-backed ternary codec for the bit-identical pure-Rust
+/// reference, so no PJRT executable is touched on the engine-free path.
+fn build_compressor_for(
+    engine: &Engine,
+    scheme: Scheme,
+    cfg: &ExperimentConfig,
+    data: &FlData,
+    init_params: &[f32],
+) -> Result<Arc<dyn Compressor>> {
+    match scheme {
         Scheme::Fedavg => Ok(Arc::new(Identity)),
+        Scheme::Ternary if cfg.fake_train => Ok(Arc::new(RefTernaryCompressor::new())),
         Scheme::Ternary => Ok(Arc::new(TernaryCompressor::new(engine.clone(), 1024)?)),
         Scheme::TopK { keep } => Ok(Arc::new(TopKCompressor::new(keep)?)),
         Scheme::Hcfl { ratio } => {

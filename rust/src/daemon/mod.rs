@@ -38,6 +38,7 @@ use std::time::Duration;
 use self::snapshot::CampaignSnapshot;
 use crate::compression::Scheme;
 use crate::config::ExperimentConfig;
+use crate::control::{CodecPolicy, ServerOptKind, ServerOptState};
 use crate::coordinator::{CarryOver, Simulation};
 use crate::error::{HcflError, Result};
 use crate::metrics::{RoundRecord, RunReport};
@@ -69,7 +70,7 @@ pub enum JobDriver {
 pub struct JobSpec {
     /// Unique job name (state file stem).
     pub name: String,
-    /// Compression scheme (engine-free: FedAvg or Top-K).
+    /// Compression scheme (engine-free: FedAvg, Top-K or ternary).
     pub scheme: Scheme,
     /// Fleet size (K).
     pub n_clients: usize,
@@ -83,6 +84,12 @@ pub struct JobSpec {
     /// flat fold, so a snapshot taken under any E resumes under any
     /// other (DESIGN.md §10).
     pub edge_shards: usize,
+    /// Per-client codec policy (`Static` keeps the single-scheme
+    /// behavior; see [`CodecPolicy`]).
+    pub policy: CodecPolicy,
+    /// Server-side optimizer applied at the global-model install
+    /// (DESIGN.md §11); part of the snapshot fingerprint.
+    pub server_opt: ServerOptKind,
 }
 
 impl JobSpec {
@@ -93,6 +100,8 @@ impl JobSpec {
     pub fn config(&self) -> ExperimentConfig {
         let mut cfg = demo_config(self.scheme, self.n_clients, self.rounds, self.seed);
         cfg.edge_shards = self.edge_shards;
+        cfg.codec_policy = self.policy;
+        cfg.server_opt = self.server_opt;
         cfg
     }
 }
@@ -128,11 +137,14 @@ pub enum DaemonEvent {
 }
 
 /// Parse a queue file: one job per line,
-/// `name scheme clients rounds seed driver [addr conns] [edge=<E>]`,
-/// where `scheme` is `fedavg` or `topk@<keep>`, `driver` is `inproc` or
-/// `tcp <addr> <conns>`, and the optional trailing `edge=<E>` enables
-/// `E`-way edge-sharded aggregation.  `#` starts a comment; blank lines
-/// are skipped.
+/// `name scheme clients rounds seed driver [addr conns] [edge=<E>]
+/// [policy=<p>] [opt=<o>]`, where `scheme` is `fedavg`, `topk@<keep>`
+/// or `ternary`, `driver` is `inproc` or `tcp <addr> <conns>`, and the
+/// optional trailing tokens (any order) enable `E`-way edge-sharded
+/// aggregation, a per-client codec policy
+/// ([`CodecPolicy::parse`], e.g. `policy=uplink@0.5:ternary`) and a
+/// server optimizer ([`ServerOptKind::parse`], e.g. `opt=fedadam`).
+/// `#` starts a comment; blank lines are skipped.
 pub fn parse_queue(text: &str) -> Result<Vec<JobSpec>> {
     let mut jobs: Vec<JobSpec> = Vec::new();
     for (i, raw) in text.lines().enumerate() {
@@ -142,18 +154,32 @@ pub fn parse_queue(text: &str) -> Result<Vec<JobSpec>> {
         }
         let n = i + 1;
         let mut f: Vec<&str> = line.split_whitespace().collect();
-        // The optional `edge=<E>` token rides at the end of any driver
-        // form; strip it before the positional match below.
+        // The optional `key=value` tokens ride at the end of any driver
+        // form, in any order; strip them before the positional match
+        // below.
         let mut edge_shards = 0usize;
-        if let Some(e) = f.last().and_then(|tok| tok.strip_prefix("edge=")) {
-            edge_shards = e.parse().map_err(|_| {
-                HcflError::Config(format!("queue line {n}: bad edge shard count `{e}`"))
-            })?;
+        let mut policy = CodecPolicy::Static;
+        let mut server_opt = ServerOptKind::Sgd;
+        while let Some(tok) = f.last().copied() {
+            if let Some(e) = tok.strip_prefix("edge=") {
+                edge_shards = e.parse().map_err(|_| {
+                    HcflError::Config(format!("queue line {n}: bad edge shard count `{e}`"))
+                })?;
+            } else if let Some(p) = tok.strip_prefix("policy=") {
+                policy = CodecPolicy::parse(p)
+                    .map_err(|e| HcflError::Config(format!("queue line {n}: {e}")))?;
+            } else if let Some(o) = tok.strip_prefix("opt=") {
+                server_opt = ServerOptKind::parse(o)
+                    .map_err(|e| HcflError::Config(format!("queue line {n}: {e}")))?;
+            } else {
+                break;
+            }
             f.pop();
         }
         if f.len() < 6 {
             return Err(HcflError::Config(format!(
-                "queue line {n}: expected `name scheme clients rounds seed driver [addr conns] [edge=<E>]`, got `{line}`"
+                "queue line {n}: expected `name scheme clients rounds seed driver [addr conns] \
+                 [edge=<E>] [policy=<p>] [opt=<o>]`, got `{line}`"
             )));
         }
         let scheme = parse_job_scheme(f[1])
@@ -195,6 +221,8 @@ pub fn parse_queue(text: &str) -> Result<Vec<JobSpec>> {
             seed,
             driver,
             edge_shards,
+            policy,
+            server_opt,
         });
     }
     Ok(jobs)
@@ -213,8 +241,11 @@ fn parse_job_scheme(tok: &str) -> std::result::Result<Scheme, String> {
         }
         return Ok(Scheme::TopK { keep });
     }
+    if tok == "ternary" {
+        return Ok(Scheme::Ternary);
+    }
     Err(format!(
-        "scheme `{tok}` must be `fedavg` or `topk@<keep>` (the daemon is engine-free)"
+        "scheme `{tok}` must be `fedavg`, `topk@<keep>` or `ternary` (the daemon is engine-free)"
     ))
 }
 
@@ -379,6 +410,7 @@ fn freeze(
     rng: [u64; 4],
     global: &[f32],
     carry: &CarryOver,
+    opt: &ServerOptState,
 ) -> CampaignSnapshot {
     CampaignSnapshot {
         seed: cfg.seed,
@@ -389,6 +421,9 @@ fn freeze(
         rng,
         global: global.to_vec(),
         carry: carry.clone(),
+        opt_tag: cfg.server_opt.tag(),
+        opt_m: opt.m.clone(),
+        opt_v: opt.v.clone(),
     }
 }
 
@@ -416,13 +451,28 @@ fn job_worker(
                     )));
                 }
                 start = snap.rounds_done as usize + 1;
-                sim.restore(snap.global, snap.carry, snap.rng)?;
+                sim.restore(
+                    snap.global,
+                    snap.carry,
+                    snap.rng,
+                    ServerOptState {
+                        m: snap.opt_m,
+                        v: snap.opt_v,
+                    },
+                )?;
             }
             let mut records = Vec::with_capacity(cfg.rounds + 1 - start);
             for t in start..=cfg.rounds {
                 let rec = sim.run_round(t)?;
-                freeze(&cfg, t, sim.rng_state(), sim.global(), sim.carry())
-                    .write_atomic(snap_path)?;
+                freeze(
+                    &cfg,
+                    t,
+                    sim.rng_state(),
+                    sim.global(),
+                    sim.carry(),
+                    sim.opt_state(),
+                )
+                .write_atomic(snap_path)?;
                 let _ = tx.send(DaemonEvent::RoundDone {
                     job: job.name.clone(),
                     record: rec.clone(),
@@ -453,15 +503,30 @@ fn job_worker(
                     )));
                 }
                 start = snap.rounds_done as usize + 1;
-                server.restore(snap.global, snap.carry, snap.rng)?;
+                server.restore(
+                    snap.global,
+                    snap.carry,
+                    snap.rng,
+                    ServerOptState {
+                        m: snap.opt_m,
+                        v: snap.opt_v,
+                    },
+                )?;
             }
             let listener = TcpListener::bind(addr.as_str())?;
             let mut link = server.accept_swarm(&listener, *conns)?;
             let mut records = Vec::with_capacity(cfg.rounds + 1 - start);
             for t in start..=cfg.rounds {
                 let rec = server.serve_round(&mut link, t)?;
-                freeze(&cfg, t, server.rng_state(), server.global(), server.carry())
-                    .write_atomic(snap_path)?;
+                freeze(
+                    &cfg,
+                    t,
+                    server.rng_state(),
+                    server.global(),
+                    server.carry(),
+                    server.opt_state(),
+                )
+                .write_atomic(snap_path)?;
                 let _ = tx.send(DaemonEvent::RoundDone {
                     job: job.name.clone(),
                     record: rec.clone(),
@@ -494,9 +559,11 @@ alpha fedavg 32 4 7 inproc
 beta topk@0.1 64 3 11 tcp 127.0.0.1:7700 4  # socket job
 gamma topk@0.2 128 2 5 inproc edge=4
 delta fedavg 64 2 9 tcp 127.0.0.1:7701 2 edge=16
+eps ternary 16 2 3 inproc policy=uplink@0.5 opt=fedadam
+zeta fedavg 32 2 5 tcp 127.0.0.1:7702 2 opt=fedavgm edge=8 policy=makespan@0.4
 ";
         let jobs = parse_queue(text).unwrap();
-        assert_eq!(jobs.len(), 4);
+        assert_eq!(jobs.len(), 6);
         assert_eq!(jobs[0].name, "alpha");
         assert_eq!(jobs[0].scheme, Scheme::Fedavg);
         assert_eq!(jobs[0].driver, JobDriver::InProcess);
@@ -523,6 +590,33 @@ delta fedavg 64 2 9 tcp 127.0.0.1:7701 2 edge=16
                 conns: 2
             }
         );
+        assert_eq!(jobs[3].policy, CodecPolicy::Static);
+        assert_eq!(jobs[3].server_opt, ServerOptKind::Sgd);
+        assert_eq!(jobs[4].scheme, Scheme::Ternary);
+        assert_eq!(
+            jobs[4].policy,
+            CodecPolicy::ThresholdByUplink {
+                cutoff: 0.5,
+                slow: Scheme::Ternary
+            }
+        );
+        assert_eq!(jobs[4].server_opt, ServerOptKind::DEFAULT_ADAM);
+        assert_eq!(jobs[4].config().codec_policy, jobs[4].policy);
+        // trailing key=value tokens parse in any order
+        assert_eq!(jobs[5].edge_shards, 8);
+        assert_eq!(
+            jobs[5].policy,
+            CodecPolicy::MakespanUnderDistortion {
+                budget: 0.4,
+                heavy: Scheme::Ternary
+            }
+        );
+        assert_eq!(
+            jobs[5].server_opt,
+            ServerOptKind::FedAvgM {
+                beta: ServerOptKind::DEFAULT_BETA
+            }
+        );
     }
 
     #[test]
@@ -536,6 +630,9 @@ delta fedavg 64 2 9 tcp 127.0.0.1:7701 2 edge=16
             "x fedavg 32 4 7 inproc extra",        // trailing field
             "x fedavg 32 4 7 inproc edge=zap",     // bad edge count
             "x fedavg 32 4 7 edge=4",              // edge cannot replace driver
+            "x fedavg 32 4 7 inproc policy=warp",  // unknown policy
+            "x fedavg 32 4 7 inproc opt=warp",     // unknown optimizer
+            "x fedavg 32 4 7 policy=static opt=sgd", // tokens cannot replace driver
             "a fedavg 32 4 7 inproc\na fedavg 8 2 9 inproc", // dup name
         ] {
             assert!(parse_queue(bad).is_err(), "accepted: {bad}");

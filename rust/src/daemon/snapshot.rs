@@ -8,7 +8,9 @@
 //! * the global model's f32 bit patterns,
 //! * the in-flight [`CarryOver`] entries,
 //! * the index of the last finalized round,
-//! * the selection-RNG cursor ([`crate::util::rng::Rng::state`]).
+//! * the selection-RNG cursor ([`crate::util::rng::Rng::state`]),
+//! * the server optimizer's moment vectors
+//!   ([`crate::control::ServerOptState`], version 2).
 //!
 //! Everything else a round touches (dropout streams, work seeds, the
 //! timing model) is a pure function of `(cfg.seed, t)` and needs no
@@ -57,16 +59,28 @@ pub struct CampaignSnapshot {
     pub global: Vec<f32>,
     /// Late updates in flight toward round `rounds_done + 1`.
     pub carry: CarryOver,
+    /// The server optimizer's tag
+    /// ([`crate::control::ServerOptKind::tag`]); part of the
+    /// fingerprint.  Version-1 snapshots decode as 0 (`Sgd`).
+    pub opt_tag: u8,
+    /// The optimizer's first-moment vector after `rounds_done` rounds
+    /// (empty for `Sgd`, or before the first optimizer step).
+    pub opt_m: Vec<f32>,
+    /// The optimizer's second-moment vector (FedAdam only).
+    pub opt_v: Vec<f32>,
 }
 
 /// Leading magic: "HSNP" (Hcfl SNaPshot).
 pub const SNAPSHOT_MAGIC: [u8; 4] = *b"HSNP";
-/// Format version; bumped on any layout change.
-pub const SNAPSHOT_VERSION: u32 = 1;
+/// Format version; bumped on any layout change.  Version 2 appends the
+/// server-optimizer block (tag + moment vectors) after the carry
+/// entries; version-1 snapshots still decode, as plain-SGD state.
+pub const SNAPSHOT_VERSION: u32 = 2;
 
 /// Fixed-size prefix: magic, version, fingerprint, round index, RNG
 /// cursor, global length — the minimum a well-formed snapshot can be
-/// (plus the carry count and trailing CRC).
+/// (plus the carry count and trailing CRC).  Kept at the version-1
+/// floor so old snapshots pass the length gate.
 const FIXED_LEN: usize = 4 + 4 + 8 + 1 + 8 + 8 + 8 + 32 + 8 + 8 + 4;
 
 fn snap_err(what: &str) -> HcflError {
@@ -126,7 +140,12 @@ impl CampaignSnapshot {
     pub fn encode(&self) -> Vec<u8> {
         let carry_f32s: usize = self.carry.updates.iter().map(|u| u.decoded.len()).sum();
         let mut out = Vec::with_capacity(
-            FIXED_LEN + 4 * self.global.len() + 48 * self.carry.updates.len() + 4 * carry_f32s,
+            FIXED_LEN
+                + 4 * self.global.len()
+                + 48 * self.carry.updates.len()
+                + 4 * carry_f32s
+                + 17
+                + 4 * (self.opt_m.len() + self.opt_v.len()),
         );
         out.extend_from_slice(&SNAPSHOT_MAGIC);
         out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
@@ -154,6 +173,15 @@ impl CampaignSnapshot {
                 out.extend_from_slice(&v.to_bits().to_le_bytes());
             }
         }
+        out.push(self.opt_tag);
+        out.extend_from_slice(&(self.opt_m.len() as u64).to_le_bytes());
+        for v in &self.opt_m {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        out.extend_from_slice(&(self.opt_v.len() as u64).to_le_bytes());
+        for v in &self.opt_v {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
         let crc = crc32(&out);
         out.extend_from_slice(&crc.to_le_bytes());
         out
@@ -170,9 +198,9 @@ impl CampaignSnapshot {
             return Err(snap_err("bad snapshot magic"));
         }
         let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
-        if version != SNAPSHOT_VERSION {
+        if version != 1 && version != SNAPSHOT_VERSION {
             return Err(HcflError::Snapshot(format!(
-                "unsupported snapshot version {version} (want {SNAPSHOT_VERSION})"
+                "unsupported snapshot version {version} (want 1..={SNAPSHOT_VERSION})"
             )));
         }
         // Verify the checksum before trusting any embedded count, so a
@@ -211,6 +239,18 @@ impl CampaignSnapshot {
                 decoded,
             });
         }
+        // Version-1 snapshots predate the server optimizer: they resume
+        // as plain SGD with no accumulated moments.
+        let (opt_tag, opt_m, opt_v) = if version >= 2 {
+            let tag = r.u8()?;
+            let n_m = r.u64()? as usize;
+            let m = r.f32s(n_m)?;
+            let n_v = r.u64()? as usize;
+            let v = r.f32s(n_v)?;
+            (tag, m, v)
+        } else {
+            (0, Vec::new(), Vec::new())
+        };
         r.finish()?;
         Ok(CampaignSnapshot {
             seed,
@@ -221,6 +261,9 @@ impl CampaignSnapshot {
             rng,
             global,
             carry: CarryOver { updates },
+            opt_tag,
+            opt_m,
+            opt_v,
         })
     }
 
@@ -233,18 +276,21 @@ impl CampaignSnapshot {
             || self.codec != cfg.scheme.codec_tag()
             || self.n_clients != cfg.n_clients as u64
             || self.d != d as u64
+            || self.opt_tag != cfg.server_opt.tag()
         {
             return Err(HcflError::Snapshot(format!(
-                "snapshot fingerprint mismatch: snapshot (seed {}, codec {}, K {}, d {}) \
-                 vs campaign (seed {}, codec {}, K {}, d {})",
+                "snapshot fingerprint mismatch: snapshot (seed {}, codec {}, K {}, d {}, opt {}) \
+                 vs campaign (seed {}, codec {}, K {}, d {}, opt {})",
                 self.seed,
                 self.codec,
                 self.n_clients,
                 self.d,
+                self.opt_tag,
                 cfg.seed,
                 cfg.scheme.codec_tag(),
                 cfg.n_clients,
-                d
+                d,
+                cfg.server_opt.tag()
             )));
         }
         if self.global.len() as u64 != self.d {
@@ -302,6 +348,9 @@ mod tests {
                     decoded: vec![1.0, 2.0, 3.0, 4.0],
                 }],
             },
+            opt_tag: 2,
+            opt_m: vec![0.125, -0.5, 0.0, 2.0],
+            opt_v: vec![0.25, 0.0625, 0.0, 4.0],
         }
     }
 
@@ -321,6 +370,29 @@ mod tests {
         assert_eq!(back.carry.updates.len(), 1);
         assert_eq!(back.carry.updates[0].decoded, snap.carry.updates[0].decoded);
         assert_eq!(back.carry.updates[0].base_weight, 0.75);
+        assert_eq!(back.opt_tag, snap.opt_tag);
+        assert_eq!(back.opt_m, snap.opt_m);
+        assert_eq!(back.opt_v, snap.opt_v);
+    }
+
+    #[test]
+    fn version_1_snapshots_still_load_as_plain_sgd() {
+        let mut snap = sample();
+        snap.opt_tag = 0;
+        snap.opt_m.clear();
+        snap.opt_v.clear();
+        let v2 = snap.encode();
+        // A real v1 file is the v2 body minus the optimizer block (tag
+        // byte + two zero-length u64s = 17 bytes), stamped version 1.
+        let mut v1 = v2[..v2.len() - 4 - 17].to_vec();
+        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+        let crc = crc32(&v1);
+        v1.extend_from_slice(&crc.to_le_bytes());
+        let back = CampaignSnapshot::decode(&v1).unwrap();
+        assert_eq!(back.rounds_done, snap.rounds_done);
+        assert_eq!(back.carry.updates.len(), 1);
+        assert_eq!(back.opt_tag, 0);
+        assert!(back.opt_m.is_empty() && back.opt_v.is_empty());
     }
 
     #[test]

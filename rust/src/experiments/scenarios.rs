@@ -13,7 +13,7 @@
 //! `repro experiment --id scenarios [--clients K] [--client-threads N]
 //!  [--fracs-pct 10,30,50] [--slowdown 8] [--rounds N] [--ratio 32]
 //!  [--per-client N] [--alpha F] [--shards-per-client N] [--size-skew F]
-//!  [--iid-only] [--smoke] [--sharded-100k]`
+//!  [--iid-only] [--smoke] [--sharded-100k] [--adaptive]`
 //!
 //! `--sharded-100k` replaces the sweep with the hierarchical-aggregation
 //! arm (DESIGN.md §10): one engine-free fake-train round at K=100k
@@ -21,6 +21,12 @@
 //! edge shards — the run fails unless every arm lands on identical
 //! global model bits, and the makespan/server-time table shows the
 //! per-shard K/E scaling.
+//!
+//! `--adaptive` replaces the sweep with the control-plane arm
+//! (DESIGN.md §11): static single-codec baselines vs per-client codec
+//! policies over a heterogeneous IoT fleet, with a bytes/makespan
+//! Pareto CSV.  The run fails unless the adaptive arm beats the static
+//! FedAvg makespan by at least 20%.
 //!
 //! `--clients` scales to the paper's K=10k regime (m=1000 at the preset
 //! C=0.1): shards generate lazily above K=512 so a 10k-client fleet
@@ -31,6 +37,7 @@
 
 use crate::compression::Scheme;
 use crate::config::{ExperimentConfig, ScenarioConfig};
+use crate::control::{CodecPolicy, ServerOptKind};
 use crate::coordinator::clock::{calibrated_deadline, RoundPolicy};
 use crate::coordinator::{CarryPolicy, Simulation};
 use crate::data::Partition;
@@ -191,11 +198,176 @@ fn sharded_100k(ctx: &ExperimentCtx) -> Result<()> {
     Ok(())
 }
 
+/// The `--adaptive` arm: the per-client control plane (DESIGN.md §11)
+/// against static single-codec baselines on a heterogeneous IoT fleet.
+/// Every arm is engine-free fake training on the synthetic manifest, so
+/// loss curves are flat by construction; the comparison (and the CI
+/// gate) is the uplink-bytes / round-makespan Pareto front, written to
+/// `adaptive_pareto.csv`.  The policies hand the slow-uplink tail the
+/// ternary codec (the heaviest engine-free scheme — HCFL itself needs
+/// the engine, DESIGN.md §11), and the adaptive arms install through
+/// server FedAdam to exercise the optimizer path at scale.
+fn adaptive(ctx: &ExperimentCtx) -> Result<()> {
+    let args = &ctx.args;
+    let smoke = args.flag("smoke");
+    let clients = args.usize_or("clients", 1000)?;
+    let rounds = args.usize_or("rounds", if smoke { 2 } else { 3 })?;
+    let client_threads = args.usize_or("client-threads", 8)?;
+
+    let base_cfg = |scheme: Scheme| {
+        let mut cfg = ExperimentConfig::mnist(scheme, rounds);
+        cfg.model = "fake".into();
+        cfg.fake_train = true;
+        cfg.n_clients = clients;
+        cfg.data.n_clients = clients;
+        cfg.participation = 1.0;
+        cfg.local_epochs = 1;
+        cfg.batch = 16;
+        cfg.data.per_client = 64;
+        cfg.data.test_n = 64;
+        cfg.data.server_n = 16;
+        cfg.data.lazy_shards = true;
+        cfg.use_ae_cache = false;
+        cfg.send_exact = false;
+        cfg.client_threads = client_threads;
+        cfg.engine_workers = ctx.engine.n_workers();
+        cfg.scenario = ScenarioConfig {
+            policy: RoundPolicy::Synchronous,
+            devices: DevicePreset::Iot {
+                sigma: 0.8,
+                dropout_p: 0.0,
+            },
+            ..ScenarioConfig::default()
+        };
+        // The story here is the shared uplink; widen the downlink so
+        // the model broadcast doesn't mask it.
+        cfg.link.downlink_bps = 200e6;
+        cfg
+    };
+
+    let arms: [(&str, Scheme, CodecPolicy, ServerOptKind); 5] = [
+        (
+            "static-fedavg",
+            Scheme::Fedavg,
+            CodecPolicy::Static,
+            ServerOptKind::Sgd,
+        ),
+        (
+            "static-topk",
+            Scheme::TopK { keep: 0.1 },
+            CodecPolicy::Static,
+            ServerOptKind::Sgd,
+        ),
+        (
+            "static-ternary",
+            Scheme::Ternary,
+            CodecPolicy::Static,
+            ServerOptKind::Sgd,
+        ),
+        (
+            "uplink-adaptive",
+            Scheme::Fedavg,
+            CodecPolicy::ThresholdByUplink {
+                cutoff: 1.0,
+                slow: Scheme::Ternary,
+            },
+            ServerOptKind::DEFAULT_ADAM,
+        ),
+        (
+            "makespan-adaptive",
+            Scheme::Fedavg,
+            CodecPolicy::MakespanUnderDistortion {
+                budget: 0.6,
+                heavy: Scheme::Ternary,
+            },
+            ServerOptKind::DEFAULT_ADAM,
+        ),
+    ];
+
+    println!(
+        "Adaptive control plane — K={clients}, {rounds} rounds, IoT fleet (sigma 0.8), \
+         static vs per-client codecs"
+    );
+    let mut table = Table::new(&[
+        "Arm",
+        "Base",
+        "Policy",
+        "Opt",
+        "Makespan (s)",
+        "Upload (MB)",
+    ]);
+    let mut csv = String::from("arm,scheme,policy,opt,up_bytes,makespan_s\n");
+    let mut fedavg_makespan = 0.0f64;
+    let mut adaptive_makespan = f64::INFINITY;
+    for (name, scheme, policy, opt) in arms {
+        let mut cfg = base_cfg(scheme);
+        cfg.codec_policy = policy;
+        cfg.server_opt = opt;
+        let mut sim = Simulation::new(&ctx.engine, cfg)?;
+        let mut records = Vec::with_capacity(rounds);
+        for t in 1..=rounds {
+            records.push(sim.run_round(t)?);
+        }
+        let report = RunReport {
+            scheme: scheme.label(),
+            model: "fake".into(),
+            rounds: records,
+        };
+        let makespan = report.total_makespan();
+        let up_bytes = report.total_up_bytes();
+        if name == "static-fedavg" {
+            fedavg_makespan = makespan;
+        }
+        if policy != CodecPolicy::Static {
+            adaptive_makespan = adaptive_makespan.min(makespan);
+        }
+        table.row(vec![
+            name.to_string(),
+            scheme.label(),
+            policy.label(),
+            opt.label().to_string(),
+            format!("{makespan:.3}"),
+            format!("{:.3}", up_bytes as f64 / 1e6),
+        ]);
+        csv.push_str(&format!(
+            "{name},{},{},{},{up_bytes},{makespan}\n",
+            scheme.label(),
+            policy.label(),
+            opt.label()
+        ));
+    }
+    println!("{}", table.render());
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    let file = ctx.out_dir.join("adaptive_pareto.csv");
+    std::fs::write(&file, csv)?;
+    eprintln!("[saved] {}", file.display());
+
+    // The CI gate: handing the slow-uplink tail a compact codec must
+    // cut the round makespan well past the acceptance bar (20% under
+    // the static FedAvg arm on this fleet).
+    if adaptive_makespan > 0.8 * fedavg_makespan {
+        return Err(HcflError::Engine(format!(
+            "adaptive makespan {adaptive_makespan:.3}s did not beat static FedAvg \
+             {fedavg_makespan:.3}s by at least 20%"
+        )));
+    }
+    println!(
+        "adaptive makespan {:.3}s vs static FedAvg {:.3}s ({:.0}% lower)",
+        adaptive_makespan,
+        fedavg_makespan,
+        100.0 * (1.0 - adaptive_makespan / fedavg_makespan)
+    );
+    Ok(())
+}
+
 /// The `scenarios` experiment driver.
 pub fn scenarios(ctx: &ExperimentCtx) -> Result<()> {
     let args = &ctx.args;
     if args.flag("sharded-100k") {
         return sharded_100k(ctx);
+    }
+    if args.flag("adaptive") {
+        return adaptive(ctx);
     }
     let smoke = args.flag("smoke");
     let scale = Scale::from_args(args, if smoke { 2 } else { 4 }, 1)?;

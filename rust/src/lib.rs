@@ -23,6 +23,7 @@
 
 pub mod compression;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod daemon;
 pub mod data;
@@ -43,6 +44,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::compression::{Compressor, Scheme};
     pub use crate::config::{ExperimentConfig, ScenarioConfig};
+    pub use crate::control::{CodecBank, CodecPolicy, ServerOptKind, ServerOptState};
     pub use crate::coordinator::clock::RoundPolicy;
     pub use crate::coordinator::session::{CarryOver, CarryPolicy, FlSession};
     pub use crate::coordinator::{EdgeAggregator, Simulation};

@@ -44,7 +44,7 @@ use std::net::TcpListener;
 use std::sync::Arc;
 
 use crate::compression::wire::{crc32, FrameHeader, MsgType, FRAME_HEADER_LEN};
-use crate::compression::{Compressor, Identity, Scheme, TopKCompressor};
+use crate::compression::{Compressor, Identity, RefTernaryCompressor, Scheme, TopKCompressor};
 use crate::config::ExperimentConfig;
 use crate::error::{HcflError, Result};
 use crate::metrics::RoundRecord;
@@ -213,8 +213,9 @@ fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
 // ---------------------------------------------------------------------------
 
 /// One unit of client work inside a [`RoundOpenMsg`]: which selection
-/// slot it fills, which simulated client it impersonates, and the
-/// client's private RNG seed for the round — the same triple as
+/// slot it fills, which simulated client it impersonates, the client's
+/// private RNG seed for the round, and the codec the control plane
+/// assigned it — the same quadruple as
 /// [`crate::coordinator::pool::WorkSpec`], so socket and in-process
 /// rounds compute identical updates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -225,6 +226,10 @@ pub struct Assignment {
     pub client: u32,
     /// The client's private RNG seed (`round_seed ^ (client << 1)`).
     pub seed: u64,
+    /// The codec tag this slot must upload with
+    /// ([`Scheme::codec_tag`]) — the per-client control-plane decision.
+    /// The server rejects an `Update` whose envelope codec disagrees.
+    pub codec: u8,
 }
 
 /// The `RoundOpen` payload: round hyperparameters, this connection's
@@ -258,7 +263,7 @@ impl RoundOpenMsg {
     /// Serialize to the §8.3 payload layout.
     pub fn encode(&self) -> Vec<u8> {
         let mut out =
-            Vec::with_capacity(32 + 16 * self.assignments.len() + 4 * self.global.len());
+            Vec::with_capacity(32 + 17 * self.assignments.len() + 4 * self.global.len());
         put_u32(&mut out, self.epochs);
         put_u32(&mut out, self.batch);
         out.extend_from_slice(&self.lr.to_bits().to_le_bytes());
@@ -272,6 +277,7 @@ impl RoundOpenMsg {
             put_u32(&mut out, a.slot);
             put_u32(&mut out, a.client);
             out.extend_from_slice(&a.seed.to_le_bytes());
+            out.push(a.codec);
         }
         put_u32(&mut out, self.global.len() as u32);
         put_f32s(&mut out, &self.global);
@@ -297,7 +303,7 @@ impl RoundOpenMsg {
         let selected = r.u32()?;
         let transmitting = r.u32()?;
         let n_assign = r.u32()? as usize;
-        if r.remaining() < 16 * n_assign {
+        if r.remaining() < 17 * n_assign {
             return Err(HcflError::Config(format!(
                 "RoundOpen declares {n_assign} assignments but only {} bytes follow",
                 r.remaining()
@@ -309,6 +315,7 @@ impl RoundOpenMsg {
                 slot: r.u32()?,
                 client: r.u32()?,
                 seed: r.u64()?,
+                codec: r.u8()?,
             });
         }
         let d = r.u32()? as usize;
@@ -419,14 +426,15 @@ impl UpdateMsg {
 
 /// Build the codec both endpoints run.  The transport layer is
 /// engine-free (no PJRT artifacts on either side of the socket), so
-/// only the engine-free schemes serve; HCFL/ternary need the engine
+/// only the engine-free schemes serve; HCFL needs the engine
 /// and go through the in-process [`crate::coordinator::Simulation`].
 pub fn engine_free_compressor(scheme: &Scheme) -> Result<Arc<dyn Compressor>> {
     match scheme {
         Scheme::Fedavg => Ok(Arc::new(Identity)),
         Scheme::TopK { keep } => Ok(Arc::new(TopKCompressor::new(*keep)?)),
+        Scheme::Ternary => Ok(Arc::new(RefTernaryCompressor::new())),
         other => Err(HcflError::Config(format!(
-            "transport serving supports engine-free schemes (fedavg/topk), got {}",
+            "transport serving supports engine-free schemes (fedavg/topk/ternary), got {}",
             other.label()
         ))),
     }
@@ -537,17 +545,19 @@ mod tests {
                     slot: 0,
                     client: 3,
                     seed: 0xDEAD_BEEF_0BAD_F00D,
+                    codec: 1,
                 },
                 Assignment {
                     slot: 4,
                     client: 7,
                     seed: 1,
+                    codec: 3,
                 },
             ],
             global: vec![1.0, -2.5, 0.0],
         };
         let bytes = msg.encode();
-        assert_eq!(bytes.len(), 32 + 2 * 16 + 3 * 4);
+        assert_eq!(bytes.len(), 32 + 2 * 17 + 3 * 4);
         assert_eq!(RoundOpenMsg::decode(&bytes).unwrap(), msg);
     }
 
@@ -589,6 +599,7 @@ mod tests {
                 slot: 0,
                 client: 0,
                 seed: 0,
+                codec: 0,
             }],
             global: vec![1.0, 2.0],
         };
@@ -601,9 +612,10 @@ mod tests {
         let mut long = good.clone();
         long.push(0);
         assert!(RoundOpenMsg::decode(&long).is_err());
-        // forged assignment count with no bytes behind it
+        // forged assignment count with no bytes behind it (n_assign
+        // lives at offset 24, after `selected` and `transmitting`)
         let mut forged = good.clone();
-        forged[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        forged[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(RoundOpenMsg::decode(&forged).is_err());
         // non-boolean flag byte
         let mut flag = good.clone();
@@ -619,7 +631,7 @@ mod tests {
     fn engine_free_compressor_gates_schemes() {
         assert!(engine_free_compressor(&Scheme::Fedavg).is_ok());
         assert!(engine_free_compressor(&Scheme::TopK { keep: 0.1 }).is_ok());
-        assert!(engine_free_compressor(&Scheme::Ternary).is_err());
+        assert!(engine_free_compressor(&Scheme::Ternary).is_ok());
         assert!(engine_free_compressor(&Scheme::Hcfl { ratio: 8 }).is_err());
     }
 }

@@ -14,7 +14,7 @@
 
 use std::io::Read;
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -25,6 +25,7 @@ use super::{
 use crate::compression::wire::{MsgType, FLAG_EXACT_PARAMS};
 use crate::compression::WireUpdate;
 use crate::config::ExperimentConfig;
+use crate::control::{self, CodecBank, ServerOptState};
 use crate::coordinator::clock::client_timing;
 use crate::coordinator::pool::{WorkSpec, WorkerPool};
 use crate::coordinator::session::ClientUpdate;
@@ -131,7 +132,16 @@ impl RoundServer {
         let server = Server::new(&model, &mut rng);
         let fleet = DeviceFleet::sample(cfg.n_clients, &cfg.scenario.devices, cfg.seed);
         let compressor = engine_free_compressor(&cfg.scheme)?;
-        let session = FlSession::new(
+        // Every scheme the policy can hand out must be servable without
+        // an engine — the bank is the socket-path twin of
+        // `crate::coordinator::session::build_codec_bank`.
+        let mut bank = CodecBank::single(Arc::clone(&compressor));
+        for scheme in cfg.codec_policy.menu(cfg.scheme) {
+            if scheme.codec_tag() != bank.base_tag() {
+                bank.insert(engine_free_compressor(&scheme)?);
+            }
+        }
+        let mut session = FlSession::new(
             server,
             compressor,
             cfg.scenario.aggregator.clone(),
@@ -139,6 +149,8 @@ impl RoundServer {
             cfg.encode_deltas,
             cfg.compress_downlink,
         );
+        session.set_codec_bank(bank);
+        session.set_server_opt(cfg.server_opt);
         let pool = WorkerPool::new(cfg.client_threads, cfg.engine_workers)?;
         let edge = match cfg.edge_shards {
             0 => None,
@@ -211,11 +223,19 @@ impl RoundServer {
         global: Vec<f32>,
         carry: CarryOver,
         rng_state: [u64; 4],
+        opt_state: ServerOptState,
     ) -> Result<()> {
         self.session.restore_global(global)?;
         self.carry = carry;
         self.rng = Rng::from_state(rng_state);
+        self.session.restore_opt_state(opt_state);
         Ok(())
+    }
+
+    /// The server optimizer's moment state, for snapshotting between
+    /// rounds (`crate::daemon::snapshot`, DESIGN.md §9.2 v2).
+    pub fn opt_state(&self) -> &ServerOptState {
+        self.session.opt_state()
     }
 
     /// Accept `n_conns` swarm connections on `listener`, serve `rounds`
@@ -331,6 +351,17 @@ impl RoundServer {
         let selected = select_clients(self.cfg.n_clients, self.cfg.participation, &mut self.rng);
         let m = selected.len();
 
+        // Control plane: the same pure decision function as the
+        // in-process driver, taken before the dropout realization.
+        let codecs = control::assign_codecs(
+            &self.cfg.codec_policy,
+            self.cfg.scheme,
+            &self.fleet,
+            &selected,
+            self.session.d(),
+            &self.cfg.link,
+        );
+
         self.session.set_scenario(
             self.cfg.scenario.aggregator.clone(),
             self.cfg.scenario.carry.clone(),
@@ -355,6 +386,7 @@ impl RoundServer {
                 slot,
                 client: k,
                 seed: seed ^ ((k as u64) << 1),
+                codec: codecs[slot].codec_tag(),
             })
             .collect();
         // The pacing forecast broadcast in `RoundOpenMsg`: how many
@@ -368,6 +400,7 @@ impl RoundServer {
         // round on each of them.
         let mut slot_conn: Vec<Option<usize>> = vec![None; m];
         let mut slot_client: Vec<u32> = vec![0; m];
+        let slot_codec: Vec<u8> = codecs.iter().map(|s| s.codec_tag()).collect();
         let live: Vec<usize> = (0..conns.len()).filter(|&i| conns[i].alive).collect();
         let mut shares: Vec<Vec<Assignment>> = vec![Vec::new(); conns.len()];
         if !live.is_empty() {
@@ -379,6 +412,7 @@ impl RoundServer {
                     slot: spec.slot as u32,
                     client: spec.client as u32,
                     seed: spec.seed,
+                    codec: slot_codec[spec.slot],
                 });
             }
         }
@@ -460,8 +494,15 @@ impl RoundServer {
                     continue;
                 }
             };
-            match self.accept_update(frame, t, codec, idx, &slot_conn, &slot_client, &mut results)
-            {
+            match self.accept_update(
+                frame,
+                t,
+                idx,
+                &slot_conn,
+                &slot_client,
+                &slot_codec,
+                &mut results,
+            ) {
                 Ok(()) => {
                     conns[idx].pending -= 1;
                     total_pending -= 1;
@@ -522,6 +563,7 @@ impl RoundServer {
                     exact: msg.exact,
                     extra_up_bytes: extra,
                     train_s: msg.train_s,
+                    codec: slot_codec[slot],
                 }),
                 None => round.mark_dropped(timing),
             }
@@ -561,10 +603,10 @@ impl RoundServer {
         &self,
         frame: Frame,
         t: usize,
-        codec: u8,
         idx: usize,
         slot_conn: &[Option<usize>],
         slot_client: &[u32],
+        slot_codec: &[u8],
         results: &mut [Option<UpdateMsg>],
     ) -> Result<()> {
         let h = &frame.header;
@@ -579,10 +621,10 @@ impl RoundServer {
         } else {
             0
         };
-        if h.round != t as u32 || h.codec != codec || h.flags != want_flags {
+        if h.round != t as u32 || h.flags != want_flags {
             return Err(HcflError::Config(format!(
-                "update envelope mismatch: round {} codec {} flags {:#04x}",
-                h.round, h.codec, h.flags
+                "update envelope mismatch: round {} flags {:#04x}",
+                h.round, h.flags
             )));
         }
         let msg = UpdateMsg::decode(&frame.payload, self.cfg.send_exact)?;
@@ -594,6 +636,14 @@ impl RoundServer {
         {
             return Err(HcflError::Config(format!(
                 "update for slot {slot} is unassigned, duplicated or misattributed"
+            )));
+        }
+        // The envelope codec is per-slot: the control plane told this
+        // slot what to upload with, and anything else is a forgery.
+        if h.codec != slot_codec[slot] {
+            return Err(HcflError::Config(format!(
+                "update for slot {slot} uses codec {} but was assigned {}",
+                h.codec, slot_codec[slot]
             )));
         }
         results[slot] = Some(msg);

@@ -17,8 +17,9 @@ use std::time::{Duration, Instant};
 
 use super::{engine_free_compressor, read_frame, write_frame, RoundOpenMsg, UpdateMsg};
 use crate::compression::wire::{MsgType, FLAG_EXACT_PARAMS, FRAME_HEADER_LEN};
-use crate::compression::{Compressor, WireScratch};
+use crate::compression::WireScratch;
 use crate::config::ExperimentConfig;
+use crate::control::CodecBank;
 use crate::data::{synthetic, FlData};
 use crate::error::{HcflError, Result};
 use crate::network::{DeviceFleet, LinkModel};
@@ -48,8 +49,11 @@ impl SwarmStats {
 struct SwarmShared {
     fleet: DeviceFleet,
     data: Arc<FlData>,
-    compressor: Arc<dyn Compressor>,
+    /// Every codec the server's policy can assign, keyed by tag — each
+    /// assignment carries the tag the control plane picked for it.
+    bank: CodecBank,
     link: LinkModel,
+    /// The base scheme's tag, used for the `Hello` handshake.
     codec: u8,
     time_scale: f64,
 }
@@ -111,10 +115,16 @@ pub fn run_swarm_with(
 ) -> Result<SwarmStats> {
     let mut data_spec = cfg.data.clone();
     data_spec.n_clients = cfg.n_clients;
+    let mut bank = CodecBank::single(engine_free_compressor(&cfg.scheme)?);
+    for scheme in cfg.codec_policy.menu(cfg.scheme) {
+        if scheme.codec_tag() != bank.base_tag() {
+            bank.insert(engine_free_compressor(&scheme)?);
+        }
+    }
     let shared = Arc::new(SwarmShared {
         fleet: DeviceFleet::sample(cfg.n_clients, &cfg.scenario.devices, cfg.seed),
         data: Arc::new(synthetic(&data_spec, cfg.seed)),
-        compressor: engine_free_compressor(&cfg.scheme)?,
+        bank,
         link: cfg.link.clone(),
         codec: cfg.scheme.codec_tag(),
         time_scale,
@@ -222,6 +232,7 @@ fn run_assignments(
     let down_bytes = 4 * open.global.len();
     for a in &open.assignments {
         // The exact FakeTrainRunner computation, seeded by the wire.
+        let compressor = shared.bank.get(a.codec)?;
         let mut crng = Rng::new(a.seed);
         let started = Instant::now();
         let scale = open.lr * (open.epochs.max(1) as f32).sqrt() * 0.1;
@@ -230,11 +241,8 @@ fn run_assignments(
             .iter()
             .map(|g| g + scale * crng.normal())
             .collect();
-        let payload =
-            shared
-                .compressor
-                .encode_payload(&params, &open.global, open.encode_deltas);
-        let update = shared.compressor.compress(&payload, 0)?;
+        let payload = compressor.encode_payload(&params, &open.global, open.encode_deltas);
+        let update = compressor.compress(&payload, 0)?;
         let wire = scratch.pack_update(&update.payload)?;
         let train_s = started.elapsed().as_secs_f64();
 
@@ -267,7 +275,7 @@ fn run_assignments(
         write_frame(
             stream,
             MsgType::Update,
-            shared.codec,
+            a.codec,
             flags,
             round,
             w as u32,

@@ -103,6 +103,9 @@ fn inprocess_resume_is_bit_identical() {
         rng: victim.rng_state(),
         global: victim.global().to_vec(),
         carry: victim.carry().clone(),
+        opt_tag: cfg.server_opt.tag(),
+        opt_m: victim.opt_state().m.clone(),
+        opt_v: victim.opt_state().v.clone(),
     };
     assert!(
         !snap.carry.is_empty(),
@@ -118,7 +121,13 @@ fn inprocess_resume_is_bit_identical() {
     let mut resumed = Simulation::new(&engine, cfg.clone()).unwrap();
     snap.check(&cfg, resumed.global().len()).unwrap();
     assert_eq!(snap.rounds_done, 3);
-    resumed.restore(snap.global, snap.carry, snap.rng).unwrap();
+    let opt = ServerOptState {
+        m: snap.opt_m,
+        v: snap.opt_v,
+    };
+    resumed
+        .restore(snap.global, snap.carry, snap.rng, opt)
+        .unwrap();
     for t in 4..=6 {
         let rec = resumed.run_round(t).unwrap();
         assert_record_eq(&ref_records[t - 1], &rec);
@@ -127,6 +136,83 @@ fn inprocess_resume_is_bit_identical() {
         resumed.global(),
         &ref_global[..],
         "resumed final model bits diverged"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// FedAdam moment vectors across the crash (DESIGN.md §9.2 snapshot v2
+/// + §11): a campaign running the adaptive control plane and the
+/// FedAdam server optimizer is frozen mid-flight, so the snapshot must
+/// round-trip the nonzero first/second-moment state — resuming into a
+/// zeroed optimizer would diverge on the very next install.
+#[test]
+fn fedadam_resume_is_bit_identical() {
+    let mut cfg = carry_campaign(6);
+    // Heterogeneous uplinks so the policy genuinely splits the fleet
+    // between the TopK base codec and the ternary reference codec.
+    cfg.scenario.devices = DevicePreset::Iot {
+        sigma: 0.8,
+        dropout_p: 0.0,
+    };
+    cfg.codec_policy = CodecPolicy::ThresholdByUplink {
+        cutoff: 1.0,
+        slow: Scheme::Ternary,
+    };
+    cfg.server_opt = ServerOptKind::DEFAULT_ADAM;
+    let engine = Engine::with_manifest(Manifest::synthetic(), cfg.engine_workers).unwrap();
+
+    // The uninterrupted reference.
+    let mut reference = Simulation::new(&engine, cfg.clone()).unwrap();
+    let ref_records: Vec<RoundRecord> =
+        (1..=6).map(|t| reference.run_round(t).unwrap()).collect();
+    let ref_global = reference.global().to_vec();
+
+    // Three rounds, then freeze: by now both Adam moments are live.
+    let mut victim = Simulation::new(&engine, cfg.clone()).unwrap();
+    for t in 1..=3 {
+        victim.run_round(t).unwrap();
+    }
+    let snap = CampaignSnapshot {
+        seed: cfg.seed,
+        codec: cfg.scheme.codec_tag(),
+        n_clients: cfg.n_clients as u64,
+        d: victim.global().len() as u64,
+        rounds_done: 3,
+        rng: victim.rng_state(),
+        global: victim.global().to_vec(),
+        carry: victim.carry().clone(),
+        opt_tag: cfg.server_opt.tag(),
+        opt_m: victim.opt_state().m.clone(),
+        opt_v: victim.opt_state().v.clone(),
+    };
+    assert_eq!(snap.opt_m.len(), snap.d as usize);
+    assert!(
+        snap.opt_m.iter().any(|x| *x != 0.0) && snap.opt_v.iter().any(|x| *x != 0.0),
+        "three FedAdam rounds must leave nonzero moment state to snapshot"
+    );
+    let dir = scratch_dir("resume-fedadam");
+    let path = dir.join("campaign.snap");
+    snap.write_atomic(&path).unwrap();
+    drop(victim);
+
+    let snap = CampaignSnapshot::load(&path).unwrap();
+    let mut resumed = Simulation::new(&engine, cfg.clone()).unwrap();
+    snap.check(&cfg, resumed.global().len()).unwrap();
+    let opt = ServerOptState {
+        m: snap.opt_m,
+        v: snap.opt_v,
+    };
+    resumed
+        .restore(snap.global, snap.carry, snap.rng, opt)
+        .unwrap();
+    for t in 4..=6 {
+        let rec = resumed.run_round(t).unwrap();
+        assert_record_eq(&ref_records[t - 1], &rec);
+    }
+    assert_eq!(
+        resumed.global(),
+        &ref_global[..],
+        "FedAdam-resumed final model bits diverged"
     );
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -171,6 +257,9 @@ fn tcp_resume_with_redialing_swarm_is_bit_identical() {
         rng: server.rng_state(),
         global: server.global().to_vec(),
         carry: server.carry().clone(),
+        opt_tag: cfg.server_opt.tag(),
+        opt_m: server.opt_state().m.clone(),
+        opt_v: server.opt_state().v.clone(),
     };
     assert!(!snap.carry.is_empty(), "snapshot must carry live entries");
     let frozen = snap.encode();
@@ -183,7 +272,13 @@ fn tcp_resume_with_redialing_swarm_is_bit_identical() {
     let listener = TcpListener::bind(&addr).unwrap();
     let mut server = RoundServer::new(&manifest, cfg.clone()).unwrap();
     snap.check(&cfg, server.global().len()).unwrap();
-    server.restore(snap.global, snap.carry, snap.rng).unwrap();
+    let opt = ServerOptState {
+        m: snap.opt_m,
+        v: snap.opt_v,
+    };
+    server
+        .restore(snap.global, snap.carry, snap.rng, opt)
+        .unwrap();
     let mut link = server.accept_swarm(&listener, 2).unwrap();
     for t in 3..=4 {
         records.push(server.serve_round(&mut link, t).unwrap());
@@ -219,6 +314,8 @@ fn daemon_resumes_a_half_done_job_to_the_exact_model() {
         seed: 9,
         driver: JobDriver::InProcess,
         edge_shards: 0,
+        policy: CodecPolicy::Static,
+        server_opt: ServerOptKind::Sgd,
     };
     let cfg = job.config();
     let engine = Engine::with_manifest(Manifest::synthetic(), cfg.engine_workers).unwrap();
@@ -245,6 +342,9 @@ fn daemon_resumes_a_half_done_job_to_the_exact_model() {
         rng: victim.rng_state(),
         global: victim.global().to_vec(),
         carry: victim.carry().clone(),
+        opt_tag: cfg.server_opt.tag(),
+        opt_m: victim.opt_state().m.clone(),
+        opt_v: victim.opt_state().v.clone(),
     };
     snap.write_atomic(&dir.join("resume-e2e.snap")).unwrap();
     drop(victim);
@@ -289,6 +389,8 @@ fn daemon_refuses_a_corrupt_snapshot() {
         seed: 5,
         driver: JobDriver::InProcess,
         edge_shards: 0,
+        policy: CodecPolicy::Static,
+        server_opt: ServerOptKind::Sgd,
     };
     let cfg = job.config();
     let engine = Engine::with_manifest(Manifest::synthetic(), cfg.engine_workers).unwrap();
@@ -303,6 +405,9 @@ fn daemon_refuses_a_corrupt_snapshot() {
         rng: victim.rng_state(),
         global: victim.global().to_vec(),
         carry: victim.carry().clone(),
+        opt_tag: cfg.server_opt.tag(),
+        opt_m: victim.opt_state().m.clone(),
+        opt_v: victim.opt_state().v.clone(),
     };
     let mut bytes = snap.encode();
     let mid = bytes.len() / 2;

@@ -138,6 +138,9 @@ fn sharded_kill_and_resume_matches_flat_reference() {
         rng: victim.rng_state(),
         global: victim.global().to_vec(),
         carry: victim.carry().clone(),
+        opt_tag: cfg.server_opt.tag(),
+        opt_m: victim.opt_state().m.clone(),
+        opt_v: victim.opt_state().v.clone(),
     };
     assert!(
         !snap.carry.is_empty(),
@@ -155,7 +158,13 @@ fn sharded_kill_and_resume_matches_flat_reference() {
         cfg.edge_shards = resume_edge;
         let mut resumed = Simulation::new(&engine, cfg.clone()).unwrap();
         snap.check(&cfg, resumed.global().len()).unwrap();
-        resumed.restore(snap.global, snap.carry, snap.rng).unwrap();
+        let opt = ServerOptState {
+            m: snap.opt_m,
+            v: snap.opt_v,
+        };
+        resumed
+            .restore(snap.global, snap.carry, snap.rng, opt)
+            .unwrap();
         for t in 4..=ROUNDS {
             let rec = resumed.run_round(t).unwrap();
             assert_record_eq(&flat_records[t - 1], &rec);

@@ -111,6 +111,7 @@ fn pool_reports_every_submitted_item_exactly_once() {
             slot,
             client: slot,
             seed: 0xAB ^ ((slot as u64) << 1),
+            codec: Scheme::Fedavg.codec_tag(), // the Identity entry of the single-codec bank
         })
         .collect();
     let round = RoundInputs {
@@ -230,6 +231,7 @@ fn pool_propagates_client_failures() {
             slot,
             client: slot,
             seed: slot as u64,
+            codec: 0,
         })
         .collect();
     let round = RoundInputs {
@@ -254,6 +256,7 @@ fn pool_propagates_client_failures() {
             slot,
             client: slot,
             seed: slot as u64,
+            codec: 0,
         })
         .collect();
     assert_eq!(pool.run_clients(round, &ok_specs).unwrap().len(), 10);

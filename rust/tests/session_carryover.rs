@@ -69,6 +69,7 @@ fn mk_update(client: usize, slot: usize, arrival_s: f64, global: &[f32], seed: u
         exact: params,
         extra_up_bytes: 0,
         train_s: 0.01,
+        codec: Scheme::Fedavg.codec_tag(), // the session's Identity bank entry
     }
 }
 
@@ -379,6 +380,7 @@ fn carry_off_matches_prerefactor_round_output() {
                 slot,
                 client: k,
                 seed: seed ^ ((k as u64) << 1),
+                codec: cfg.scheme.codec_tag(),
             })
             .collect();
         let inputs = RoundInputs {

@@ -189,6 +189,7 @@ impl LossyReplica {
                     exact: Vec::new(),
                     extra_up_bytes: 0,
                     train_s,
+                    codec: self.cfg.scheme.codec_tag(),
                 }),
                 None => round.mark_dropped(timing),
             }

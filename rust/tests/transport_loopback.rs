@@ -158,6 +158,56 @@ fn loopback_exact_sidecar_is_accounted_in_up_bytes() {
     }
 }
 
+/// The control plane over the wire (DESIGN.md §11): a ThresholdByUplink
+/// policy splits the heterogeneous IoT fleet between the TopK base
+/// codec and the ternary reference codec, with FedAdam applied
+/// server-side between fold and install — and the TCP path must still
+/// land on the in-process global bits, for any connection/thread split
+/// and with the edge-sharded fold on.  Policy decisions are pure
+/// functions of (round seed, fleet, config), so both endpoints derive
+/// the same per-slot codec without it ever crossing the wire as more
+/// than a one-byte tag.
+#[test]
+fn loopback_mixed_codec_control_plane_is_bit_identical() {
+    let mut cfg = demo_config(Scheme::TopK { keep: 0.2 }, 32, 3, 42);
+    cfg.scenario.devices = DevicePreset::Iot {
+        sigma: 0.8,
+        dropout_p: 0.0,
+    };
+    cfg.codec_policy = CodecPolicy::ThresholdByUplink {
+        cutoff: 1.0,
+        slow: Scheme::Ternary,
+    };
+    cfg.server_opt = ServerOptKind::DEFAULT_ADAM;
+
+    let (global, recs) = run_inprocess(&cfg);
+
+    // The policy must actually split the fleet: the same fleet under
+    // the static single-codec plane ships a different byte total.
+    let mut static_cfg = cfg.clone();
+    static_cfg.codec_policy = CodecPolicy::Static;
+    let (_, static_recs) = run_inprocess(&static_cfg);
+    assert_ne!(
+        recs.iter().map(|r| r.up_bytes).sum::<u64>(),
+        static_recs.iter().map(|r| r.up_bytes).sum::<u64>(),
+        "the uplink policy never moved a client off the base codec"
+    );
+
+    // Worker count, pool width and edge sharding are all declared
+    // bit-transparent; the mixed-codec session must hold that over TCP.
+    for (workers, threads, edge) in [(2usize, 4usize, 0usize), (3, 1, 4)] {
+        let mut arm = cfg.clone();
+        arm.client_threads = threads;
+        arm.edge_shards = edge;
+        let tcp = run_over_tcp(&arm, workers);
+        assert_eq!(
+            global, tcp.global,
+            "global bits diverged (workers={workers}, threads={threads}, edge={edge})"
+        );
+        assert_records_match(&recs, &tcp.records);
+    }
+}
+
 /// The issue's acceptance bar: one K=10 000 round over real sockets,
 /// bit-identical to the in-process K=10k pin (`tests/round10k.rs`
 /// configuration: non-IID Dirichlet shards, skewed sizes,

@@ -116,6 +116,85 @@ fn update_payload_truncations_are_rejected() {
     assert!(UpdateMsg::decode(&trailing, true).is_err());
 }
 
+/// A syntactically perfect Update whose envelope codec tag disagrees
+/// with the slot's control-plane assignment (DESIGN.md §11): the server
+/// must refuse to decode it with either codec and retire exactly that
+/// connection, while the round stays open and completes with the honest
+/// peer.
+#[test]
+fn forged_codec_tag_retires_only_the_offending_connection() {
+    let cfg = demo_config(Scheme::Fedavg, 8, 2, 42);
+    let manifest = Manifest::synthetic();
+    let mut server = RoundServer::new(&manifest, cfg.clone()).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let server_thread = std::thread::spawn(move || {
+        let records = server.serve(&listener, 2, 2).unwrap();
+        (records, server.into_global())
+    });
+
+    let swarm_cfg = cfg.clone();
+    let swarm_addr = addr.clone();
+    let honest = std::thread::spawn(move || run_swarm(&swarm_addr, &swarm_cfg, 1, 0.0).unwrap());
+
+    // Forger: a correct Hello, then a well-formed Update for its own
+    // assigned slot — but the envelope claims the ternary codec while
+    // the static control plane assigned fedavg to every slot.
+    let mut evil = TcpStream::connect(&addr).unwrap();
+    write_frame(
+        &mut evil,
+        MsgType::Hello,
+        cfg.scheme.codec_tag(),
+        0,
+        0,
+        1,
+        &[],
+    )
+    .unwrap();
+    let open = read_frame(&mut evil, DEFAULT_MAX_FRAME).unwrap();
+    assert_eq!(open.header.msg_type, MsgType::RoundOpen);
+    let a = RoundOpenMsg::decode(&open.payload).unwrap().assignments[0];
+    assert_eq!(a.codec, Scheme::Fedavg.codec_tag());
+    let update = UpdateMsg {
+        slot: a.slot,
+        client: a.client,
+        n_samples: 64,
+        train_s: 0.01,
+        wire: vec![0; 16],
+        exact: Vec::new(),
+    };
+    write_frame(
+        &mut evil,
+        MsgType::Update,
+        Scheme::Ternary.codec_tag(),
+        0,
+        1,
+        a.client,
+        &update.encode(),
+    )
+    .unwrap();
+    let _ = evil.flush();
+    // The server must close this connection, not the round: the next
+    // read hits EOF/reset (a retired socket) instead of a round-2 open.
+    assert!(read_frame(&mut evil, DEFAULT_MAX_FRAME).is_err());
+    drop(evil);
+
+    let (records, global) = server_thread.join().unwrap();
+    let stats = honest.join().unwrap();
+
+    // Round 1: the honest half aggregated, the forger's half lost.
+    assert_eq!(records[0].selected, 8);
+    assert_eq!(records[0].completed, 4);
+    assert_eq!(records[0].dropped, 4);
+    // Round 2: everything reroutes to the surviving connection.
+    assert_eq!(records[1].completed, 8);
+    assert_eq!(records[1].dropped, 0);
+    assert!(global.iter().all(|v| v.is_finite()));
+    assert_eq!(stats.rounds, 2);
+    assert_eq!(stats.updates_sent, 4 + 8);
+}
+
 /// A server with one honest swarm connection and one misbehaving
 /// connection: the garbage sender is retired mid-round, its share of
 /// the round is accounted as device losses, the round completes, and
